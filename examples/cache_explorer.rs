@@ -1,0 +1,102 @@
+//! Cache explorer: sweep segment sizes and orderings, reporting expansion
+//! factors, simulated miss rates, and the §5 analytical model side by
+//! side — the tooling a user needs to size segments for a new machine.
+//!
+//! ```text
+//! cargo run --release --example cache_explorer [-- --graph twitter-sim]
+//! ```
+
+use cagra::bench::table::Table;
+use cagra::cache::model::{predicted_miss_rate, CacheGeometry};
+use cagra::cache::sim::CacheSim;
+use cagra::cache::trace;
+use cagra::coordinator::SystemConfig;
+use cagra::graph::datasets;
+use cagra::reorder::{self, Ordering as VOrdering};
+use cagra::segment::expansion;
+use cagra::util::cli::Args;
+use cagra::util::fmt_bytes;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(&[]);
+    let name = args.get_or("graph", "twitter-sim");
+    let scale = args.get_f64("scale", 0.125);
+    let ds = datasets::load_scaled(name, scale)?;
+    let g = &ds.graph;
+    let n = g.num_vertices();
+    println!(
+        "== cache explorer: {name} ({} vertices, {} edges) ==\n",
+        n,
+        g.num_edges()
+    );
+
+    // 1. Expansion factor vs segment count per ordering (Figure 7 logic).
+    println!("expansion factor q by segment count (Figure 7):");
+    let counts = [1usize, 2, 4, 8, 16, 32, 64];
+    let mut t = Table::new(&["ordering", "1", "2", "4", "8", "16", "32", "64"]);
+    for &o in &[VOrdering::Identity, VOrdering::DegreeSort, VOrdering::Random] {
+        let (h, _) = reorder::reorder(g, o);
+        let sweep = expansion::expansion_sweep(&h, &counts);
+        let mut row = vec![o.name().to_string()];
+        row.extend(sweep.iter().map(|(_, q)| format!("{q:.2}")));
+        t.row(&row);
+    }
+    t.print();
+
+    // 2. Simulated vs analytical miss rate for the random vertex stream.
+    println!("\nvertex-stream miss rate: simulator vs analytical model (Section 5):");
+    let mut t = Table::new(&["ordering", "cache", "simulated", "model", "|err|"]);
+    for &o in &[VOrdering::Identity, VOrdering::DegreeSort, VOrdering::Random] {
+        let (h, _) = reorder::reorder(g, o);
+        let pull = h.transpose();
+        let stream = trace::vertex_trace(&pull, 8, (g.num_edges() / 400_000).max(1));
+        let weights: Vec<u64> = h.out_degrees().iter().map(|&d| d as u64).collect();
+        for kib in [64usize, 256] {
+            let geom = CacheGeometry::new(kib * 1024, 16, 64);
+            let mut sim = CacheSim::new(geom);
+            for &a in &stream {
+                sim.access(a);
+            }
+            let model = predicted_miss_rate(&weights, 8, geom);
+            t.row(&[
+                o.name().to_string(),
+                fmt_bytes(kib * 1024),
+                format!("{:.1}%", sim.miss_rate() * 100.0),
+                format!("{:.1}%", model * 100.0),
+                format!("{:.1}pp", (sim.miss_rate() - model).abs() * 100.0),
+            ]);
+        }
+    }
+    t.print();
+
+    // 3. Segment-size tradeoff: stalls vs merge traffic (Section 4.5).
+    println!("\nsegment-size tradeoff (stall model, default hierarchy):");
+    let cfg = SystemConfig::default();
+    let mut t = Table::new(&["seg vertices", "segments", "q", "stall-cyc/access"]);
+    for shift in [10usize, 12, 14, 16] {
+        let seg = (1usize << shift).min(n);
+        let sg = cagra::segment::SegmentedCsr::build(g, seg);
+        let est = cagra::cache::stall::estimate_segmented_iteration(
+            &sg,
+            8,
+            cfg.llc_bytes,
+            (g.num_edges() / 400_000).max(1),
+        );
+        t.row(&[
+            format!("{seg}"),
+            format!("{}", sg.num_segments()),
+            format!("{:.2}", expansion::expansion_factor(&sg)),
+            format!("{:.2}", est.stalls_per_access()),
+        ]);
+        if seg >= n {
+            break;
+        }
+    }
+    t.print();
+    println!(
+        "\nrecommended segment size for {} effective LLC: {} vertices",
+        fmt_bytes(cfg.llc_bytes),
+        cfg.segment_size(8)
+    );
+    Ok(())
+}

@@ -1,0 +1,21 @@
+//! Perf probe: min-of-runs per-iteration timing for the optimized
+//! PageRank pipeline (used by the EXPERIMENTS.md §Perf log).
+//! PROBE_LLC overrides the effective-LLC sizing.
+use cagra::apps::pagerank::{Prepared, Variant};
+use cagra::coordinator::SystemConfig;
+fn main() {
+    let ds = cagra::graph::datasets::load("rmat27-sim").unwrap();
+    let llc: usize = std::env::var("PROBE_LLC").ok().and_then(|v| v.parse().ok()).unwrap_or(2*1024*1024);
+    let cfg = SystemConfig { llc_bytes: llc, ..Default::default() };
+    let mut p = Prepared::new(&ds.graph, &cfg, Variant::ReorderedSegmented);
+    p.reset();
+    p.step(); // warm
+    let mut best = f64::INFINITY;
+    for _ in 0..5 {
+        let iters = 8;
+        let t0 = std::time::Instant::now();
+        for _ in 0..iters { p.step(); }
+        best = best.min(t0.elapsed().as_secs_f64() / iters as f64);
+    }
+    println!("segmented+reordered (min of 5x8): {:.2}ms/iter  {:.2}ns/edge", best*1e3, best/ds.graph.num_edges() as f64*1e9);
+}

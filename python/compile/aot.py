@@ -1,0 +1,97 @@
+"""AOT lowering: jit → lower → StableHLO → XlaComputation → **HLO text**.
+
+HLO text (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Each artifact gets a ``<name>.hlo.txt`` plus a ``<name>.meta`` sidecar
+(shapes + static params) the rust runtime parses.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts``
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dims(shape) -> str:
+    if not shape:
+        return "scalar"
+    return "x".join(str(d) for d in shape)
+
+
+def emit(out_dir, name, fn, example_args, out_shapes, params):
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    hlo_path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(hlo_path, "w") as f:
+        f.write(text)
+    meta_lines = ["[shapes]"]
+    for i, arg in enumerate(example_args):
+        meta_lines.append(f"input{i} = {_dims(arg.shape)}")
+    for i, shape in enumerate(out_shapes):
+        meta_lines.append(f"output{i} = {_dims(shape)}")
+    meta_lines.append("[params]")
+    for k, v in params.items():
+        meta_lines.append(f"{k} = {v}")
+    with open(os.path.join(out_dir, f"{name}.meta"), "w") as f:
+        f.write("\n".join(meta_lines) + "\n")
+    print(f"wrote {hlo_path} ({len(text)} chars)")
+
+
+def build_all(out_dir):
+    os.makedirs(out_dir, exist_ok=True)
+    n = model.PAGERANK_N
+    emit(
+        out_dir,
+        "pagerank_step",
+        model.pagerank_step,
+        model.pagerank_example_args(),
+        out_shapes=[(n,)],
+        params={
+            "n": n,
+            "tile": model.PAGERANK_TILE,
+            "damping": model.PAGERANK_DAMPING,
+        },
+    )
+    nu, ni, k = model.CF_NU, model.CF_NI, model.CF_K
+    emit(
+        out_dir,
+        "cf_step",
+        model.cf_step,
+        model.cf_example_args(),
+        out_shapes=[(nu, k), (ni, k), ()],
+        params={
+            "nu": nu,
+            "ni": ni,
+            "k": k,
+            "lr": model.CF_LR,
+            "tile_u": model.CF_TILE_U,
+            "tile_i": model.CF_TILE_I,
+        },
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    build_all(args.out_dir)
+
+
+if __name__ == "__main__":
+    main()

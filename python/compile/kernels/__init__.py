@@ -1,0 +1,9 @@
+"""Layer-1 Pallas kernels (build-time only; never imported at runtime).
+
+The paper's hot spot -- aggregate contributions over a cache-resident
+segment of source-vertex data -- becomes, on TPU-shaped hardware, a tiled
+dense mat-vec whose x-tiles are pinned in VMEM (DESIGN.md
+``Hardware-Adaptation``). ``segment_spmv`` is that kernel; ``cf_block`` is
+the Collaborative-Filtering block-gradient kernel; ``ref`` holds the
+pure-jnp oracles pytest checks them against.
+"""

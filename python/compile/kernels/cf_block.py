@@ -1,0 +1,89 @@
+"""Collaborative-Filtering block-gradient Pallas kernel.
+
+One grid step owns a (TILE_U, TILE_I) block of the rating matrix:
+
+    P   = U_blk @ V_blk^T          (TILE_U, K) @ (K, TILE_I)  -- MXU
+    E   = (P - R_blk) * mask
+    dU += E @ V_blk                (TILE_U, TILE_I) @ (TILE_I, K)
+    dV += E^T @ U_blk              (TILE_I, TILE_U) @ (TILE_U, K)
+
+The latent factors are the segment-resident working set (the paper's CF
+working set is "per-vertex latent factor vectors"); rating blocks stream.
+Accumulation across the grid's streaming dimension keeps dU/dV in VMEM.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _cf_kernel(u_ref, v_ref, r_ref, m_ref, du_ref, dv_ref, sse_ref):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init_du():
+        du_ref[...] = jnp.zeros_like(du_ref)
+
+    @pl.when(i == 0)
+    def _init_dv():
+        dv_ref[...] = jnp.zeros_like(dv_ref)
+
+    @pl.when(jnp.logical_and(i == 0, j == 0))
+    def _init_sse():
+        sse_ref[...] = jnp.zeros_like(sse_ref)
+
+    u = u_ref[...]
+    v = v_ref[...]
+    pred = jnp.dot(u, v.T, preferred_element_type=r_ref.dtype)
+    err = (pred - r_ref[...]) * m_ref[...]
+    du_ref[...] += jnp.dot(err, v, preferred_element_type=du_ref.dtype)
+    dv_ref[...] += jnp.dot(err.T, u, preferred_element_type=dv_ref.dtype)
+    sse_ref[...] += jnp.sum(err * err)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_u", "tile_i"))
+def cf_grads(u, v, r, mask, tile_u=128, tile_i=128):
+    """Masked-MF gradients, block-tiled. Returns (dU, dV, sse)."""
+    nu, k = u.shape
+    ni, k2 = v.shape
+    assert k == k2
+    assert r.shape == (nu, ni) and mask.shape == (nu, ni)
+    assert nu % tile_u == 0 and ni % tile_i == 0
+    grid = (nu // tile_u, ni // tile_i)
+    du, dv, sse = pl.pallas_call(
+        _cf_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_u, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((tile_i, k), lambda i, j: (j, 0)),
+            pl.BlockSpec((tile_u, tile_i), lambda i, j: (i, j)),
+            pl.BlockSpec((tile_u, tile_i), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile_u, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((tile_i, k), lambda i, j: (j, 0)),
+            # Scalar accumulator: a (1, 1) block every step maps to.
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nu, k), u.dtype),
+            jax.ShapeDtypeStruct((ni, k), v.dtype),
+            jax.ShapeDtypeStruct((1, 1), u.dtype),
+        ],
+        interpret=True,
+    )(u, v, r, mask)
+    return du, dv, sse[0, 0]
+
+
+def vmem_bytes(tile_u=128, tile_i=128, k=8, dtype_bytes=4):
+    """Static VMEM footprint of one grid step."""
+    return dtype_bytes * (
+        tile_u * k  # U tile
+        + tile_i * k  # V tile
+        + 2 * tile_u * tile_i  # R + mask
+        + tile_u * k  # dU accumulator
+        + tile_i * k  # dV accumulator
+    )

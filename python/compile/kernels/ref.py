@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for the Pallas kernels — the CORE correctness signal.
+
+Everything here is straight-line jax.numpy with no tiling, no pallas, no
+cleverness; pytest asserts the kernels match these to tight tolerances.
+"""
+
+import jax.numpy as jnp
+
+
+def matvec(a, x):
+    """y = A @ x for A (n_dst, n_src), x (n_src,)."""
+    return a @ x
+
+
+def pagerank_step(a, rank, inv_deg, damping):
+    """One PageRank pull iteration over a dense adjacency.
+
+    a[v, u] = 1.0 iff edge u -> v; contributions are rank * inv_deg.
+    """
+    n = rank.shape[0]
+    contrib = rank * inv_deg
+    agg = a @ contrib
+    return (1.0 - damping) / n + damping * agg
+
+
+def cf_grads(u, v, r, mask):
+    """Gradients of 0.5 * sum(mask * (U V^T - R)^2) w.r.t. U and V.
+
+    u: (nu, k), v: (ni, k), r/mask: (nu, ni).
+    Returns (grad_u, grad_v, sse).
+    """
+    pred = u @ v.T
+    err = (pred - r) * mask
+    grad_u = err @ v
+    grad_v = err.T @ u
+    sse = jnp.sum(err * err)
+    return grad_u, grad_v, sse
+
+
+def cf_step(u, v, r, mask, lr):
+    """One Jacobi gradient-descent step; returns (u', v', sse)."""
+    grad_u, grad_v, sse = cf_grads(u, v, r, mask)
+    return u - lr * grad_u, v - lr * grad_v, sse

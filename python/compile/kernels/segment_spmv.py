@@ -1,0 +1,84 @@
+"""Segmented mat-vec as a Pallas kernel (the L1 hot spot).
+
+CSR segmenting's TPU translation (DESIGN.md Hardware-Adaptation): the
+randomly-read source-vertex slice becomes the x-tile pinned in VMEM while
+(TILE_D, TILE_S) adjacency tiles stream in from HBM and hit the MXU. The
+grid's inner dimension walks source tiles — exactly the paper's
+"one segment at a time" schedule — and accumulates into the output tile,
+which is the cache-aware-merge analogue (the partial sums never leave
+VMEM between segment steps).
+
+interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; numerics are validated through the interpret path and the
+lowered HLO is what the rust runtime executes.
+
+VMEM budget at the default TILE=256, f32:
+    A tile   256*256*4  = 256 KiB
+    x tile   256*4      =   1 KiB
+    y tile   256*4      =   1 KiB
+well under ~16 MiB VMEM; the MXU sees (256x256)@(256x1) per step.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matvec_kernel(a_ref, x_ref, o_ref):
+    """One (dst-tile, src-tile) grid step: o += A_tile @ x_tile."""
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # MXU-shaped block product; x is kept (TILE_S, 1) so this is a matmul,
+    # not a reduction loop.
+    o_ref[...] += jnp.dot(
+        a_ref[...], x_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("tile_d", "tile_s"))
+def matvec(a, x, tile_d=256, tile_s=256):
+    """y = A @ x with segment-tiled accumulation.
+
+    a: (n_dst, n_src); x: (n_src,). Dimensions must divide the tiles.
+    """
+    n_dst, n_src = a.shape
+    assert n_dst % tile_d == 0, f"n_dst {n_dst} % tile_d {tile_d}"
+    assert n_src % tile_s == 0, f"n_src {n_src} % tile_s {tile_s}"
+    x2 = x.reshape(n_src, 1)
+    grid = (n_dst // tile_d, n_src // tile_s)
+    y2 = pl.pallas_call(
+        _matvec_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_d, tile_s), lambda i, j: (i, j)),
+            pl.BlockSpec((tile_s, 1), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_d, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_dst, 1), x.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(a, x2)
+    return y2.reshape(n_dst)
+
+
+def vmem_bytes(tile_d=256, tile_s=256, dtype_bytes=4):
+    """Static VMEM footprint of one grid step (for DESIGN.md §Perf)."""
+    a = tile_d * tile_s * dtype_bytes
+    x = tile_s * dtype_bytes
+    y = tile_d * dtype_bytes
+    return a + x + y
+
+
+def mxu_utilization_estimate(tile_d=256, tile_s=256):
+    """Fraction of 128x128-systolic-array issue slots a (tile_d, tile_s)
+    @ (tile_s, 1) product can fill. Mat-vec feeds one output column, so
+    the dense-matmul bound is 1/128 per pass — the kernel compensates by
+    batching dst tiles; reported for the §Perf roofline discussion."""
+    mxu = 128
+    fill_rows = min(tile_d, mxu) / mxu
+    fill_cols = 1 / mxu  # single output column
+    return fill_rows * fill_cols

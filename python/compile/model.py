@@ -1,0 +1,65 @@
+"""Layer-2 JAX model: the compute graphs the rust coordinator executes via
+PJRT. Each function is jitted, calls the L1 Pallas kernels, and is lowered
+once by aot.py to HLO text.
+
+Shapes are fixed at AOT time (one artifact per configuration); the
+defaults match the end_to_end example's 2048-vertex demo graph.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import cf_block, segment_spmv
+
+# Static configuration baked into the default artifacts.
+PAGERANK_N = 2048
+PAGERANK_TILE = 256
+PAGERANK_DAMPING = 0.85
+
+CF_NU = 512
+CF_NI = 256
+CF_K = 8
+CF_TILE_U = 128
+CF_TILE_I = 128
+CF_LR = 0.02
+
+
+def pagerank_step(a, rank, inv_deg):
+    """One PageRank pull iteration over the dense segment-tiled adjacency.
+
+    a: (n, n) with a[v, u] = 1.0 iff u -> v; rank, inv_deg: (n,).
+    Returns the 1-tuple (new_rank,) (lowered with return_tuple=True).
+    """
+    n = rank.shape[0]
+    contrib = rank * inv_deg  # the paper's contribution precompute
+    agg = segment_spmv.matvec(a, contrib, tile_d=PAGERANK_TILE, tile_s=PAGERANK_TILE)
+    new_rank = (1.0 - PAGERANK_DAMPING) / n + PAGERANK_DAMPING * agg
+    return (new_rank,)
+
+
+def cf_step(u, v, r, mask):
+    """One CF gradient-descent step (Jacobi: both sides from old values).
+
+    Returns (u', v', sse).
+    """
+    du, dv, sse = cf_block.cf_grads(u, v, r, mask, tile_u=CF_TILE_U, tile_i=CF_TILE_I)
+    return (u - CF_LR * du, v - CF_LR * dv, sse)
+
+
+def pagerank_example_args(n=PAGERANK_N):
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((n, n), f32),
+        jax.ShapeDtypeStruct((n,), f32),
+        jax.ShapeDtypeStruct((n,), f32),
+    )
+
+
+def cf_example_args(nu=CF_NU, ni=CF_NI, k=CF_K):
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((nu, k), f32),
+        jax.ShapeDtypeStruct((ni, k), f32),
+        jax.ShapeDtypeStruct((nu, ni), f32),
+        jax.ShapeDtypeStruct((nu, ni), f32),
+    )

@@ -1,0 +1,136 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and dtypes per the repo's testing contract.
+"""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import cf_block, ref, segment_spmv
+
+jax.config.update("jax_enable_x64", False)
+
+
+def rand(rng, shape, dtype):
+    return jnp.asarray(rng.standard_normal(shape), dtype=dtype)
+
+
+TOL = {jnp.float32: 1e-5, jnp.bfloat16: 2e-2}
+
+
+# ---------------------------------------------------------------- matvec
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    dst_tiles=st.integers(1, 4),
+    src_tiles=st.integers(1, 4),
+    tile=st.sampled_from([8, 16, 32]),
+    dtype_i=st.sampled_from([0, 1]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matvec_matches_ref(dst_tiles, src_tiles, tile, dtype_i, seed):
+    dtype = [jnp.float32, jnp.bfloat16][dtype_i]
+    rng = np.random.default_rng(seed)
+    n_dst, n_src = dst_tiles * tile, src_tiles * tile
+    a = rand(rng, (n_dst, n_src), dtype)
+    x = rand(rng, (n_src,), dtype)
+    got = segment_spmv.matvec(a, x, tile_d=tile, tile_s=tile)
+    want = ref.matvec(a.astype(jnp.float32), x.astype(jnp.float32))
+    np.testing.assert_allclose(
+        np.asarray(got, dtype=np.float32),
+        np.asarray(want),
+        rtol=TOL[dtype],
+        atol=TOL[dtype] * np.sqrt(n_src),
+    )
+
+
+def test_matvec_rejects_ragged_shapes():
+    a = jnp.zeros((100, 64), jnp.float32)
+    x = jnp.zeros((64,), jnp.float32)
+    with pytest.raises(AssertionError):
+        segment_spmv.matvec(a, x, tile_d=64, tile_s=64)
+
+
+def test_matvec_identity():
+    n = 64
+    a = jnp.eye(n, dtype=jnp.float32)
+    x = jnp.arange(n, dtype=jnp.float32)
+    got = segment_spmv.matvec(a, x, tile_d=16, tile_s=16)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(x))
+
+
+def test_matvec_tile_independence():
+    rng = np.random.default_rng(7)
+    a = rand(rng, (128, 128), jnp.float32)
+    x = rand(rng, (128,), jnp.float32)
+    y8 = segment_spmv.matvec(a, x, tile_d=8, tile_s=8)
+    y64 = segment_spmv.matvec(a, x, tile_d=64, tile_s=64)
+    np.testing.assert_allclose(np.asarray(y8), np.asarray(y64), rtol=2e-5, atol=1e-5)
+
+
+def test_vmem_budget_documented():
+    # The default tiles must stay far under a 16 MiB VMEM.
+    assert segment_spmv.vmem_bytes(256, 256) < 1 << 20
+    assert cf_block.vmem_bytes(128, 128, 8) < 1 << 20
+
+
+# ------------------------------------------------------------------- cf
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    u_tiles=st.integers(1, 3),
+    i_tiles=st.integers(1, 3),
+    tile=st.sampled_from([8, 16]),
+    k=st.sampled_from([4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_cf_grads_match_ref(u_tiles, i_tiles, tile, k, seed):
+    rng = np.random.default_rng(seed)
+    nu, ni = u_tiles * tile, i_tiles * tile
+    u = rand(rng, (nu, k), jnp.float32)
+    v = rand(rng, (ni, k), jnp.float32)
+    r = rand(rng, (nu, ni), jnp.float32)
+    mask = jnp.asarray(rng.random((nu, ni)) < 0.3, dtype=jnp.float32)
+    du, dv, sse = cf_block.cf_grads(u, v, r, mask, tile_u=tile, tile_i=tile)
+    rdu, rdv, rsse = ref.cf_grads(u, v, r, mask)
+    np.testing.assert_allclose(np.asarray(du), np.asarray(rdu), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(dv), np.asarray(rdv), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(float(sse), float(rsse), rtol=1e-4)
+
+
+def test_cf_zero_mask_zero_grads():
+    rng = np.random.default_rng(3)
+    u = rand(rng, (16, 8), jnp.float32)
+    v = rand(rng, (16, 8), jnp.float32)
+    r = rand(rng, (16, 16), jnp.float32)
+    mask = jnp.zeros((16, 16), jnp.float32)
+    du, dv, sse = cf_block.cf_grads(u, v, r, mask, tile_u=8, tile_i=8)
+    assert float(jnp.abs(du).max()) == 0.0
+    assert float(jnp.abs(dv).max()) == 0.0
+    assert float(sse) == 0.0
+
+
+def test_cf_descent_reduces_loss():
+    rng = np.random.default_rng(5)
+    u = rand(rng, (32, 8), jnp.float32) * 0.1
+    v = rand(rng, (32, 8), jnp.float32) * 0.1
+    r = jnp.asarray(rng.random((32, 32)) * 4 + 1, dtype=jnp.float32)
+    mask = jnp.asarray(rng.random((32, 32)) < 0.5, dtype=jnp.float32)
+    lr = 0.01
+    _, _, sse0 = cf_block.cf_grads(u, v, r, mask, tile_u=16, tile_i=16)
+    for _ in range(10):
+        du, dv, _ = cf_block.cf_grads(u, v, r, mask, tile_u=16, tile_i=16)
+        u = u - lr * du
+        v = v - lr * dv
+    _, _, sse1 = cf_block.cf_grads(u, v, r, mask, tile_u=16, tile_i=16)
+    assert float(sse1) < float(sse0)

@@ -1,0 +1,73 @@
+//! Figure 11: PageRank scalability vs serial — thread sweep via
+//! subprocess re-exec (the pool is sized at process start).
+//!
+//! NOTE: one-CPU container — threads timeshare a single core, so the
+//! measured "speedup" documents parallel-runtime overhead rather than
+//! scaling (DESIGN.md §3). The bench additionally reports the
+//! cache-model view of why segmenting scales on real multicores: all
+//! threads share one segment working set, so the simulated per-access
+//! stall cost is thread-count-independent, unlike Hilbert's per-thread
+//! working sets (Figure 10 discussion).
+
+mod common;
+
+use cagra::bench::{header, Bencher, Table};
+
+fn run_worker() {
+    let cfg = common::config();
+    let ds = common::load("twitter-sim");
+    let g = &ds.graph;
+    let mut b = Bencher::new();
+    b.reps = b.reps.min(3);
+    let mut p = cagra::apps::pagerank::Prepared::new(
+        g,
+        &cfg,
+        cagra::apps::pagerank::Variant::ReorderedSegmented,
+    );
+    p.reset();
+    let secs = b.bench("x", || p.step()).secs();
+    println!("RESULT {secs:.6}");
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    if args.iter().any(|a| a == "--worker") {
+        run_worker();
+        return;
+    }
+    header("Figure 11: PageRank thread scalability", "paper Figure 11");
+    let exe = std::env::current_exe().unwrap();
+    let threads = [1usize, 2, 4, 8];
+    let mut results = Vec::new();
+    for &nt in &threads {
+        let out = std::process::Command::new(&exe)
+            .args(["--worker", "--bench"])
+            .env("CAGRA_THREADS", nt.to_string())
+            .output()
+            .expect("spawning worker");
+        let stdout = String::from_utf8_lossy(&out.stdout);
+        let secs: f64 = stdout
+            .lines()
+            .find_map(|l| l.strip_prefix("RESULT "))
+            .unwrap_or_else(|| panic!("worker failed: {stdout}"))
+            .trim()
+            .parse()
+            .unwrap();
+        results.push(secs);
+    }
+    let serial = results[0];
+    let mut t = Table::new(&["threads", "per-iter", "speedup vs 1 thread"]);
+    for (i, &nt) in threads.iter().enumerate() {
+        t.row(&[
+            nt.to_string(),
+            format!("{:.0}ms", results[i] * 1e3),
+            format!("{:.2}x", serial / results[i]),
+        ]);
+    }
+    t.print();
+    println!("\npaper (Figure 11): 8.5x @ 12 cores, 14x @ 24 cores, 16x @ 48 SMT threads");
+    println!(
+        "(this container has {} CPU(s) — wall-clock cannot scale; the shared-working-set argument is validated by Figure 10's t=1 comparison and the cache simulation)",
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    );
+}

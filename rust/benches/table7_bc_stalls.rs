@@ -1,0 +1,52 @@
+//! Table 7: total cycles stalled on memory for BC under the optimization
+//! grid {baseline, reordering, bitvector, reordering+bitvector} × four
+//! graphs. Stalls are **simulated** (no PMU in this environment —
+//! DESIGN.md §3); the paper's shape to reproduce: every optimization
+//! reduces stalls on the big graphs, the combination is best, and
+//! LiveJournal (cache-resident) barely moves.
+
+mod common;
+
+use cagra::bench::{header, Table};
+use cagra::graph::datasets::GRAPH_DATASETS;
+use cagra::reorder::{self, Ordering as VOrdering};
+
+fn main() {
+    header("Table 7: simulated stall cycles, Betweenness Centrality", "paper Table 7");
+    let cfg = common::config();
+    let mut t = Table::new(&[
+        "Dataset",
+        "Baseline",
+        "Reordering",
+        "Bitvector",
+        "Reordering+Bitvector",
+    ]);
+    for name in GRAPH_DATASETS {
+        let ds = common::load(name);
+        let g = &ds.graph;
+        let sample = (g.num_edges() / 4_000_000).max(1);
+        let pull = g.transpose();
+        let (reord, _) = reorder::reorder(g, VOrdering::CoarseDegreeSort);
+        let reord_pull = reord.transpose();
+        // BC reads σ (8B) + frontier per edge.
+        let cells: Vec<f64> = [
+            common::frontier_stall_estimate(&pull, 8, false, cfg.llc_bytes, sample),
+            common::frontier_stall_estimate(&reord_pull, 8, false, cfg.llc_bytes, sample),
+            common::frontier_stall_estimate(&pull, 8, true, cfg.llc_bytes, sample),
+            common::frontier_stall_estimate(&reord_pull, 8, true, cfg.llc_bytes, sample),
+        ]
+        .iter()
+        .map(|e| e.stall_cycles * sample as f64 / 1e9)
+        .collect();
+        t.row(&[
+            name.to_string(),
+            format!("{:.2}B", cells[0]),
+            format!("{:.2}B", cells[1]),
+            format!("{:.2}B", cells[2]),
+            format!("{:.2}B", cells[3]),
+        ]);
+    }
+    t.print();
+    println!("\npaper (Table 7, billions of stall cycles): RMAT27 row 23,264 / 11,918 / 12,578 / 9,152");
+    println!("(absolute magnitudes differ — scaled datasets and one sweep vs the paper's full runs; the ordering across columns is the reproduced shape)");
+}

@@ -1,0 +1,56 @@
+//! Table 9: one-time preprocessing costs — parallel stable coarse degree
+//! sort (reordering), segment building, and baseline CSR construction.
+//! Paper shape: reordering < segmenting < CSR build, all a small multiple
+//! of one PageRank iteration.
+
+mod common;
+
+use cagra::bench::{header, table::fmt_secs, Bencher, Table};
+use cagra::graph::Csr;
+use cagra::reorder;
+use cagra::segment::SegmentedCsr;
+
+fn main() {
+    header("Table 9: preprocessing runtime", "paper Table 9");
+    let cfg = common::config();
+    let mut t = Table::new(&["Dataset", "Reordering", "Segmenting", "Build CSR", "1 PR iter"]);
+    for name in ["livejournal-sim", "twitter-sim", "rmat27-sim"] {
+        let ds = common::load(name);
+        let g = &ds.graph;
+        let edges: Vec<_> = g.edges().collect();
+        let mut b = Bencher::new();
+        b.reps = b.reps.min(3);
+        let reord = b
+            .bench("reorder", || {
+                let _ = reorder::degree_sort_perm(g, cfg.coarsen);
+            })
+            .secs();
+        let seg = b
+            .bench("segment", || {
+                let _ = SegmentedCsr::build_with_block(g, cfg.segment_size(8), cfg.merge_block(8));
+            })
+            .secs();
+        let csr = b
+            .bench("csr", || {
+                let _ = Csr::from_edges(g.num_vertices(), &edges);
+            })
+            .secs();
+        let iter = common::time_pagerank_iter(
+            &mut b,
+            "pr-iter",
+            g,
+            &cfg,
+            cagra::apps::pagerank::Variant::Baseline,
+        );
+        t.row(&[
+            name.to_string(),
+            fmt_secs(reord),
+            fmt_secs(seg),
+            fmt_secs(csr),
+            fmt_secs(iter),
+        ]);
+    }
+    t.print();
+    println!("\npaper (Table 9): Twitter 0.5s / 3.8s / 12.7s; RMAT27 1.4s / 6.3s / 39.3s");
+    println!("(GridGraph's own grid build took 193s for Twitter — our gridgraph_style::Grid::build is measured in fig1)");
+}

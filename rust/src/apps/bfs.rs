@@ -1,0 +1,216 @@
+//! Breadth-First Search (Table 5): direction-optimizing over the engine's
+//! push/pull EdgeMap, with the optional bitvector frontier and vertex
+//! reordering variants measured in §6.3 / Table 8.
+
+use crate::engine::{edge_map, EdgeMapOpts, VertexSubset};
+use crate::graph::{Csr, VertexId};
+use crate::reorder::{self, Ordering as VOrdering};
+use std::sync::atomic::{AtomicU32, Ordering};
+
+/// BFS optimization mix.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Variant {
+    /// Ligra-style direction-optimizing BFS (the Table 5 baseline).
+    Baseline,
+    /// + degree reordering.
+    Reordered,
+    /// + bitvector frontier ("using bitvector to keep track of the
+    ///   active vertices set", §6.3).
+    Bitvector,
+    /// + both (Tables 7/8's best row).
+    ReorderedBitvector,
+}
+
+impl Variant {
+    pub fn name(self) -> &'static str {
+        match self {
+            Variant::Baseline => "baseline",
+            Variant::Reordered => "reordering",
+            Variant::Bitvector => "bitvector",
+            Variant::ReorderedBitvector => "reordering+bitvector",
+        }
+    }
+
+    pub fn all() -> &'static [Variant] {
+        &[
+            Variant::Baseline,
+            Variant::Reordered,
+            Variant::Bitvector,
+            Variant::ReorderedBitvector,
+        ]
+    }
+
+    fn reordered(self) -> bool {
+        matches!(self, Variant::Reordered | Variant::ReorderedBitvector)
+    }
+
+    fn bitvector(self) -> bool {
+        matches!(self, Variant::Bitvector | Variant::ReorderedBitvector)
+    }
+}
+
+/// Preprocessed BFS state (reordering happens once; Table 9).
+pub struct Prepared {
+    variant: Variant,
+    g: Csr,
+    g_in: Csr,
+    /// old→new when reordered.
+    perm: Option<Vec<VertexId>>,
+    inv: Option<Vec<VertexId>>,
+}
+
+impl Prepared {
+    pub fn new(g: &Csr, variant: Variant) -> Prepared {
+        let (work, perm) = if variant.reordered() {
+            let (h, p) = reorder::reorder(g, VOrdering::CoarseDegreeSort);
+            (h, Some(p))
+        } else {
+            (g.clone(), None)
+        };
+        let g_in = work.transpose();
+        let inv = perm.as_ref().map(|p| reorder::invert(p));
+        Prepared {
+            variant,
+            g: work,
+            g_in,
+            perm,
+            inv,
+        }
+    }
+
+    /// BFS from `source` (original id). Returns parents in original id
+    /// space (`u32::MAX` = unreached; source's parent is itself).
+    pub fn run(&self, source: VertexId) -> Vec<VertexId> {
+        let n = self.g.num_vertices();
+        let src = match &self.perm {
+            Some(p) => p[source as usize],
+            None => source,
+        };
+        let parent: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(u32::MAX)).collect();
+        parent[src as usize].store(src, Ordering::Relaxed);
+        let mut frontier = VertexSubset::single(n, src);
+        let opts = EdgeMapOpts {
+            bitvector_frontier: self.variant.bitvector(),
+            ..Default::default()
+        };
+        while !frontier.is_empty() {
+            frontier = edge_map(
+                &self.g,
+                &self.g_in,
+                &frontier,
+                |s, d| {
+                    parent[d as usize]
+                        .compare_exchange(u32::MAX, s, Ordering::Relaxed, Ordering::Relaxed)
+                        .is_ok()
+                },
+                |d| parent[d as usize].load(Ordering::Relaxed) == u32::MAX,
+                opts,
+            );
+        }
+        let raw: Vec<VertexId> = parent.into_iter().map(|a| a.into_inner()).collect();
+        // Map back to original ids.
+        match (&self.perm, &self.inv) {
+            (Some(_p), Some(inv)) => {
+                let mut out = vec![u32::MAX; n];
+                for new in 0..n {
+                    let old = inv[new] as usize;
+                    let pn = raw[new];
+                    out[old] = if pn == u32::MAX { u32::MAX } else { inv[pn as usize] };
+                }
+                out
+            }
+            _ => raw,
+        }
+    }
+}
+
+/// Serial reference BFS (visit order irrelevant; only reachability/level
+/// equivalence is checked).
+pub fn reference_levels(g: &Csr, source: VertexId) -> Vec<u32> {
+    let n = g.num_vertices();
+    let mut level = vec![u32::MAX; n];
+    level[source as usize] = 0;
+    let mut queue = std::collections::VecDeque::from([source]);
+    while let Some(u) = queue.pop_front() {
+        for &v in g.neighbors(u) {
+            if level[v as usize] == u32::MAX {
+                level[v as usize] = level[u as usize] + 1;
+                queue.push_back(v);
+            }
+        }
+    }
+    level
+}
+
+/// Levels implied by a parent array (for validation).
+pub fn levels_from_parents(g: &Csr, source: VertexId, parents: &[VertexId]) -> Vec<u32> {
+    let n = g.num_vertices();
+    let mut level = vec![u32::MAX; n];
+    for v in 0..n {
+        if parents[v] == u32::MAX {
+            continue;
+        }
+        // Walk up to the source.
+        let mut cur = v as VertexId;
+        let mut steps = 0u32;
+        while cur != source && steps <= n as u32 {
+            cur = parents[cur as usize];
+            steps += 1;
+        }
+        level[v] = if cur == source { steps } else { u32::MAX };
+    }
+    level
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    fn graph() -> Csr {
+        let (n, e) = generators::rmat(10, 8, generators::RmatParams::graph500(), 77);
+        Csr::from_edges(n, &e)
+    }
+
+    #[test]
+    fn all_variants_match_reference_levels() {
+        let g = graph();
+        let source = (0..g.num_vertices())
+            .max_by_key(|&v| g.degree(v as u32))
+            .unwrap() as VertexId;
+        let want = reference_levels(&g, source);
+        for &v in Variant::all() {
+            let p = Prepared::new(&g, v);
+            let parents = p.run(source);
+            let got = levels_from_parents(&g, source, &parents);
+            assert_eq!(got, want, "{}", v.name());
+        }
+    }
+
+    #[test]
+    fn unreachable_marked() {
+        // 0 -> 1; 2 isolated.
+        let g = Csr::from_edges(3, &[(0, 1)]);
+        let p = Prepared::new(&g, Variant::Baseline);
+        let parents = p.run(0);
+        assert_eq!(parents[0], 0);
+        assert_eq!(parents[1], 0);
+        assert_eq!(parents[2], u32::MAX);
+    }
+
+    #[test]
+    fn parent_edges_exist() {
+        let g = graph();
+        let p = Prepared::new(&g, Variant::ReorderedBitvector);
+        let parents = p.run(3);
+        for v in 0..g.num_vertices() {
+            let pv = parents[v];
+            if pv != u32::MAX && pv as usize != v {
+                assert!(
+                    g.neighbors(pv).contains(&(v as u32)),
+                    "claimed parent edge {pv}->{v} missing"
+                );
+            }
+        }
+    }
+}

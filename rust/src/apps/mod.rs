@@ -1,0 +1,25 @@
+//! The evaluation's applications (§6.1 "Applications"):
+//!
+//! - [`pagerank`] — iterative, activeness-free, dominated by random vertex
+//!   reads (the running example).
+//! - [`cf`] — Collaborative Filtering: matrix factorization by gradient
+//!   descent; full cache lines per vertex (K-double latent vectors).
+//! - [`bc`] — Betweenness Centrality (Brandes): frontier-driven with
+//!   activeness checks + random vertex reads.
+//! - [`bfs`] — Breadth-First Search: activeness-only, smallest working
+//!   set.
+//! - [`sssp`] — single-source shortest paths (Bellman–Ford over
+//!   frontiers), the class BC represents.
+//! - [`pagerank_delta`] — PageRank-Delta (frontier-thinned PageRank).
+//! - [`triangle`] — Triangle Counting (degree-ordered, activeness-free).
+//! - [`cc`] — Connected Components via min-label propagation through the
+//!   generic SegmentedEdgeMap (the §4.4 associative-commutative claim).
+
+pub mod pagerank;
+pub mod cf;
+pub mod bc;
+pub mod bfs;
+pub mod sssp;
+pub mod pagerank_delta;
+pub mod triangle;
+pub mod cc;

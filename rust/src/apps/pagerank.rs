@@ -1,0 +1,365 @@
+//! PageRank (Algorithm 1) in every variant the evaluation measures.
+//!
+//! The per-iteration update is `newRank[v] = (1-d)/n + d · Σ_{u→v}
+//! rank[u]/outdeg(u)`. Our baseline precomputes per-source contributions
+//! (`rank[u]/outdeg(u)`) once per iteration — the trick that makes "our
+//! baseline faster than Ligra ... because we calculated the contribution
+//! of each vertex beforehand" (§6.2) — and replaces division by a
+//! reciprocal multiply ("we change division operations to multiplication
+//! of reciprocal").
+
+use crate::coordinator::SystemConfig;
+use crate::graph::{degree_prefix, Csr, VertexId};
+use crate::parallel::{parallel_for, parallel_for_cost, UnsafeSlice};
+use crate::reorder::{self, Ordering as VOrdering};
+use crate::segment::{SegmentBuffers, SegmentedCsr};
+
+/// Which optimization mix to run (Figure 2 / Figure 8's bar groups).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Variant {
+    /// Optimized pull baseline (contribution precompute, cost-balanced).
+    Baseline,
+    /// Baseline + degree reordering (§3).
+    Reordered,
+    /// Baseline + CSR segmenting (§4).
+    Segmented,
+    /// Both techniques (the paper's "Optimized Version").
+    ReorderedSegmented,
+    /// The Figure 2 lower bound: random reads replaced by reads of vertex
+    /// 0 — "of course the result is incorrect".
+    NoRandomLowerBound,
+}
+
+impl Variant {
+    pub fn name(self) -> &'static str {
+        match self {
+            Variant::Baseline => "baseline",
+            Variant::Reordered => "reordering",
+            Variant::Segmented => "segmenting",
+            Variant::ReorderedSegmented => "reordering+segmenting",
+            Variant::NoRandomLowerBound => "no-random-lower-bound",
+        }
+    }
+
+    pub fn all() -> &'static [Variant] {
+        &[
+            Variant::Baseline,
+            Variant::Reordered,
+            Variant::Segmented,
+            Variant::ReorderedSegmented,
+        ]
+    }
+}
+
+/// Result: ranks in **original** vertex-id space.
+#[derive(Debug, Clone)]
+pub struct PageRankResult {
+    pub values: Vec<f64>,
+    pub iterations: usize,
+}
+
+/// Preprocessed state so benches can time iterations separately from
+/// preprocessing (Table 9 measures preprocessing on its own).
+pub struct Prepared {
+    variant: Variant,
+    n: usize,
+    damping: f64,
+    /// Out-degrees in the working id space (reciprocal-multiplied).
+    inv_deg: Vec<f64>,
+    /// Pull CSR (transpose) for unsegmented variants.
+    pull: Option<Csr>,
+    /// Degree prefix over `pull` for cost-based balancing.
+    pull_cost: Option<Vec<u64>>,
+    /// Segmented structure for segmented variants.
+    seg: Option<SegmentedCsr>,
+    seg_bufs: Option<SegmentBuffers>,
+    /// Permutation old→new when reordered (to map results back).
+    perm: Option<Vec<VertexId>>,
+    /// Scratch rank vectors.
+    rank: Vec<f64>,
+    next: Vec<f64>,
+    contrib: Vec<f64>,
+}
+
+impl Prepared {
+    /// Run all preprocessing for `variant` (reorder and/or segment).
+    pub fn new(g: &Csr, cfg: &SystemConfig, variant: Variant) -> Prepared {
+        let n = g.num_vertices();
+        let (work, perm) = match variant {
+            Variant::Reordered | Variant::ReorderedSegmented => {
+                let (h, p) = reorder::reorder(
+                    g,
+                    if cfg.coarsen > 1 {
+                        VOrdering::CoarseDegreeSort
+                    } else {
+                        VOrdering::DegreeSort
+                    },
+                );
+                (h, Some(p))
+            }
+            _ => (g.clone(), None),
+        };
+        let inv_deg: Vec<f64> = (0..n)
+            .map(|v| {
+                let d = work.degree(v as VertexId);
+                if d == 0 {
+                    0.0
+                } else {
+                    1.0 / d as f64
+                }
+            })
+            .collect();
+        let (pull, pull_cost, seg, seg_bufs) = match variant {
+            Variant::Segmented | Variant::ReorderedSegmented => {
+                let sg = SegmentedCsr::build_with_block(
+                    &work,
+                    cfg.segment_size(8),
+                    cfg.merge_block(8),
+                );
+                let bufs = SegmentBuffers::for_graph(&sg);
+                (None, None, Some(sg), Some(bufs))
+            }
+            _ => {
+                let pull = work.transpose();
+                let cost = degree_prefix(&pull);
+                (Some(pull), Some(cost), None, None)
+            }
+        };
+        Prepared {
+            variant,
+            n,
+            damping: cfg.damping,
+            inv_deg,
+            pull,
+            pull_cost,
+            seg,
+            seg_bufs,
+            perm,
+            rank: vec![1.0 / n as f64; n],
+            next: vec![0.0; n],
+            contrib: vec![0.0; n],
+        }
+    }
+
+    /// Reset ranks to the uniform start.
+    pub fn reset(&mut self) {
+        self.rank.fill(1.0 / self.n as f64);
+    }
+
+    /// One PageRank iteration in the working id space.
+    pub fn step(&mut self) {
+        let n = self.n;
+        let d = self.damping;
+        let base = (1.0 - d) / n as f64;
+        // Contribution precompute: contrib[u] = rank[u] * (1/deg[u]).
+        {
+            let contrib = UnsafeSlice::new(&mut self.contrib);
+            let rank = &self.rank;
+            let inv = &self.inv_deg;
+            parallel_for(n, |u| unsafe { contrib.write(u, rank[u] * inv[u]) });
+        }
+        match self.variant {
+            Variant::Baseline | Variant::Reordered => {
+                let pull = self.pull.as_ref().unwrap();
+                let cost = self.pull_cost.as_ref().unwrap();
+                let contrib = &self.contrib;
+                let next = UnsafeSlice::new(&mut self.next);
+                let total = *cost.last().unwrap();
+                let threshold =
+                    (total / (8 * crate::parallel::num_threads() as u64).max(1)).max(512);
+                parallel_for_cost(
+                    n,
+                    threshold,
+                    |lo, hi| cost[hi] - cost[lo],
+                    |lo, hi| {
+                        for v in lo..hi {
+                            let mut acc = 0.0;
+                            for &u in pull.neighbors(v as VertexId) {
+                                acc += contrib[u as usize];
+                            }
+                            unsafe { next.write(v, base + d * acc) };
+                        }
+                    },
+                );
+            }
+            Variant::NoRandomLowerBound => {
+                // All random reads redirected to a cache-resident cell —
+                // the Figure 2 lower bound (intentionally incorrect
+                // ranks).
+                let pull = self.pull.as_ref().unwrap();
+                let cost = self.pull_cost.as_ref().unwrap();
+                let c0 = self.contrib[0];
+                let next = UnsafeSlice::new(&mut self.next);
+                let total = *cost.last().unwrap();
+                let threshold =
+                    (total / (8 * crate::parallel::num_threads() as u64).max(1)).max(512);
+                parallel_for_cost(
+                    n,
+                    threshold,
+                    |lo, hi| cost[hi] - cost[lo],
+                    |lo, hi| {
+                        for v in lo..hi {
+                            let mut acc = 0.0;
+                            for &_u in pull.neighbors(v as VertexId) {
+                                acc += c0; // read serviced from L1
+                            }
+                            unsafe { next.write(v, base + d * acc) };
+                        }
+                    },
+                );
+            }
+            Variant::Segmented | Variant::ReorderedSegmented => {
+                let sg = self.seg.as_ref().unwrap();
+                let bufs = self.seg_bufs.as_mut().unwrap();
+                let contrib = &self.contrib;
+                // aggregate fills next with base + d * Σ contrib.
+                let mut agg = std::mem::take(&mut self.next);
+                for s in 0..sg.num_segments() {
+                    sg.process_segment_slice(s, contrib, &mut bufs.per_segment[s]);
+                }
+                agg.fill(0.0);
+                crate::segment::merge(sg, bufs, &mut agg);
+                let next = UnsafeSlice::new(&mut agg);
+                parallel_for(n, |v| unsafe {
+                    let cell = next.get_mut(v);
+                    *cell = base + d * *cell;
+                });
+                self.next = agg;
+            }
+        }
+        std::mem::swap(&mut self.rank, &mut self.next);
+    }
+
+    /// Run `iters` iterations and return ranks in original id space.
+    pub fn run(&mut self, iters: usize) -> PageRankResult {
+        self.reset();
+        for _ in 0..iters {
+            self.step();
+        }
+        let values = match &self.perm {
+            Some(p) => reorder::unpermute(&self.rank, p),
+            None => self.rank.clone(),
+        };
+        PageRankResult {
+            values,
+            iterations: iters,
+        }
+    }
+
+    /// L1 error between successive iterations (for convergence loops).
+    pub fn delta(&self) -> f64 {
+        self.rank
+            .iter()
+            .zip(&self.next)
+            .map(|(a, b)| (a - b).abs())
+            .sum()
+    }
+
+    pub fn num_edges(&self) -> usize {
+        match (&self.pull, &self.seg) {
+            (Some(p), _) => p.num_edges(),
+            (_, Some(s)) => s.num_edges(),
+            _ => 0,
+        }
+    }
+}
+
+/// Convenience: preprocess + run.
+pub fn run(g: &Csr, cfg: &SystemConfig, variant: Variant, iters: usize) -> PageRankResult {
+    Prepared::new(g, cfg, variant).run(iters)
+}
+
+/// Serial reference implementation (no tricks) for correctness tests.
+pub fn reference(g: &Csr, damping: f64, iters: usize) -> Vec<f64> {
+    let n = g.num_vertices();
+    let pull = g.transpose();
+    let mut rank = vec![1.0 / n as f64; n];
+    let mut next = vec![0.0; n];
+    for _ in 0..iters {
+        for (v, cell) in next.iter_mut().enumerate() {
+            let mut acc = 0.0;
+            for &u in pull.neighbors(v as VertexId) {
+                let du = g.degree(u) as f64;
+                acc += rank[u as usize] / du;
+            }
+            *cell = (1.0 - damping) / n as f64 + damping * acc;
+        }
+        std::mem::swap(&mut rank, &mut next);
+    }
+    rank
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    fn graph() -> Csr {
+        let (n, e) = generators::rmat(10, 8, generators::RmatParams::graph500(), 31);
+        Csr::from_edges(n, &e)
+    }
+
+    fn assert_close(a: &[f64], b: &[f64], tol: f64) {
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert!(
+                (x - y).abs() <= tol * y.abs().max(1e-12),
+                "idx {i}: {x} vs {y}"
+            );
+        }
+    }
+
+    #[test]
+    fn baseline_matches_reference() {
+        let g = graph();
+        let cfg = SystemConfig::default();
+        let got = run(&g, &cfg, Variant::Baseline, 5);
+        let want = reference(&g, cfg.damping, 5);
+        assert_close(&got.values, &want, 1e-10);
+    }
+
+    #[test]
+    fn all_variants_agree() {
+        let g = graph();
+        let mut cfg = SystemConfig::default();
+        cfg.llc_bytes = 4096; // force many segments at this scale
+        let want = reference(&g, cfg.damping, 4);
+        for &v in Variant::all() {
+            let got = run(&g, &cfg, v, 4);
+            assert_close(&got.values, &want, 1e-9);
+        }
+    }
+
+    #[test]
+    fn lower_bound_is_incorrect_but_runs() {
+        let g = graph();
+        let cfg = SystemConfig::default();
+        let lb = run(&g, &cfg, Variant::NoRandomLowerBound, 3);
+        let want = reference(&g, cfg.damping, 3);
+        // Same shape, finite, but *not* equal to the true ranks.
+        assert_eq!(lb.values.len(), want.len());
+        assert!(lb.values.iter().all(|v| v.is_finite()));
+        let diff: f64 = lb.values.iter().zip(&want).map(|(a, b)| (a - b).abs()).sum();
+        assert!(diff > 1e-6, "lower bound accidentally correct?");
+    }
+
+    #[test]
+    fn ranks_sum_bounded() {
+        // With dangling mass dropped, total rank stays in (0, 1].
+        let g = graph();
+        let cfg = SystemConfig::default();
+        let r = run(&g, &cfg, Variant::ReorderedSegmented, 10);
+        let total: f64 = r.values.iter().sum();
+        assert!(total > 0.1 && total <= 1.0 + 1e-9, "total={total}");
+    }
+
+    #[test]
+    fn step_reuses_prepared_state() {
+        let g = graph();
+        let cfg = SystemConfig::default();
+        let mut p = Prepared::new(&g, &cfg, Variant::Segmented);
+        let a = p.run(3);
+        let b = p.run(3); // reset + rerun must reproduce
+        assert_eq!(a.values, b.values);
+    }
+}

@@ -1,0 +1,164 @@
+//! Single-source shortest paths (frontier-based Bellman–Ford) — the §6.1
+//! "applications that involve vertices' activeness checking" class that
+//! Betweenness Centrality represents. Edge weights are synthesized
+//! deterministically (1..=16) from the endpoints.
+
+use crate::engine::{edge_map, EdgeMapOpts, VertexSubset};
+use crate::graph::{Csr, VertexId};
+use crate::parallel::atomics::AtomicF64;
+use crate::reorder::{self, Ordering as VOrdering};
+use std::sync::atomic::Ordering;
+
+/// Deterministic edge weight in 1..=16.
+#[inline]
+pub fn weight(u: VertexId, v: VertexId) -> f64 {
+    let h = (u as u64)
+        .wrapping_mul(0xA24BAED4963EE407)
+        .wrapping_add((v as u64).wrapping_mul(0x9FB21C651E98DF25));
+    (1 + (h >> 56) % 16) as f64
+}
+
+/// Optimization mix (reordering only; SSSP's frontier churn defeats
+/// segmenting, like BFS).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Variant {
+    Baseline,
+    Reordered,
+}
+
+/// Preprocessed SSSP state.
+pub struct Prepared {
+    g: Csr,
+    g_in: Csr,
+    perm: Option<Vec<VertexId>>,
+    inv: Option<Vec<VertexId>>,
+}
+
+impl Prepared {
+    pub fn new(g: &Csr, variant: Variant) -> Prepared {
+        let (work, perm) = match variant {
+            Variant::Reordered => {
+                let (h, p) = reorder::reorder(g, VOrdering::CoarseDegreeSort);
+                (h, Some(p))
+            }
+            Variant::Baseline => (g.clone(), None),
+        };
+        let g_in = work.transpose();
+        let inv = perm.as_ref().map(|p| reorder::invert(p));
+        Prepared {
+            g: work,
+            g_in,
+            perm,
+            inv,
+        }
+    }
+
+    /// Distances from `source` (original ids); unreachable = +inf.
+    ///
+    /// Weights are defined on **original** endpoint ids so reordering does
+    /// not change the metric.
+    pub fn run(&self, source: VertexId) -> Vec<f64> {
+        let n = self.g.num_vertices();
+        let src = match &self.perm {
+            Some(p) => p[source as usize],
+            None => source,
+        };
+        // Weight of working-space edge (s,d) = weight of original edge.
+        let orig = |v: VertexId| -> VertexId {
+            match &self.inv {
+                Some(inv) => inv[v as usize],
+                None => v,
+            }
+        };
+        let dist: Vec<AtomicF64> = (0..n).map(|_| AtomicF64::new(f64::INFINITY)).collect();
+        dist[src as usize].store(0.0, Ordering::Relaxed);
+        let mut frontier = VertexSubset::single(n, src);
+        let mut rounds = 0usize;
+        while !frontier.is_empty() && rounds <= n {
+            rounds += 1;
+            frontier = edge_map(
+                &self.g,
+                &self.g_in,
+                &frontier,
+                |s, d| {
+                    let cand = dist[s as usize].load(Ordering::Relaxed) + weight(orig(s), orig(d));
+                    let prev = dist[d as usize].fetch_min(cand, Ordering::Relaxed);
+                    cand < prev
+                },
+                |_| true,
+                EdgeMapOpts::default(),
+            );
+        }
+        let raw: Vec<f64> = dist.iter().map(|d| d.load(Ordering::Relaxed)).collect();
+        match &self.perm {
+            Some(p) => reorder::unpermute(&raw, p),
+            None => raw,
+        }
+    }
+}
+
+/// Serial Dijkstra reference (weights are positive).
+pub fn reference(g: &Csr, source: VertexId) -> Vec<f64> {
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+    let n = g.num_vertices();
+    let mut dist = vec![f64::INFINITY; n];
+    dist[source as usize] = 0.0;
+    let mut heap: BinaryHeap<(Reverse<u64>, VertexId)> = BinaryHeap::new();
+    heap.push((Reverse(0), source));
+    while let Some((Reverse(dbits), u)) = heap.pop() {
+        let du = f64::from_bits(dbits);
+        if du > dist[u as usize] {
+            continue;
+        }
+        for &v in g.neighbors(u) {
+            let cand = du + weight(u, v);
+            if cand < dist[v as usize] {
+                dist[v as usize] = cand;
+                heap.push((Reverse(cand.to_bits()), v));
+            }
+        }
+    }
+    dist
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn matches_dijkstra() {
+        let (n, e) = generators::rmat(9, 8, generators::RmatParams::graph500(), 66);
+        let g = Csr::from_edges(n, &e);
+        let src = super::super::bc::default_sources(&g, 1)[0];
+        let want = reference(&g, src);
+        for v in [Variant::Baseline, Variant::Reordered] {
+            let p = Prepared::new(&g, v);
+            let got = p.run(src);
+            for i in 0..n {
+                assert_eq!(got[i], want[i], "variant {v:?} vertex {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn weights_positive_and_deterministic() {
+        for u in 0..50u32 {
+            for v in 0..50u32 {
+                let w = weight(u, v);
+                assert!((1.0..=16.0).contains(&w));
+                assert_eq!(w, weight(u, v));
+            }
+        }
+    }
+
+    #[test]
+    fn disconnected_vertices_infinite() {
+        let g = Csr::from_edges(4, &[(0, 1), (1, 2)]);
+        let p = Prepared::new(&g, Variant::Baseline);
+        let d = p.run(0);
+        assert_eq!(d[0], 0.0);
+        assert!(d[3].is_infinite());
+    }
+}

@@ -1,0 +1,25 @@
+//! Reimplementations of the comparison frameworks' *memory-access
+//! strategies* (§6.2, §6.4, Table 10). The original binaries are not
+//! available offline, so each baseline reproduces the access pattern and
+//! synchronization discipline that determines its cache behaviour
+//! (DESIGN.md §3):
+//!
+//! - [`ligra_style`] — EdgeMap pull PageRank without the contribution
+//!   precompute (per-edge division), Ligra's shape.
+//! - [`graphmat_style`] — generic-semiring SpMV PageRank, GraphMat's
+//!   shape.
+//! - [`gridgraph_style`] — 2D-grid edge streaming with atomic updates
+//!   (`E·atomics` sync overhead in Table 10).
+//! - [`xstream_style`] — edge-centric scatter/shuffle/gather streaming
+//!   partitions (`3E + KV` traffic, `shuffle(E)` random DRAM).
+//! - [`hilbert`] — Hilbert-curve edge traversal: HSerial, HAtomic, HMerge
+//!   (§6.4 / Figure 10).
+//!
+//! All five produce numerically-equivalent PageRank iterations (tests
+//! enforce it), so runtime differences measure the access pattern alone.
+
+pub mod ligra_style;
+pub mod graphmat_style;
+pub mod gridgraph_style;
+pub mod xstream_style;
+pub mod hilbert;

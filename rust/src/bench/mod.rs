@@ -1,0 +1,169 @@
+//! In-repo benchmark harness (no `criterion` in the offline mirror).
+//!
+//! Each `rust/benches/*.rs` target (`harness = false`) uses [`Bencher`] to
+//! time named cases with warmup + repeated measurement and prints
+//! paper-style tables via [`Table`]. Benches honor environment knobs:
+//!
+//! - `CAGRA_BENCH_SCALE` — dataset scale factor (default 1.0; smoke runs
+//!   use e.g. 0.25).
+//! - `CAGRA_BENCH_REPS` — measurement repetitions (default 5).
+//! - `CAGRA_BENCH_WARMUP` — warmup repetitions (default 1).
+
+pub mod table;
+
+pub use table::Table;
+
+use crate::util::stats::Summary;
+use std::time::Instant;
+
+/// One measured case.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub summary: Summary,
+    /// Optional work units (e.g. edges) for rate reporting.
+    pub work: Option<u64>,
+}
+
+impl Measurement {
+    /// Median seconds.
+    pub fn secs(&self) -> f64 {
+        self.summary.median
+    }
+
+    /// Work units per second at the median, if work was set.
+    pub fn rate(&self) -> Option<f64> {
+        self.work.map(|w| w as f64 / self.summary.median)
+    }
+}
+
+/// Benchmark runner with warmup and repetitions.
+pub struct Bencher {
+    pub reps: usize,
+    pub warmup: usize,
+    pub results: Vec<Measurement>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Bencher {
+        Bencher {
+            reps: env_usize("CAGRA_BENCH_REPS", 5),
+            warmup: env_usize("CAGRA_BENCH_WARMUP", 1),
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f` (which runs one full iteration of the workload) and record
+    /// it under `name`. Returns the measurement.
+    pub fn bench(&mut self, name: &str, mut f: impl FnMut()) -> Measurement {
+        self.bench_work(name, None, &mut f)
+    }
+
+    /// Like [`bench`], with a work-unit count for rate reporting.
+    pub fn bench_work(
+        &mut self,
+        name: &str,
+        work: Option<u64>,
+        f: &mut dyn FnMut(),
+    ) -> Measurement {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.reps);
+        for _ in 0..self.reps.max(1) {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let m = Measurement {
+            name: name.to_string(),
+            summary: Summary::of(&samples),
+            work,
+        };
+        crate::log_debug!(
+            "bench {name}: median {:.6}s (±{:.6})",
+            m.summary.median,
+            m.summary.stddev
+        );
+        self.results.push(m.clone());
+        m
+    }
+
+    /// Look up a recorded measurement.
+    pub fn get(&self, name: &str) -> Option<&Measurement> {
+        self.results.iter().find(|m| m.name == name)
+    }
+}
+
+/// Dataset scale factor for benches (`CAGRA_BENCH_SCALE`).
+pub fn scale() -> f64 {
+    std::env::var("CAGRA_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .filter(|&v: &f64| v > 0.0)
+        .unwrap_or(1.0)
+}
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key)
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Print the standard bench header used by every table/figure target.
+pub fn header(experiment: &str, paper_ref: &str) {
+    println!("==================================================================");
+    println!("{experiment}");
+    println!("reproduces: {paper_ref}");
+    println!(
+        "threads={} scale={} reps={}",
+        crate::parallel::num_threads(),
+        scale(),
+        env_usize("CAGRA_BENCH_REPS", 5),
+    );
+    println!("==================================================================");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_records_samples() {
+        let mut b = Bencher {
+            reps: 3,
+            warmup: 1,
+            results: Vec::new(),
+        };
+        let mut count = 0;
+        let m = b.bench("t", || {
+            count += 1;
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        });
+        assert_eq!(count, 4); // 1 warmup + 3 reps
+        assert_eq!(m.summary.n, 3);
+        assert!(m.secs() >= 0.0005);
+        assert!(b.get("t").is_some());
+    }
+
+    #[test]
+    fn rate_uses_work() {
+        let mut b = Bencher {
+            reps: 1,
+            warmup: 0,
+            results: Vec::new(),
+        };
+        let m = b.bench_work("w", Some(1000), &mut || {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        });
+        let r = m.rate().unwrap();
+        assert!(r > 0.0 && r < 1_000_000.0);
+    }
+}

@@ -1,0 +1,15 @@
+//! Cache substrate: a Dinero-IV-style set-associative LRU simulator
+//! ([`sim`]), the paper's §5 analytical miss-rate model ([`model`]),
+//! memory-trace generation for the graph apps ([`trace`]), and the
+//! stall-cycle estimator ([`stall`]) that substitutes for the paper's
+//! `perf`-measured "cycles stalled on memory" (no PMU access in this
+//! environment — DESIGN.md §3).
+
+pub mod sim;
+pub mod model;
+pub mod trace;
+pub mod stall;
+
+pub use model::CacheGeometry;
+pub use sim::{CacheSim, Hierarchy, HierarchyCounters};
+pub use stall::{StallEstimate, StallModel};

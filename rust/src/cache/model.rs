@@ -1,0 +1,233 @@
+//! The paper's §5 analytical cache model.
+//!
+//! Assumes each access to the vertex-data vector is independent with
+//! probability `P(i)` ∝ out-degree(i). For a k-way set-associative LRU
+//! cache:
+//!
+//! - Eq (1): `p_l = P(l) / Σ_{l' ∈ S} P(l')` — probability an access to
+//!   set S goes to line l.
+//! - Eq (2): `P_hit(l) = Σ_{i<k} p_l (1-p_l)^i = 1 - (1-p_l)^k`.
+//! - Eq (3): `E[M] = Σ_l P(l) · (1-p_l)^k`.
+//!
+//! Propositions 1 and 2 (degree-sort optimality) are checked empirically
+//! by the tests and the `model_validation` bench.
+
+/// Geometry of one cache level.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CacheGeometry {
+    pub sets: usize,
+    pub assoc: usize,
+    pub line_bytes: usize,
+}
+
+impl CacheGeometry {
+    pub fn new(total_bytes: usize, assoc: usize, line_bytes: usize) -> CacheGeometry {
+        assert!(assoc >= 1 && line_bytes >= 1);
+        let lines = (total_bytes / line_bytes).max(assoc);
+        let sets = (lines / assoc).max(1);
+        CacheGeometry {
+            sets,
+            assoc,
+            line_bytes,
+        }
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.sets * self.assoc * self.line_bytes
+    }
+
+    pub fn lines(&self) -> usize {
+        self.sets * self.assoc
+    }
+}
+
+/// Predicted miss rate for accesses to a vertex-value vector laid out in
+/// id order, where element `i` is accessed with weight `weights[i]`
+/// (out-degree for pull-based updates) and each element occupies
+/// `elem_bytes`.
+///
+/// Elements are grouped into cache lines by layout, lines mapped to sets
+/// by `line_id % sets`, then Eq (1)–(3) give the expected miss rate.
+pub fn predicted_miss_rate(weights: &[u64], elem_bytes: usize, geom: CacheGeometry) -> f64 {
+    let total: u64 = weights.iter().sum();
+    if total == 0 {
+        return 0.0;
+    }
+    let per_line = (geom.line_bytes / elem_bytes).max(1);
+    let num_lines = weights.len().div_ceil(per_line);
+    // P(l) per line.
+    let mut p_line = vec![0.0f64; num_lines];
+    for (i, &w) in weights.iter().enumerate() {
+        p_line[i / per_line] += w as f64 / total as f64;
+    }
+    // Per-set denominators.
+    let mut set_sum = vec![0.0f64; geom.sets];
+    for (l, &p) in p_line.iter().enumerate() {
+        set_sum[l % geom.sets] += p;
+    }
+    // E[M] = Σ_l P(l) (1 - p_l)^k.
+    let k = geom.assoc as f64;
+    let mut miss = 0.0;
+    for (l, &p) in p_line.iter().enumerate() {
+        if p == 0.0 {
+            continue;
+        }
+        let denom = set_sum[l % geom.sets];
+        if denom <= 0.0 {
+            continue;
+        }
+        let p_l = (p / denom).min(1.0);
+        miss += p * (1.0 - p_l).powf(k);
+    }
+    miss
+}
+
+/// Expected miss rate after applying a permutation (`perm[old] = new`) to
+/// the vertex layout: weights are scattered to their new positions first.
+pub fn predicted_miss_rate_permuted(
+    weights: &[u64],
+    perm: &[u32],
+    elem_bytes: usize,
+    geom: CacheGeometry,
+) -> f64 {
+    assert_eq!(weights.len(), perm.len());
+    let mut permuted = vec![0u64; weights.len()];
+    for (old, &w) in weights.iter().enumerate() {
+        permuted[perm[old] as usize] = w;
+    }
+    predicted_miss_rate(&permuted, elem_bytes, geom)
+}
+
+/// Proposition 1, constructively: within one cache set, expected hit rate
+/// of a line assignment (element probabilities grouped into lines).
+/// Tests verify that swapping a hot element into a hotter line never
+/// decreases this value under the proposition's precondition.
+pub fn set_hit_rate(line_elem_probs: &[Vec<f64>], assoc: usize) -> f64 {
+    let set_total: f64 = line_elem_probs.iter().map(|l| l.iter().sum::<f64>()).sum();
+    if set_total <= 0.0 {
+        return 1.0;
+    }
+    line_elem_probs
+        .iter()
+        .map(|l| {
+            let p: f64 = l.iter().sum();
+            let p_l = p / set_total;
+            p * (1.0 - (1.0 - p_l).powf(assoc as f64))
+        })
+        .sum::<f64>()
+        / set_total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn zipf_weights(n: usize, seed: u64) -> Vec<u64> {
+        let mut rng = Rng::new(seed);
+        let mut w: Vec<u64> = (1..=n)
+            .map(|k| ((1e6 / (k as f64)) as u64).max(1))
+            .collect();
+        rng.shuffle(&mut w);
+        w
+    }
+
+    #[test]
+    fn geometry_roundtrip() {
+        let g = CacheGeometry::new(32 * 1024, 8, 64);
+        assert_eq!(g.lines(), 512);
+        assert_eq!(g.sets, 64);
+        assert_eq!(g.total_bytes(), 32 * 1024);
+    }
+
+    #[test]
+    fn tiny_working_set_no_misses() {
+        // Everything fits in one set's ways => p_l large => near-zero miss.
+        let g = CacheGeometry {
+            sets: 1,
+            assoc: 16,
+            line_bytes: 64,
+        };
+        let weights = vec![1u64; 8]; // one line (8 × 8B)
+        let m = predicted_miss_rate(&weights, 8, g);
+        assert!(m < 1e-9, "m={m}");
+    }
+
+    #[test]
+    fn uniform_large_set_mostly_misses() {
+        let g = CacheGeometry::new(8 * 1024, 8, 64); // 128 lines
+        let weights = vec![1u64; 1 << 16]; // 8192 lines of 8 ids
+        let m = predicted_miss_rate(&weights, 8, g);
+        assert!(m > 0.9, "m={m}");
+    }
+
+    #[test]
+    fn degree_sort_reduces_predicted_misses() {
+        // The §5 claim: sorting by weight is optimal; at least it must
+        // beat the shuffled layout.
+        let weights = zipf_weights(1 << 14, 3);
+        let g = CacheGeometry::new(64 * 1024, 16, 64);
+        let shuffled = predicted_miss_rate(&weights, 8, g);
+        let mut sorted = weights.clone();
+        sorted.sort_unstable_by(|a, b| b.cmp(a));
+        let sorted_m = predicted_miss_rate(&sorted, 8, g);
+        assert!(
+            sorted_m < shuffled * 0.9,
+            "sorted={sorted_m} shuffled={shuffled}"
+        );
+    }
+
+    #[test]
+    fn sorted_beats_random_permutations() {
+        // Proposition 2, empirically: no random permutation we try beats
+        // the descending-sort layout.
+        let weights = zipf_weights(1 << 10, 7);
+        let g = CacheGeometry::new(4 * 1024, 8, 64);
+        let mut sorted = weights.clone();
+        sorted.sort_unstable_by(|a, b| b.cmp(a));
+        let best = predicted_miss_rate(&sorted, 8, g);
+        let mut rng = Rng::new(11);
+        for _ in 0..20 {
+            let perm = rng.permutation(weights.len());
+            let m = predicted_miss_rate_permuted(&weights, &perm, 8, g);
+            assert!(m >= best - 1e-9, "perm beat sorted: {m} < {best}");
+        }
+    }
+
+    #[test]
+    fn proposition1_swap_improves_set_hit_rate() {
+        // Prop 1 precondition: P(l1) < P(l2) < 2/(k+1) · Σ_{l'∈S} P(l').
+        // Build a set with many low-probability lines so the bound holds,
+        // put hot element x1 in the colder line l1 and cold x2 in l2;
+        // swapping them must improve the set hit rate.
+        let assoc = 8;
+        let mut lines: Vec<Vec<f64>> = (0..18).map(|_| vec![0.0025, 0.0025]).collect();
+        lines.push(vec![0.004, 0.001]); // l1: P=0.005, x1=0.004 hot
+        lines.push(vec![0.0005, 0.006]); // l2: P=0.0065 > P(l1)
+        let total: f64 = lines.iter().flatten().sum();
+        let bound = 2.0 / (assoc as f64 + 1.0) * total;
+        assert!(0.0065 < bound, "precondition violated: bound={bound}");
+        let before = set_hit_rate(&lines, assoc);
+        // Swap x1 (l1, elem 0) with x2 (l2, elem 0).
+        let x1 = lines[18][0];
+        lines[18][0] = lines[19][0];
+        lines[19][0] = x1;
+        let after = set_hit_rate(&lines, assoc);
+        assert!(after > before, "after={after} before={before}");
+    }
+
+    #[test]
+    fn miss_rate_in_unit_interval() {
+        crate::util::prop::check("E[M] ∈ [0,1]", 25, |gen| {
+            let n = gen.usize(1..2000);
+            let weights: Vec<u64> = (0..n).map(|_| gen.usize(0..100) as u64).collect();
+            let g = CacheGeometry::new(
+                [1024usize, 4096, 65536][gen.usize(0..3)],
+                [2usize, 8, 16][gen.usize(0..3)],
+                64,
+            );
+            let m = predicted_miss_rate(&weights, 8, g);
+            assert!((0.0..=1.0 + 1e-12).contains(&m), "m={m}");
+        });
+    }
+}

@@ -1,0 +1,270 @@
+//! Set-associative LRU cache simulator (the Dinero IV stand-in used to
+//! validate the §5 analytical model, and the engine behind the simulated
+//! stall-cycle metrics).
+
+use crate::cache::model::CacheGeometry;
+
+/// One cache level: `sets × assoc` lines of `line_bytes`.
+#[derive(Debug, Clone)]
+pub struct CacheSim {
+    pub geom: CacheGeometry,
+    /// `tags[set * assoc + way]` — line tag or u64::MAX when invalid.
+    tags: Vec<u64>,
+    /// LRU stamps parallel to `tags` (bigger = more recent).
+    stamps: Vec<u64>,
+    clock: u64,
+    pub accesses: u64,
+    pub misses: u64,
+}
+
+impl CacheSim {
+    pub fn new(geom: CacheGeometry) -> CacheSim {
+        let lines = geom.sets * geom.assoc;
+        CacheSim {
+            geom,
+            tags: vec![u64::MAX; lines],
+            stamps: vec![0; lines],
+            clock: 0,
+            accesses: 0,
+            misses: 0,
+        }
+    }
+
+    /// Convenience constructor from total capacity.
+    pub fn with_capacity(total_bytes: usize, assoc: usize, line_bytes: usize) -> CacheSim {
+        CacheSim::new(CacheGeometry::new(total_bytes, assoc, line_bytes))
+    }
+
+    /// Access a byte address; returns true on hit. LRU replacement.
+    #[inline]
+    pub fn access(&mut self, addr: u64) -> bool {
+        self.clock += 1;
+        self.accesses += 1;
+        let line = addr / self.geom.line_bytes as u64;
+        let set = (line % self.geom.sets as u64) as usize;
+        let base = set * self.geom.assoc;
+        let ways = &mut self.tags[base..base + self.geom.assoc];
+        // Hit?
+        for (w, &tag) in ways.iter().enumerate() {
+            if tag == line {
+                self.stamps[base + w] = self.clock;
+                return true;
+            }
+        }
+        // Miss: evict LRU way.
+        self.misses += 1;
+        let mut victim = 0;
+        let mut oldest = u64::MAX;
+        for w in 0..self.geom.assoc {
+            let s = self.stamps[base + w];
+            if self.tags[base + w] == u64::MAX {
+                victim = w;
+                break;
+            }
+            if s < oldest {
+                oldest = s;
+                victim = w;
+            }
+        }
+        self.tags[base + victim] = line;
+        self.stamps[base + victim] = self.clock;
+        false
+    }
+
+    pub fn miss_rate(&self) -> f64 {
+        if self.accesses == 0 {
+            0.0
+        } else {
+            self.misses as f64 / self.accesses as f64
+        }
+    }
+
+    pub fn reset_counters(&mut self) {
+        self.accesses = 0;
+        self.misses = 0;
+    }
+
+    /// Invalidate all lines (counters kept).
+    pub fn flush(&mut self) {
+        self.tags.fill(u64::MAX);
+        self.stamps.fill(0);
+    }
+}
+
+/// Per-level hit counters from a [`Hierarchy`] run.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct HierarchyCounters {
+    pub accesses: u64,
+    /// Hits at L1 / L2 / L3.
+    pub hits: [u64; 3],
+    /// Misses that went to DRAM.
+    pub dram: u64,
+}
+
+impl HierarchyCounters {
+    pub fn llc_miss_rate(&self) -> f64 {
+        if self.accesses == 0 {
+            0.0
+        } else {
+            self.dram as f64 / self.accesses as f64
+        }
+    }
+}
+
+/// An inclusive multi-level hierarchy (up to 3 levels). Mirrors the
+/// evaluation machine's shape at scaled capacities (DESIGN.md §3).
+#[derive(Debug, Clone)]
+pub struct Hierarchy {
+    pub levels: Vec<CacheSim>,
+    pub counters: HierarchyCounters,
+}
+
+impl Hierarchy {
+    pub fn new(levels: Vec<CacheSim>) -> Hierarchy {
+        assert!(!levels.is_empty() && levels.len() <= 3);
+        Hierarchy {
+            levels,
+            counters: HierarchyCounters::default(),
+        }
+    }
+
+    /// The scaled default: 32 KiB 8-way L1d, 256 KiB 8-way L2, and an
+    /// `llc_bytes` 16-way L3 (64 B lines throughout).
+    pub fn scaled_default(llc_bytes: usize) -> Hierarchy {
+        Hierarchy::new(vec![
+            CacheSim::with_capacity(32 * 1024, 8, 64),
+            CacheSim::with_capacity(256 * 1024, 8, 64),
+            CacheSim::with_capacity(llc_bytes, 16, 64),
+        ])
+    }
+
+    /// Access an address; returns the level index that hit (0-based), or
+    /// `levels.len()` for DRAM. Fills all missed levels (inclusive).
+    pub fn access(&mut self, addr: u64) -> usize {
+        self.counters.accesses += 1;
+        let mut hit_level = self.levels.len();
+        for (i, level) in self.levels.iter_mut().enumerate() {
+            if level.access(addr) {
+                hit_level = i;
+                break;
+            }
+        }
+        if hit_level < self.levels.len() {
+            self.counters.hits[hit_level] += 1;
+        } else {
+            self.counters.dram += 1;
+        }
+        hit_level
+    }
+
+    pub fn reset(&mut self) {
+        for l in &mut self.levels {
+            l.reset_counters();
+            l.flush();
+        }
+        self.counters = HierarchyCounters::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sequential_within_capacity_hits_after_warmup() {
+        let mut c = CacheSim::with_capacity(4096, 4, 64); // 64 lines
+        for round in 0..3 {
+            for i in 0..32u64 {
+                let hit = c.access(i * 64);
+                if round > 0 {
+                    assert!(hit, "round {round} line {i} should hit");
+                }
+            }
+        }
+        assert_eq!(c.misses, 32); // compulsory only
+    }
+
+    #[test]
+    fn capacity_misses_when_oversubscribed() {
+        let mut c = CacheSim::with_capacity(4096, 4, 64); // 64 lines
+        // Cycle through 128 lines: with LRU every access misses.
+        for _ in 0..3 {
+            for i in 0..128u64 {
+                c.access(i * 64);
+            }
+        }
+        assert!(c.miss_rate() > 0.99, "mr={}", c.miss_rate());
+    }
+
+    #[test]
+    fn lru_keeps_hot_line() {
+        let mut c = CacheSim::new(CacheGeometry {
+            sets: 1,
+            assoc: 2,
+            line_bytes: 64,
+        });
+        // Two-way set; A kept hot while B/C alternate evicting each other.
+        let a = 0u64;
+        let b = 64;
+        let cc = 128;
+        c.access(a);
+        c.access(b);
+        assert!(c.access(a)); // hit, refreshes A
+        c.access(cc); // evicts B (LRU), not A
+        assert!(c.access(a));
+        assert!(!c.access(b)); // B was evicted
+    }
+
+    #[test]
+    fn full_associativity_no_conflicts() {
+        // 64 lines fully associative: any 64-line working set has only
+        // compulsory misses.
+        let mut c = CacheSim::new(CacheGeometry {
+            sets: 1,
+            assoc: 64,
+            line_bytes: 64,
+        });
+        // Strided addresses that would conflict in a set-indexed cache.
+        for _ in 0..4 {
+            for i in 0..64u64 {
+                c.access(i * 64 * 128);
+            }
+        }
+        assert_eq!(c.misses, 64);
+    }
+
+    #[test]
+    fn miss_rate_monotone_in_capacity() {
+        // Random accesses over a fixed footprint: bigger cache, fewer
+        // misses.
+        let mut rng = crate::util::rng::Rng::new(17);
+        let addrs: Vec<u64> = (0..60_000).map(|_| rng.next_below(1 << 20)).collect();
+        let mut rates = Vec::new();
+        for kib in [16usize, 64, 256, 1024, 4096] {
+            let mut c = CacheSim::with_capacity(kib * 1024, 8, 64);
+            for &a in &addrs {
+                c.access(a);
+            }
+            rates.push(c.miss_rate());
+        }
+        for w in rates.windows(2) {
+            assert!(w[1] <= w[0] + 1e-6, "{rates:?}");
+        }
+    }
+
+    #[test]
+    fn hierarchy_levels_filter() {
+        let mut h = Hierarchy::scaled_default(1024 * 1024);
+        // Working set of 64 KiB: misses L1, fits L2.
+        let lines = 1024u64;
+        for _ in 0..4 {
+            for i in 0..lines {
+                h.access(i * 64);
+            }
+        }
+        let c = h.counters;
+        assert_eq!(c.accesses, 4 * lines);
+        assert!(c.hits[1] > 0, "L2 should absorb L1 capacity misses: {c:?}");
+        assert_eq!(c.dram, lines, "only compulsory misses reach DRAM: {c:?}");
+    }
+}

@@ -1,0 +1,204 @@
+//! Stall-cycle estimation — the stand-in for the paper's `perf`-measured
+//! "cycles stalled on memory" (Tables 7/8, Figures 2/3/9).
+//!
+//! A classified trace ([`super::trace`]) is run through the simulated
+//! hierarchy; stalls are `Σ hits(level) × latency(level)` with sequential
+//! streams charged the *prefetched* DRAM cost (§2.3: "Sequential access to
+//! DRAM effectively uses all memory bandwidth ... and benefits from
+//! hardware prefetchers"; "random access to DRAM is 6-8x more expensive
+//! than random access to LLC or sequential accesses to DRAM").
+
+use super::sim::Hierarchy;
+use super::trace::Access;
+
+/// Latency model (cycles). Defaults follow Ivy Bridge folklore numbers;
+/// only the *ratios* matter for reproducing the paper's shapes.
+#[derive(Debug, Clone, Copy)]
+pub struct StallModel {
+    pub l1: f64,
+    pub l2: f64,
+    pub l3: f64,
+    /// Random DRAM access (cache-line granularity, untranslated pointer
+    /// chase).
+    pub dram_random: f64,
+    /// Effective per-access cost of a prefetched sequential DRAM stream.
+    pub dram_sequential: f64,
+}
+
+impl Default for StallModel {
+    fn default() -> Self {
+        StallModel {
+            l1: 0.0,        // L1 hits don't stall the pipeline
+            l2: 8.0,
+            l3: 30.0,
+            dram_random: 200.0,
+            dram_sequential: 25.0, // ≈ 8x cheaper than random (paper §2.3)
+        }
+    }
+}
+
+/// Result of a stall estimation run.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StallEstimate {
+    pub accesses: u64,
+    pub stall_cycles: f64,
+    pub llc_misses: u64,
+    pub llc_miss_rate: f64,
+}
+
+impl StallEstimate {
+    pub fn stalls_per_access(&self) -> f64 {
+        if self.accesses == 0 {
+            0.0
+        } else {
+            self.stall_cycles / self.accesses as f64
+        }
+    }
+}
+
+/// Run a classified trace through `hier`, charging latencies per the
+/// model. Sequential streams (edge reads, output writes) that miss all
+/// levels are charged `dram_sequential`; random vertex reads that miss
+/// are charged `dram_random`.
+pub fn estimate(trace: &[Access], hier: &mut Hierarchy, model: StallModel) -> StallEstimate {
+    let nlev = hier.levels.len();
+    let mut stall = 0.0f64;
+    let mut llc_misses = 0u64;
+    for &a in trace {
+        let level = hier.access(a.addr());
+        let lat = match level {
+            0 => model.l1,
+            1 => model.l2,
+            2 => model.l3,
+            _ => {
+                llc_misses += 1;
+                match a {
+                    Access::VertexRead(_) => model.dram_random,
+                    Access::EdgeRead(_) | Access::OutWrite(_) => model.dram_sequential,
+                }
+            }
+        };
+        // Treat level==nlev when fewer than 3 levels configured.
+        let lat = if level >= nlev && level < 3 {
+            match a {
+                Access::VertexRead(_) => model.dram_random,
+                _ => model.dram_sequential,
+            }
+        } else {
+            lat
+        };
+        stall += lat;
+    }
+    StallEstimate {
+        accesses: trace.len() as u64,
+        stall_cycles: stall,
+        llc_misses,
+        llc_miss_rate: if trace.is_empty() {
+            0.0
+        } else {
+            llc_misses as f64 / trace.len() as f64
+        },
+    }
+}
+
+/// Convenience: estimate one pull-iteration's stalls for a graph with the
+/// default scaled hierarchy.
+pub fn estimate_pull_iteration(
+    g_pull: &crate::graph::Csr,
+    elem_bytes: u64,
+    llc_bytes: usize,
+    sample_every: usize,
+) -> StallEstimate {
+    let trace = super::trace::full_trace(g_pull, elem_bytes, sample_every);
+    let mut hier = Hierarchy::scaled_default(llc_bytes);
+    estimate(&trace, &mut hier, StallModel::default())
+}
+
+/// Estimate a segmented iteration's stalls (for the Fig 2/9 comparisons).
+pub fn estimate_segmented_iteration(
+    sg: &crate::segment::SegmentedCsr,
+    elem_bytes: u64,
+    llc_bytes: usize,
+    sample_every: usize,
+) -> StallEstimate {
+    let trace = super::trace::segmented_trace(sg, elem_bytes, sample_every);
+    let mut hier = Hierarchy::scaled_default(llc_bytes);
+    estimate(&trace, &mut hier, StallModel::default())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{generators, Csr};
+
+    fn graph(scale: u32) -> Csr {
+        let (n, e) = generators::rmat(scale, 16, generators::RmatParams::graph500(), 12);
+        Csr::from_edges(n, &e)
+    }
+
+    /// A shrunken hierarchy (1 KiB L1 / 4 KiB L2 / `llc` L3) so that small
+    /// test graphs still exhibit the paper's working-set-vs-LLC regime.
+    fn tiny_hier(llc: usize) -> Hierarchy {
+        Hierarchy::new(vec![
+            crate::cache::sim::CacheSim::with_capacity(1024, 8, 64),
+            crate::cache::sim::CacheSim::with_capacity(4 * 1024, 8, 64),
+            crate::cache::sim::CacheSim::with_capacity(llc, 16, 64),
+        ])
+    }
+
+    #[test]
+    fn segmenting_reduces_stalls() {
+        // The headline effect: with vertex data ≫ LLC, the segmented trace
+        // must stall substantially less than the unsegmented one.
+        let g = graph(13); // 8192 vertices => 64 KiB of f64 data
+        let llc = 16 * 1024; // effective LLC holds 1/4 of vertex data
+        let pull = g.transpose();
+        let trace = crate::cache::trace::full_trace(&pull, 8, 1);
+        let base = estimate(&trace, &mut tiny_hier(llc), StallModel::default());
+        let seg_size = llc / 8 / 2; // half the LLC for source data
+        let sg = crate::segment::SegmentedCsr::build(&g, seg_size);
+        let strace = crate::cache::trace::segmented_trace(&sg, 8, 1);
+        let seg = estimate(&strace, &mut tiny_hier(llc), StallModel::default());
+        assert!(
+            seg.stall_cycles < 0.7 * base.stall_cycles,
+            "seg={} base={}",
+            seg.stall_cycles,
+            base.stall_cycles
+        );
+        // And the LLC miss-rate drop mirrors §6.3 (46% -> 10% on Twitter).
+        assert!(seg.llc_miss_rate < base.llc_miss_rate);
+    }
+
+    #[test]
+    fn reordering_reduces_stalls_on_random_order_graph() {
+        let g = graph(13);
+        let (sorted, _) = crate::reorder::reorder(&g, crate::reorder::Ordering::DegreeSort);
+        let llc = 16 * 1024;
+        let base = estimate_pull_iteration(&g.transpose(), 8, llc, 1);
+        let reord = estimate_pull_iteration(&sorted.transpose(), 8, llc, 1);
+        assert!(
+            reord.stall_cycles < base.stall_cycles,
+            "reord={} base={}",
+            reord.stall_cycles,
+            base.stall_cycles
+        );
+    }
+
+    #[test]
+    fn small_graph_fits_cache_no_dram() {
+        let g = graph(8); // 256 vertices: 2 KiB vertex data
+        let est = estimate_pull_iteration(&g.transpose(), 8, 1 << 20, 1);
+        // Everything fits: only compulsory misses, tiny miss rate.
+        assert!(est.llc_miss_rate < 0.05, "mr={}", est.llc_miss_rate);
+    }
+
+    #[test]
+    fn stalls_scale_with_trace() {
+        let g = graph(10);
+        let pull = g.transpose();
+        let full = estimate_pull_iteration(&pull, 8, 8 * 1024, 1);
+        let sampled = estimate_pull_iteration(&pull, 8, 8 * 1024, 4);
+        assert!(sampled.accesses < full.accesses);
+        assert!(sampled.stall_cycles < full.stall_cycles);
+    }
+}

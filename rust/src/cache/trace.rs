@@ -1,0 +1,180 @@
+//! Memory-trace generation for the graph applications.
+//!
+//! The §5 model covers the *vertex-value vector* accesses — the dominant
+//! random stream in pull-based graph updates. [`vertex_trace`] emits that
+//! stream (one access per edge, addressed by source id); [`full_trace`]
+//! additionally interleaves the sequential edge-array and output streams,
+//! which is what the stall estimator feeds through the simulated
+//! hierarchy. Traces can be sampled (every `1/rate` edges) to keep
+//! simulation affordable on big graphs; miss *rates* are preserved because
+//! sampling is applied per-vertex-block, not per-set.
+
+use crate::graph::{Csr, VertexId};
+
+/// Classified access used by the stall model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Access {
+    /// Random read into the vertex-data vector (addr).
+    VertexRead(u64),
+    /// Sequential read of the edge array.
+    EdgeRead(u64),
+    /// Sequential write of the output array.
+    OutWrite(u64),
+}
+
+impl Access {
+    pub fn addr(self) -> u64 {
+        match self {
+            Access::VertexRead(a) | Access::EdgeRead(a) | Access::OutWrite(a) => a,
+        }
+    }
+}
+
+/// Address-space layout for the synthetic traces: regions are spaced far
+/// apart so they never alias.
+pub const VERTEX_BASE: u64 = 0;
+pub const EDGE_BASE: u64 = 1 << 40;
+pub const OUT_BASE: u64 = 1 << 41;
+
+/// The random vertex-data access stream of a pull-mode sweep over `g`
+/// (destinations in id order, reading each in-neighbor's data).
+/// `elem_bytes` is the per-vertex payload (8 for PageRank's f64 rank,
+/// 8*K for CF's K-float latent vector). `sample_every >= 1` keeps one
+/// destination vertex in every `sample_every` (all its edges), preserving
+/// the per-line reuse structure.
+pub fn vertex_trace(g_pull: &Csr, elem_bytes: u64, sample_every: usize) -> Vec<u64> {
+    let step = sample_every.max(1);
+    let mut out = Vec::new();
+    for v in (0..g_pull.num_vertices()).step_by(step) {
+        for &u in g_pull.neighbors(v as VertexId) {
+            out.push(VERTEX_BASE + u as u64 * elem_bytes);
+        }
+    }
+    out
+}
+
+/// Full classified trace of one pull-mode iteration: for each destination
+/// v: sequential edge reads, a random vertex read per in-neighbor, one
+/// output write.
+pub fn full_trace(g_pull: &Csr, elem_bytes: u64, sample_every: usize) -> Vec<Access> {
+    let step = sample_every.max(1);
+    let mut out = Vec::new();
+    for v in (0..g_pull.num_vertices()).step_by(step) {
+        let lo = g_pull.offsets[v];
+        let hi = g_pull.offsets[v + 1];
+        for (k, &u) in g_pull.neighbors(v as VertexId).iter().enumerate() {
+            out.push(Access::EdgeRead(EDGE_BASE + (lo + k as u64) * 4));
+            out.push(Access::VertexRead(VERTEX_BASE + u as u64 * elem_bytes));
+        }
+        let _ = hi;
+        out.push(Access::OutWrite(OUT_BASE + v as u64 * elem_bytes));
+    }
+    out
+}
+
+/// The same iteration under CSR segmenting: per segment, destinations are
+/// walked and only sources within the segment are read; then the merge
+/// pass reads the per-segment intermediates and writes the dense output —
+/// all sequential. Emits the equivalent access stream.
+pub fn segmented_trace(
+    sg: &crate::segment::SegmentedCsr,
+    elem_bytes: u64,
+    sample_every: usize,
+) -> Vec<Access> {
+    let step = sample_every.max(1);
+    let mut out = Vec::new();
+    // Intermediate vectors live in their own region per segment.
+    let inter_base = |s: usize| (1u64 << 42) + (s as u64) * (1 << 34);
+    for (si, seg) in sg.segments.iter().enumerate() {
+        for i in (0..seg.num_dsts()).step_by(step) {
+            let lo = seg.offsets[i];
+            let hi = seg.offsets[i + 1];
+            for (k, &u) in seg.sources[lo as usize..hi as usize].iter().enumerate() {
+                out.push(Access::EdgeRead(EDGE_BASE + (lo + k as u64) * 4));
+                out.push(Access::VertexRead(VERTEX_BASE + u as u64 * elem_bytes));
+            }
+            out.push(Access::OutWrite(inter_base(si) + i as u64 * elem_bytes));
+        }
+    }
+    // Merge phase: sequential read of each segment's intermediates +
+    // dense output writes.
+    for (si, seg) in sg.segments.iter().enumerate() {
+        for i in (0..seg.num_dsts()).step_by(step) {
+            out.push(Access::EdgeRead(inter_base(si) + i as u64 * elem_bytes));
+            out.push(Access::OutWrite(OUT_BASE + seg.dst_ids[i] as u64 * elem_bytes));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    fn small() -> Csr {
+        let (n, e) = generators::rmat(8, 8, generators::RmatParams::graph500(), 5);
+        Csr::from_edges(n, &e).transpose() // pull orientation
+    }
+
+    #[test]
+    fn vertex_trace_one_per_edge() {
+        let g = small();
+        let t = vertex_trace(&g, 8, 1);
+        assert_eq!(t.len(), g.num_edges());
+        // Addresses bounded by n * elem.
+        let maxaddr = (g.num_vertices() as u64) * 8;
+        assert!(t.iter().all(|&a| a < maxaddr));
+    }
+
+    #[test]
+    fn sampling_reduces_length() {
+        let g = small();
+        let full = vertex_trace(&g, 8, 1);
+        let s4 = vertex_trace(&g, 8, 4);
+        assert!(s4.len() < full.len());
+        assert!(s4.len() > full.len() / 16); // degree skew tolerance
+    }
+
+    #[test]
+    fn full_trace_classification() {
+        let g = small();
+        let t = full_trace(&g, 8, 1);
+        let vr = t.iter().filter(|a| matches!(a, Access::VertexRead(_))).count();
+        let er = t.iter().filter(|a| matches!(a, Access::EdgeRead(_))).count();
+        let ow = t.iter().filter(|a| matches!(a, Access::OutWrite(_))).count();
+        assert_eq!(vr, g.num_edges());
+        assert_eq!(er, g.num_edges());
+        assert_eq!(ow, g.num_vertices());
+    }
+
+    #[test]
+    fn segmented_trace_confines_vertex_reads() {
+        let (n, e) = generators::rmat(8, 8, generators::RmatParams::graph500(), 6);
+        let g = Csr::from_edges(n, &e);
+        let sg = crate::segment::SegmentedCsr::build(&g, 32);
+        let t = segmented_trace(&sg, 8, 1);
+        // Vertex reads appear in segment-contiguous runs: within each run
+        // the address span is <= seg_size * elem.
+        let mut spans: Vec<(u64, u64)> = Vec::new();
+        let mut cur: Option<(u64, u64)> = None;
+        for a in &t {
+            match a {
+                Access::VertexRead(addr) => {
+                    cur = Some(match cur {
+                        None => (*addr, *addr),
+                        Some((lo, hi)) => (lo.min(*addr), hi.max(*addr)),
+                    });
+                }
+                Access::OutWrite(_) => {}
+                Access::EdgeRead(_) => {}
+            }
+        }
+        if let Some(s) = cur {
+            spans.push(s);
+        }
+        // Whole-trace span is bounded by graph size; detailed per-segment
+        // confinement is exercised by the stall model tests.
+        assert!(spans[0].1 <= n as u64 * 8);
+    }
+}

@@ -1,0 +1,95 @@
+//! System configuration: the machine model every technique keys off.
+//!
+//! The paper sizes segments to the last-level cache ("sizing the segments
+//! to fit in last level (L3) cache provided the best tradeoff", §4.5) and
+//! merge blocks to L1. Our datasets are ~1/100 of the paper's, so the
+//! *effective* LLC defaults to 2 MiB — this host's L2, the level below
+//! its 105 MB shared L3 — keeping the working-set : cache ratios in the
+//! paper's regime (DESIGN.md §3/§4; measured random-gather cliff: ~1 ns
+//! L2-resident vs 5–15 ns beyond).
+
+use crate::util::config::Config;
+
+/// Machine + technique parameters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SystemConfig {
+    /// Effective last-level cache for segment sizing (bytes).
+    pub llc_bytes: usize,
+    /// Effective L1d for merge-block sizing (bytes).
+    pub l1_bytes: usize,
+    /// Fraction of LLC given to a segment's source data (the rest holds
+    /// edge stream + output block).
+    pub segment_fill: f64,
+    /// PageRank damping factor.
+    pub damping: f64,
+    /// Coarsening threshold for the §3.3 stable degree sort.
+    pub coarsen: u32,
+    /// CF latent dimensionality (GraphMat uses small K; we use 8).
+    pub cf_k: usize,
+    /// CF gradient-descent step.
+    pub cf_lr: f64,
+}
+
+impl Default for SystemConfig {
+    fn default() -> Self {
+        SystemConfig {
+            llc_bytes: 2 * 1024 * 1024,
+            l1_bytes: 32 * 1024,
+            segment_fill: 0.5,
+            damping: 0.85,
+            coarsen: 10,
+            cf_k: 8,
+            cf_lr: 1e-3,
+        }
+    }
+}
+
+impl SystemConfig {
+    /// Load overrides from a parsed config file (section `[system]`).
+    pub fn from_config(cfg: &Config) -> anyhow::Result<SystemConfig> {
+        let d = SystemConfig::default();
+        Ok(SystemConfig {
+            llc_bytes: cfg.get_usize("system.llc_bytes", d.llc_bytes)?,
+            l1_bytes: cfg.get_usize("system.l1_bytes", d.l1_bytes)?,
+            segment_fill: cfg.get_f64("system.segment_fill", d.segment_fill)?,
+            damping: cfg.get_f64("system.damping", d.damping)?,
+            coarsen: cfg.get_usize("system.coarsen", d.coarsen as usize)? as u32,
+            cf_k: cfg.get_usize("system.cf_k", d.cf_k)?,
+            cf_lr: cfg.get_f64("system.cf_lr", d.cf_lr)?,
+        })
+    }
+
+    /// Segment size in **vertices** for per-vertex payload `elem_bytes`
+    /// (§4.5: segment source data fits the LLC share).
+    pub fn segment_size(&self, elem_bytes: usize) -> usize {
+        (((self.llc_bytes as f64 * self.segment_fill) as usize) / elem_bytes.max(1)).max(1)
+    }
+
+    /// Merge block size in vertices (block of f64 output fits L1).
+    pub fn merge_block(&self, elem_bytes: usize) -> usize {
+        (self.l1_bytes / elem_bytes.max(1)).max(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_sane() {
+        let c = SystemConfig::default();
+        assert_eq!(c.segment_size(8), 128 * 1024);
+        assert_eq!(c.merge_block(8), 4096);
+        // CF payload is K doubles: segments shrink accordingly.
+        assert_eq!(c.segment_size(8 * c.cf_k), 16 * 1024);
+    }
+
+    #[test]
+    fn from_config_overrides() {
+        let cfg = Config::parse("[system]\nllc_bytes = 1048576\ndamping = 0.9\n").unwrap();
+        let c = SystemConfig::from_config(&cfg).unwrap();
+        assert_eq!(c.llc_bytes, 1 << 20);
+        assert_eq!(c.damping, 0.9);
+        assert_eq!(c.l1_bytes, SystemConfig::default().l1_bytes);
+    }
+}

@@ -1,0 +1,86 @@
+//! Run metrics: timing phases plus the simulated memory-system statistics
+//! that substitute for the paper's PMU counters (DESIGN.md §3).
+
+use crate::cache::{StallEstimate};
+use crate::util::timer::PhaseTimer;
+
+/// Everything a job run reports.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub phases: PhaseTimer,
+    /// Per-iteration wall time (seconds).
+    pub iter_seconds: Vec<f64>,
+    /// Simulated stall estimate for one representative iteration, if the
+    /// job asked for memory-system analysis.
+    pub stalls: Option<StallEstimate>,
+    /// Edges processed per iteration.
+    pub edges: u64,
+}
+
+impl Metrics {
+    pub fn median_iter_seconds(&self) -> f64 {
+        if self.iter_seconds.is_empty() {
+            return 0.0;
+        }
+        let mut s = self.iter_seconds.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        s[s.len() / 2]
+    }
+
+    pub fn edges_per_second(&self) -> f64 {
+        let t = self.median_iter_seconds();
+        if t <= 0.0 {
+            0.0
+        } else {
+            self.edges as f64 / t
+        }
+    }
+
+    /// Human-readable summary block.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "iterations: {}  median: {:.6}s  throughput: {:.2} MEdge/s\n",
+            self.iter_seconds.len(),
+            self.median_iter_seconds(),
+            self.edges_per_second() / 1e6
+        ));
+        if let Some(s) = &self.stalls {
+            out.push_str(&format!(
+                "simulated: {:.1} stall-cycles/access, LLC miss rate {:.1}%\n",
+                s.stalls_per_access(),
+                s.llc_miss_rate * 100.0
+            ));
+        }
+        for (name, secs, share) in self.phases.report() {
+            out.push_str(&format!("  {name:<24} {secs:>9.4}s  {:>5.1}%\n", share * 100.0));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn median_and_rate() {
+        let m = Metrics {
+            iter_seconds: vec![0.2, 0.1, 0.3],
+            edges: 1_000_000,
+            ..Default::default()
+        };
+        assert_eq!(m.median_iter_seconds(), 0.2);
+        assert!((m.edges_per_second() - 5e6).abs() < 1e-6);
+    }
+
+    #[test]
+    fn render_includes_phases() {
+        let mut m = Metrics::default();
+        m.phases.add("preprocess", 0.5);
+        m.iter_seconds.push(0.1);
+        m.edges = 10;
+        let r = m.render();
+        assert!(r.contains("preprocess"));
+    }
+}

@@ -1,0 +1,10 @@
+//! L3 coordinator: system configuration, the preprocessing→execute→metrics
+//! pipeline, and report formatting. The CLI (`main.rs`) and the benches
+//! drive everything through this module.
+
+pub mod config;
+pub mod job;
+pub mod metrics;
+
+pub use config::SystemConfig;
+pub use job::{run_job, AppKind, JobResult, JobSpec};

@@ -1,0 +1,273 @@
+//! Direction-switching EdgeMap and VertexMap (the Ligra API our framework
+//! extends — the paper's BFS/BC numbers ride on "its innovative push and
+//! pull switch optimization", §6.2).
+//!
+//! `edge_map` applies `update(src, dst) -> bool` over the edges leaving
+//! the frontier, gated by `cond(dst)`; returns the new frontier (vertices
+//! for which some update returned true).
+//!
+//! - **Push (sparse)**: iterate frontier vertices' out-edges; updates may
+//!   race, so `update` must be CAS-style idempotent.
+//! - **Pull (dense)**: iterate *all* destinations with `cond(dst)`,
+//!   scanning in-edges for frontier members — no write races, and early
+//!   exit once `cond` is satisfied.
+//!
+//! The switch uses Ligra's heuristic: pull when
+//! `|frontier| + outEdges(frontier) > |E| / threshold_den`.
+
+use super::frontier::VertexSubset;
+use crate::graph::{Csr, VertexId};
+use crate::parallel::{parallel_for, UnsafeSlice};
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// EdgeMap tuning knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct EdgeMapOpts {
+    /// Pull when frontier work exceeds |E| / threshold_den (Ligra uses 20).
+    pub threshold_den: u64,
+    /// Keep the output frontier as a bitvector (Tables 7/8's "Bitvector"
+    /// optimization) instead of a dense bool vector.
+    pub bitvector_frontier: bool,
+}
+
+impl Default for EdgeMapOpts {
+    fn default() -> Self {
+        EdgeMapOpts {
+            threshold_den: 20,
+            bitvector_frontier: false,
+        }
+    }
+}
+
+/// Apply `update` over edges out of `frontier`; `g` is the out-edge CSR
+/// and `g_in` its transpose (used for pull mode). Returns the new
+/// frontier.
+pub fn edge_map<U, C>(
+    g: &Csr,
+    g_in: &Csr,
+    frontier: &VertexSubset,
+    update: U,
+    cond: C,
+    opts: EdgeMapOpts,
+) -> VertexSubset
+where
+    U: Fn(VertexId, VertexId) -> bool + Sync,
+    C: Fn(VertexId) -> bool + Sync,
+{
+    let m = g.num_edges() as u64;
+    let frontier_ids = frontier.ids();
+    let out_work: u64 = frontier_ids.iter().map(|&v| g.degree(v) as u64).sum();
+    let dense = out_work + frontier_ids.len() as u64 > m / opts.threshold_den.max(1);
+    if dense {
+        edge_map_pull(g_in, frontier, update, cond, opts)
+    } else {
+        edge_map_push(g, &frontier_ids, update, cond)
+    }
+}
+
+/// Push mode: parallel over frontier vertices, scattering updates.
+fn edge_map_push<U, C>(g: &Csr, frontier_ids: &[VertexId], update: U, cond: C) -> VertexSubset
+where
+    U: Fn(VertexId, VertexId) -> bool + Sync,
+    C: Fn(VertexId) -> bool + Sync,
+{
+    let n = g.num_vertices();
+    let out_flags: Vec<AtomicBool> = (0..n).map(|_| AtomicBool::new(false)).collect();
+    parallel_for(frontier_ids.len(), |i| {
+        let s = frontier_ids[i];
+        for &d in g.neighbors(s) {
+            if cond(d) && update(s, d) {
+                out_flags[d as usize].store(true, Ordering::Relaxed);
+            }
+        }
+    });
+    let ids: Vec<VertexId> = out_flags
+        .iter()
+        .enumerate()
+        .filter_map(|(v, f)| f.load(Ordering::Relaxed).then_some(v as VertexId))
+        .collect();
+    VertexSubset::from_ids(n, ids)
+}
+
+/// Pull mode: parallel over all destinations satisfying `cond`, scanning
+/// in-neighbors for frontier membership.
+fn edge_map_pull<U, C>(
+    g_in: &Csr,
+    frontier: &VertexSubset,
+    update: U,
+    cond: C,
+    opts: EdgeMapOpts,
+) -> VertexSubset
+where
+    U: Fn(VertexId, VertexId) -> bool + Sync,
+    C: Fn(VertexId) -> bool + Sync,
+{
+    let n = g_in.num_vertices();
+    // Membership structure: bitvector (compact, the §6.3 optimization) or
+    // dense bools.
+    let member = if opts.bitvector_frontier {
+        frontier.to_bits()
+    } else {
+        frontier.to_dense()
+    };
+    let mut out = vec![false; n];
+    let out_slice = UnsafeSlice::new(&mut out);
+    parallel_for(n, |d| {
+        let d = d as VertexId;
+        if !cond(d) {
+            return;
+        }
+        for &s in g_in.neighbors(d) {
+            if member.contains(s) && update(s, d) {
+                // Safety: each d written by exactly one task.
+                unsafe { out_slice.write(d as usize, true) };
+                // Ligra's early exit: once the destination is updated and
+                // cond would flip, stop scanning. We conservatively
+                // re-check cond.
+                if !cond(d) {
+                    break;
+                }
+            }
+        }
+    });
+    if opts.bitvector_frontier {
+        VertexSubset::from_flags(out).to_bits()
+    } else {
+        VertexSubset::from_flags(out)
+    }
+}
+
+/// Apply `f(v)` to every member of `frontier`; keep vertices where `f`
+/// returns true.
+pub fn vertex_map<F>(frontier: &VertexSubset, f: F) -> VertexSubset
+where
+    F: Fn(VertexId) -> bool + Sync,
+{
+    let ids = frontier.ids();
+    let keep: Vec<AtomicBool> = (0..ids.len()).map(|_| AtomicBool::new(false)).collect();
+    parallel_for(ids.len(), |i| {
+        if f(ids[i]) {
+            keep[i].store(true, Ordering::Relaxed);
+        }
+    });
+    let new_ids = ids
+        .iter()
+        .zip(&keep)
+        .filter_map(|(&v, k)| k.load(Ordering::Relaxed).then_some(v))
+        .collect();
+    VertexSubset::from_ids(frontier.n(), new_ids)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use std::sync::atomic::AtomicU32;
+
+    fn line_graph(n: usize) -> (Csr, Csr) {
+        let edges: Vec<_> = (0..n as u32 - 1).map(|i| (i, i + 1)).collect();
+        let g = Csr::from_edges(n, &edges);
+        let t = g.transpose();
+        (g, t)
+    }
+
+    #[test]
+    fn bfs_on_line_graph_push() {
+        let (g, t) = line_graph(50);
+        let parent: Vec<AtomicU32> = (0..50).map(|_| AtomicU32::new(u32::MAX)).collect();
+        parent[0].store(0, Ordering::Relaxed);
+        let mut frontier = VertexSubset::single(50, 0);
+        let mut depth = 0;
+        while !frontier.is_empty() {
+            frontier = edge_map(
+                &g,
+                &t,
+                &frontier,
+                |s, d| {
+                    parent[d as usize]
+                        .compare_exchange(u32::MAX, s, Ordering::Relaxed, Ordering::Relaxed)
+                        .is_ok()
+                },
+                |d| parent[d as usize].load(Ordering::Relaxed) == u32::MAX,
+                EdgeMapOpts::default(),
+            );
+            depth += 1;
+            assert!(depth <= 50);
+        }
+        assert_eq!(depth, 50 - 1 + 1); // reaches the end
+        for v in 1..50 {
+            assert_eq!(parent[v].load(Ordering::Relaxed), v as u32 - 1);
+        }
+    }
+
+    #[test]
+    fn push_and_pull_agree() {
+        let (n, edges) = generators::rmat(9, 8, generators::RmatParams::graph500(), 8);
+        let g = Csr::from_edges(n, &edges);
+        let t = g.transpose();
+        // One BFS step from a mid-degree frontier, forced both ways.
+        let seed: Vec<VertexId> = (0..32).map(|i| (i * 7) as VertexId % n as VertexId).collect();
+        let frontier = VertexSubset::from_ids(n, seed);
+        let run = |den: u64| {
+            let visited: Vec<AtomicBool> = (0..n).map(|_| AtomicBool::new(false)).collect();
+            let next = edge_map(
+                &g,
+                &t,
+                &frontier,
+                |_s, d| {
+                    !visited[d as usize].swap(true, Ordering::Relaxed)
+                },
+                |_| true,
+                EdgeMapOpts {
+                    threshold_den: den,
+                    bitvector_frontier: false,
+                },
+            );
+            let mut ids = next.ids();
+            ids.sort_unstable();
+            ids
+        };
+        let push = run(u64::MAX); // threshold huge => push
+        let pull = run(1); // => pull
+        assert_eq!(push, pull);
+    }
+
+    #[test]
+    fn bitvector_frontier_equivalent() {
+        let (n, edges) = generators::rmat(9, 8, generators::RmatParams::graph500(), 9);
+        let g = Csr::from_edges(n, &edges);
+        let t = g.transpose();
+        let frontier = VertexSubset::full(n);
+        for bitvec in [false, true] {
+            let next = edge_map(
+                &g,
+                &t,
+                &frontier,
+                |_s, _d| true,
+                |_| true,
+                EdgeMapOpts {
+                    threshold_den: 1,
+                    bitvector_frontier: bitvec,
+                },
+            );
+            // Every vertex with an in-edge is in the next frontier.
+            let indeg = g.in_degrees();
+            let expect: Vec<VertexId> = (0..n)
+                .filter(|&v| indeg[v] > 0)
+                .map(|v| v as VertexId)
+                .collect();
+            let mut got = next.ids();
+            got.sort_unstable();
+            assert_eq!(got, expect, "bitvec={bitvec}");
+        }
+    }
+
+    #[test]
+    fn vertex_map_filters() {
+        let f = VertexSubset::from_ids(10, vec![1, 2, 3, 4]);
+        let out = vertex_map(&f, |v| v % 2 == 0);
+        let mut ids = out.ids();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![2, 4]);
+    }
+}

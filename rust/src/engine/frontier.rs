@@ -1,0 +1,216 @@
+//! Vertex subsets (frontiers) with three physical representations:
+//! sparse id list, dense boolean vector, and packed **bitvector** — the
+//! cache optimization "many frameworks adopt" that §6.3 compares against
+//! vertex reordering (Tables 7/8 "Bitvector" rows).
+
+use crate::graph::VertexId;
+
+/// A subset of vertices. Representation is switched explicitly by the
+/// engine based on density; all representations answer membership.
+#[derive(Debug, Clone)]
+pub enum VertexSubset {
+    /// Unsorted list of member ids.
+    Sparse { n: usize, ids: Vec<VertexId> },
+    /// One bool per vertex.
+    Dense { flags: Vec<bool> },
+    /// One bit per vertex (64 per word) — the cache-compact form.
+    Bits { n: usize, words: Vec<u64> },
+}
+
+impl VertexSubset {
+    /// Empty subset over `n` vertices (sparse).
+    pub fn empty(n: usize) -> VertexSubset {
+        VertexSubset::Sparse { n, ids: Vec::new() }
+    }
+
+    /// Singleton subset.
+    pub fn single(n: usize, v: VertexId) -> VertexSubset {
+        VertexSubset::Sparse { n, ids: vec![v] }
+    }
+
+    /// Full subset (dense).
+    pub fn full(n: usize) -> VertexSubset {
+        VertexSubset::Dense {
+            flags: vec![true; n],
+        }
+    }
+
+    pub fn from_ids(n: usize, ids: Vec<VertexId>) -> VertexSubset {
+        debug_assert!(ids.iter().all(|&v| (v as usize) < n));
+        VertexSubset::Sparse { n, ids }
+    }
+
+    pub fn from_flags(flags: Vec<bool>) -> VertexSubset {
+        VertexSubset::Dense { flags }
+    }
+
+    /// Universe size.
+    pub fn n(&self) -> usize {
+        match self {
+            VertexSubset::Sparse { n, .. } | VertexSubset::Bits { n, .. } => *n,
+            VertexSubset::Dense { flags } => flags.len(),
+        }
+    }
+
+    /// Number of members.
+    pub fn count(&self) -> usize {
+        match self {
+            VertexSubset::Sparse { ids, .. } => ids.len(),
+            VertexSubset::Dense { flags } => flags.iter().filter(|&&b| b).count(),
+            VertexSubset::Bits { words, .. } => {
+                words.iter().map(|w| w.count_ones() as usize).sum()
+            }
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        match self {
+            VertexSubset::Sparse { ids, .. } => ids.is_empty(),
+            _ => self.count() == 0,
+        }
+    }
+
+    /// Membership test.
+    #[inline]
+    pub fn contains(&self, v: VertexId) -> bool {
+        match self {
+            VertexSubset::Sparse { ids, .. } => ids.contains(&v),
+            VertexSubset::Dense { flags } => flags[v as usize],
+            VertexSubset::Bits { words, .. } => {
+                (words[v as usize / 64] >> (v as usize % 64)) & 1 == 1
+            }
+        }
+    }
+
+    /// Member ids (materializes for dense forms, ascending).
+    pub fn ids(&self) -> Vec<VertexId> {
+        match self {
+            VertexSubset::Sparse { ids, .. } => ids.clone(),
+            VertexSubset::Dense { flags } => flags
+                .iter()
+                .enumerate()
+                .filter_map(|(i, &b)| b.then_some(i as VertexId))
+                .collect(),
+            VertexSubset::Bits { n, words } => {
+                let mut out = Vec::new();
+                for (wi, &w) in words.iter().enumerate() {
+                    let mut bits = w;
+                    while bits != 0 {
+                        let b = bits.trailing_zeros() as usize;
+                        let v = wi * 64 + b;
+                        if v < *n {
+                            out.push(v as VertexId);
+                        }
+                        bits &= bits - 1;
+                    }
+                }
+                out
+            }
+        }
+    }
+
+    /// Convert to the dense boolean form.
+    pub fn to_dense(&self) -> VertexSubset {
+        match self {
+            VertexSubset::Dense { .. } => self.clone(),
+            _ => {
+                let mut flags = vec![false; self.n()];
+                for v in self.ids() {
+                    flags[v as usize] = true;
+                }
+                VertexSubset::Dense { flags }
+            }
+        }
+    }
+
+    /// Convert to the packed bitvector form.
+    pub fn to_bits(&self) -> VertexSubset {
+        match self {
+            VertexSubset::Bits { .. } => self.clone(),
+            _ => {
+                let n = self.n();
+                let mut words = vec![0u64; n.div_ceil(64)];
+                for v in self.ids() {
+                    words[v as usize / 64] |= 1u64 << (v as usize % 64);
+                }
+                VertexSubset::Bits { n, words }
+            }
+        }
+    }
+
+    /// Convert to sparse form.
+    pub fn to_sparse(&self) -> VertexSubset {
+        match self {
+            VertexSubset::Sparse { .. } => self.clone(),
+            _ => VertexSubset::Sparse {
+                n: self.n(),
+                ids: self.ids(),
+            },
+        }
+    }
+
+    /// Bytes the representation occupies (for working-set metrics).
+    pub fn bytes(&self) -> usize {
+        match self {
+            VertexSubset::Sparse { ids, .. } => ids.len() * 4,
+            VertexSubset::Dense { flags } => flags.len(),
+            VertexSubset::Bits { words, .. } => words.len() * 8,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn representations_agree() {
+        let s = VertexSubset::from_ids(200, vec![3, 64, 65, 199]);
+        let d = s.to_dense();
+        let b = s.to_bits();
+        for v in 0..200u32 {
+            let m = s.contains(v);
+            assert_eq!(d.contains(v), m, "dense v={v}");
+            assert_eq!(b.contains(v), m, "bits v={v}");
+        }
+        assert_eq!(s.count(), 4);
+        assert_eq!(d.count(), 4);
+        assert_eq!(b.count(), 4);
+        let mut ids = b.ids();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![3, 64, 65, 199]);
+    }
+
+    #[test]
+    fn empty_and_full() {
+        let e = VertexSubset::empty(10);
+        assert!(e.is_empty());
+        assert_eq!(e.count(), 0);
+        let f = VertexSubset::full(10);
+        assert_eq!(f.count(), 10);
+        assert!(f.contains(9));
+    }
+
+    #[test]
+    fn bits_compact() {
+        let f = VertexSubset::full(1 << 16).to_bits();
+        assert_eq!(f.bytes(), (1 << 16) / 8);
+        assert_eq!(f.count(), 1 << 16);
+    }
+
+    #[test]
+    fn prop_roundtrip_conversions() {
+        check("frontier conversions preserve membership", 25, |g| {
+            let n = g.usize(1..300);
+            let mut ids: Vec<u32> = (0..g.usize(0..n)).map(|_| g.u32(0..n as u32)).collect();
+            ids.sort_unstable();
+            ids.dedup();
+            let s = VertexSubset::from_ids(n, ids.clone());
+            let back = s.to_bits().to_dense().to_sparse();
+            let mut bids = back.ids();
+            bids.sort_unstable();
+            assert_eq!(bids, ids);
+        });
+    }
+}

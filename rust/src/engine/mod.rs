@@ -1,0 +1,16 @@
+//! Ligra-style processing engine (§4.4).
+//!
+//! The programming interface the paper extends: `VertexSubset` frontiers
+//! with sparse/dense/bitvector representations, direction-switching
+//! `EdgeMap`, `VertexMap`, and the paper's new [`segmented_edgemap`] —
+//! "a new SegmentedEdgeMap operation that requires two functions: one for
+//! computing partial results over a segment, and one for merging two
+//! partial results".
+
+pub mod frontier;
+pub mod edgemap;
+pub mod segmented_edgemap;
+
+pub use edgemap::{edge_map, vertex_map, EdgeMapOpts};
+pub use frontier::VertexSubset;
+pub use segmented_edgemap::segmented_edge_map;

@@ -1,0 +1,343 @@
+//! Compressed Sparse Row graphs (§2.1).
+//!
+//! `offsets[v]..offsets[v+1]` indexes `targets` with vertex `v`'s
+//! out-neighbors. For pull-style algorithms (PageRank reads the ranks of
+//! in-neighbors) the same struct stores the transpose — by convention the
+//! apps keep both directions when needed.
+
+use super::{Edge, VertexId};
+use crate::parallel::{parallel_for, parallel_ranges, UnsafeSlice};
+use std::sync::atomic::{AtomicU32, Ordering};
+
+/// An immutable CSR graph (out-edge adjacency unless stated otherwise).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Csr {
+    /// `offsets.len() == num_vertices + 1`.
+    pub offsets: Vec<u64>,
+    /// Neighbor ids, grouped by source vertex.
+    pub targets: Vec<VertexId>,
+}
+
+impl Csr {
+    /// Build from an unsorted edge list. Edges are bucket-sorted by source
+    /// with a parallel counting pass. Does **not** dedup (see
+    /// [`Csr::dedup`]); use [`CsrBuilder`] for the full clean-up pipeline.
+    pub fn from_edges(num_vertices: usize, edges: &[Edge]) -> Csr {
+        let n = num_vertices;
+        // Count out-degrees (atomically; edge lists are large).
+        let counts: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(0)).collect();
+        parallel_for(edges.len(), |i| {
+            let (s, _) = edges[i];
+            counts[s as usize].fetch_add(1, Ordering::Relaxed);
+        });
+        let mut offsets = Vec::with_capacity(n + 1);
+        offsets.push(0u64);
+        let mut acc = 0u64;
+        for c in &counts {
+            acc += c.load(Ordering::Relaxed) as u64;
+            offsets.push(acc);
+        }
+        // Scatter edges into place; per-vertex write cursor.
+        let cursors: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(0)).collect();
+        let mut targets = vec![0 as VertexId; edges.len()];
+        let tslice = UnsafeSlice::new(&mut targets);
+        parallel_for(edges.len(), |i| {
+            let (s, d) = edges[i];
+            let k = cursors[s as usize].fetch_add(1, Ordering::Relaxed) as u64;
+            let idx = offsets[s as usize] + k;
+            unsafe { tslice.write(idx as usize, d) };
+        });
+        Csr { offsets, targets }
+    }
+
+    pub fn num_vertices(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.targets.len()
+    }
+
+    /// Out-degree of `v`.
+    #[inline]
+    pub fn degree(&self, v: VertexId) -> u32 {
+        (self.offsets[v as usize + 1] - self.offsets[v as usize]) as u32
+    }
+
+    /// Neighbors of `v`.
+    #[inline]
+    pub fn neighbors(&self, v: VertexId) -> &[VertexId] {
+        let lo = self.offsets[v as usize] as usize;
+        let hi = self.offsets[v as usize + 1] as usize;
+        &self.targets[lo..hi]
+    }
+
+    /// All out-degrees as a vector.
+    pub fn out_degrees(&self) -> Vec<u32> {
+        (0..self.num_vertices())
+            .map(|v| self.degree(v as VertexId))
+            .collect()
+    }
+
+    /// In-degrees (degree of each vertex in the transpose).
+    pub fn in_degrees(&self) -> Vec<u32> {
+        let counts: Vec<AtomicU32> = (0..self.num_vertices()).map(|_| AtomicU32::new(0)).collect();
+        parallel_for(self.targets.len(), |i| {
+            counts[self.targets[i] as usize].fetch_add(1, Ordering::Relaxed);
+        });
+        counts.into_iter().map(|c| c.into_inner()).collect()
+    }
+
+    /// Transpose: edge (u,v) becomes (v,u). Neighbor lists in the result
+    /// are sorted by construction order (stable per source bucket).
+    pub fn transpose(&self) -> Csr {
+        let n = self.num_vertices();
+        let in_deg = self.in_degrees();
+        let mut offsets = Vec::with_capacity(n + 1);
+        offsets.push(0u64);
+        let mut acc = 0u64;
+        for &d in &in_deg {
+            acc += d as u64;
+            offsets.push(acc);
+        }
+        let cursors: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(0)).collect();
+        let mut targets = vec![0 as VertexId; self.num_edges()];
+        let tslice = UnsafeSlice::new(&mut targets);
+        // Parallel over source ranges so edge order within a destination
+        // bucket is deterministic enough for tests after sorting.
+        parallel_ranges(n, |lo, hi| {
+            for u in lo..hi {
+                for &v in self.neighbors(u as VertexId) {
+                    let k = cursors[v as usize].fetch_add(1, Ordering::Relaxed) as u64;
+                    let idx = offsets[v as usize] + k;
+                    unsafe { tslice.write(idx as usize, u as VertexId) };
+                }
+            }
+        });
+        Csr { offsets, targets }
+    }
+
+    /// Return a copy with every neighbor list sorted (canonical form; use
+    /// before equality comparisons).
+    pub fn sorted(&self) -> Csr {
+        let mut out = self.clone();
+        let offsets = out.offsets.clone();
+        let n = out.num_vertices();
+        let targets = std::mem::take(&mut out.targets);
+        let mut targets = targets;
+        {
+            let ts = UnsafeSlice::new(&mut targets);
+            parallel_for(n, |v| {
+                let lo = offsets[v] as usize;
+                let hi = offsets[v + 1] as usize;
+                if lo == hi {
+                    return;
+                }
+                // Safety: [lo,hi) ranges are disjoint per v.
+                let slice =
+                    unsafe { std::slice::from_raw_parts_mut(ts.get_mut(lo) as *mut VertexId, hi - lo) };
+                slice.sort_unstable();
+            });
+        }
+        out.targets = targets;
+        out
+    }
+
+    /// Iterate all edges (u, v).
+    pub fn edges(&self) -> impl Iterator<Item = Edge> + '_ {
+        (0..self.num_vertices() as VertexId)
+            .flat_map(move |u| self.neighbors(u).iter().map(move |&v| (u, v)))
+    }
+
+    /// Total bytes of the graph structure (for working-set reports).
+    pub fn bytes(&self) -> usize {
+        self.offsets.len() * 8 + self.targets.len() * 4
+    }
+
+    /// Apply a relabeling permutation: vertex `v` becomes `perm[v]`.
+    /// Rebuilds the CSR so both endpoint ids and bucket order reflect the
+    /// new labels (§3.2 step 3: "create a new CSR with the vertex ordered").
+    pub fn relabel(&self, perm: &[VertexId]) -> Csr {
+        assert_eq!(perm.len(), self.num_vertices());
+        let n = self.num_vertices();
+        // New degree of new-id p = old degree of old v with perm[v]=p.
+        let mut inv = vec![0 as VertexId; n];
+        for (v, &p) in perm.iter().enumerate() {
+            inv[p as usize] = v as VertexId;
+        }
+        let mut offsets = Vec::with_capacity(n + 1);
+        offsets.push(0u64);
+        let mut acc = 0u64;
+        for &old in &inv {
+            acc += self.degree(old) as u64;
+            offsets.push(acc);
+        }
+        let mut targets = vec![0 as VertexId; self.num_edges()];
+        let ts = UnsafeSlice::new(&mut targets);
+        parallel_for(n, |p| {
+            let old = inv[p];
+            for (idx, &w) in (offsets[p] as usize..).zip(self.neighbors(old)) {
+                unsafe { ts.write(idx, perm[w as usize]) };
+            }
+        });
+        Csr { offsets, targets }
+    }
+}
+
+/// Cleaning/building pipeline: collects edges, removes self-loops and
+/// duplicates (the paper: "We removed duplicated edges and self loops"),
+/// then produces a [`Csr`].
+#[derive(Debug, Default)]
+pub struct CsrBuilder {
+    num_vertices: usize,
+    edges: Vec<Edge>,
+    remove_self_loops: bool,
+    dedup: bool,
+}
+
+impl CsrBuilder {
+    pub fn new(num_vertices: usize) -> CsrBuilder {
+        CsrBuilder {
+            num_vertices,
+            edges: Vec::new(),
+            remove_self_loops: true,
+            dedup: true,
+        }
+    }
+
+    pub fn keep_self_loops(mut self) -> Self {
+        self.remove_self_loops = false;
+        self
+    }
+
+    pub fn keep_duplicates(mut self) -> Self {
+        self.dedup = false;
+        self
+    }
+
+    pub fn add_edge(&mut self, s: VertexId, d: VertexId) -> &mut Self {
+        debug_assert!((s as usize) < self.num_vertices && (d as usize) < self.num_vertices);
+        self.edges.push((s, d));
+        self
+    }
+
+    pub fn extend(&mut self, edges: impl IntoIterator<Item = Edge>) -> &mut Self {
+        self.edges.extend(edges);
+        self
+    }
+
+    pub fn build(mut self) -> Csr {
+        if self.remove_self_loops {
+            self.edges.retain(|&(s, d)| s != d);
+        }
+        if self.dedup {
+            self.edges.sort_unstable();
+            self.edges.dedup();
+        }
+        Csr::from_edges(self.num_vertices, &self.edges)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    fn tiny() -> Csr {
+        // The paper's Figure 5 example graph: 6 vertices.
+        Csr::from_edges(
+            6,
+            &[(0, 1), (0, 5), (1, 2), (2, 0), (3, 0), (3, 4), (4, 5), (5, 3)],
+        )
+    }
+
+    #[test]
+    fn basic_shape() {
+        let g = tiny();
+        assert_eq!(g.num_vertices(), 6);
+        assert_eq!(g.num_edges(), 8);
+        assert_eq!(g.degree(0), 2);
+        assert_eq!(g.degree(2), 1);
+        assert_eq!(g.neighbors(3), &[0, 4]);
+    }
+
+    #[test]
+    fn transpose_reverses_edges() {
+        let g = tiny();
+        let t = g.transpose();
+        assert_eq!(t.num_edges(), g.num_edges());
+        let mut fwd: Vec<Edge> = g.edges().collect();
+        let mut rev: Vec<Edge> = t.edges().map(|(a, b)| (b, a)).collect();
+        fwd.sort_unstable();
+        rev.sort_unstable();
+        assert_eq!(fwd, rev);
+    }
+
+    #[test]
+    fn builder_removes_loops_and_dups() {
+        let mut b = CsrBuilder::new(3);
+        b.add_edge(0, 1).add_edge(0, 1).add_edge(1, 1).add_edge(2, 0);
+        let g = b.build();
+        assert_eq!(g.num_edges(), 2);
+        assert_eq!(g.neighbors(0), &[1]);
+        assert_eq!(g.degree(1), 0);
+    }
+
+    #[test]
+    fn relabel_identity_is_noop() {
+        let g = tiny();
+        let id: Vec<VertexId> = (0..6).collect();
+        assert_eq!(g.relabel(&id).sorted(), g.sorted());
+    }
+
+    #[test]
+    fn relabel_preserves_structure() {
+        let g = tiny();
+        // Swap 0 <-> 5.
+        let perm: Vec<VertexId> = vec![5, 1, 2, 3, 4, 0];
+        let h = g.relabel(&perm);
+        assert_eq!(h.num_edges(), g.num_edges());
+        // Degree multiset preserved.
+        let mut dg: Vec<u32> = g.out_degrees();
+        let mut dh: Vec<u32> = h.out_degrees();
+        dg.sort_unstable();
+        dh.sort_unstable();
+        assert_eq!(dg, dh);
+        // Edge (0,1) became (5,1).
+        assert!(h.neighbors(5).contains(&1));
+    }
+
+    #[test]
+    fn prop_transpose_twice_is_identity() {
+        check("transpose twice = id", 30, |g| {
+            let (n, edges) = g.edges(1..80, 4);
+            let csr = Csr::from_edges(n, &edges);
+            assert_eq!(csr.transpose().transpose().sorted(), csr.sorted());
+        });
+    }
+
+    #[test]
+    fn prop_relabel_roundtrip() {
+        check("relabel by p then p^-1 = id", 30, |g| {
+            let (n, edges) = g.edges(1..60, 3);
+            let csr = Csr::from_edges(n, &edges);
+            let perm = g.permutation(n);
+            let mut inv = vec![0 as VertexId; n];
+            for (v, &p) in perm.iter().enumerate() {
+                inv[p as usize] = v as VertexId;
+            }
+            let back = csr.relabel(&perm).relabel(&inv);
+            assert_eq!(back.sorted(), csr.sorted());
+        });
+    }
+
+    #[test]
+    fn prop_in_degrees_sum_to_edges() {
+        check("sum(in_deg) == |E|", 30, |g| {
+            let (n, edges) = g.edges(1..100, 5);
+            let csr = Csr::from_edges(n, &edges);
+            let total: u64 = csr.in_degrees().iter().map(|&d| d as u64).sum();
+            assert_eq!(total, csr.num_edges() as u64);
+        });
+    }
+}

@@ -1,0 +1,173 @@
+//! Edge-list file IO.
+//!
+//! Two formats:
+//! - **Text**: one `src dst` pair per line, `#` comments (SNAP style — what
+//!   LiveJournal/Twitter downloads look like).
+//! - **Binary**: little-endian `u64 num_vertices, u64 num_edges`, then
+//!   `num_edges` pairs of `u32`. Used to cache generated graphs so bench
+//!   runs are repeatable without regeneration.
+
+use super::{Edge, VertexId};
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+const BIN_MAGIC: &[u8; 8] = b"CAGRAEL1";
+
+/// Parse a text edge list. Vertex count = max id + 1 unless `num_vertices`
+/// is given.
+pub fn read_text(path: impl AsRef<Path>, num_vertices: Option<usize>) -> Result<(usize, Vec<Edge>)> {
+    let path = path.as_ref();
+    let f = std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?;
+    let mut edges = Vec::new();
+    let mut max_id: u64 = 0;
+    for (lineno, line) in BufReader::new(f).lines().enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') || line.starts_with('%') {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let (Some(a), Some(b)) = (it.next(), it.next()) else {
+            bail!("{}:{}: expected `src dst`", path.display(), lineno + 1);
+        };
+        let s: u64 = a
+            .parse()
+            .with_context(|| format!("{}:{}: bad src {a:?}", path.display(), lineno + 1))?;
+        let d: u64 = b
+            .parse()
+            .with_context(|| format!("{}:{}: bad dst {b:?}", path.display(), lineno + 1))?;
+        if s > u32::MAX as u64 || d > u32::MAX as u64 {
+            bail!("{}:{}: vertex id exceeds u32", path.display(), lineno + 1);
+        }
+        max_id = max_id.max(s).max(d);
+        edges.push((s as VertexId, d as VertexId));
+    }
+    let n = num_vertices.unwrap_or((max_id + 1) as usize);
+    for &(s, d) in &edges {
+        if s as usize >= n || d as usize >= n {
+            bail!("edge ({s},{d}) out of range for num_vertices={n}");
+        }
+    }
+    Ok((n, edges))
+}
+
+/// Write a text edge list.
+pub fn write_text(path: impl AsRef<Path>, num_vertices: usize, edges: &[Edge]) -> Result<()> {
+    let path = path.as_ref();
+    let f = std::fs::File::create(path).with_context(|| format!("creating {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    writeln!(w, "# cagra edge list: {num_vertices} vertices, {} edges", edges.len())?;
+    for &(s, d) in edges {
+        writeln!(w, "{s} {d}")?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Write the binary format.
+pub fn write_binary(path: impl AsRef<Path>, num_vertices: usize, edges: &[Edge]) -> Result<()> {
+    let path = path.as_ref();
+    let f = std::fs::File::create(path).with_context(|| format!("creating {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    w.write_all(BIN_MAGIC)?;
+    w.write_all(&(num_vertices as u64).to_le_bytes())?;
+    w.write_all(&(edges.len() as u64).to_le_bytes())?;
+    // Bulk-write the pair array.
+    for &(s, d) in edges {
+        w.write_all(&s.to_le_bytes())?;
+        w.write_all(&d.to_le_bytes())?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Read the binary format.
+pub fn read_binary(path: impl AsRef<Path>) -> Result<(usize, Vec<Edge>)> {
+    let path = path.as_ref();
+    let f = std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?;
+    let mut r = BufReader::new(f);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != BIN_MAGIC {
+        bail!("{}: not a cagra binary edge list", path.display());
+    }
+    let mut buf8 = [0u8; 8];
+    r.read_exact(&mut buf8)?;
+    let n = u64::from_le_bytes(buf8) as usize;
+    r.read_exact(&mut buf8)?;
+    let m = u64::from_le_bytes(buf8) as usize;
+    let mut raw = vec![0u8; m * 8];
+    r.read_exact(&mut raw)?;
+    let mut edges = Vec::with_capacity(m);
+    for i in 0..m {
+        let s = u32::from_le_bytes(raw[i * 8..i * 8 + 4].try_into().unwrap());
+        let d = u32::from_le_bytes(raw[i * 8 + 4..i * 8 + 8].try_into().unwrap());
+        if s as usize >= n || d as usize >= n {
+            bail!("{}: corrupt edge ({s},{d}) >= n={n}", path.display());
+        }
+        edges.push((s, d));
+    }
+    Ok((n, edges))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("cagra-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(format!("{name}-{}", std::process::id()))
+    }
+
+    #[test]
+    fn text_roundtrip() {
+        let p = tmp("el.txt");
+        let edges = vec![(0, 1), (2, 3), (3, 0)];
+        write_text(&p, 4, &edges).unwrap();
+        let (n, back) = read_text(&p, None).unwrap();
+        assert_eq!(n, 4);
+        assert_eq!(back, edges);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn text_skips_comments() {
+        let p = tmp("el2.txt");
+        std::fs::write(&p, "# header\n0 1\n% other comment\n\n1 2\n").unwrap();
+        let (n, edges) = read_text(&p, None).unwrap();
+        assert_eq!(n, 3);
+        assert_eq!(edges, vec![(0, 1), (1, 2)]);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn text_rejects_garbage() {
+        let p = tmp("el3.txt");
+        std::fs::write(&p, "0 x\n").unwrap();
+        assert!(read_text(&p, None).is_err());
+        std::fs::write(&p, "0 5\n").unwrap();
+        assert!(read_text(&p, Some(3)).is_err()); // out of range
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn binary_roundtrip() {
+        let p = tmp("el.bin");
+        let edges: Vec<Edge> = (0..1000u32).map(|i| (i % 97, (i * 7) % 97)).collect();
+        write_binary(&p, 97, &edges).unwrap();
+        let (n, back) = read_binary(&p).unwrap();
+        assert_eq!(n, 97);
+        assert_eq!(back, edges);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn binary_rejects_bad_magic() {
+        let p = tmp("bad.bin");
+        std::fs::write(&p, b"NOTMAGIC........").unwrap();
+        assert!(read_binary(&p).is_err());
+        std::fs::remove_file(p).ok();
+    }
+}

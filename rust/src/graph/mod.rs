@@ -1,0 +1,44 @@
+//! Graph substrate: CSR representation (§2.1), edge-list IO, the graph
+//! generators the evaluation uses (Graph500 RMAT, bipartite Netflix-like
+//! with Sparkler-style expansion), and a registry of scaled stand-in
+//! datasets for the paper's inputs.
+
+pub mod csr;
+pub mod edgelist;
+pub mod generators;
+pub mod datasets;
+
+pub use csr::{Csr, CsrBuilder};
+
+/// Vertex identifier. 32 bits covers every graph in the paper (≤134M
+/// vertices) at half the vertex-array footprint of u64 — the paper's own
+/// frameworks (Ligra, GraphMat) do the same.
+pub type VertexId = u32;
+
+/// An edge (source, destination).
+pub type Edge = (VertexId, VertexId);
+
+/// Degree prefix-sum helper: `prefix[v+1]-prefix[v]` = degree(v). Used by
+/// the cost-based load balancer (§3.2).
+pub fn degree_prefix(csr: &Csr) -> Vec<u64> {
+    let mut prefix = Vec::with_capacity(csr.num_vertices() + 1);
+    prefix.push(0u64);
+    let mut acc = 0u64;
+    for v in 0..csr.num_vertices() {
+        acc += csr.degree(v as VertexId) as u64;
+        prefix.push(acc);
+    }
+    prefix
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn degree_prefix_counts() {
+        let g = Csr::from_edges(4, &[(0, 1), (0, 2), (1, 2), (3, 0)]);
+        let p = degree_prefix(&g);
+        assert_eq!(p, vec![0, 2, 3, 3, 4]);
+    }
+}

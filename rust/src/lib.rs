@@ -1,0 +1,37 @@
+//! # Cagra-RS
+//!
+//! A cache-optimized graph analytics framework reproducing **"Making Caches
+//! Work for Graph Analytics"** (Zhang, Kiriansky, Mendis, Zaharia,
+//! Amarasinghe, 2016). The paper's two techniques — **vertex reordering**
+//! (§3) and **CSR segmenting** (§4) — are implemented as first-class
+//! preprocessing passes over a Ligra-style shared-memory engine, together
+//! with every substrate the evaluation depends on: graph generators, a
+//! multi-level cache simulator, the analytical cache model (§5), baseline
+//! frameworks (GraphMat/Ligra/GridGraph/X-Stream/Hilbert styles), and a
+//! PJRT runtime that executes JAX/Pallas-authored AOT artifacts for the
+//! numeric hot path.
+//!
+//! ## Layering
+//!
+//! - **L3 (this crate)** — coordination: preprocessing, segment-at-a-time
+//!   scheduling, cache-aware merge, thread pool, metrics, CLI.
+//! - **L2 (python/compile/model.py)** — PageRank / Collaborative-Filtering
+//!   steps over dense segment tiles, lowered once to HLO text.
+//! - **L1 (python/compile/kernels/)** — Pallas tile kernels
+//!   (`interpret=True`), validated against pure-jnp oracles.
+//!
+//! Python never runs on the request path; [`runtime`] loads the artifacts
+//! via the PJRT C API.
+
+pub mod util;
+pub mod parallel;
+pub mod graph;
+pub mod reorder;
+pub mod segment;
+pub mod cache;
+pub mod engine;
+pub mod apps;
+pub mod baselines;
+pub mod runtime;
+pub mod coordinator;
+pub mod bench;

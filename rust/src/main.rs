@@ -1,0 +1,188 @@
+//! `cagra` — CLI launcher for the cache-optimized graph analytics
+//! framework.
+//!
+//! ```text
+//! cagra run     --app pagerank --variant both --graph twitter-sim --iters 20
+//! cagra gen     --graph rmat27-sim --out graph.bin
+//! cagra inspect --graph twitter-sim
+//! cagra simulate --graph twitter-sim --llc 524288
+//! cagra expansion --graph twitter-sim
+//! cagra artifacts
+//! ```
+
+use cagra::coordinator::{run_job, AppKind, JobSpec, SystemConfig};
+use cagra::graph::datasets;
+use cagra::reorder;
+use cagra::segment;
+use cagra::util::cli::Args;
+use cagra::util::{config::Config, fmt_bytes, fmt_count};
+
+const SUBCOMMANDS: &[&str] = &["run", "gen", "inspect", "simulate", "expansion", "artifacts", "help"];
+
+fn main() {
+    let args = Args::from_env(SUBCOMMANDS);
+    let result = match args.subcommand.as_deref() {
+        Some("run") => cmd_run(&args),
+        Some("gen") => cmd_gen(&args),
+        Some("inspect") => cmd_inspect(&args),
+        Some("simulate") => cmd_simulate(&args),
+        Some("expansion") => cmd_expansion(&args),
+        Some("artifacts") => cmd_artifacts(),
+        _ => {
+            usage();
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() {
+    println!(
+        "cagra — cache-optimized graph analytics (vertex reordering + CSR segmenting)\n\
+         \n\
+         subcommands:\n\
+         \x20 run        run an application       --app pagerank|cf|bc|bfs --variant baseline|reorder|segment|both|bitvector\n\
+         \x20            --graph <dataset> --iters N [--sources N] [--analyze] [--scale F] [--config FILE]\n\
+         \x20 gen        generate + cache a dataset  --graph <dataset> [--out file.bin] [--scale F]\n\
+         \x20 inspect    dataset statistics          --graph <dataset>\n\
+         \x20 simulate   memory-system simulation    --graph <dataset> [--llc BYTES]\n\
+         \x20 expansion  expansion-factor sweep      --graph <dataset>\n\
+         \x20 artifacts  list PJRT artifacts and check they compile\n\
+         \n\
+         datasets: {}",
+        datasets::ALL.join(", ")
+    );
+}
+
+fn system_config(args: &Args) -> anyhow::Result<SystemConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => SystemConfig::from_config(&Config::load(path)?)?,
+        None => SystemConfig::default(),
+    };
+    if let Some(llc) = args.get("llc") {
+        cfg.llc_bytes = llc.parse()?;
+    }
+    Ok(cfg)
+}
+
+fn cmd_run(args: &Args) -> anyhow::Result<()> {
+    let cfg = system_config(args)?;
+    let app = AppKind::parse(args.get_or("app", "pagerank"), args.get_or("variant", "both"))?;
+    let spec = JobSpec {
+        dataset: args.get_or("graph", "livejournal-sim").to_string(),
+        app,
+        iters: args.get_usize("iters", 10),
+        num_sources: args.get_usize("sources", 12),
+        analyze_memory: args.has_flag("analyze"),
+        scale: args.get_f64("scale", 1.0),
+    };
+    println!(
+        "running {:?} on {} ({}), llc={}",
+        spec.app,
+        spec.dataset,
+        datasets::paper_name(&spec.dataset),
+        fmt_bytes(cfg.llc_bytes)
+    );
+    let result = run_job(&spec, &cfg)?;
+    print!("{}", result.metrics.render());
+    println!("summary value: {:.6}", result.summary);
+    Ok(())
+}
+
+fn cmd_gen(args: &Args) -> anyhow::Result<()> {
+    let name = args.get_or("graph", "livejournal-sim");
+    let scale = args.get_f64("scale", 1.0);
+    let ds = datasets::load_scaled(name, scale)?;
+    println!(
+        "{name}: {} vertices, {} edges",
+        fmt_count(ds.graph.num_vertices() as u64),
+        fmt_count(ds.graph.num_edges() as u64)
+    );
+    if let Some(out) = args.get("out") {
+        let edges: Vec<_> = ds.graph.edges().collect();
+        cagra::graph::edgelist::write_binary(out, ds.graph.num_vertices(), &edges)?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> anyhow::Result<()> {
+    let name = args.get_or("graph", "livejournal-sim");
+    let ds = datasets::load_scaled(name, args.get_f64("scale", 1.0))?;
+    let g = &ds.graph;
+    let degs = g.out_degrees();
+    let maxd = degs.iter().copied().max().unwrap_or(0);
+    println!("dataset {name} (stand-in for {})", datasets::paper_name(name));
+    println!("  vertices: {}", fmt_count(g.num_vertices() as u64));
+    println!("  edges:    {}", fmt_count(g.num_edges() as u64));
+    println!("  avg deg:  {:.1}", g.num_edges() as f64 / g.num_vertices() as f64);
+    println!("  max deg:  {}", fmt_count(maxd as u64));
+    println!("  csr size: {}", fmt_bytes(g.bytes()));
+    println!("  vertex data (f64): {}", fmt_bytes(g.num_vertices() * 8));
+    println!("  degree histogram (log2 buckets):");
+    for (b, c) in cagra::graph::generators::degree_histogram(&degs) {
+        println!("    2^{b:<2} {}", fmt_count(c as u64));
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+    let cfg = system_config(args)?;
+    let name = args.get_or("graph", "livejournal-sim");
+    let ds = datasets::load_scaled(name, args.get_f64("scale", 1.0))?;
+    let g = &ds.graph;
+    println!(
+        "simulating PageRank memory behaviour on {name} (LLC {})",
+        fmt_bytes(cfg.llc_bytes)
+    );
+    use cagra::apps::pagerank::Variant;
+    for v in Variant::all() {
+        let est = cagra::coordinator::job::simulate_pagerank(g, &cfg, *v);
+        println!(
+            "  {:<24} {:>8.2} stall-cyc/access   LLC miss {:>5.1}%",
+            v.name(),
+            est.stalls_per_access(),
+            est.llc_miss_rate * 100.0
+        );
+    }
+    Ok(())
+}
+
+fn cmd_expansion(args: &Args) -> anyhow::Result<()> {
+    let name = args.get_or("graph", "twitter-sim");
+    let ds = datasets::load_scaled(name, args.get_f64("scale", 1.0))?;
+    let g = &ds.graph;
+    let counts = [1usize, 2, 4, 8, 16, 32, 64, 128];
+    println!("expansion factors for {name} (Figure 7):");
+    for (order_name, graph) in [
+        ("original", g.clone()),
+        ("degree-sorted", reorder::reorder(g, reorder::Ordering::DegreeSort).0),
+        ("random", reorder::reorder(g, reorder::Ordering::Random).0),
+    ] {
+        let sweep = segment::expansion::expansion_sweep(&graph, &counts);
+        let row: Vec<String> = sweep.iter().map(|(k, q)| format!("{k}:{q:.2}")).collect();
+        println!("  {order_name:<14} {}", row.join("  "));
+    }
+    Ok(())
+}
+
+fn cmd_artifacts() -> anyhow::Result<()> {
+    let mut rt = cagra::runtime::Runtime::from_env()?;
+    println!("PJRT platform: {}", rt.platform());
+    let names: Vec<String> = rt.available().iter().map(|s| s.to_string()).collect();
+    if names.is_empty() {
+        println!("no artifacts found — run `make artifacts`");
+        return Ok(());
+    }
+    for name in names {
+        let exe = rt.load(&name)?;
+        println!(
+            "  {name}: inputs {:?} outputs {:?} params {:?} — compiles OK",
+            exe.meta.inputs, exe.meta.outputs, exe.meta.params
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,357 @@
+//! Shared-memory parallel runtime.
+//!
+//! The paper parallelizes with Intel Cilk Plus and implements a
+//! *work-estimating* load balancer on top (§3.2): after degree-sorting,
+//! high-degree vertices cluster, so ranges must be split by **cost** (sum
+//! of degrees) rather than by vertex count. The offline crate mirror has
+//! neither `rayon` nor Cilk, so this module provides the substrate:
+//!
+//! - [`pool`]: a persistent worker pool (workers + the calling thread).
+//! - [`parallel_for`] / [`parallel_for_dynamic`]: static and
+//!   self-scheduling loops.
+//! - [`parallel_for_cost`]: the paper's divide-and-conquer cost-based
+//!   work-stealing scheme.
+//! - [`atomics`]: CAS-based f64/f32 atomic adds (for the HAtomic baseline).
+//! - [`UnsafeSlice`]: disjoint-index concurrent writes without locks.
+
+pub mod pool;
+pub mod atomics;
+
+use pool::global;
+use std::cell::Cell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Number of worker threads the global pool uses (`CAGRA_THREADS` env
+/// override, else `available_parallelism`).
+pub fn num_threads() -> usize {
+    global().num_threads()
+}
+
+/// Run `f(thread_id)` on every pool thread and wait for all.
+pub fn run_on_all(f: &(dyn Fn(usize) + Sync)) {
+    global().run(f);
+}
+
+/// Statically-partitioned parallel loop: `0..n` is split into one
+/// contiguous chunk per thread; `f(i)` is called for every index.
+pub fn parallel_for(n: usize, f: impl Fn(usize) + Sync) {
+    let nt = num_threads();
+    if n == 0 {
+        return;
+    }
+    if nt == 1 || n < 2 * nt {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let chunk = n.div_ceil(nt);
+    run_on_all(&|t| {
+        let lo = t * chunk;
+        let hi = ((t + 1) * chunk).min(n);
+        for i in lo..hi {
+            f(i);
+        }
+    });
+}
+
+/// Dynamically self-scheduled parallel loop: threads grab `grain`-sized
+/// chunks from a shared cursor. Better than [`parallel_for`] when per-index
+/// cost is irregular but cheap to batch.
+pub fn parallel_for_dynamic(n: usize, grain: usize, f: impl Fn(usize) + Sync) {
+    let grain = grain.max(1);
+    if n == 0 {
+        return;
+    }
+    if num_threads() == 1 || n <= grain {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let cursor = AtomicUsize::new(0);
+    run_on_all(&|_| loop {
+        let lo = cursor.fetch_add(grain, Ordering::Relaxed);
+        if lo >= n {
+            break;
+        }
+        let hi = (lo + grain).min(n);
+        for i in lo..hi {
+            f(i);
+        }
+    });
+}
+
+/// Parallel loop over contiguous ranges: each call gets `(lo, hi)` with
+/// static partitioning — useful when the body wants chunk-local state.
+pub fn parallel_ranges(n: usize, f: impl Fn(usize, usize) + Sync) {
+    let nt = num_threads();
+    if n == 0 {
+        return;
+    }
+    if nt == 1 {
+        f(0, n);
+        return;
+    }
+    let chunk = n.div_ceil(nt);
+    run_on_all(&|t| {
+        let lo = t * chunk;
+        let hi = ((t + 1) * chunk).min(n);
+        if lo < hi {
+            f(lo, hi);
+        }
+    });
+}
+
+/// The paper's §3.2 work-estimating divide-and-conquer scheduler.
+///
+/// `cost(lo, hi)` estimates the work in a vertex range (typically via a
+/// degree prefix-sum: "the sum of their neighbors ... how many reads it
+/// will make to the rank array"). Ranges costlier than `threshold` are
+/// split in two; small ranges are processed by `process(lo, hi)`. Idle
+/// workers steal pending ranges from a shared queue.
+pub fn parallel_for_cost(
+    n: usize,
+    threshold: u64,
+    cost: impl Fn(usize, usize) -> u64 + Sync,
+    process: impl Fn(usize, usize) + Sync,
+) {
+    if n == 0 {
+        return;
+    }
+    if num_threads() == 1 {
+        // Serial fast path: still honor the threshold so behaviour (and
+        // cache footprint per call) matches the parallel schedule.
+        let mut stack = vec![(0usize, n)];
+        while let Some((lo, hi)) = stack.pop() {
+            if hi - lo <= 1 || cost(lo, hi) <= threshold {
+                process(lo, hi);
+            } else {
+                let mid = lo + (hi - lo) / 2;
+                stack.push((mid, hi));
+                stack.push((lo, mid));
+            }
+        }
+        return;
+    }
+    // Shared LIFO of pending ranges + count of in-flight tasks so workers
+    // know when to quit (empty queue alone is not termination: a running
+    // task may still push halves).
+    let queue: Mutex<Vec<(usize, usize)>> = Mutex::new(vec![(0, n)]);
+    let in_flight = AtomicUsize::new(1);
+    run_on_all(&|_| loop {
+        let item = queue.lock().unwrap().pop();
+        match item {
+            Some((lo, hi)) => {
+                if hi - lo <= 1 || cost(lo, hi) <= threshold {
+                    process(lo, hi);
+                } else {
+                    let mid = lo + (hi - lo) / 2;
+                    in_flight.fetch_add(1, Ordering::Relaxed);
+                    queue.lock().unwrap().push((mid, hi));
+                    // Process the left half ourselves by re-queueing it;
+                    // keeps the queue the single source of truth.
+                    in_flight.fetch_add(1, Ordering::Relaxed);
+                    queue.lock().unwrap().push((lo, mid));
+                }
+                in_flight.fetch_sub(1, Ordering::Release);
+            }
+            None => {
+                if in_flight.load(Ordering::Acquire) == 0 {
+                    break;
+                }
+                std::hint::spin_loop();
+            }
+        }
+    });
+}
+
+/// Parallel map-reduce: each thread folds its share of `0..n` with `fold`,
+/// partials are combined with `combine` on the caller.
+pub fn parallel_reduce<T: Send>(
+    n: usize,
+    identity: impl Fn() -> T + Sync,
+    fold: impl Fn(T, usize) -> T + Sync,
+    combine: impl Fn(T, T) -> T,
+) -> T {
+    let nt = num_threads();
+    if n == 0 {
+        return identity();
+    }
+    if nt == 1 || n < 2 * nt {
+        let mut acc = identity();
+        for i in 0..n {
+            acc = fold(acc, i);
+        }
+        return acc;
+    }
+    let partials: Mutex<Vec<T>> = Mutex::new(Vec::with_capacity(nt));
+    let chunk = n.div_ceil(nt);
+    run_on_all(&|t| {
+        let lo = t * chunk;
+        let hi = ((t + 1) * chunk).min(n);
+        if lo >= hi {
+            return;
+        }
+        let mut acc = identity();
+        for i in lo..hi {
+            acc = fold(acc, i);
+        }
+        partials.lock().unwrap().push(acc);
+    });
+    partials
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .fold(identity(), combine)
+}
+
+/// Wrapper allowing concurrent writes to **disjoint** indices of a slice
+/// from multiple threads without locks or atomics. The caller must
+/// guarantee disjointness (each index written by at most one thread per
+/// parallel region) — exactly the guarantee segment-local processing and
+/// the block merge provide.
+pub struct UnsafeSlice<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _marker: std::marker::PhantomData<&'a mut [T]>,
+}
+
+unsafe impl<T: Send> Send for UnsafeSlice<'_, T> {}
+unsafe impl<T: Send> Sync for UnsafeSlice<'_, T> {}
+
+impl<'a, T> UnsafeSlice<'a, T> {
+    pub fn new(slice: &'a mut [T]) -> Self {
+        Self {
+            ptr: slice.as_mut_ptr(),
+            len: slice.len(),
+            _marker: std::marker::PhantomData,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Write `v` to index `i`.
+    ///
+    /// # Safety
+    /// `i < len` and no other thread concurrently accesses index `i`.
+    #[inline]
+    pub unsafe fn write(&self, i: usize, v: T) {
+        debug_assert!(i < self.len);
+        unsafe { *self.ptr.add(i) = v };
+    }
+
+    /// Get a mutable reference to index `i`.
+    ///
+    /// # Safety
+    /// `i < len` and no other thread concurrently accesses index `i`.
+    #[inline]
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn get_mut(&self, i: usize) -> &mut T {
+        debug_assert!(i < self.len);
+        unsafe { &mut *self.ptr.add(i) }
+    }
+}
+
+thread_local! {
+    /// Set while executing inside a pool worker so nested parallel calls
+    /// degrade to serial instead of deadlocking.
+    pub(crate) static IN_WORKER: Cell<bool> = const { Cell::new(false) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn parallel_for_covers_all() {
+        let n = 10_000;
+        let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        parallel_for(n, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn parallel_for_dynamic_covers_all() {
+        let n = 5_000;
+        let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        parallel_for_dynamic(n, 64, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn parallel_ranges_partition() {
+        let n = 1234;
+        let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        parallel_ranges(n, |lo, hi| {
+            for h in &hits[lo..hi] {
+                h.fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn cost_based_covers_all_with_skewed_costs() {
+        // Power-law-ish costs: vertex 0 is enormously expensive.
+        let n = 4096;
+        let degree: Vec<u64> = (0..n).map(|i| if i < 8 { 100_000 } else { 2 }).collect();
+        let prefix: Vec<u64> = std::iter::once(0)
+            .chain(degree.iter().scan(0u64, |acc, &d| {
+                *acc += d;
+                Some(*acc)
+            }))
+            .collect();
+        let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        parallel_for_cost(
+            n,
+            50_000,
+            |lo, hi| prefix[hi] - prefix[lo],
+            |lo, hi| {
+                for h in &hits[lo..hi] {
+                    h.fetch_add(1, Ordering::Relaxed);
+                }
+            },
+        );
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn reduce_sums() {
+        let n = 100_000usize;
+        let total = parallel_reduce(n, || 0u64, |acc, i| acc + i as u64, |a, b| a + b);
+        assert_eq!(total, (n as u64 - 1) * n as u64 / 2);
+    }
+
+    #[test]
+    fn unsafe_slice_disjoint_writes() {
+        let mut data = vec![0u64; 1000];
+        let s = UnsafeSlice::new(&mut data);
+        parallel_for(1000, |i| unsafe { s.write(i, i as u64 * 3) });
+        assert!(data.iter().enumerate().all(|(i, &v)| v == i as u64 * 3));
+    }
+
+    #[test]
+    fn nested_parallel_for_is_safe() {
+        let outer = AtomicU64::new(0);
+        parallel_for(16, |_| {
+            // Nested call must not deadlock; it runs serially in-worker.
+            parallel_for(16, |_| {
+                outer.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(outer.load(Ordering::Relaxed), 256);
+    }
+}

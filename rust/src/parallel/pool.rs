@@ -1,0 +1,208 @@
+//! Persistent worker pool.
+//!
+//! One global pool is created lazily; `run(f)` broadcasts a job to all
+//! workers *and* executes a share on the calling thread, returning when
+//! every participant finished. Nested `run` calls from inside a worker run
+//! the job serially on the caller (no deadlock).
+//!
+//! The job is passed as a raw wide pointer with an epoch/completion
+//! handshake; this is sound because `run` does not return until all
+//! workers have finished with the pointer.
+
+use super::IN_WORKER;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex, OnceLock};
+
+struct JobSlot {
+    /// Type-erased `&dyn Fn(usize)` valid for the duration of the epoch.
+    ptr: Option<(*const (), *const ())>,
+    epoch: u64,
+}
+
+// The raw pointers are only dereferenced while `run` is blocked waiting,
+// which keeps the referent alive; see `run`.
+unsafe impl Send for JobSlot {}
+
+struct Shared {
+    slot: Mutex<JobSlot>,
+    work_cv: Condvar,
+    done: Mutex<usize>,
+    done_cv: Condvar,
+    shutdown: AtomicBool,
+    n_spawned: usize,
+}
+
+/// The worker pool. Thread ids passed to jobs are `0..num_threads()`;
+/// id 0 is the calling thread.
+pub struct ThreadPool {
+    shared: &'static Shared,
+    n_threads: usize,
+    running: AtomicBool,
+    epoch: AtomicU64,
+}
+
+fn decompose(f: &(dyn Fn(usize) + Sync)) -> (*const (), *const ()) {
+    // A &dyn fat pointer is (data, vtable); transmute via raw parts.
+    unsafe { std::mem::transmute::<&(dyn Fn(usize) + Sync), (*const (), *const ())>(f) }
+}
+
+unsafe fn recompose<'a>(parts: (*const (), *const ())) -> &'a (dyn Fn(usize) + Sync) {
+    unsafe { std::mem::transmute::<(*const (), *const ()), &(dyn Fn(usize) + Sync)>(parts) }
+}
+
+impl ThreadPool {
+    fn new(n_threads: usize) -> ThreadPool {
+        let n_spawned = n_threads.saturating_sub(1);
+        let shared: &'static Shared = Box::leak(Box::new(Shared {
+            slot: Mutex::new(JobSlot { ptr: None, epoch: 0 }),
+            work_cv: Condvar::new(),
+            done: Mutex::new(0),
+            done_cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            n_spawned,
+        }));
+        for worker_id in 1..n_threads {
+            std::thread::Builder::new()
+                .name(format!("cagra-worker-{worker_id}"))
+                .spawn(move || worker_loop(shared, worker_id))
+                .expect("spawning pool worker");
+        }
+        ThreadPool {
+            shared,
+            n_threads,
+            running: AtomicBool::new(false),
+            epoch: AtomicU64::new(0),
+        }
+    }
+
+    pub fn num_threads(&self) -> usize {
+        self.n_threads
+    }
+
+    /// Broadcast `f` to all threads (ids `0..num_threads()`), running id 0
+    /// on the caller. Returns after every thread finishes. Reentrant calls
+    /// (from inside a worker, or while another `run` is active on another
+    /// thread) execute `f(0)` serially.
+    pub fn run(&self, f: &(dyn Fn(usize) + Sync)) {
+        if self.n_threads == 1 || IN_WORKER.with(|w| w.get()) {
+            f(0);
+            return;
+        }
+        // One outer `run` at a time; concurrent callers serialize here by
+        // falling back to serial execution (correct, just not parallel).
+        if self
+            .running
+            .compare_exchange(false, true, Ordering::Acquire, Ordering::Relaxed)
+            .is_err()
+        {
+            f(0);
+            return;
+        }
+        let epoch = self.epoch.fetch_add(1, Ordering::Relaxed) + 1;
+        {
+            let mut slot = self.shared.slot.lock().unwrap();
+            slot.ptr = Some(decompose(f));
+            slot.epoch = epoch;
+            self.shared.work_cv.notify_all();
+        }
+        // Caller participates as thread 0.
+        f(0);
+        // Wait for all spawned workers to finish this epoch.
+        let mut done = self.shared.done.lock().unwrap();
+        while *done < self.shared.n_spawned {
+            done = self.shared.done_cv.wait(done).unwrap();
+        }
+        *done = 0;
+        drop(done);
+        // Invalidate the pointer before `f` can go out of scope.
+        self.shared.slot.lock().unwrap().ptr = None;
+        self.running.store(false, Ordering::Release);
+    }
+}
+
+fn worker_loop(shared: &'static Shared, worker_id: usize) {
+    IN_WORKER.with(|w| w.set(true));
+    let mut last_epoch = 0u64;
+    loop {
+        let parts = {
+            let mut slot = shared.slot.lock().unwrap();
+            while slot.epoch == last_epoch && !shared.shutdown.load(Ordering::Relaxed) {
+                slot = shared.work_cv.wait(slot).unwrap();
+            }
+            if shared.shutdown.load(Ordering::Relaxed) {
+                return;
+            }
+            last_epoch = slot.epoch;
+            slot.ptr.expect("job pointer set with epoch")
+        };
+        let f = unsafe { recompose(parts) };
+        f(worker_id);
+        let mut done = shared.done.lock().unwrap();
+        *done += 1;
+        shared.done_cv.notify_one();
+    }
+}
+
+static GLOBAL: OnceLock<ThreadPool> = OnceLock::new();
+
+/// Number of threads requested via `CAGRA_THREADS`, else the machine's
+/// available parallelism.
+pub fn default_threads() -> usize {
+    std::env::var("CAGRA_THREADS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        })
+}
+
+/// The lazily-created global pool.
+pub fn global() -> &'static ThreadPool {
+    GLOBAL.get_or_init(|| ThreadPool::new(default_threads()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn run_visits_every_thread_id() {
+        let pool = global();
+        let nt = pool.num_threads();
+        let seen: Vec<AtomicUsize> = (0..nt).map(|_| AtomicUsize::new(0)).collect();
+        pool.run(&|t| {
+            seen[t].fetch_add(1, Ordering::Relaxed);
+        });
+        for (t, s) in seen.iter().enumerate() {
+            assert_eq!(s.load(Ordering::Relaxed), 1, "thread {t}");
+        }
+    }
+
+    #[test]
+    fn run_is_repeatable() {
+        let pool = global();
+        let count = AtomicUsize::new(0);
+        for _ in 0..50 {
+            pool.run(&|_| {
+                count.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(count.load(Ordering::Relaxed), 50 * pool.num_threads());
+    }
+
+    #[test]
+    fn borrows_local_state() {
+        let pool = global();
+        let data: Vec<AtomicUsize> = (0..pool.num_threads()).map(|_| AtomicUsize::new(7)).collect();
+        pool.run(&|t| {
+            data[t].fetch_add(t, Ordering::Relaxed);
+        });
+        for (t, d) in data.iter().enumerate() {
+            assert_eq!(d.load(Ordering::Relaxed), 7 + t);
+        }
+    }
+}

@@ -1,0 +1,161 @@
+//! Artifact registry: scans `artifacts/` for `<name>.hlo.txt` plus the
+//! sidecar `<name>.meta` describing shapes (written by aot.py, parsed with
+//! the in-repo config parser — no serde offline).
+
+use crate::util::config::Config;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Shape metadata for one artifact.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ArtifactMeta {
+    /// Input dims, in argument order.
+    pub inputs: Vec<Vec<usize>>,
+    /// Output dims, in tuple order.
+    pub outputs: Vec<Vec<usize>>,
+    /// Free-form key/values from the meta file (e.g. tile=256, k=8).
+    pub params: BTreeMap<String, String>,
+}
+
+impl ArtifactMeta {
+    /// Parse the `.meta` sidecar:
+    /// ```text
+    /// [shapes]
+    /// input0 = 8x256
+    /// output0 = 256
+    /// [params]
+    /// tile = 256
+    /// ```
+    pub fn parse(text: &str) -> Result<ArtifactMeta> {
+        let cfg = Config::parse(text)?;
+        let mut meta = ArtifactMeta::default();
+        let parse_dims = |s: &str| -> Result<Vec<usize>> {
+            if s.trim().is_empty() || s.trim() == "scalar" {
+                return Ok(vec![]);
+            }
+            s.split('x')
+                .map(|t| t.trim().parse::<usize>().context("bad dim"))
+                .collect()
+        };
+        for i in 0.. {
+            match cfg.get(&format!("shapes.input{i}")) {
+                Some(s) => meta.inputs.push(parse_dims(s)?),
+                None => break,
+            }
+        }
+        for i in 0.. {
+            match cfg.get(&format!("shapes.output{i}")) {
+                Some(s) => meta.outputs.push(parse_dims(s)?),
+                None => break,
+            }
+        }
+        for k in cfg.keys() {
+            if let Some(name) = k.strip_prefix("params.") {
+                meta.params.insert(name.to_string(), cfg.get(k).unwrap().to_string());
+            }
+        }
+        Ok(meta)
+    }
+
+    pub fn param_usize(&self, key: &str) -> Result<usize> {
+        self.params
+            .get(key)
+            .with_context(|| format!("meta param {key:?} missing"))?
+            .parse()
+            .with_context(|| format!("meta param {key:?} not an integer"))
+    }
+}
+
+/// Directory scan of available artifacts.
+pub struct Artifacts {
+    dir: PathBuf,
+    names: Vec<String>,
+}
+
+impl Artifacts {
+    pub fn scan(dir: impl AsRef<Path>) -> Result<Artifacts> {
+        let dir = dir.as_ref().to_path_buf();
+        let mut names = Vec::new();
+        if dir.is_dir() {
+            for entry in std::fs::read_dir(&dir)? {
+                let p = entry?.path();
+                if let Some(fname) = p.file_name().and_then(|f| f.to_str()) {
+                    if let Some(stem) = fname.strip_suffix(".hlo.txt") {
+                        names.push(stem.to_string());
+                    }
+                }
+            }
+        }
+        names.sort();
+        Ok(Artifacts { dir, names })
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.names.iter().map(|s| s.as_str()).collect()
+    }
+
+    /// Resolve an artifact to (hlo path, parsed meta).
+    pub fn get(&self, name: &str) -> Result<(PathBuf, ArtifactMeta)> {
+        if !self.names.iter().any(|n| n == name) {
+            bail!(
+                "artifact {name:?} not found in {} (have: {:?}); run `make artifacts`",
+                self.dir.display(),
+                self.names
+            );
+        }
+        let hlo = self.dir.join(format!("{name}.hlo.txt"));
+        let meta_path = self.dir.join(format!("{name}.meta"));
+        let meta = if meta_path.is_file() {
+            ArtifactMeta::parse(&std::fs::read_to_string(&meta_path)?)
+                .with_context(|| format!("parsing {}", meta_path.display()))?
+        } else {
+            ArtifactMeta::default()
+        };
+        Ok((hlo, meta))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn meta_parses_shapes_and_params() {
+        let m = ArtifactMeta::parse(
+            "[shapes]\ninput0 = 8x256x256\ninput1 = 256\noutput0 = 256\n[params]\ntile = 256\nk = 8\n",
+        )
+        .unwrap();
+        assert_eq!(m.inputs, vec![vec![8, 256, 256], vec![256]]);
+        assert_eq!(m.outputs, vec![vec![256]]);
+        assert_eq!(m.param_usize("tile").unwrap(), 256);
+        assert!(m.param_usize("missing").is_err());
+    }
+
+    #[test]
+    fn scalar_dims() {
+        let m = ArtifactMeta::parse("[shapes]\ninput0 = scalar\noutput0 = 4\n").unwrap();
+        assert_eq!(m.inputs, vec![Vec::<usize>::new()]);
+    }
+
+    #[test]
+    fn scan_missing_dir_is_empty() {
+        let a = Artifacts::scan("/definitely/not/a/dir").unwrap();
+        assert!(a.names().is_empty());
+        assert!(a.get("x").is_err());
+    }
+
+    #[test]
+    fn scan_finds_artifacts() {
+        let dir = std::env::temp_dir().join(format!("cagra-art-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("m.hlo.txt"), "HloModule m").unwrap();
+        std::fs::write(dir.join("m.meta"), "[shapes]\ninput0 = 2x2\n").unwrap();
+        let a = Artifacts::scan(&dir).unwrap();
+        assert_eq!(a.names(), vec!["m"]);
+        let (p, meta) = a.get("m").unwrap();
+        assert!(p.ends_with("m.hlo.txt"));
+        assert_eq!(meta.inputs, vec![vec![2, 2]]);
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

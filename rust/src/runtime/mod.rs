@@ -1,0 +1,122 @@
+//! PJRT runtime: loads the HLO-text artifacts that `python/compile/aot.py`
+//! produced at build time and executes them on the CPU PJRT client.
+//! Python is **never** on this path — the artifacts are plain files.
+//!
+//! Interchange is HLO *text* (not serialized protos): jax ≥ 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod artifacts;
+
+pub use artifacts::{ArtifactMeta, Artifacts};
+
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// A loaded, compiled XLA executable plus its metadata.
+pub struct Executable {
+    pub name: String,
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute on f32 buffers. Each input is (data, dims); the single
+    /// tuple output is flattened to a Vec<f32> per element.
+    pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, dims) in inputs {
+            let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data)
+                .reshape(&dims_i64)
+                .context("reshaping input literal")?;
+            literals.push(lit);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .context("executing PJRT artifact")?[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        // aot.py lowers with return_tuple=True.
+        let elems = result.to_tuple().context("untupling result")?;
+        let mut out = Vec::with_capacity(elems.len());
+        for e in elems {
+            out.push(e.to_vec::<f32>().context("reading f32 output")?);
+        }
+        Ok(out)
+    }
+}
+
+/// The runtime: a PJRT CPU client plus a cache of compiled executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: HashMap<String, Executable>,
+    artifacts: Artifacts,
+}
+
+impl Runtime {
+    /// Create against an artifacts directory (default `artifacts/`).
+    pub fn new(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let artifacts = Artifacts::scan(dir)?;
+        Ok(Runtime {
+            client,
+            cache: HashMap::new(),
+            artifacts,
+        })
+    }
+
+    /// Default artifacts dir: `$CAGRA_ARTIFACTS` or `artifacts/`.
+    pub fn from_env() -> Result<Runtime> {
+        let dir = std::env::var("CAGRA_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+        Self::new(dir)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn available(&self) -> Vec<&str> {
+        self.artifacts.names()
+    }
+
+    /// Load (compile-once, cached) an artifact by name.
+    pub fn load(&mut self, name: &str) -> Result<&Executable> {
+        if !self.cache.contains_key(name) {
+            let (path, meta) = self.artifacts.get(name)?;
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path not utf-8")?,
+            )
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact {name}"))?;
+            self.cache.insert(
+                name.to_string(),
+                Executable {
+                    name: name.to_string(),
+                    meta,
+                    exe,
+                },
+            );
+        }
+        Ok(&self.cache[name])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Runtime integration tests (needing built artifacts) live in
+    // rust/tests/pjrt_integration.rs; here we only check client creation,
+    // which requires no artifacts.
+    #[test]
+    fn cpu_client_comes_up() {
+        let c = xla::PjRtClient::cpu().expect("PJRT CPU client");
+        assert_eq!(c.platform_name(), "cpu");
+        assert!(c.device_count() >= 1);
+    }
+}

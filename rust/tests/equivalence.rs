@@ -1,0 +1,138 @@
+//! Golden equivalence suite: every optimized path must produce the same
+//! answer as the naive reference on the same input — across apps,
+//! orderings, segment sizes, and baseline frameworks.
+
+use cagra::apps::{bc, bfs, pagerank, sssp};
+use cagra::baselines::{graphmat_style, gridgraph_style, hilbert, ligra_style, xstream_style};
+use cagra::coordinator::SystemConfig;
+use cagra::graph::{generators, Csr};
+use cagra::reorder;
+
+fn graph(seed: u64) -> Csr {
+    let (n, e) = generators::rmat(11, 8, generators::RmatParams::graph500(), seed);
+    Csr::from_edges(n, &e)
+}
+
+fn assert_close(tag: &str, a: &[f64], b: &[f64], tol: f64) {
+    assert_eq!(a.len(), b.len(), "{tag}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            (x - y).abs() <= tol * y.abs().max(1e-12),
+            "{tag} idx {i}: {x} vs {y}"
+        );
+    }
+}
+
+#[test]
+fn every_pagerank_implementation_agrees() {
+    let g = graph(1001);
+    let cfg = SystemConfig {
+        llc_bytes: 64 * 1024,
+        ..Default::default()
+    };
+    let iters = 4;
+    let want = pagerank::reference(&g, cfg.damping, iters);
+    // Our four variants.
+    for &v in pagerank::Variant::all() {
+        let got = pagerank::run(&g, &cfg, v, iters);
+        assert_close(v.name(), &got.values, &want, 1e-9);
+    }
+    // All five baseline frameworks.
+    assert_close(
+        "ligra-style",
+        &ligra_style::Prepared::new(&g, &cfg).run(iters),
+        &want,
+        1e-9,
+    );
+    assert_close(
+        "graphmat-style",
+        &graphmat_style::Prepared::new(&g, &cfg).run(iters),
+        &want,
+        1e-9,
+    );
+    assert_close(
+        "gridgraph-style",
+        &gridgraph_style::Prepared::new(&g, &cfg).run(iters),
+        &want,
+        1e-9,
+    );
+    assert_close(
+        "xstream-style",
+        &xstream_style::Prepared::new(&g, &cfg).run(iters),
+        &want,
+        1e-9,
+    );
+    for mode in [hilbert::Mode::HSerial, hilbert::Mode::HAtomic, hilbert::Mode::HMerge] {
+        assert_close(
+            mode.name(),
+            &hilbert::Prepared::new(&g, &cfg, mode).run(iters),
+            &want,
+            1e-9,
+        );
+    }
+}
+
+#[test]
+fn pagerank_invariant_under_any_ordering() {
+    // Relabeling the graph then mapping ranks back must be a no-op.
+    let g = graph(1002);
+    let cfg = SystemConfig::default();
+    let want = pagerank::run(&g, &cfg, pagerank::Variant::Baseline, 3).values;
+    for &o in reorder::Ordering::all() {
+        let (h, perm) = reorder::reorder(&g, o);
+        let ranks_new_space = pagerank::run(&h, &cfg, pagerank::Variant::Baseline, 3).values;
+        let back = reorder::unpermute(&ranks_new_space, &perm);
+        assert_close(o.name(), &back, &want, 1e-9);
+    }
+}
+
+#[test]
+fn pagerank_invariant_under_segment_size() {
+    let g = graph(1003);
+    let mut cfg = SystemConfig::default();
+    let want = pagerank::reference(&g, cfg.damping, 3);
+    for llc in [2 * 1024, 16 * 1024, 256 * 1024, 64 * 1024 * 1024] {
+        cfg.llc_bytes = llc;
+        let got = pagerank::run(&g, &cfg, pagerank::Variant::Segmented, 3);
+        assert_close(&format!("llc={llc}"), &got.values, &want, 1e-9);
+    }
+}
+
+#[test]
+fn bfs_and_bc_and_sssp_agree_with_references() {
+    let g = graph(1004);
+    let src = bc::default_sources(&g, 1)[0];
+    // BFS levels.
+    let want_levels = bfs::reference_levels(&g, src);
+    for &v in bfs::Variant::all() {
+        let p = bfs::Prepared::new(&g, v);
+        let parents = p.run(src);
+        let got = bfs::levels_from_parents(&g, src, &parents);
+        assert_eq!(got, want_levels, "bfs {}", v.name());
+    }
+    // BC.
+    let sources = bc::default_sources(&g, 3);
+    let want_bc = bc::reference(&g, &sources);
+    let got_bc = bc::Prepared::new(&g, bc::Variant::ReorderedBitvector).run(&sources);
+    assert_close("bc", &got_bc, &want_bc, 1e-7);
+    // SSSP.
+    let want_d = sssp::reference(&g, src);
+    let got_d = sssp::Prepared::new(&g, sssp::Variant::Reordered).run(src);
+    for (i, (a, b)) in got_d.iter().zip(&want_d).enumerate() {
+        assert!(
+            (a == b) || (a.is_infinite() && b.is_infinite()),
+            "sssp v={i}: {a} vs {b}"
+        );
+    }
+}
+
+#[test]
+fn deterministic_across_runs() {
+    // Same seed => byte-identical results (PRNG + parallel schedule must
+    // not leak nondeterminism into *values*).
+    let g = graph(1005);
+    let cfg = SystemConfig::default();
+    let a = pagerank::run(&g, &cfg, pagerank::Variant::ReorderedSegmented, 5).values;
+    let b = pagerank::run(&g, &cfg, pagerank::Variant::ReorderedSegmented, 5).values;
+    assert_eq!(a, b);
+}

@@ -1,0 +1,151 @@
+//! Failure-injection and edge-case tests: malformed inputs, degenerate
+//! graphs, and hostile configurations must fail cleanly (or degrade
+//! gracefully), never corrupt results.
+
+use cagra::apps::pagerank;
+use cagra::coordinator::{run_job, AppKind, JobSpec, SystemConfig};
+use cagra::graph::{edgelist, Csr, CsrBuilder};
+use cagra::segment::{SegmentBuffers, SegmentedCsr};
+
+#[test]
+fn empty_graph() {
+    let g = Csr::from_edges(0, &[]);
+    assert_eq!(g.num_vertices(), 0);
+    let sg = SegmentedCsr::build(&g, 16);
+    assert_eq!(sg.num_edges(), 0);
+    let mut bufs = SegmentBuffers::for_graph(&sg);
+    let mut out: Vec<f64> = vec![];
+    sg.aggregate(|_| 1.0, &mut bufs, 0.0, &mut out);
+}
+
+#[test]
+fn single_vertex_no_edges() {
+    let g = Csr::from_edges(1, &[]);
+    let cfg = SystemConfig::default();
+    for &v in pagerank::Variant::all() {
+        let r = pagerank::run(&g, &cfg, v, 3);
+        assert_eq!(r.values.len(), 1);
+        assert!(r.values[0].is_finite());
+    }
+}
+
+#[test]
+fn all_self_loops_graph_becomes_empty() {
+    let mut b = CsrBuilder::new(4);
+    for v in 0..4u32 {
+        b.add_edge(v, v);
+    }
+    let g = b.build();
+    assert_eq!(g.num_edges(), 0);
+    let cfg = SystemConfig::default();
+    let r = pagerank::run(&g, &cfg, pagerank::Variant::Segmented, 2);
+    // No edges: every vertex holds the teleport mass.
+    for v in r.values {
+        assert!((v - (1.0 - cfg.damping) / 4.0).abs() < 1e-12);
+    }
+}
+
+#[test]
+fn star_graph_extreme_skew() {
+    // One hub pointed at by everyone: worst-case degree skew for the
+    // cost-based load balancer.
+    let n = 5000;
+    let edges: Vec<(u32, u32)> = (1..n as u32).map(|v| (v, 0)).collect();
+    let g = Csr::from_edges(n, &edges);
+    let cfg = SystemConfig {
+        llc_bytes: 8 * 1024,
+        ..Default::default()
+    };
+    let want = pagerank::reference(&g, cfg.damping, 3);
+    for &v in pagerank::Variant::all() {
+        let got = pagerank::run(&g, &cfg, v, 3);
+        for (i, (a, b)) in got.values.iter().zip(&want).enumerate() {
+            assert!((a - b).abs() < 1e-9, "{} v={i}", v.name());
+        }
+    }
+}
+
+#[test]
+fn corrupt_binary_edge_list_rejected() {
+    let dir = std::env::temp_dir().join(format!("cagra-fi-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    // Out-of-range vertex id in the payload.
+    let p = dir.join("bad.bin");
+    let mut bytes = Vec::new();
+    bytes.extend_from_slice(b"CAGRAEL1");
+    bytes.extend_from_slice(&2u64.to_le_bytes()); // n = 2
+    bytes.extend_from_slice(&1u64.to_le_bytes()); // m = 1
+    bytes.extend_from_slice(&9u32.to_le_bytes()); // src 9 >= n
+    bytes.extend_from_slice(&0u32.to_le_bytes());
+    std::fs::write(&p, bytes).unwrap();
+    assert!(edgelist::read_binary(&p).is_err());
+    // Truncated file.
+    let p2 = dir.join("trunc.bin");
+    std::fs::write(&p2, b"CAGRAEL1\x01").unwrap();
+    assert!(edgelist::read_binary(&p2).is_err());
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn unknown_dataset_job_fails_cleanly() {
+    let spec = JobSpec {
+        dataset: "not-a-dataset".into(),
+        app: AppKind::PageRank(pagerank::Variant::Baseline),
+        iters: 1,
+        num_sources: 1,
+        analyze_memory: false,
+        scale: 1.0,
+    };
+    let err = run_job(&spec, &SystemConfig::default()).unwrap_err();
+    assert!(format!("{err:#}").contains("unknown dataset"));
+}
+
+#[test]
+fn hostile_segment_sizes() {
+    let (n, e) = cagra::graph::generators::rmat(
+        8,
+        4,
+        cagra::graph::generators::RmatParams::graph500(),
+        77,
+    );
+    let g = Csr::from_edges(n, &e);
+    let want = pagerank::reference(&g, 0.85, 2);
+    // seg_size = 1 (one segment per vertex) and gigantic both work.
+    for seg in [1usize, 3, n, n * 10] {
+        let sg = SegmentedCsr::build(&g, seg);
+        let mut bufs = SegmentBuffers::for_graph(&sg);
+        let inv: Vec<f64> = (0..n)
+            .map(|v| {
+                let d = g.degree(v as u32);
+                if d == 0 {
+                    0.0
+                } else {
+                    1.0 / d as f64
+                }
+            })
+            .collect();
+        let mut rank = vec![1.0 / n as f64; n];
+        let mut out = vec![0.0; n];
+        for _ in 0..2 {
+            let contrib: Vec<f64> = rank.iter().zip(&inv).map(|(r, i)| r * i).collect();
+            sg.aggregate(|u| contrib[u as usize], &mut bufs, 0.0, &mut out);
+            for v in 0..n {
+                out[v] = 0.15 / n as f64 + 0.85 * out[v];
+            }
+            std::mem::swap(&mut rank, &mut out);
+        }
+        for (i, (a, b)) in rank.iter().zip(&want).enumerate() {
+            assert!((a - b).abs() < 1e-9, "seg={seg} v={i}: {a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn zero_iterations_is_identity() {
+    let g = Csr::from_edges(3, &[(0, 1), (1, 2)]);
+    let cfg = SystemConfig::default();
+    let r = pagerank::run(&g, &cfg, pagerank::Variant::Baseline, 0);
+    for v in r.values {
+        assert!((v - 1.0 / 3.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,108 @@
+//! End-to-end coordinator pipeline tests over real (scaled) datasets:
+//! load → preprocess → run → metrics, for every app and dataset family.
+
+use cagra::apps::{bfs, cf, pagerank};
+use cagra::coordinator::{run_job, AppKind, JobSpec, SystemConfig};
+
+const SCALE: f64 = 1.0 / 64.0;
+
+fn spec(dataset: &str, app: AppKind, iters: usize) -> JobSpec {
+    JobSpec {
+        dataset: dataset.to_string(),
+        app,
+        iters,
+        num_sources: 2,
+        analyze_memory: false,
+        scale: SCALE,
+    }
+}
+
+#[test]
+fn pagerank_all_variants_on_all_graph_datasets() {
+    let cfg = SystemConfig {
+        llc_bytes: 32 * 1024, // scaled so small graphs still segment
+        ..Default::default()
+    };
+    for ds in cagra::graph::datasets::GRAPH_DATASETS {
+        for &v in pagerank::Variant::all() {
+            let r = run_job(&spec(ds, AppKind::PageRank(v), 3), &cfg)
+                .unwrap_or_else(|e| panic!("{ds}/{}: {e:#}", v.name()));
+            assert_eq!(r.metrics.iter_seconds.len(), 3, "{ds}/{}", v.name());
+            assert!(r.metrics.edges > 0);
+        }
+    }
+}
+
+#[test]
+fn cf_on_netflix_family() {
+    let cfg = SystemConfig::default();
+    for ds in ["netflix-sim"] {
+        for v in [cf::Variant::Baseline, cf::Variant::Segmented] {
+            let r = run_job(&spec(ds, AppKind::Cf(v), 2), &cfg).unwrap();
+            assert!(r.summary.is_finite() && r.summary > 0.0, "rmse {}", r.summary);
+        }
+    }
+}
+
+#[test]
+fn frontier_apps_run() {
+    let cfg = SystemConfig::default();
+    for app in [
+        AppKind::Bfs(bfs::Variant::ReorderedBitvector),
+        AppKind::Bc(bfs::Variant::Baseline),
+    ] {
+        let r = run_job(&spec("livejournal-sim", app, 1), &cfg).unwrap();
+        assert!(r.summary > 0.0);
+    }
+}
+
+#[test]
+fn memory_analysis_attaches_stalls() {
+    let cfg = SystemConfig {
+        llc_bytes: 32 * 1024,
+        ..Default::default()
+    };
+    let mut s = spec(
+        "rmat27-sim",
+        AppKind::PageRank(pagerank::Variant::Baseline),
+        1,
+    );
+    s.analyze_memory = true;
+    let r = run_job(&s, &cfg).unwrap();
+    let stalls = r.metrics.stalls.expect("stall estimate attached");
+    assert!(stalls.accesses > 0);
+    assert!(stalls.llc_miss_rate > 0.0);
+}
+
+#[test]
+fn segmented_beats_baseline_on_simulated_stalls() {
+    // The paper's central claim, via the simulator, on a scaled dataset
+    // with working set >> effective LLC.
+    let cfg = SystemConfig {
+        llc_bytes: 16 * 1024,
+        ..Default::default()
+    };
+    let ds = cagra::graph::datasets::load_scaled("rmat27-sim", SCALE).unwrap();
+    let base = cagra::coordinator::job::simulate_pagerank(
+        &ds.graph,
+        &cfg,
+        pagerank::Variant::Baseline,
+    );
+    let seg = cagra::coordinator::job::simulate_pagerank(
+        &ds.graph,
+        &cfg,
+        pagerank::Variant::ReorderedSegmented,
+    );
+    assert!(
+        seg.stall_cycles < base.stall_cycles,
+        "seg {} !< base {}",
+        seg.stall_cycles,
+        base.stall_cycles
+    );
+    // Note: total LLC miss *rate* need not drop — segmenting converts
+    // expensive random misses into cheap sequential (prefetched) misses;
+    // the cost per miss is what falls. Stall cycles capture that. The
+    // random-read miss-rate drop itself is asserted in cache::stall's
+    // unit tests with an L1/L2-scaled hierarchy.
+    assert!(seg.stalls_per_access() < base.stalls_per_access());
+}

@@ -1,0 +1,132 @@
+//! Cross-layer integration: the L1/L2 AOT artifacts executed from the L3
+//! runtime must agree with the native Rust engine on the same graph.
+//!
+//! Requires `make artifacts` (skips with a message when absent so plain
+//! `cargo test` before the artifact build doesn't fail spuriously).
+
+use cagra::coordinator::SystemConfig;
+use cagra::graph::{generators, Csr, VertexId};
+use cagra::runtime::Runtime;
+
+fn runtime_or_skip() -> Option<Runtime> {
+    match Runtime::from_env() {
+        Ok(rt) if !rt.available().is_empty() => Some(rt),
+        _ => {
+            eprintln!("skipping PJRT integration test: no artifacts (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+/// Dense f32 adjacency a[v*n + u] = 1.0 iff edge u→v, plus inv out-degree.
+fn densify(g: &Csr) -> (Vec<f32>, Vec<f32>) {
+    let n = g.num_vertices();
+    let mut a = vec![0.0f32; n * n];
+    for (u, v) in g.edges() {
+        a[v as usize * n + u as usize] = 1.0;
+    }
+    let inv: Vec<f32> = (0..n)
+        .map(|u| {
+            let d = g.degree(u as VertexId);
+            if d == 0 {
+                0.0
+            } else {
+                1.0 / d as f32
+            }
+        })
+        .collect();
+    (a, inv)
+}
+
+#[test]
+fn pjrt_pagerank_matches_native_engine() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let exe = rt.load("pagerank_step").expect("loading pagerank_step");
+    let n = exe.meta.param_usize("n").unwrap();
+    // Graph sized exactly to the artifact's static shape; CsrBuilder
+    // dedups so the dense adjacency is 0/1.
+    let (_, edges) = generators::rmat(n.trailing_zeros(), 8, generators::RmatParams::graph500(), 123);
+    let mut b = cagra::graph::CsrBuilder::new(n);
+    b.extend(edges);
+    let g = b.build();
+    let (a, inv) = densify(&g);
+    let mut rank: Vec<f32> = vec![1.0 / n as f32; n];
+    let iters = 5;
+    for _ in 0..iters {
+        let out = exe
+            .run_f32(&[(&a, &[n, n]), (&rank, &[n]), (&inv, &[n])])
+            .expect("executing pagerank_step");
+        rank = out[0].clone();
+    }
+    // Native engine, f64, same damping (0.85 is baked into the artifact).
+    let cfg = SystemConfig::default();
+    let native = cagra::apps::pagerank::run(
+        &g,
+        &cfg,
+        cagra::apps::pagerank::Variant::ReorderedSegmented,
+        iters,
+    );
+    let mut max_rel = 0.0f64;
+    for v in 0..n {
+        let x = rank[v] as f64;
+        let y = native.values[v];
+        let rel = (x - y).abs() / y.abs().max(1e-9);
+        max_rel = max_rel.max(rel);
+    }
+    assert!(
+        max_rel < 1e-3,
+        "PJRT vs native diverged: max rel err {max_rel}"
+    );
+}
+
+#[test]
+fn pjrt_cf_step_descends() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let exe = rt.load("cf_step").expect("loading cf_step");
+    let nu = exe.meta.param_usize("nu").unwrap();
+    let ni = exe.meta.param_usize("ni").unwrap();
+    let k = exe.meta.param_usize("k").unwrap();
+    let mut rng = cagra::util::rng::Rng::new(9);
+    let mut u: Vec<f32> = (0..nu * k).map(|_| rng.next_f32() * 0.2).collect();
+    let mut v: Vec<f32> = (0..ni * k).map(|_| rng.next_f32() * 0.2).collect();
+    let mut r = vec![0.0f32; nu * ni];
+    let mut mask = vec![0.0f32; nu * ni];
+    for e in 0..nu * 4 {
+        let uu = e % nu;
+        let ii = rng.next_below(ni as u64) as usize;
+        r[uu * ni + ii] = 1.0 + (rng.next_below(5)) as f32;
+        mask[uu * ni + ii] = 1.0;
+    }
+    let mut sses = Vec::new();
+    for _ in 0..8 {
+        let out = exe
+            .run_f32(&[
+                (&u, &[nu, k]),
+                (&v, &[ni, k]),
+                (&r, &[nu, ni]),
+                (&mask, &[nu, ni]),
+            ])
+            .expect("executing cf_step");
+        u = out[0].clone();
+        v = out[1].clone();
+        sses.push(out[2][0]);
+    }
+    assert!(
+        sses.last().unwrap() < sses.first().unwrap(),
+        "loss did not descend: {sses:?}"
+    );
+    assert!(sses.iter().all(|s| s.is_finite()));
+}
+
+#[test]
+fn artifact_metadata_consistent_with_execution() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let names: Vec<String> = rt.available().iter().map(|s| s.to_string()).collect();
+    assert!(names.contains(&"pagerank_step".to_string()));
+    assert!(names.contains(&"cf_step".to_string()));
+    for name in names {
+        let exe = rt.load(&name).unwrap();
+        assert!(!exe.meta.inputs.is_empty(), "{name} missing input shapes");
+        assert!(!exe.meta.outputs.is_empty(), "{name} missing output shapes");
+    }
+}
