@@ -34,7 +34,7 @@ fn main() {
         let est = if v == Variant::NoRandomLowerBound {
             let big = cagra::coordinator::SystemConfig {
                 llc_bytes: 1 << 30,
-                ..cfg
+                ..cfg.clone()
             };
             simulate_pagerank(g, &big, Variant::Baseline)
         } else {

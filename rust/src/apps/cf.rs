@@ -21,6 +21,7 @@ use crate::coordinator::SystemConfig;
 use crate::graph::{Csr, VertexId};
 use crate::parallel::{parallel_for, parallel_for_cost, UnsafeSlice};
 use crate::segment::SegmentedCsr;
+use crate::store::{StoreCtx, StoreKey};
 use crate::util::rng::Rng;
 
 /// Deterministic synthetic rating for edge (u, i) in 1..=5.
@@ -89,6 +90,18 @@ pub struct Prepared {
 
 impl Prepared {
     pub fn new(g: &Csr, cfg: &SystemConfig, variant: Variant) -> Prepared {
+        Self::new_cached(g, cfg, variant, None)
+    }
+
+    /// Like [`Prepared::new`], but the two segmented partitions (the CF
+    /// preprocessing cost) go through the persistent artifact store when
+    /// `store` is present.
+    pub fn new_cached(
+        g: &Csr,
+        cfg: &SystemConfig,
+        variant: Variant,
+        store: Option<StoreCtx<'_>>,
+    ) -> Prepared {
         let n = g.num_vertices();
         let k = cfg.cf_k;
         assert!(k <= 64, "cf_k > 64 unsupported (segment-local stack buffer)");
@@ -102,17 +115,19 @@ impl Prepared {
             let elem = 8 * k;
             let seg_size = cfg.segment_size(elem);
             let block = cfg.merge_block(elem);
+            let seg_for = |pull: &Csr, label: &str| -> SegmentedCsr {
+                let build = || SegmentedCsr::build_with_block(&pull.transpose(), seg_size, block);
+                match store {
+                    Some(c) => c.get_or_build(
+                        StoreKey::segmented(c.fingerprint, label, seg_size, block),
+                        build,
+                    ),
+                    None => build(),
+                }
+            };
             (
-                Some(SegmentedCsr::build_with_block(
-                    &user_pull.transpose(),
-                    seg_size,
-                    block,
-                )),
-                Some(SegmentedCsr::build_with_block(
-                    &item_pull.transpose(),
-                    seg_size,
-                    block,
-                )),
+                Some(seg_for(&user_pull, "cf-user")),
+                Some(seg_for(&item_pull, "cf-item")),
             )
         } else {
             (None, None)

@@ -11,7 +11,7 @@
 use crate::util::config::Config;
 
 /// Machine + technique parameters.
-#[derive(Debug, Clone, Copy, PartialEq)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct SystemConfig {
     /// Effective last-level cache for segment sizing (bytes).
     pub llc_bytes: usize,
@@ -28,6 +28,20 @@ pub struct SystemConfig {
     pub cf_k: usize,
     /// CF gradient-descent step.
     pub cf_lr: f64,
+    /// Seed for [`crate::reorder::Ordering::Random`] permutations.
+    /// Defaults to the historical constant so sweeps stay reproducible.
+    pub random_seed: u64,
+    /// Persist preprocessing artifacts (permutations, relabeled CSRs,
+    /// segmented partitions) across runs.
+    pub store_enabled: bool,
+    /// Artifact store directory.
+    pub store_dir: String,
+    /// Artifact store size cap in bytes (0 = unlimited); oldest artifacts
+    /// are evicted first. Must comfortably exceed one job's artifact set
+    /// (permutation + relabeled CSR + segmented partition ≈ 2–3x the CSR
+    /// size) or the store evicts its own freshly-written files and warm
+    /// runs keep rebuilding.
+    pub store_cap_bytes: u64,
 }
 
 impl Default for SystemConfig {
@@ -40,6 +54,10 @@ impl Default for SystemConfig {
             coarsen: 10,
             cf_k: 8,
             cf_lr: 1e-3,
+            random_seed: crate::reorder::DEFAULT_RANDOM_SEED,
+            store_enabled: false,
+            store_dir: "target/artifact-store".to_string(),
+            store_cap_bytes: 8 * 1024 * 1024 * 1024,
         }
     }
 }
@@ -56,6 +74,10 @@ impl SystemConfig {
             coarsen: cfg.get_usize("system.coarsen", d.coarsen as usize)? as u32,
             cf_k: cfg.get_usize("system.cf_k", d.cf_k)?,
             cf_lr: cfg.get_f64("system.cf_lr", d.cf_lr)?,
+            random_seed: cfg.get_u64("system.random_seed", d.random_seed)?,
+            store_enabled: cfg.get_bool("system.store_enabled", d.store_enabled)?,
+            store_dir: cfg.get_str("system.store_dir", &d.store_dir).to_string(),
+            store_cap_bytes: cfg.get_u64("system.store_cap_bytes", d.store_cap_bytes)?,
         })
     }
 
@@ -91,5 +113,22 @@ mod tests {
         assert_eq!(c.llc_bytes, 1 << 20);
         assert_eq!(c.damping, 0.9);
         assert_eq!(c.l1_bytes, SystemConfig::default().l1_bytes);
+    }
+
+    #[test]
+    fn store_and_seed_overrides() {
+        let d = SystemConfig::default();
+        assert!(!d.store_enabled);
+        assert_eq!(d.random_seed, crate::reorder::DEFAULT_RANDOM_SEED);
+        let cfg = Config::parse(
+            "[system]\nstore_enabled = true\nstore_dir = /tmp/arts\n\
+             store_cap_bytes = 1024\nrandom_seed = 99\n",
+        )
+        .unwrap();
+        let c = SystemConfig::from_config(&cfg).unwrap();
+        assert!(c.store_enabled);
+        assert_eq!(c.store_dir, "/tmp/arts");
+        assert_eq!(c.store_cap_bytes, 1024);
+        assert_eq!(c.random_seed, 99);
     }
 }

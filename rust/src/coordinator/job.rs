@@ -7,6 +7,7 @@ use super::metrics::Metrics;
 use crate::apps::{bc, bfs, cf, pagerank};
 use crate::cache;
 use crate::graph::datasets::{self, Dataset};
+use crate::store::{fingerprint, ArtifactStore, StoreCtx};
 use crate::util::timer::time;
 use anyhow::{bail, Result};
 
@@ -99,25 +100,57 @@ pub fn run_job(spec: &JobSpec, cfg: &SystemConfig) -> Result<JobResult> {
     metrics.phases.add("load", load_s);
     metrics.edges = ds.graph.num_edges() as u64;
     let g = &ds.graph;
+    // Persistent preprocessing-artifact store: cold runs build + persist,
+    // warm runs read back. Open failures degrade to uncached operation —
+    // the store must never take a job down. Only variants that actually
+    // preprocess (reorder and/or segment) go through the store; skip the
+    // open + fingerprint entirely otherwise so --store adds no overhead
+    // (and no misleading 0-hit stats) to baselines and frontier apps.
+    let app_uses_store = match spec.app {
+        AppKind::PageRank(v) => !matches!(
+            v,
+            pagerank::Variant::Baseline | pagerank::Variant::NoRandomLowerBound
+        ),
+        AppKind::Cf(v) => v == cf::Variant::Segmented,
+        AppKind::Bc(_) | AppKind::Bfs(_) => false,
+    };
+    let store = if cfg.store_enabled && app_uses_store {
+        match ArtifactStore::open(&cfg.store_dir, cfg.store_cap_bytes) {
+            Ok(s) => Some(s),
+            Err(e) => {
+                crate::log_warn!("artifact store disabled for this job: {e:#}");
+                None
+            }
+        }
+    } else {
+        None
+    };
+    let ctx = match &store {
+        Some(s) => {
+            let (fp, fp_s) = time(|| fingerprint::fingerprint_dataset(&spec.dataset, spec.scale, g));
+            metrics.phases.add("fingerprint", fp_s);
+            Some(StoreCtx::new(s, fp))
+        }
+        None => None,
+    };
     let summary = match spec.app {
         AppKind::PageRank(variant) => {
-            let (mut prep, prep_s) = time(|| pagerank::Prepared::new(g, cfg, variant));
+            let (mut prep, prep_s) = time(|| pagerank::Prepared::new_cached(g, cfg, variant, ctx));
             metrics.phases.add("preprocess", prep_s);
             prep.reset();
             for _ in 0..spec.iters {
                 let (_, s) = time(|| prep.step());
                 metrics.iter_seconds.push(s);
             }
-            let result = prep.run(0); // ranks already computed; map back
             if spec.analyze_memory {
                 metrics.stalls = Some(simulate_pagerank(g, cfg, variant));
             }
-            // Re-run to get actual values (prep.run resets); cheaper: sum.
-            let _ = result;
-            1.0
+            // Rank L1 mass in original id space — a deterministic smoke
+            // value (warm and cold runs must agree bitwise).
+            prep.values().iter().sum::<f64>()
         }
         AppKind::Cf(variant) => {
-            let (mut prep, prep_s) = time(|| cf::Prepared::new(g, cfg, variant));
+            let (mut prep, prep_s) = time(|| cf::Prepared::new_cached(g, cfg, variant, ctx));
             metrics.phases.add("preprocess", prep_s);
             for _ in 0..spec.iters {
                 let (_, s) = time(|| prep.step());
@@ -146,6 +179,7 @@ pub fn run_job(spec: &JobSpec, cfg: &SystemConfig) -> Result<JobResult> {
             reached as f64
         }
     };
+    metrics.store = store.as_ref().map(|s| s.stats());
     Ok(JobResult { metrics, summary })
 }
 

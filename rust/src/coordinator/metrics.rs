@@ -2,6 +2,7 @@
 //! that substitute for the paper's PMU counters (DESIGN.md §3).
 
 use crate::cache::{StallEstimate};
+use crate::store::StoreStats;
 use crate::util::timer::PhaseTimer;
 
 /// Everything a job run reports.
@@ -15,6 +16,8 @@ pub struct Metrics {
     pub stalls: Option<StallEstimate>,
     /// Edges processed per iteration.
     pub edges: u64,
+    /// Artifact-store snapshot, when the job ran with the store enabled.
+    pub store: Option<StoreStats>,
 }
 
 impl Metrics {
@@ -52,6 +55,16 @@ impl Metrics {
                 s.llc_miss_rate * 100.0
             ));
         }
+        if let Some(s) = &self.store {
+            out.push_str(&format!(
+                "artifact store: {} hits, {} misses, {} evictions; {} entries ({})\n",
+                s.hits,
+                s.misses,
+                s.evictions,
+                s.entries,
+                crate::util::fmt_bytes(s.resident_bytes as usize)
+            ));
+        }
         for (name, secs, share) in self.phases.report() {
             out.push_str(&format!("  {name:<24} {secs:>9.4}s  {:>5.1}%\n", share * 100.0));
         }
@@ -82,5 +95,12 @@ mod tests {
         m.edges = 10;
         let r = m.render();
         assert!(r.contains("preprocess"));
+        assert!(!r.contains("artifact store"));
+        m.store = Some(crate::store::StoreStats {
+            hits: 3,
+            misses: 1,
+            ..Default::default()
+        });
+        assert!(m.render().contains("3 hits, 1 misses"));
     }
 }

@@ -14,7 +14,10 @@
 //! ## Layering
 //!
 //! - **L3 (this crate)** — coordination: preprocessing, segment-at-a-time
-//!   scheduling, cache-aware merge, thread pool, metrics, CLI.
+//!   scheduling, cache-aware merge, thread pool, metrics, CLI. The
+//!   [`store`] subsystem persists preprocessing outputs (permutations,
+//!   relabeled CSRs, segmented partitions) in a fingerprint-keyed on-disk
+//!   cache so their cost is amortized across runs (paper Table 9).
 //! - **L2 (python/compile/model.py)** — PageRank / Collaborative-Filtering
 //!   steps over dense segment tiles, lowered once to HLO text.
 //! - **L1 (python/compile/kernels/)** — Pallas tile kernels
@@ -28,6 +31,7 @@ pub mod parallel;
 pub mod graph;
 pub mod reorder;
 pub mod segment;
+pub mod store;
 pub mod cache;
 pub mod engine;
 pub mod apps;

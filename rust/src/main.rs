@@ -3,10 +3,12 @@
 //!
 //! ```text
 //! cagra run     --app pagerank --variant both --graph twitter-sim --iters 20
+//! cagra run     --app pagerank --graph twitter-sim --store   # persist preprocessing
 //! cagra gen     --graph rmat27-sim --out graph.bin
 //! cagra inspect --graph twitter-sim
 //! cagra simulate --graph twitter-sim --llc 524288
 //! cagra expansion --graph twitter-sim
+//! cagra cache stats / cagra cache clear
 //! cagra artifacts
 //! ```
 
@@ -14,10 +16,12 @@ use cagra::coordinator::{run_job, AppKind, JobSpec, SystemConfig};
 use cagra::graph::datasets;
 use cagra::reorder;
 use cagra::segment;
+use cagra::store::ArtifactStore;
 use cagra::util::cli::Args;
 use cagra::util::{config::Config, fmt_bytes, fmt_count};
 
-const SUBCOMMANDS: &[&str] = &["run", "gen", "inspect", "simulate", "expansion", "artifacts", "help"];
+const SUBCOMMANDS: &[&str] =
+    &["run", "gen", "inspect", "simulate", "expansion", "cache", "artifacts", "help"];
 
 fn main() {
     let args = Args::from_env(SUBCOMMANDS);
@@ -27,6 +31,7 @@ fn main() {
         Some("inspect") => cmd_inspect(&args),
         Some("simulate") => cmd_simulate(&args),
         Some("expansion") => cmd_expansion(&args),
+        Some("cache") => cmd_cache(&args),
         Some("artifacts") => cmd_artifacts(),
         _ => {
             usage();
@@ -46,10 +51,12 @@ fn usage() {
          subcommands:\n\
          \x20 run        run an application       --app pagerank|cf|bc|bfs --variant baseline|reorder|segment|both|bitvector\n\
          \x20            --graph <dataset> --iters N [--sources N] [--analyze] [--scale F] [--config FILE]\n\
+         \x20            [--store] [--store-dir DIR] [--store-cap BYTES]   persist preprocessing artifacts\n\
          \x20 gen        generate + cache a dataset  --graph <dataset> [--out file.bin] [--scale F]\n\
          \x20 inspect    dataset statistics          --graph <dataset>\n\
          \x20 simulate   memory-system simulation    --graph <dataset> [--llc BYTES]\n\
-         \x20 expansion  expansion-factor sweep      --graph <dataset>\n\
+         \x20 expansion  expansion-factor sweep      --graph <dataset> [--random-seed N]\n\
+         \x20 cache      artifact store tools        stats (default) | clear  [--store-dir DIR]\n\
          \x20 artifacts  list PJRT artifacts and check they compile\n\
          \n\
          datasets: {}",
@@ -64,6 +71,19 @@ fn system_config(args: &Args) -> anyhow::Result<SystemConfig> {
     };
     if let Some(llc) = args.get("llc") {
         cfg.llc_bytes = llc.parse()?;
+    }
+    if args.has_flag("store") {
+        cfg.store_enabled = true;
+    }
+    if let Some(dir) = args.get("store-dir") {
+        cfg.store_dir = dir.to_string();
+        cfg.store_enabled = true;
+    }
+    if let Some(cap) = args.get("store-cap") {
+        cfg.store_cap_bytes = cap.parse()?;
+    }
+    if let Some(seed) = args.get("random-seed") {
+        cfg.random_seed = seed.parse()?;
     }
     Ok(cfg)
 }
@@ -152,6 +172,7 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_expansion(args: &Args) -> anyhow::Result<()> {
+    let cfg = system_config(args)?;
     let name = args.get_or("graph", "twitter-sim");
     let ds = datasets::load_scaled(name, args.get_f64("scale", 1.0))?;
     let g = &ds.graph;
@@ -160,11 +181,53 @@ fn cmd_expansion(args: &Args) -> anyhow::Result<()> {
     for (order_name, graph) in [
         ("original", g.clone()),
         ("degree-sorted", reorder::reorder(g, reorder::Ordering::DegreeSort).0),
-        ("random", reorder::reorder(g, reorder::Ordering::Random).0),
+        (
+            "random",
+            reorder::reorder_seeded(g, reorder::Ordering::Random, cfg.random_seed).0,
+        ),
     ] {
         let sweep = segment::expansion::expansion_sweep(&graph, &counts);
         let row: Vec<String> = sweep.iter().map(|(k, q)| format!("{k}:{q:.2}")).collect();
         println!("  {order_name:<14} {}", row.join("  "));
+    }
+    Ok(())
+}
+
+fn cmd_cache(args: &Args) -> anyhow::Result<()> {
+    let cfg = system_config(args)?;
+    // Inspection only: never create the directory or sweep temp files —
+    // a typo'd --store-dir must not plant an empty store there.
+    let store = match ArtifactStore::open_existing(&cfg.store_dir, cfg.store_cap_bytes) {
+        Ok(s) => s,
+        Err(_) => {
+            println!(
+                "no artifact store at {} (nothing has been cached yet — run with --store)",
+                cfg.store_dir
+            );
+            return Ok(());
+        }
+    };
+    match args.positional.first().map(String::as_str) {
+        Some("clear") => {
+            let (removed, freed) = store.clear()?;
+            println!(
+                "cleared {removed} artifacts ({}) from {}",
+                fmt_bytes(freed as usize),
+                store.dir().display()
+            );
+        }
+        Some("stats") | None => {
+            let s = store.stats();
+            println!("artifact store at {}", store.dir().display());
+            println!("  entries:  {}", s.entries);
+            let cap = if s.cap_bytes == 0 {
+                "unlimited".to_string()
+            } else {
+                fmt_bytes(s.cap_bytes as usize)
+            };
+            println!("  resident: {} (cap {cap})", fmt_bytes(s.resident_bytes as usize));
+        }
+        Some(other) => anyhow::bail!("unknown cache action {other:?} (expected stats|clear)"),
     }
     Ok(())
 }

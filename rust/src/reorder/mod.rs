@@ -58,13 +58,24 @@ impl Ordering {
     }
 }
 
-/// Compute the permutation (`perm[old] = new`) for an ordering over `g`.
+/// Historical seed for [`Ordering::Random`]; configurable via
+/// `SystemConfig::random_seed` (the default keeps sweeps reproducible).
+pub const DEFAULT_RANDOM_SEED: u64 = 0xD1CE;
+
+/// Compute the permutation (`perm[old] = new`) for an ordering over `g`,
+/// using [`DEFAULT_RANDOM_SEED`] for the random ordering.
 pub fn permutation(g: &Csr, ordering: Ordering) -> Vec<VertexId> {
+    permutation_seeded(g, ordering, DEFAULT_RANDOM_SEED)
+}
+
+/// [`permutation`] with an explicit seed for [`Ordering::Random`] (the
+/// other orderings are deterministic and ignore it).
+pub fn permutation_seeded(g: &Csr, ordering: Ordering, random_seed: u64) -> Vec<VertexId> {
     match ordering {
         Ordering::Identity => (0..g.num_vertices() as VertexId).collect(),
         Ordering::DegreeSort => degree_sort_perm(g, 1),
         Ordering::CoarseDegreeSort => degree_sort_perm(g, 10),
-        Ordering::Random => Rng::new(0xD1CE).permutation(g.num_vertices()),
+        Ordering::Random => Rng::new(random_seed).permutation(g.num_vertices()),
         Ordering::Bfs => bfs_order(g),
     }
 }
@@ -72,7 +83,12 @@ pub fn permutation(g: &Csr, ordering: Ordering) -> Vec<VertexId> {
 /// Reorder a graph: returns the relabeled CSR and the permutation used
 /// (`perm[old] = new`), so callers can map results back to original ids.
 pub fn reorder(g: &Csr, ordering: Ordering) -> (Csr, Vec<VertexId>) {
-    let perm = permutation(g, ordering);
+    reorder_seeded(g, ordering, DEFAULT_RANDOM_SEED)
+}
+
+/// [`reorder`] with an explicit seed for [`Ordering::Random`].
+pub fn reorder_seeded(g: &Csr, ordering: Ordering, random_seed: u64) -> (Csr, Vec<VertexId>) {
+    let perm = permutation_seeded(g, ordering, random_seed);
     if matches!(ordering, Ordering::Identity) {
         return (g.clone(), perm);
     }
@@ -206,6 +222,36 @@ mod tests {
                 assert_eq!(sorted, (0..n as VertexId).collect::<Vec<_>>(), "{}", o.name());
             }
         });
+    }
+
+    #[test]
+    fn random_seed_is_configurable_and_default_preserved() {
+        let g = skewed();
+        // Default-seed path is unchanged from the historical constant.
+        assert_eq!(
+            permutation(&g, Ordering::Random),
+            permutation_seeded(&g, Ordering::Random, DEFAULT_RANDOM_SEED)
+        );
+        // Same seed reproduces; different seeds diverge.
+        assert_eq!(
+            permutation_seeded(&g, Ordering::Random, 42),
+            permutation_seeded(&g, Ordering::Random, 42)
+        );
+        assert_ne!(
+            permutation_seeded(&g, Ordering::Random, 42),
+            permutation_seeded(&g, Ordering::Random, 43)
+        );
+        // Deterministic orderings ignore the seed.
+        assert_eq!(
+            permutation_seeded(&g, Ordering::DegreeSort, 1),
+            permutation_seeded(&g, Ordering::DegreeSort, 2)
+        );
+        // Seeded variants still produce valid permutations.
+        let (h, p) = reorder_seeded(&g, Ordering::Random, 7);
+        assert_eq!(h.num_edges(), g.num_edges());
+        let mut sorted = p.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..g.num_vertices() as VertexId).collect::<Vec<_>>());
     }
 
     #[test]

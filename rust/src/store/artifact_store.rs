@@ -1,0 +1,535 @@
+//! The persistent artifact store: content-addressed files + LRU eviction.
+//!
+//! One artifact per file under the store directory, named by the full
+//! cache key so lookups are a single `stat`:
+//!
+//! ```text
+//! <fingerprint:016x>-<kind>-<label>-s<seg_size>-b<merge_block>.v<codec>.art
+//! ```
+//!
+//! Policy decisions (mirroring the `GraphCache` exemplar's shape — key by
+//! content hash, `get_or_build` entry point, stats + clear — adapted to a
+//! flat-file store):
+//!
+//! - **Failures degrade to rebuild, never to job failure.** A missing,
+//!   truncated, bit-flipped, or version-skewed file is treated as a miss
+//!   (and deleted); a failed write is logged and skipped. The only hard
+//!   error is an unusable store directory at [`ArtifactStore::open`].
+//! - **LRU by file mtime.** Hits re-touch the file; when the store grows
+//!   past `cap_bytes` after a write, oldest-mtime artifacts are removed
+//!   first. Artifacts written by *this* process are never evicted by it —
+//!   otherwise a cap smaller than one job's artifact set would make the
+//!   job's second write evict its first and thrash forever; instead the
+//!   store warns that the cap is below the working set. `cap_bytes == 0`
+//!   disables eviction.
+//! - **Atomic writes.** Encode to a temp file, then rename, so a crashed
+//!   run can never leave a torn artifact under a valid name (a torn temp
+//!   file is ignored by the `.art` suffix filter; stale ones are swept at
+//!   open, age-gated so a live writer's in-flight file is never unlinked).
+
+use super::codec::{self, Artifact, CODEC_VERSION};
+use anyhow::{Context, Result};
+use std::collections::HashSet;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, SystemTime};
+
+/// Extension of committed artifact files.
+pub const ARTIFACT_EXT: &str = "art";
+
+/// Full cache key for one preprocessing artifact. The artifact *type*
+/// (permutation / CSR / segmented) is contributed by
+/// [`Artifact::NAME`] at filename time, so one key can address the
+/// permutation and the relabeled CSR of the same ordering.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StoreKey {
+    /// Dataset fingerprint ([`super::fingerprint::fingerprint_dataset`]).
+    pub fingerprint: u64,
+    /// Free-form discriminator: ordering name, or an app-specific label
+    /// like `cf-user`.
+    pub label: String,
+    /// Segment size in vertices (0 for non-segmented artifacts).
+    pub seg_size: usize,
+    /// Merge block size in vertices (0 for non-segmented artifacts).
+    pub merge_block: usize,
+}
+
+impl StoreKey {
+    /// Key for ordering-level artifacts (permutation, relabeled CSR).
+    pub fn ordering(fingerprint: u64, ordering: &str) -> StoreKey {
+        StoreKey {
+            fingerprint,
+            label: ordering.to_string(),
+            seg_size: 0,
+            merge_block: 0,
+        }
+    }
+
+    /// Key for a segmented partition.
+    pub fn segmented(fingerprint: u64, label: &str, seg_size: usize, merge_block: usize) -> StoreKey {
+        StoreKey {
+            fingerprint,
+            label: label.to_string(),
+            seg_size,
+            merge_block,
+        }
+    }
+
+    /// Store filename for this key holding an artifact of type `T`.
+    pub fn filename<T: Artifact>(&self) -> String {
+        // Labels come from ordering names / app constants; sanitize anyway
+        // so a config-provided label can never traverse paths.
+        let label: String = self
+            .label
+            .chars()
+            .map(|c| if c.is_ascii_alphanumeric() || c == '-' || c == '_' { c } else { '-' })
+            .collect();
+        format!(
+            "{:016x}-{}-{}-s{}-b{}.v{}.{ARTIFACT_EXT}",
+            self.fingerprint,
+            T::NAME,
+            label,
+            self.seg_size,
+            self.merge_block,
+            CODEC_VERSION,
+        )
+    }
+}
+
+/// Snapshot of store counters + on-disk occupancy.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StoreStats {
+    /// Artifacts served from disk this process.
+    pub hits: u64,
+    /// Artifacts built (absent or unreadable) this process.
+    pub misses: u64,
+    /// Files removed by capacity eviction this process.
+    pub evictions: u64,
+    pub bytes_read: u64,
+    pub bytes_written: u64,
+    /// Current committed artifacts on disk.
+    pub entries: u64,
+    /// Their total size.
+    pub resident_bytes: u64,
+    pub cap_bytes: u64,
+}
+
+#[derive(Debug, Default)]
+struct Counters {
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+    bytes_read: AtomicU64,
+    bytes_written: AtomicU64,
+}
+
+/// How old a temp file must be before the open-time sweep may remove it
+/// (a concurrent writer's in-flight temp is younger than this).
+const TMP_SWEEP_AGE: Duration = Duration::from_secs(3600);
+
+/// A persistent, size-capped store of preprocessing artifacts.
+#[derive(Debug)]
+pub struct ArtifactStore {
+    dir: PathBuf,
+    cap_bytes: u64,
+    counters: Counters,
+    /// Artifacts this instance wrote — exempt from its own eviction. The
+    /// set lives as long as the instance; `run_job` opens a fresh store
+    /// per job, which scopes the exemption to one job's working set. A
+    /// long-lived embedder sharing one instance across many jobs should
+    /// open per job too, or the exemption (and the set) grows unboundedly.
+    own_writes: Mutex<HashSet<PathBuf>>,
+}
+
+impl ArtifactStore {
+    /// Open (creating if needed) a store rooted at `dir` with a soft size
+    /// cap of `cap_bytes` (0 = unlimited). Sweeps temp files orphaned by
+    /// crashed writers — they are invisible to the `.art` scan, so without
+    /// this they would accumulate past the cap forever. The sweep is
+    /// age-gated ([`TMP_SWEEP_AGE`]): a concurrent process's in-flight
+    /// temp file is recent and must not be unlinked from under it.
+    pub fn open(dir: impl AsRef<Path>, cap_bytes: u64) -> Result<ArtifactStore> {
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating artifact store dir {}", dir.display()))?;
+        let cutoff = SystemTime::now().checked_sub(TMP_SWEEP_AGE);
+        if let Ok(rd) = std::fs::read_dir(&dir) {
+            for entry in rd.flatten() {
+                let path = entry.path();
+                // Only files matching our own temp shape (.tmp<pid>-<seq>);
+                // a user-pointed directory may contain other tools' *.tmp
+                // files, which are not ours to delete.
+                let is_tmp = path
+                    .extension()
+                    .and_then(|e| e.to_str())
+                    .is_some_and(is_store_tmp_ext);
+                if !is_tmp {
+                    continue;
+                }
+                let stale = match (entry.metadata().and_then(|m| m.modified()), cutoff) {
+                    (Ok(mtime), Some(c)) => mtime < c,
+                    _ => false,
+                };
+                if stale && std::fs::remove_file(&path).is_ok() {
+                    crate::log_debug!("artifact store: swept orphaned {}", path.display());
+                }
+            }
+        }
+        Ok(ArtifactStore {
+            dir,
+            cap_bytes,
+            counters: Counters::default(),
+            own_writes: Mutex::new(HashSet::new()),
+        })
+    }
+
+    /// Open for inspection (`cache stats|clear`): errors if the directory
+    /// does not exist, creates nothing, and skips the temp sweep — a
+    /// read-only query pointed at a typo'd path must not plant a store
+    /// there or unlink another store's files.
+    pub fn open_existing(dir: impl AsRef<Path>, cap_bytes: u64) -> Result<ArtifactStore> {
+        let dir = dir.as_ref().to_path_buf();
+        if !dir.is_dir() {
+            anyhow::bail!("no artifact store at {}", dir.display());
+        }
+        Ok(ArtifactStore {
+            dir,
+            cap_bytes,
+            counters: Counters::default(),
+            own_writes: Mutex::new(HashSet::new()),
+        })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// The core entry point: return the cached artifact for `key`, or run
+    /// `build`, persist the result, and return it. Storage problems only
+    /// ever cost a rebuild (see module docs), so this cannot fail.
+    pub fn get_or_build<T: Artifact>(&self, key: &StoreKey, build: impl FnOnce() -> T) -> T {
+        let path = self.dir.join(key.filename::<T>());
+        if path.is_file() {
+            match codec::read_file::<T>(&path) {
+                Ok((value, len)) => {
+                    self.counters.hits.fetch_add(1, Ordering::Relaxed);
+                    self.counters.bytes_read.fetch_add(len, Ordering::Relaxed);
+                    touch(&path);
+                    crate::log_debug!("artifact store hit: {}", path.display());
+                    return value;
+                }
+                Err(e) => {
+                    crate::log_warn!(
+                        "artifact store: dropping unreadable {}: {e:#}",
+                        path.display()
+                    );
+                    std::fs::remove_file(&path).ok();
+                }
+            }
+        }
+        self.counters.misses.fetch_add(1, Ordering::Relaxed);
+        let value = build();
+        match codec::write_file(&path, &value) {
+            Ok(len) => {
+                self.counters.bytes_written.fetch_add(len, Ordering::Relaxed);
+                crate::log_debug!("artifact store write: {} ({len} bytes)", path.display());
+                self.own_writes.lock().unwrap().insert(path);
+                self.evict_to_cap();
+            }
+            Err(e) => {
+                crate::log_warn!("artifact store: writing {} failed: {e:#}", path.display());
+            }
+        }
+        value
+    }
+
+    /// Read an artifact without building on miss (tests, tooling).
+    pub fn try_get<T: Artifact>(&self, key: &StoreKey) -> Result<T> {
+        let path = self.dir.join(key.filename::<T>());
+        let (value, len) = codec::read_file::<T>(&path)?;
+        self.counters.hits.fetch_add(1, Ordering::Relaxed);
+        self.counters.bytes_read.fetch_add(len, Ordering::Relaxed);
+        touch(&path);
+        Ok(value)
+    }
+
+    /// Counter snapshot plus an on-disk scan of entries/occupancy.
+    pub fn stats(&self) -> StoreStats {
+        let files = self.scan();
+        StoreStats {
+            hits: self.counters.hits.load(Ordering::Relaxed),
+            misses: self.counters.misses.load(Ordering::Relaxed),
+            evictions: self.counters.evictions.load(Ordering::Relaxed),
+            bytes_read: self.counters.bytes_read.load(Ordering::Relaxed),
+            bytes_written: self.counters.bytes_written.load(Ordering::Relaxed),
+            entries: files.len() as u64,
+            resident_bytes: files.iter().map(|f| f.size).sum(),
+            cap_bytes: self.cap_bytes,
+        }
+    }
+
+    /// Remove every committed artifact. Returns (files removed, bytes
+    /// freed).
+    pub fn clear(&self) -> Result<(u64, u64)> {
+        let mut removed = 0u64;
+        let mut freed = 0u64;
+        for f in self.scan() {
+            std::fs::remove_file(&f.path)
+                .with_context(|| format!("removing {}", f.path.display()))?;
+            removed += 1;
+            freed += f.size;
+        }
+        Ok((removed, freed))
+    }
+
+    /// Enumerate committed artifacts (`.art` files only — temp files and
+    /// strangers are ignored).
+    fn scan(&self) -> Vec<FileInfo> {
+        let mut out = Vec::new();
+        let Ok(rd) = std::fs::read_dir(&self.dir) else {
+            return out;
+        };
+        for entry in rd.flatten() {
+            let path = entry.path();
+            if path.extension().and_then(|e| e.to_str()) != Some(ARTIFACT_EXT) {
+                continue;
+            }
+            let Ok(md) = entry.metadata() else { continue };
+            if !md.is_file() {
+                continue;
+            }
+            out.push(FileInfo {
+                path,
+                size: md.len(),
+                mtime: md.modified().unwrap_or(SystemTime::UNIX_EPOCH),
+            });
+        }
+        out
+    }
+
+    /// Evict oldest-mtime artifacts until the store fits `cap_bytes`.
+    /// Files this process wrote are exempt — evicting them would make a
+    /// job's second artifact evict its first and thrash forever when the
+    /// cap is under one job's working set; that misconfiguration is
+    /// warned about instead.
+    fn evict_to_cap(&self) {
+        if self.cap_bytes == 0 {
+            return;
+        }
+        let mut files = self.scan();
+        let mut total: u64 = files.iter().map(|f| f.size).sum();
+        if total <= self.cap_bytes {
+            return;
+        }
+        files.sort_by_key(|f| f.mtime);
+        let own = self.own_writes.lock().unwrap();
+        for f in files {
+            if total <= self.cap_bytes {
+                break;
+            }
+            if own.contains(&f.path) {
+                continue;
+            }
+            if std::fs::remove_file(&f.path).is_ok() {
+                total -= f.size;
+                self.counters.evictions.fetch_add(1, Ordering::Relaxed);
+                crate::log_debug!("artifact store evict: {} ({} bytes)", f.path.display(), f.size);
+            }
+        }
+        if total > self.cap_bytes {
+            crate::log_warn!(
+                "artifact store over cap ({total} > {} bytes) with only this \
+                 run's artifacts left — raise store_cap_bytes above one job's \
+                 artifact set or warm runs cannot amortize",
+                self.cap_bytes
+            );
+        }
+    }
+}
+
+struct FileInfo {
+    path: PathBuf,
+    size: u64,
+    mtime: SystemTime,
+}
+
+/// Does `ext` match the store's own temp-file shape, `tmp<pid>-<seq>`
+/// (see [`codec::write_file`])?
+fn is_store_tmp_ext(ext: &str) -> bool {
+    let Some(rest) = ext.strip_prefix("tmp") else {
+        return false;
+    };
+    match rest.split_once('-') {
+        Some((pid, seq)) => {
+            !pid.is_empty()
+                && !seq.is_empty()
+                && pid.bytes().all(|b| b.is_ascii_digit())
+                && seq.bytes().all(|b| b.is_ascii_digit())
+        }
+        None => false,
+    }
+}
+
+/// Best-effort LRU touch: bump the file's mtime to now.
+fn touch(path: &Path) {
+    if let Ok(f) = std::fs::OpenOptions::new().write(true).open(path) {
+        f.set_modified(SystemTime::now()).ok();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Csr;
+
+    fn temp_store(tag: &str, cap: u64) -> (PathBuf, ArtifactStore) {
+        let dir = std::env::temp_dir().join(format!(
+            "cagra-store-{tag}-{}",
+            std::process::id()
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+        let store = ArtifactStore::open(&dir, cap).unwrap();
+        (dir, store)
+    }
+
+    fn perm(n: u32, seed: u64) -> Vec<u32> {
+        crate::util::rng::Rng::new(seed).permutation(n as usize)
+    }
+
+    #[test]
+    fn miss_then_hit_with_stats() {
+        let (dir, store) = temp_store("hit", 0);
+        let key = StoreKey::ordering(0xABCD, "degree-sorted");
+        let mut builds = 0;
+        let a = store.get_or_build(&key, || {
+            builds += 1;
+            perm(100, 1)
+        });
+        let b = store.get_or_build(&key, || {
+            builds += 1;
+            perm(100, 1)
+        });
+        assert_eq!(builds, 1, "second call must not rebuild");
+        assert_eq!(a, b);
+        // Direct read without a builder sees the same artifact...
+        let direct: Vec<u32> = store.try_get(&key).unwrap();
+        assert_eq!(direct, a);
+        // ...and a key that was never written is an error, not a build.
+        assert!(store.try_get::<Vec<u32>>(&StoreKey::ordering(0xDEAD, "absent")).is_err());
+        let s = store.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (2, 1, 1));
+        assert!(s.bytes_written > 0 && s.bytes_read > 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn distinct_keys_and_types_do_not_collide() {
+        let (dir, store) = temp_store("keys", 0);
+        let k1 = StoreKey::ordering(1, "a");
+        let k2 = StoreKey::ordering(2, "a");
+        let k3 = StoreKey::segmented(1, "a", 64, 8);
+        let p1 = store.get_or_build(&k1, || perm(10, 1));
+        let p2 = store.get_or_build(&k2, || perm(10, 2));
+        assert_ne!(p1, p2);
+        // Same key, different artifact type → different file.
+        let g = Csr::from_edges(4, &[(0, 1), (2, 3)]);
+        let _csr: Csr = store.get_or_build(&k1, || g.clone());
+        let _ = k3;
+        assert_eq!(store.stats().entries, 3);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupt_file_is_rebuilt_not_propagated() {
+        let (dir, store) = temp_store("corrupt", 0);
+        let key = StoreKey::ordering(7, "x");
+        let _ = store.get_or_build(&key, || perm(50, 3));
+        let path = dir.join(key.filename::<Vec<u32>>());
+        // Truncate the committed file.
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+        let back = store.get_or_build(&key, || perm(50, 3));
+        assert_eq!(back, perm(50, 3));
+        assert_eq!(store.stats().misses, 2); // initial build + rebuild
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn eviction_removes_foreign_oldest_artifact() {
+        // Cap below two artifacts: writing the second evicts a stale
+        // artifact left by a *previous* process (planted directly on
+        // disk, so it is not in this store's own_writes set).
+        let one_size = codec::encode(&perm(64, 1)).len() as u64;
+        let (dir, store) = temp_store("evict", one_size + one_size / 2);
+        let k1 = StoreKey::ordering(1, "old");
+        let old = dir.join(k1.filename::<Vec<u32>>());
+        codec::write_file(&old, &perm(64, 1)).unwrap();
+        if let Ok(f) = std::fs::OpenOptions::new().write(true).open(&old) {
+            f.set_modified(SystemTime::UNIX_EPOCH + Duration::from_secs(1)).ok();
+        }
+        let k2 = StoreKey::ordering(2, "new");
+        let _ = store.get_or_build(&k2, || perm(64, 2));
+        let s = store.stats();
+        assert_eq!(s.entries, 1, "foreign stale artifact should be evicted");
+        assert!(s.evictions >= 1);
+        assert!(!old.exists());
+        assert!(dir.join(k2.filename::<Vec<u32>>()).exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn own_writes_never_evict_each_other() {
+        // Cap below even one artifact: the store must keep everything this
+        // process wrote (and warn) rather than thrash its own working set.
+        let (dir, store) = temp_store("own", 8);
+        let _ = store.get_or_build(&StoreKey::ordering(1, "a"), || perm(64, 1));
+        let _ = store.get_or_build(&StoreKey::ordering(2, "b"), || perm(64, 2));
+        let s = store.stats();
+        assert_eq!(s.entries, 2, "own writes must survive an undersized cap");
+        assert_eq!(s.evictions, 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn clear_empties_the_store() {
+        let (dir, store) = temp_store("clear", 0);
+        let _ = store.get_or_build(&StoreKey::ordering(1, "a"), || perm(10, 1));
+        let _ = store.get_or_build(&StoreKey::ordering(2, "b"), || perm(10, 2));
+        let (n, bytes) = store.clear().unwrap();
+        assert_eq!(n, 2);
+        assert!(bytes > 0);
+        assert_eq!(store.stats().entries, 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn tmp_pattern_matches_only_our_shape() {
+        assert!(is_store_tmp_ext("tmp123-0"));
+        assert!(is_store_tmp_ext("tmp4567-89"));
+        for foreign in ["tmp", "tmp123", "tmpfile", "tmp-1", "tmp123-", "tmp12a-3", "art"] {
+            assert!(!is_store_tmp_ext(foreign), "{foreign:?} must not match");
+        }
+    }
+
+    #[test]
+    fn open_existing_requires_directory() {
+        let missing =
+            std::env::temp_dir().join(format!("cagra-store-missing-{}", std::process::id()));
+        std::fs::remove_dir_all(&missing).ok();
+        assert!(ArtifactStore::open_existing(&missing, 0).is_err());
+        assert!(!missing.exists(), "open_existing must not create the dir");
+        let (dir, store) = temp_store("existing", 0);
+        let _ = store.get_or_build(&StoreKey::ordering(1, "a"), || perm(8, 1));
+        let ro = ArtifactStore::open_existing(&dir, 0).unwrap();
+        assert_eq!(ro.stats().entries, 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn filename_is_path_safe() {
+        let key = StoreKey::segmented(0xFF, "weird/../label with spaces", 4, 2);
+        let name = key.filename::<Csr>();
+        assert!(!name.contains('/') && !name.contains("..") && !name.contains(' '), "{name}");
+    }
+}

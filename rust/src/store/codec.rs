@@ -1,0 +1,528 @@
+//! Versioned binary codec for preprocessing artifacts.
+//!
+//! Matches the repo's zero-dependency idiom (`runtime/artifacts.rs`,
+//! `graph/edgelist.rs`): hand-rolled little-endian framing, no serde.
+//! Every artifact file is
+//!
+//! ```text
+//! magic    [u8; 8]   "CAGART01"
+//! version  u32 LE    CODEC_VERSION
+//! kind     [u8; 4]   artifact type tag (Artifact::KIND)
+//! length   u64 LE    payload bytes
+//! payload  [u8]      type-specific, little-endian
+//! checksum u64 LE    FNV-1a64 + avalanche over payload
+//! ```
+//!
+//! Decoding is paranoid by contract: bad magic, wrong version, wrong kind,
+//! inconsistent length, checksum mismatch, truncation, trailing bytes, or
+//! any violated structural invariant (non-monotone offsets, out-of-range
+//! ids, non-permutations, segment ranges that disagree with `seg_size`)
+//! returns `Err` — never a panic, never a silently wrong value. Declared
+//! lengths are validated against remaining bytes *before* allocation so a
+//! corrupt header cannot trigger a huge allocation.
+
+use super::fingerprint::hash_bytes;
+use crate::graph::{Csr, VertexId};
+use crate::segment::{MergePlan, Segment, SegmentedCsr};
+use crate::util::ceil_div;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// File magic ("CAGra ARTifact", format generation 01).
+pub const MAGIC: [u8; 8] = *b"CAGART01";
+
+/// Bumped whenever any payload layout changes; old files are rejected
+/// (and evicted by the store) rather than misread.
+pub const CODEC_VERSION: u32 = 1;
+
+/// Payload checksum: FNV-1a64 with a final avalanche.
+pub fn checksum64(payload: &[u8]) -> u64 {
+    hash_bytes(0x5EED_C0DE, payload)
+}
+
+/// A type that can be persisted in the artifact store.
+pub trait Artifact: Sized {
+    /// Four-byte header tag.
+    const KIND: [u8; 4];
+    /// Short name used in store filenames ("perm", "csr", "seg").
+    const NAME: &'static str;
+    fn encode_payload(&self, out: &mut Vec<u8>);
+    fn decode_payload(r: &mut Reader) -> Result<Self>;
+}
+
+/// Bounds-checked little-endian reader over a byte slice.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        if n > self.remaining() {
+            bail!("truncated artifact: wanted {n} bytes, {} left", self.remaining());
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
+    }
+
+    /// Length-prefixed `u32` array. The length is validated against the
+    /// remaining bytes before allocating.
+    pub fn vec_u32(&mut self) -> Result<Vec<u32>> {
+        let len = self.u64()?;
+        if len > (self.remaining() / 4) as u64 {
+            bail!("corrupt artifact: u32 array length {len} exceeds payload");
+        }
+        let raw = self.bytes(len as usize * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    /// Length-prefixed `u64` array.
+    pub fn vec_u64(&mut self) -> Result<Vec<u64>> {
+        let len = self.u64()?;
+        if len > (self.remaining() / 8) as u64 {
+            bail!("corrupt artifact: u64 array length {len} exceeds payload");
+        }
+        let raw = self.bytes(len as usize * 8)?;
+        Ok(raw
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    /// Assert the payload was fully consumed.
+    pub fn done(&self) -> Result<()> {
+        if self.remaining() != 0 {
+            bail!("corrupt artifact: {} trailing payload bytes", self.remaining());
+        }
+        Ok(())
+    }
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_vec_u32(out: &mut Vec<u8>, xs: &[u32]) {
+    put_u64(out, xs.len() as u64);
+    for &x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn put_vec_u64(out: &mut Vec<u8>, xs: &[u64]) {
+    put_u64(out, xs.len() as u64);
+    for &x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Encode `value` into a framed artifact byte buffer.
+pub fn encode<T: Artifact>(value: &T) -> Vec<u8> {
+    let mut payload = Vec::new();
+    value.encode_payload(&mut payload);
+    let mut out = Vec::with_capacity(payload.len() + 32);
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&CODEC_VERSION.to_le_bytes());
+    out.extend_from_slice(&T::KIND);
+    out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    let checksum = checksum64(&payload);
+    out.extend_from_slice(&payload);
+    out.extend_from_slice(&checksum.to_le_bytes());
+    out
+}
+
+/// Decode a framed artifact, validating the full frame and every payload
+/// invariant.
+pub fn decode<T: Artifact>(bytes: &[u8]) -> Result<T> {
+    let mut r = Reader::new(bytes);
+    if r.bytes(8)? != MAGIC {
+        bail!("bad magic: not an artifact file");
+    }
+    let version = r.u32()?;
+    if version != CODEC_VERSION {
+        bail!("unsupported artifact codec version {version} (this build reads v{CODEC_VERSION})");
+    }
+    let kind = r.bytes(4)?;
+    if kind != T::KIND {
+        bail!(
+            "artifact kind mismatch: file has {:?}, expected {:?}",
+            String::from_utf8_lossy(kind),
+            String::from_utf8_lossy(&T::KIND)
+        );
+    }
+    let len = r.u64()?;
+    if r.remaining() < 8 || len != (r.remaining() - 8) as u64 {
+        bail!(
+            "corrupt artifact: payload length {len} inconsistent with file size ({} bytes left)",
+            r.remaining()
+        );
+    }
+    let payload = r.bytes(len as usize)?;
+    let stored = r.u64()?;
+    let actual = checksum64(payload);
+    if stored != actual {
+        bail!("artifact checksum mismatch ({stored:#018x} != {actual:#018x}): corrupt file");
+    }
+    let mut pr = Reader::new(payload);
+    let value = T::decode_payload(&mut pr)?;
+    pr.done()?;
+    Ok(value)
+}
+
+/// Encode + write atomically (temp file, then rename). Returns file size.
+/// The temp name is unique per process *and* per call, so two threads
+/// racing to build the same key can never interleave into one file (the
+/// loser's rename just replaces the winner's identical bytes).
+pub fn write_file<T: Artifact>(path: &Path, value: &T) -> Result<u64> {
+    static SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+    let bytes = encode(value);
+    let tmp = path.with_extension(format!(
+        "tmp{}-{}",
+        std::process::id(),
+        SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+    ));
+    std::fs::write(&tmp, &bytes).with_context(|| format!("writing {}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming {} -> {}", tmp.display(), path.display()))?;
+    Ok(bytes.len() as u64)
+}
+
+/// Read + decode a file. Returns the value and the file size.
+pub fn read_file<T: Artifact>(path: &Path) -> Result<(T, u64)> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    let value =
+        decode::<T>(&bytes).with_context(|| format!("decoding artifact {}", path.display()))?;
+    Ok((value, bytes.len() as u64))
+}
+
+// ---------------------------------------------------------------------------
+// Artifact implementations
+// ---------------------------------------------------------------------------
+
+impl Artifact for Csr {
+    const KIND: [u8; 4] = *b"CSR_";
+    const NAME: &'static str = "csr";
+
+    fn encode_payload(&self, out: &mut Vec<u8>) {
+        put_u64(out, self.num_vertices() as u64);
+        put_vec_u64(out, &self.offsets);
+        put_vec_u32(out, &self.targets);
+    }
+
+    fn decode_payload(r: &mut Reader) -> Result<Csr> {
+        let n = r.u64()? as usize;
+        // Vertex ids are u32; a larger n is corrupt and would overflow
+        // id arithmetic downstream.
+        if n > u32::MAX as usize {
+            bail!("csr: num_vertices {n} exceeds the u32 id space");
+        }
+        let offsets = r.vec_u64()?;
+        if offsets.len() != n + 1 {
+            bail!("csr: offsets length {} != num_vertices+1 ({})", offsets.len(), n + 1);
+        }
+        if offsets[0] != 0 {
+            bail!("csr: offsets[0] = {} != 0", offsets[0]);
+        }
+        if offsets.windows(2).any(|w| w[0] > w[1]) {
+            bail!("csr: offsets not monotone");
+        }
+        let targets = r.vec_u32()?;
+        if *offsets.last().unwrap() != targets.len() as u64 {
+            bail!(
+                "csr: last offset {} != edge count {}",
+                offsets.last().unwrap(),
+                targets.len()
+            );
+        }
+        if targets.iter().any(|&t| t as usize >= n) {
+            bail!("csr: target id out of range (n = {n})");
+        }
+        Ok(Csr { offsets, targets })
+    }
+}
+
+impl Artifact for Vec<VertexId> {
+    const KIND: [u8; 4] = *b"PERM";
+    const NAME: &'static str = "perm";
+
+    fn encode_payload(&self, out: &mut Vec<u8>) {
+        put_vec_u32(out, self);
+    }
+
+    fn decode_payload(r: &mut Reader) -> Result<Vec<VertexId>> {
+        let perm = r.vec_u32()?;
+        // A relabeling must be a permutation of 0..n: anything else would
+        // silently scramble results downstream.
+        let n = perm.len();
+        let mut seen = vec![false; n];
+        for &p in &perm {
+            let i = p as usize;
+            if i >= n {
+                bail!("perm: value {p} out of range (n = {n})");
+            }
+            if seen[i] {
+                bail!("perm: duplicate value {p}");
+            }
+            seen[i] = true;
+        }
+        Ok(perm)
+    }
+}
+
+impl Artifact for SegmentedCsr {
+    const KIND: [u8; 4] = *b"SEG_";
+    const NAME: &'static str = "seg";
+
+    fn encode_payload(&self, out: &mut Vec<u8>) {
+        put_u64(out, self.num_vertices as u64);
+        put_u64(out, self.seg_size as u64);
+        // The merge plan is derived (MergePlan::build) rather than stored:
+        // only its block size is needed to reconstruct it exactly, and
+        // rebuilding guarantees plan/segment consistency by construction.
+        put_u64(out, self.merge_plan.block_size as u64);
+        put_u64(out, self.segments.len() as u64);
+        for seg in &self.segments {
+            put_u32(out, seg.src_lo);
+            put_u32(out, seg.src_hi);
+            put_vec_u32(out, &seg.dst_ids);
+            put_vec_u64(out, &seg.offsets);
+            put_vec_u32(out, &seg.sources);
+        }
+    }
+
+    fn decode_payload(r: &mut Reader) -> Result<SegmentedCsr> {
+        let n = r.u64()? as usize;
+        // Bounding n to the u32 id space also keeps the (s+1)*seg_size
+        // range arithmetic below overflow-free for any decoded seg_size
+        // (seg_size > n collapses to one segment).
+        if n > u32::MAX as usize {
+            bail!("seg: num_vertices {n} exceeds the u32 id space");
+        }
+        let seg_size = r.u64()? as usize;
+        let block_size = r.u64()? as usize;
+        if seg_size == 0 || block_size == 0 {
+            bail!("seg: zero seg_size/block_size");
+        }
+        let k = r.u64()? as usize;
+        if k != ceil_div(n.max(1), seg_size) {
+            bail!("seg: {k} segments inconsistent with n={n}, seg_size={seg_size}");
+        }
+        let mut segments = Vec::with_capacity(k.min(1 << 20));
+        for s in 0..k {
+            let src_lo = r.u32()?;
+            let src_hi = r.u32()?;
+            // Ranges are fully determined by (n, seg_size); stored values
+            // must agree or the file is corrupt.
+            let want_lo = (s * seg_size) as u32;
+            let want_hi = ((s + 1) * seg_size).min(n) as u32;
+            if src_lo != want_lo || src_hi != want_hi {
+                bail!("seg {s}: range [{src_lo},{src_hi}) != expected [{want_lo},{want_hi})");
+            }
+            let dst_ids = r.vec_u32()?;
+            if dst_ids.windows(2).any(|w| w[0] >= w[1]) {
+                bail!("seg {s}: dst_ids not strictly ascending");
+            }
+            if dst_ids.last().is_some_and(|&d| d as usize >= n) {
+                bail!("seg {s}: dst id out of range");
+            }
+            let offsets = r.vec_u64()?;
+            if offsets.len() != dst_ids.len() + 1 {
+                bail!("seg {s}: offsets length {} != dsts+1", offsets.len());
+            }
+            if offsets.first() != Some(&0) || offsets.windows(2).any(|w| w[0] > w[1]) {
+                bail!("seg {s}: offsets not monotone from 0");
+            }
+            let sources = r.vec_u32()?;
+            if *offsets.last().unwrap_or(&0) != sources.len() as u64 {
+                bail!("seg {s}: last offset != source count");
+            }
+            if sources.iter().any(|&u| u < src_lo || u >= src_hi) {
+                bail!("seg {s}: source outside [{src_lo},{src_hi})");
+            }
+            segments.push(Segment {
+                src_lo,
+                src_hi,
+                dst_ids,
+                offsets,
+                sources,
+            });
+        }
+        let merge_plan = MergePlan::build(n, block_size, &segments);
+        Ok(SegmentedCsr {
+            num_vertices: n,
+            seg_size,
+            segments,
+            merge_plan,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::util::prop::check;
+
+    fn sample_csr(seed: u64) -> Csr {
+        let (n, e) = generators::rmat(8, 6, generators::RmatParams::graph500(), seed);
+        Csr::from_edges(n, &e)
+    }
+
+    fn roundtrip<T: Artifact + PartialEq + std::fmt::Debug>(v: &T) {
+        let bytes = encode(v);
+        let back: T = decode(&bytes).expect("roundtrip decode");
+        assert_eq!(&back, v);
+    }
+
+    #[test]
+    fn csr_roundtrip() {
+        roundtrip(&sample_csr(3));
+        roundtrip(&Csr::from_edges(1, &[])); // degenerate
+    }
+
+    #[test]
+    fn perm_roundtrip() {
+        let p: Vec<u32> = crate::util::rng::Rng::new(9).permutation(257);
+        roundtrip(&p);
+        roundtrip(&Vec::<u32>::new());
+    }
+
+    #[test]
+    fn segmented_roundtrip_preserves_behaviour() {
+        let g = sample_csr(5);
+        let sg = SegmentedCsr::build_with_block(&g, 37, 16);
+        let bytes = encode(&sg);
+        let back: SegmentedCsr = decode(&bytes).unwrap();
+        assert_eq!(back.num_vertices, sg.num_vertices);
+        assert_eq!(back.seg_size, sg.seg_size);
+        assert_eq!(back.num_segments(), sg.num_segments());
+        // The derived merge plan must match the original exactly.
+        assert_eq!(back.merge_plan.block_size, sg.merge_plan.block_size);
+        assert_eq!(back.merge_plan.starts, sg.merge_plan.starts);
+        // And aggregation over the decoded structure is bitwise identical.
+        let vals: Vec<f64> = (0..g.num_vertices()).map(|i| (i as f64).cos()).collect();
+        let mut b1 = crate::segment::SegmentBuffers::for_graph(&sg);
+        let mut b2 = crate::segment::SegmentBuffers::for_graph(&back);
+        let mut o1 = vec![0.0; g.num_vertices()];
+        let mut o2 = vec![0.0; g.num_vertices()];
+        sg.aggregate(|u| vals[u as usize], &mut b1, 0.0, &mut o1);
+        back.aggregate(|u| vals[u as usize], &mut b2, 0.0, &mut o2);
+        assert_eq!(o1, o2);
+    }
+
+    #[test]
+    fn prop_roundtrip_generated_graphs() {
+        check("codec roundtrip on generated graphs", 20, |gen| {
+            let (n, edges) = gen.edges(1..120, 4);
+            let g = Csr::from_edges(n, &edges);
+            let bytes = encode(&g);
+            assert_eq!(decode::<Csr>(&bytes).unwrap(), g);
+
+            let perm = gen.permutation(n);
+            let pbytes = encode(&perm);
+            assert_eq!(decode::<Vec<u32>>(&pbytes).unwrap(), perm);
+
+            let seg_size = gen.usize(1..n + 1);
+            let sg = SegmentedCsr::build_with_block(&g, seg_size, 8);
+            let sbytes = encode(&sg);
+            let back = decode::<SegmentedCsr>(&sbytes).unwrap();
+            assert_eq!(back.num_edges(), g.num_edges());
+            assert_eq!(back.merge_plan.starts, sg.merge_plan.starts);
+        });
+    }
+
+    #[test]
+    fn truncation_always_errs() {
+        let g = sample_csr(7);
+        let bytes = encode(&g);
+        // Every proper prefix must fail cleanly (never panic, never Ok).
+        for cut in 0..bytes.len() {
+            assert!(
+                decode::<Csr>(&bytes[..cut]).is_err(),
+                "truncation at {cut}/{} decoded",
+                bytes.len()
+            );
+        }
+    }
+
+    #[test]
+    fn bit_flips_always_err() {
+        // Small graph so the exhaustive scan stays fast; every byte of the
+        // frame is covered by magic/version/kind/length/checksum checks.
+        let g = Csr::from_edges(5, &[(0, 1), (1, 2), (3, 4), (4, 0)]);
+        let bytes = encode(&g);
+        for i in 0..bytes.len() {
+            for bit in [0u8, 3, 7] {
+                let mut bad = bytes.clone();
+                bad[i] ^= 1 << bit;
+                assert!(
+                    decode::<Csr>(&bad).is_err(),
+                    "flip at byte {i} bit {bit} decoded"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn kind_mismatch_rejected() {
+        let p: Vec<u32> = vec![0, 1, 2];
+        let bytes = encode(&p);
+        assert!(decode::<Csr>(&bytes).is_err());
+    }
+
+    #[test]
+    fn corrupt_perm_rejected() {
+        // Duplicate + out-of-range values with a *valid* frame: rebuild
+        // the frame around a hand-corrupted payload.
+        for values in [vec![0u32, 0, 1], vec![0u32, 5, 1]] {
+            let mut payload = Vec::new();
+            put_vec_u32(&mut payload, &values);
+            let mut bytes = Vec::new();
+            bytes.extend_from_slice(&MAGIC);
+            bytes.extend_from_slice(&CODEC_VERSION.to_le_bytes());
+            bytes.extend_from_slice(&<Vec<VertexId> as Artifact>::KIND);
+            bytes.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+            bytes.extend_from_slice(&payload);
+            bytes.extend_from_slice(&checksum64(&payload).to_le_bytes());
+            assert!(decode::<Vec<u32>>(&bytes).is_err(), "{values:?} accepted");
+        }
+    }
+
+    #[test]
+    fn file_roundtrip_and_missing_file() {
+        let dir = std::env::temp_dir().join(format!("cagra-codec-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("g.art");
+        let g = sample_csr(11);
+        let written = write_file(&path, &g).unwrap();
+        let (back, read) = read_file::<Csr>(&path).unwrap();
+        assert_eq!(back, g);
+        assert_eq!(written, read);
+        assert!(read_file::<Csr>(&dir.join("absent.art")).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,222 @@
+//! Content fingerprints for graphs — the first component of every
+//! [`super::StoreKey`].
+//!
+//! A fingerprint must be (a) cheap relative to the preprocessing it keys
+//! (reordering / segmenting cost a small multiple of a PageRank iteration,
+//! Table 9, so hashing must be a small fraction of one), and (b) stable
+//! across reloads of the same dataset. (b) is subtler than it looks:
+//! [`crate::graph::Csr::from_edges`] scatters edges with atomic per-vertex
+//! cursors, so the order of neighbors *within* a bucket differs from run
+//! to run. The fingerprint therefore hashes each vertex's neighbor
+//! **multiset** commutatively (wrapping *sum* of per-edge mixes — not
+//! XOR, which would cancel duplicate edges in pairs and alias distinct
+//! multigraphs) — any interleaving of the same edges produces the same
+//! fingerprint, while changing a single edge of a sampled vertex changes
+//! it.
+//!
+//! Cost is bounded by sampling: up to [`MAX_SAMPLES`] vertices (chosen by
+//! stable vertex *id*, not array position) contribute their offsets and
+//! neighbor lists; lengths and the full degree-prefix shape are always
+//! mixed in, so any change that shifts `offsets` is caught even for
+//! unsampled vertices. Hashing is position-salted and XOR-combined, so it
+//! parallelizes with [`parallel_reduce`] deterministically under any
+//! thread count.
+
+use crate::graph::Csr;
+use crate::parallel::parallel_reduce;
+
+/// Upper bound on sampled vertices (and sampled offsets) per array.
+pub const MAX_SAMPLES: usize = 1 << 16;
+
+/// SplitMix64 finalizer — the avalanche step every hash here runs through.
+#[inline]
+pub(crate) fn mix64(z: u64) -> u64 {
+    let z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    let z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// FNV-1a over raw bytes with a final avalanche (labels, dataset names,
+/// codec checksums).
+pub fn hash_bytes(seed: u64, bytes: &[u8]) -> u64 {
+    let mut h = seed ^ 0xCBF29CE484222325;
+    for &b in bytes {
+        h = (h ^ b as u64).wrapping_mul(0x100000001B3);
+    }
+    mix64(h)
+}
+
+/// `i`-th sampled index of `0..len` when keeping at most `samples`.
+#[inline]
+fn sample_pos(i: usize, len: usize, samples: usize) -> usize {
+    if len <= samples {
+        i
+    } else {
+        ((i as u128 * len as u128) / samples as u128) as usize
+    }
+}
+
+/// Position-salted sampled hash of the offsets array. Offsets are built by
+/// a deterministic counting pass, so positional hashing is stable.
+fn hash_offsets(offsets: &[u64]) -> u64 {
+    let len = offsets.len();
+    if len == 0 {
+        return mix64(0x0FF5E75);
+    }
+    let samples = len.min(MAX_SAMPLES);
+    let h = parallel_reduce(
+        samples,
+        || 0u64,
+        |acc, i| {
+            let pos = sample_pos(i, len, samples);
+            acc.wrapping_add(mix64(
+                0x0FF5E75
+                    ^ (pos as u64).wrapping_mul(0x9E3779B97F4A7C15)
+                    ^ offsets[pos].wrapping_mul(0xC2B2AE3D27D4EB4F),
+            ))
+        },
+        |a, b| a.wrapping_add(b),
+    );
+    mix64(h ^ (len as u64).wrapping_mul(0xA24BAED4963EE407))
+}
+
+/// Sampled commutative hash of adjacency: for each sampled vertex `u`,
+/// sum-fold `mix(u, v)` over its neighbors `v` (order-insensitive but
+/// multiplicity-sensitive: duplicate edges add twice instead of
+/// cancelling), salted with `u` and its degree.
+fn hash_adjacency(g: &Csr) -> u64 {
+    let n = g.num_vertices();
+    if n == 0 {
+        return mix64(0xAD7ACE);
+    }
+    let samples = n.min(MAX_SAMPLES);
+    let h = parallel_reduce(
+        samples,
+        || 0u64,
+        |acc, i| {
+            let u = sample_pos(i, n, samples);
+            let mut local = (u as u64)
+                .wrapping_mul(0x9E3779B97F4A7C15)
+                ^ (g.degree(u as u32) as u64).wrapping_mul(0xC2B2AE3D27D4EB4F);
+            for &v in g.neighbors(u as u32) {
+                // Commutative across neighbors: bucket scatter order is
+                // nondeterministic (atomic cursors in from_edges).
+                local = local.wrapping_add(mix64(0xAD7ACE ^ ((u as u64) << 32) ^ v as u64));
+            }
+            acc.wrapping_add(mix64(local))
+        },
+        |a, b| a.wrapping_add(b),
+    );
+    mix64(h ^ (n as u64).rotate_left(31))
+}
+
+/// Fingerprint of a CSR's structure: lengths, degree shape (`offsets`),
+/// and sampled neighbor multisets.
+pub fn fingerprint_csr(g: &Csr) -> u64 {
+    let shape = mix64(
+        (g.num_vertices() as u64).wrapping_mul(0x9E3779B97F4A7C15) ^ g.num_edges() as u64,
+    );
+    mix64(shape ^ hash_offsets(&g.offsets).rotate_left(17) ^ hash_adjacency(g).rotate_left(43))
+}
+
+/// Fingerprint keying the artifact store: dataset identity (name + scale)
+/// mixed with the structural fingerprint of the loaded graph. Including
+/// both means a regenerated stand-in with different generator parameters
+/// can never alias a stale artifact, while the name/scale pair keeps
+/// distinct datasets apart even under a (vanishingly unlikely) structural
+/// hash collision.
+pub fn fingerprint_dataset(name: &str, scale: f64, g: &Csr) -> u64 {
+    let id = hash_bytes(0xDA7A5E7, name.as_bytes());
+    mix64(id ^ scale.to_bits().rotate_left(21) ^ fingerprint_csr(g))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::util::prop::check;
+
+    fn graph(seed: u64) -> Csr {
+        let (n, e) = generators::rmat(9, 8, generators::RmatParams::graph500(), seed);
+        Csr::from_edges(n, &e)
+    }
+
+    #[test]
+    fn deterministic_across_calls() {
+        let g = graph(1);
+        assert_eq!(fingerprint_csr(&g), fingerprint_csr(&g));
+        assert_eq!(
+            fingerprint_dataset("x", 0.5, &g),
+            fingerprint_dataset("x", 0.5, &g)
+        );
+    }
+
+    #[test]
+    fn insensitive_to_neighbor_order() {
+        // Same edge multiset, different bucket order → same fingerprint.
+        let edges = vec![(0u32, 1u32), (0, 2), (0, 3), (2, 1), (3, 0)];
+        let mut reversed = edges.clone();
+        reversed.reverse();
+        let a = Csr::from_edges(4, &edges);
+        let b = Csr::from_edges(4, &reversed);
+        assert_eq!(fingerprint_csr(&a), fingerprint_csr(&b));
+    }
+
+    #[test]
+    fn sensitive_to_structure_name_and_scale() {
+        let g = graph(1);
+        let h = graph(2);
+        assert_ne!(fingerprint_csr(&g), fingerprint_csr(&h));
+        assert_ne!(
+            fingerprint_dataset("a", 1.0, &g),
+            fingerprint_dataset("b", 1.0, &g)
+        );
+        assert_ne!(
+            fingerprint_dataset("a", 1.0, &g),
+            fingerprint_dataset("a", 0.5, &g)
+        );
+    }
+
+    #[test]
+    fn single_edge_change_flips_fingerprint() {
+        let a = Csr::from_edges(6, &[(0, 1), (1, 2), (2, 3), (4, 5)]);
+        let b = Csr::from_edges(6, &[(0, 1), (1, 2), (2, 4), (4, 5)]);
+        assert_ne!(fingerprint_csr(&a), fingerprint_csr(&b));
+    }
+
+    #[test]
+    fn duplicate_edges_do_not_cancel() {
+        // Same degrees, same offsets; differ only in an even-multiplicity
+        // neighbor swap. An XOR fold would alias these (pairs cancel);
+        // the sum fold must not.
+        let a = Csr::from_edges(4, &[(0, 1), (0, 1), (0, 3)]);
+        let b = Csr::from_edges(4, &[(0, 2), (0, 2), (0, 3)]);
+        assert_eq!(a.out_degrees(), b.out_degrees());
+        assert_ne!(fingerprint_csr(&a), fingerprint_csr(&b));
+    }
+
+    #[test]
+    fn prop_relabel_changes_fingerprint() {
+        // Distinct permutations should (overwhelmingly) produce distinct
+        // fingerprints — that is what keys reordered artifacts apart.
+        check("relabel changes fingerprint", 15, |gen| {
+            let (n, edges) = gen.edges(8..80, 4);
+            let g = Csr::from_edges(n, &edges);
+            let perm = gen.permutation(n);
+            let identity: Vec<u32> = (0..n as u32).collect();
+            if perm != identity {
+                let h = g.relabel(&perm);
+                if h.sorted() != g.sorted() {
+                    assert_ne!(fingerprint_csr(&g), fingerprint_csr(&h));
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn hash_bytes_discriminates() {
+        assert_ne!(hash_bytes(0, b"abc"), hash_bytes(0, b"abd"));
+        assert_ne!(hash_bytes(0, b"abc"), hash_bytes(1, b"abc"));
+        assert_eq!(hash_bytes(7, b""), hash_bytes(7, b""));
+    }
+}

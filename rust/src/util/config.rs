@@ -92,6 +92,13 @@ impl Config {
         }
     }
 
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("{key} = {v:?} is not an integer")),
+        }
+    }
+
     pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
         match self.get(key) {
             None => Ok(default),
@@ -157,6 +164,15 @@ mod tests {
         let cfg = Config::parse("").unwrap();
         assert_eq!(cfg.get_usize("missing", 7).unwrap(), 7);
         assert_eq!(cfg.get_str("missing", "x"), "x");
+        assert_eq!(cfg.get_u64("missing", 9).unwrap(), 9);
+    }
+
+    #[test]
+    fn get_u64_parses_large_values() {
+        let cfg = Config::parse("cap = 2147483648\n").unwrap();
+        assert_eq!(cfg.get_u64("cap", 0).unwrap(), 1 << 31);
+        let bad = Config::parse("cap = nope\n").unwrap();
+        assert!(bad.get_u64("cap", 0).is_err());
     }
 
     #[test]

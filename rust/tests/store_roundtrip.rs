@@ -1,0 +1,133 @@
+//! Artifact-store acceptance tests: running the same dataset twice with
+//! the store enabled does the preprocessing work once — the second run
+//! hits the store — and warm runs produce bitwise-identical results to
+//! cold runs for PageRank and CF.
+
+use cagra::apps::{cf, pagerank};
+use cagra::coordinator::{run_job, AppKind, JobSpec, SystemConfig};
+use cagra::graph::datasets;
+use cagra::store::{fingerprint, ArtifactStore, StoreCtx};
+
+const SCALE: f64 = 1.0 / 64.0;
+
+fn temp_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("cagra-storetest-{tag}-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+fn small_cfg() -> SystemConfig {
+    SystemConfig {
+        llc_bytes: 32 * 1024, // scaled graphs still segment
+        ..Default::default()
+    }
+}
+
+#[test]
+fn pagerank_warm_run_is_bitwise_identical_and_hits() {
+    let ds = datasets::load_scaled("livejournal-sim", SCALE).unwrap();
+    let cfg = small_cfg();
+    let dir = temp_dir("pr");
+    let store = ArtifactStore::open(&dir, 0).unwrap();
+    let fp = fingerprint::fingerprint_dataset(&ds.name, SCALE, &ds.graph);
+    let ctx = Some(StoreCtx::new(&store, fp));
+    let variant = pagerank::Variant::ReorderedSegmented;
+
+    // Cold: builds + persists the permutation and the segmented
+    // partition (the relabeled CSR is only a cold-build intermediate for
+    // this variant and is deliberately not stored).
+    let mut cold = pagerank::Prepared::new_cached(&ds.graph, &cfg, variant, ctx);
+    let a = cold.run(4);
+    let s = store.stats();
+    assert_eq!(s.hits, 0, "cold run must not hit");
+    assert_eq!(s.misses, 2, "cold run builds perm + seg");
+    assert!(s.entries == 2 && s.bytes_written > 0);
+
+    // Warm: identical results, all artifacts served from disk.
+    let mut warm = pagerank::Prepared::new_cached(&ds.graph, &cfg, variant, ctx);
+    let b = warm.run(4);
+    let s = store.stats();
+    assert_eq!(s.hits, 2, "warm run must hit every artifact");
+    assert_eq!(s.misses, 2, "warm run must not rebuild");
+    // Bitwise: decoded artifacts drive the exact same FP operation order.
+    assert_eq!(a.values.len(), b.values.len());
+    for (i, (x, y)) in a.values.iter().zip(&b.values).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "rank {i} differs: {x} vs {y}");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn cf_warm_run_is_bitwise_identical_and_hits() {
+    let ds = datasets::load_scaled("netflix-sim", 0.05).unwrap();
+    let mut cfg = small_cfg();
+    cfg.llc_bytes = 16 * 1024; // force multiple segments at K=8
+    let dir = temp_dir("cf");
+    let store = ArtifactStore::open(&dir, 0).unwrap();
+    let fp = fingerprint::fingerprint_dataset(&ds.name, 0.05, &ds.graph);
+    let ctx = Some(StoreCtx::new(&store, fp));
+
+    let mut cold = cf::Prepared::new_cached(&ds.graph, &cfg, cf::Variant::Segmented, ctx);
+    for _ in 0..2 {
+        cold.step();
+    }
+    let s = store.stats();
+    assert_eq!((s.hits, s.misses), (0, 2), "cold run builds cf-user + cf-item");
+
+    let mut warm = cf::Prepared::new_cached(&ds.graph, &cfg, cf::Variant::Segmented, ctx);
+    for _ in 0..2 {
+        warm.step();
+    }
+    assert_eq!(store.stats().hits, 2, "warm run must hit both partitions");
+    for (i, (x, y)) in cold.factors.data.iter().zip(&warm.factors.data).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "factor {i} differs: {x} vs {y}");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn run_job_second_run_hits_store_with_identical_summary() {
+    let dir = temp_dir("job");
+    let mut cfg = small_cfg();
+    cfg.store_enabled = true;
+    cfg.store_dir = dir.to_string_lossy().into_owned();
+    let spec = JobSpec {
+        dataset: "livejournal-sim".into(),
+        scale: SCALE,
+        iters: 3,
+        app: AppKind::PageRank(pagerank::Variant::ReorderedSegmented),
+        ..Default::default()
+    };
+    let r1 = run_job(&spec, &cfg).unwrap();
+    let s1 = r1.metrics.store.expect("store stats attached");
+    assert_eq!(s1.hits, 0);
+    assert!(s1.misses > 0 && s1.entries > 0);
+
+    let r2 = run_job(&spec, &cfg).unwrap();
+    let s2 = r2.metrics.store.expect("store stats attached");
+    assert_eq!(
+        s2.hits, s1.misses,
+        "every cold build must be a warm hit (same fingerprint across loads)"
+    );
+    assert_eq!(s2.misses, 0, "warm run must not redo preprocessing work");
+    assert_eq!(
+        r1.summary.to_bits(),
+        r2.summary.to_bits(),
+        "warm summary must be bitwise identical: {} vs {}",
+        r1.summary,
+        r2.summary
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn store_disabled_attaches_no_stats() {
+    let spec = JobSpec {
+        dataset: "livejournal-sim".into(),
+        scale: SCALE,
+        iters: 2,
+        ..Default::default()
+    };
+    let r = run_job(&spec, &SystemConfig::default()).unwrap();
+    assert!(r.metrics.store.is_none());
+}
