@@ -1,7 +1,7 @@
 //! Shared helpers for the per-table/figure bench targets.
 #![allow(dead_code)] // each bench target uses a different subset
 
-use cagra::apps::pagerank;
+use cagra::apps::{registry, AppKind, PreparedApp};
 use cagra::coordinator::SystemConfig;
 use cagra::graph::datasets::{self, Dataset};
 
@@ -16,17 +16,52 @@ pub fn config() -> SystemConfig {
     SystemConfig::default()
 }
 
-/// Median per-iteration seconds of a prepared PageRank variant.
-pub fn time_pagerank_iter(
+/// Prepare an app variant through the registry (no artifact store).
+pub fn prepare_app(
+    g: &cagra::graph::Csr,
+    cfg: &SystemConfig,
+    app: &str,
+    variant: &str,
+) -> Box<dyn PreparedApp> {
+    let kind = AppKind::parse(app, variant)
+        .unwrap_or_else(|e| panic!("parsing {app}/{variant}: {e:#}"));
+    registry::app_for(kind)
+        .prepare(g, cfg, kind, None)
+        .unwrap_or_else(|e| panic!("preparing {app}/{variant}: {e:#}"))
+}
+
+/// Median per-iteration seconds of an iterative app variant prepared
+/// through the registry.
+pub fn time_app_iter(
     b: &mut cagra::bench::Bencher,
     label: &str,
     g: &cagra::graph::Csr,
     cfg: &SystemConfig,
-    variant: pagerank::Variant,
+    app: &str,
+    variant: &str,
 ) -> f64 {
-    let mut prep = pagerank::Prepared::new(g, cfg, variant);
-    prep.reset();
+    let mut prep = prepare_app(g, cfg, app, variant);
     let m = b.bench_work(label, Some(g.num_edges() as u64), &mut || prep.step());
+    m.secs()
+}
+
+/// Median seconds for one full pass over `sources` of a per-source app
+/// variant prepared through the registry.
+pub fn time_app_sources(
+    b: &mut cagra::bench::Bencher,
+    label: &str,
+    g: &cagra::graph::Csr,
+    cfg: &SystemConfig,
+    app: &str,
+    variant: &str,
+    sources: &[cagra::graph::VertexId],
+) -> f64 {
+    let mut prep = prepare_app(g, cfg, app, variant);
+    let m = b.bench_work(label, Some(g.num_edges() as u64), &mut || {
+        for &s in sources {
+            prep.run_source(s);
+        }
+    });
     m.secs()
 }
 

@@ -5,7 +5,7 @@
 
 mod common;
 
-use cagra::apps::{bc, cf, pagerank};
+use cagra::apps::{bc, cf};
 use cagra::baselines::{graphmat_style, gridgraph_style, ligra_style};
 use cagra::bench::{header, Bencher, Table};
 
@@ -17,9 +17,8 @@ fn main() {
     let mut b = Bencher::new();
     b.reps = b.reps.min(3);
 
-    // PageRank per-iteration across systems.
-    let pr_opt =
-        common::time_pagerank_iter(&mut b, "pr-opt", g, &cfg, pagerank::Variant::ReorderedSegmented);
+    // PageRank per-iteration across systems (ours via the app registry).
+    let pr_opt = common::time_app_iter(&mut b, "pr-opt", g, &cfg, "pagerank", "both");
     let pr_gm = {
         let mut p = graphmat_style::Prepared::new(g, &cfg);
         b.bench("pr-graphmat", || p.step()).secs()

@@ -6,7 +6,7 @@
 
 mod common;
 
-use cagra::apps::{bc, bfs, cf, pagerank};
+use cagra::apps::{bc, bfs, cf};
 use cagra::bench::{header, Bencher, Table};
 use cagra::graph::datasets::GRAPH_DATASETS;
 
@@ -21,16 +21,10 @@ fn main() {
         let g = &ds.graph;
         let mut b = Bencher::new();
         b.reps = b.reps.min(3);
-        let base = common::time_pagerank_iter(&mut b, "base", g, &cfg, pagerank::Variant::Baseline);
-        let r = common::time_pagerank_iter(&mut b, "reorder", g, &cfg, pagerank::Variant::Reordered);
-        let s = common::time_pagerank_iter(&mut b, "segment", g, &cfg, pagerank::Variant::Segmented);
-        let rs = common::time_pagerank_iter(
-            &mut b,
-            "both",
-            g,
-            &cfg,
-            pagerank::Variant::ReorderedSegmented,
-        );
+        let base = common::time_app_iter(&mut b, "base", g, &cfg, "pagerank", "baseline");
+        let r = common::time_app_iter(&mut b, "reorder", g, &cfg, "pagerank", "reordering");
+        let s = common::time_app_iter(&mut b, "segment", g, &cfg, "pagerank", "segmenting");
+        let rs = common::time_app_iter(&mut b, "both", g, &cfg, "pagerank", "both");
         t.row(&[
             name.to_string(),
             format!("{:.2}x", base / r),
@@ -62,9 +56,9 @@ fn main() {
         let sources = bc::default_sources(g, 2);
         let mut b = Bencher::new();
         b.reps = b.reps.min(2);
-        // BC grid.
+        // BC grid (BC's own variant enum since the AppKind redesign).
         let mut bc_times = Vec::new();
-        for v in bfs::Variant::all() {
+        for v in bc::Variant::all() {
             let p = bc::Prepared::new(g, *v);
             bc_times.push(
                 b.bench(&format!("bc-{}", v.name()), || {

@@ -33,7 +33,7 @@ fn main() {
         b.reps = b.reps.min(3);
         let times: Vec<f64> = pagerank::Variant::all()
             .iter()
-            .map(|&v| common::time_pagerank_iter(&mut b, v.name(), g, &cfg, v) / m * 1e9)
+            .map(|&v| common::time_app_iter(&mut b, v.name(), g, &cfg, "pagerank", v.name()) / m * 1e9)
             .collect();
         let sim_base = simulate_pagerank(g, &cfg, pagerank::Variant::Baseline);
         let sim_both = simulate_pagerank(g, &cfg, pagerank::Variant::ReorderedSegmented);

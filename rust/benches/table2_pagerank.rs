@@ -5,7 +5,6 @@
 
 mod common;
 
-use cagra::apps::pagerank::Variant;
 use cagra::baselines::{graphmat_style, gridgraph_style, ligra_style};
 use cagra::bench::{header, Bencher, Table};
 use cagra::graph::datasets::GRAPH_DATASETS;
@@ -25,9 +24,10 @@ fn main() {
         let ds = common::load(name);
         let g = &ds.graph;
         let mut b = Bencher::new();
-        let opt =
-            common::time_pagerank_iter(&mut b, "optimized", g, &cfg, Variant::ReorderedSegmented);
-        let base = common::time_pagerank_iter(&mut b, "baseline", g, &cfg, Variant::Baseline);
+        // Our variants run through the app registry — the same pipeline
+        // the CLI uses; the baseline frameworks keep their own drivers.
+        let opt = common::time_app_iter(&mut b, "optimized", g, &cfg, "pagerank", "both");
+        let base = common::time_app_iter(&mut b, "baseline", g, &cfg, "pagerank", "baseline");
         let gm = {
             let mut p = graphmat_style::Prepared::new(g, &cfg);
             p.reset();

@@ -5,7 +5,6 @@
 
 mod common;
 
-use cagra::apps::cf;
 use cagra::bench::{header, Bencher, Table};
 use cagra::graph::datasets::CF_DATASETS;
 
@@ -19,16 +18,9 @@ fn main() {
         let mut b = Bencher::new();
         // Reps trimmed: CF iterations are heavy on the 4x dataset.
         b.reps = b.reps.min(3);
-        let opt = {
-            let mut p = cf::Prepared::new(g, &cfg, cf::Variant::Segmented);
-            b.bench_work("optimized", Some(g.num_edges() as u64), &mut || p.step())
-                .secs()
-        };
-        let base = {
-            let mut p = cf::Prepared::new(g, &cfg, cf::Variant::Baseline);
-            b.bench_work("baseline", Some(g.num_edges() as u64), &mut || p.step())
-                .secs()
-        };
+        // Both variants run through the app registry pipeline.
+        let opt = common::time_app_iter(&mut b, "optimized", g, &cfg, "cf", "segmenting");
+        let base = common::time_app_iter(&mut b, "baseline", g, &cfg, "cf", "baseline");
         table.row(&[
             name.to_string(),
             common::cell(opt, opt),

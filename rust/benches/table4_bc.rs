@@ -21,18 +21,10 @@ fn main() {
         let sources = bc::default_sources(g, sources_n);
         let mut b = Bencher::new();
         b.reps = b.reps.min(3);
-        let opt_prep = bc::Prepared::new(g, bc::Variant::ReorderedBitvector);
-        let opt = b
-            .bench_work("optimized", Some(g.num_edges() as u64), &mut || {
-                let _ = opt_prep.run(&sources);
-            })
-            .secs();
-        let base_prep = bc::Prepared::new(g, bc::Variant::Baseline);
-        let base = b
-            .bench_work("ligra", Some(g.num_edges() as u64), &mut || {
-                let _ = base_prep.run(&sources);
-            })
-            .secs();
+        // Both variants run through the app registry pipeline.
+        let cfg = common::config();
+        let opt = common::time_app_sources(&mut b, "optimized", g, &cfg, "bc", "both", &sources);
+        let base = common::time_app_sources(&mut b, "ligra", g, &cfg, "bc", "baseline", &sources);
         table.row(&[
             name.to_string(),
             common::cell(opt, opt),

@@ -5,7 +5,7 @@
 
 mod common;
 
-use cagra::apps::{bc, bfs};
+use cagra::apps::bc;
 use cagra::bench::{header, Bencher, Table};
 use cagra::graph::datasets::GRAPH_DATASETS;
 
@@ -22,22 +22,10 @@ fn main() {
         let sources = bc::default_sources(g, sources_n);
         let mut b = Bencher::new();
         b.reps = b.reps.min(3);
-        let opt_prep = bfs::Prepared::new(g, bfs::Variant::ReorderedBitvector);
-        let opt = b
-            .bench_work("optimized", Some(g.num_edges() as u64), &mut || {
-                for &s in &sources {
-                    let _ = opt_prep.run(s);
-                }
-            })
-            .secs();
-        let base_prep = bfs::Prepared::new(g, bfs::Variant::Baseline);
-        let base = b
-            .bench_work("ligra", Some(g.num_edges() as u64), &mut || {
-                for &s in &sources {
-                    let _ = base_prep.run(s);
-                }
-            })
-            .secs();
+        // Both variants run through the app registry pipeline.
+        let cfg = common::config();
+        let opt = common::time_app_sources(&mut b, "optimized", g, &cfg, "bfs", "both", &sources);
+        let base = common::time_app_sources(&mut b, "ligra", g, &cfg, "bfs", "baseline", &sources);
         table.row(&[
             name.to_string(),
             common::cell(opt, opt),

@@ -71,13 +71,7 @@ fn main() {
                 });
             })
             .secs();
-        let iter = common::time_pagerank_iter(
-            &mut b,
-            "pr-iter",
-            g,
-            &cfg,
-            cagra::apps::pagerank::Variant::Baseline,
-        );
+        let iter = common::time_app_iter(&mut b, "pr-iter", g, &cfg, "pagerank", "baseline");
         t.row(&[
             name.to_string(),
             fmt_secs(reord),

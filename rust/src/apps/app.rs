@@ -1,0 +1,224 @@
+//! The unified application API: every workload is a [`GraphApp`] that the
+//! coordinator drives through one generic pipeline.
+//!
+//! The paper's framing is that frequency-based clustering (§3) and CSR
+//! segmenting (§4) are *framework-level* techniques that "can be easily
+//! implemented on top of optimized graph frameworks" — which only holds if
+//! applications plug into the framework through a single surface instead
+//! of being hand-wired into the coordinator. This module is that surface:
+//!
+//! - [`AppKind`] — a fully-parsed (app, variant) pair. Each application
+//!   keeps its own typed variant enum (`pagerank::Variant`,
+//!   `bc::Variant`, ...); `AppKind` is the closed union the pipeline and
+//!   `JobSpec` carry around.
+//! - [`GraphApp`] — the dyn-compatible application object: name/aliases,
+//!   the variant table ([`VariantInfo`]) that drives CLI parsing and
+//!   `cagra apps`, the artifact-store policy ([`GraphApp::uses_store`]),
+//!   and [`GraphApp::prepare`], which runs all preprocessing and returns a
+//!   ready-to-execute [`PreparedApp`].
+//! - [`PreparedApp`] + [`ExecutionShape`] — how the generic job loop
+//!   drives a prepared instance: iterative apps expose `step()` (one
+//!   iteration per call), per-source apps expose `run_source()` (one full
+//!   traversal per call), and every app reports a scalar `summary()` for
+//!   smoke-checking runs.
+//!
+//! The registry of all implementations lives in
+//! [`crate::apps::registry`]; `run_job` never matches on a concrete app.
+
+use crate::cache::StallEstimate;
+use crate::coordinator::SystemConfig;
+use crate::graph::{Csr, VertexId};
+use crate::store::StoreCtx;
+use anyhow::{bail, Result};
+
+use super::{bc, bfs, cc, cf, pagerank, pagerank_delta, sssp, triangle};
+
+/// A fully-parsed application + variant. This is what `JobSpec` carries
+/// and what every [`GraphApp`] method receives; each app interprets only
+/// its own arm (the registry guarantees it is never handed another's).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AppKind {
+    PageRank(pagerank::Variant),
+    PageRankDelta(pagerank_delta::Variant),
+    Cf(cf::Variant),
+    Bc(bc::Variant),
+    Bfs(bfs::Variant),
+    Sssp(sssp::Variant),
+    Cc(cc::Variant),
+    Triangle(triangle::Variant),
+}
+
+impl AppKind {
+    /// Canonical registry name of the app this kind belongs to.
+    pub fn app_name(self) -> &'static str {
+        match self {
+            AppKind::PageRank(_) => "pagerank",
+            AppKind::PageRankDelta(_) => "pagerank-delta",
+            AppKind::Cf(_) => "cf",
+            AppKind::Bc(_) => "bc",
+            AppKind::Bfs(_) => "bfs",
+            AppKind::Sssp(_) => "sssp",
+            AppKind::Cc(_) => "cc",
+            AppKind::Triangle(_) => "triangle",
+        }
+    }
+
+    /// Display name of the variant (the app's own `Variant::name()`).
+    pub fn variant_name(self) -> &'static str {
+        match self {
+            AppKind::PageRank(v) => v.name(),
+            AppKind::PageRankDelta(v) => v.name(),
+            AppKind::Cf(v) => v.name(),
+            AppKind::Bc(v) => v.name(),
+            AppKind::Bfs(v) => v.name(),
+            AppKind::Sssp(v) => v.name(),
+            AppKind::Cc(v) => v.name(),
+            AppKind::Triangle(v) => v.name(),
+        }
+    }
+
+    /// Parse `--app` / `--variant` strings through the registry.
+    pub fn parse(app: &str, variant: &str) -> Result<AppKind> {
+        super::registry::parse(app, variant)
+    }
+}
+
+/// One row of an app's variant table: the canonical CLI spelling, the
+/// accepted aliases, and the parsed kind. `cagra apps`, `AppKind::parse`,
+/// and the round-trip tests all read the same table, so help text cannot
+/// drift from what the parser accepts.
+#[derive(Debug, Clone, Copy)]
+pub struct VariantInfo {
+    /// Canonical variant name (always parseable).
+    pub name: &'static str,
+    /// Additional accepted spellings (including the display name when it
+    /// differs from the canonical CLI one, e.g. "reordering+segmenting").
+    pub aliases: &'static [&'static str],
+    /// The parsed (app, variant) pair.
+    pub kind: AppKind,
+}
+
+/// How the generic job loop drives a [`PreparedApp`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecutionShape {
+    /// `step()` runs one iteration; the loop calls it `JobSpec::iters`
+    /// times (PageRank, PageRank-Delta, CF, CC).
+    Iterative,
+    /// `run_source(src)` runs one full traversal; the loop calls it once
+    /// per source from [`default_sources`] (BFS, BC, SSSP).
+    PerSource,
+    /// The degenerate case: all work happens at prepare time and the
+    /// result is already in `summary()` (Triangle Counting). The loop
+    /// executes nothing, so per-iteration metrics stay empty instead of
+    /// timing no-ops into a bogus throughput figure.
+    OneShot,
+}
+
+/// A preprocessed, ready-to-execute application instance. Construction
+/// (via [`GraphApp::prepare`]) performs all preprocessing — reordering,
+/// segmenting, transposes — so the pipeline can time preprocessing and
+/// execution separately (paper Table 9 vs Tables 2–5).
+pub trait PreparedApp {
+    /// Which of the two driver loops this instance expects.
+    fn shape(&self) -> ExecutionShape;
+
+    /// One iteration ([`ExecutionShape::Iterative`] apps only).
+    fn step(&mut self) {
+        panic!("step() called on a per-source app");
+    }
+
+    /// One traversal from `source`, in **original** vertex-id space
+    /// ([`ExecutionShape::PerSource`] apps only). Results accumulate
+    /// across calls (BC sums dependency scores, BFS sums reached counts).
+    fn run_source(&mut self, source: VertexId) {
+        let _ = source;
+        panic!("run_source() called on an iterative app");
+    }
+
+    /// Deterministic scalar summary of everything executed so far (rank
+    /// L1 mass, RMSE, reached count, max centrality, ...). Finite and
+    /// nonzero on any non-degenerate run; used for smoke checks and the
+    /// warm-vs-cold bitwise store invariants.
+    fn summary(&self) -> f64;
+}
+
+/// A registered application. Implementations are zero-sized adapter
+/// structs (`pagerank::App`, `bc::App`, ...) listed in
+/// [`crate::apps::registry::APPS`]; the trait is dyn-compatible so the
+/// coordinator can hold `&'static dyn GraphApp` and stay app-agnostic.
+pub trait GraphApp: Sync {
+    /// Canonical registry name (`cagra run --app <name>`).
+    fn name(&self) -> &'static str;
+
+    /// Accepted alternative app names.
+    fn aliases(&self) -> &'static [&'static str] {
+        &[]
+    }
+
+    /// One-line description for `cagra apps`.
+    fn description(&self) -> &'static str;
+
+    /// The variant table: every variant this app can run, with parse
+    /// aliases. The table is the single source of truth for CLI parsing,
+    /// help output, and sweep enumeration.
+    fn variants(&self) -> &'static [VariantInfo];
+
+    /// The variant used when the CLI gives none (each app's "optimized"
+    /// configuration by convention).
+    fn default_variant(&self) -> AppKind;
+
+    /// Whether `prepare` would route preprocessing artifacts through the
+    /// persistent store for this variant. The pipeline skips opening the
+    /// store (and fingerprinting the graph) entirely when this is false,
+    /// so `--store` adds no overhead or misleading 0-hit stats to
+    /// variants that do no cacheable preprocessing.
+    fn uses_store(&self, kind: AppKind) -> bool {
+        let _ = kind;
+        false
+    }
+
+    /// Run all preprocessing for `kind` and return the executable
+    /// instance. `store`, when present, persists/fetches preprocessing
+    /// artifacts (the Table 9 amortization).
+    fn prepare(
+        &self,
+        g: &Csr,
+        cfg: &SystemConfig,
+        kind: AppKind,
+        store: Option<StoreCtx<'_>>,
+    ) -> Result<Box<dyn PreparedApp>>;
+
+    /// Simulated memory-system stall estimate for one representative
+    /// execution unit under `kind`, if this app supports analysis
+    /// (`JobSpec::analyze_memory`).
+    fn simulate(&self, g: &Csr, cfg: &SystemConfig, kind: AppKind) -> Option<StallEstimate> {
+        let _ = (g, cfg, kind);
+        None
+    }
+
+    /// Parse a variant string against [`GraphApp::variants`].
+    fn parse_variant(&self, variant: &str) -> Result<AppKind> {
+        for info in self.variants() {
+            if info.name == variant || info.aliases.iter().any(|&a| a == variant) {
+                return Ok(info.kind);
+            }
+        }
+        let known: Vec<&str> = self.variants().iter().map(|i| i.name).collect();
+        bail!(
+            "unknown {} variant {variant:?} (expected one of: {})",
+            self.name(),
+            known.join("|")
+        )
+    }
+}
+
+/// Deterministic source selection for per-source apps: the paper's
+/// evaluation uses "12 different starting points"; we pick the `count`
+/// highest-degree vertices (original ids). Shared by BFS, BC, and SSSP so
+/// every per-source job is comparable.
+pub fn default_sources(g: &Csr, count: usize) -> Vec<VertexId> {
+    let mut by_degree: Vec<VertexId> = (0..g.num_vertices() as VertexId).collect();
+    by_degree.sort_by_key(|&v| std::cmp::Reverse(g.degree(v)));
+    by_degree.truncate(count);
+    by_degree
+}

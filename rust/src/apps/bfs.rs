@@ -2,9 +2,13 @@
 //! push/pull EdgeMap, with the optional bitvector frontier and vertex
 //! reordering variants measured in §6.3 / Table 8.
 
+use super::app::{AppKind, ExecutionShape, GraphApp, PreparedApp, VariantInfo};
+use crate::coordinator::SystemConfig;
 use crate::engine::{edge_map, EdgeMapOpts, VertexSubset};
 use crate::graph::{Csr, VertexId};
-use crate::reorder::{self, Ordering as VOrdering};
+use crate::reorder;
+use crate::store::StoreCtx;
+use anyhow::{bail, Result};
 use std::sync::atomic::{AtomicU32, Ordering};
 
 /// BFS optimization mix.
@@ -60,10 +64,25 @@ pub struct Prepared {
 }
 
 impl Prepared {
+    /// Preprocess without the artifact store (coarsening threshold from
+    /// the default [`SystemConfig`]).
     pub fn new(g: &Csr, variant: Variant) -> Prepared {
+        Self::new_cached(g, &SystemConfig::default(), variant, None)
+    }
+
+    /// Like [`Prepared::new`], but the reordering permutation goes
+    /// through the persistent store when `store` is present (same
+    /// ordering key as PageRank and BC, so the artifact is shared across
+    /// apps on the same dataset).
+    pub fn new_cached(
+        g: &Csr,
+        cfg: &SystemConfig,
+        variant: Variant,
+        store: Option<StoreCtx<'_>>,
+    ) -> Prepared {
         let (work, perm) = if variant.reordered() {
-            let (h, p) = reorder::reorder(g, VOrdering::CoarseDegreeSort);
-            (h, Some(p))
+            let perm = reorder::cached_degree_sort_perm(g, cfg.coarsen, store);
+            (g.relabel(&perm), Some(perm))
         } else {
             (g.clone(), None)
         };
@@ -121,6 +140,93 @@ impl Prepared {
             }
             _ => raw,
         }
+    }
+}
+
+/// [`PreparedApp`] adapter: accumulates the reached-vertex count across
+/// `run_source` calls.
+pub struct PreparedBfs {
+    prep: Prepared,
+    reached: u64,
+}
+
+impl PreparedApp for PreparedBfs {
+    fn shape(&self) -> ExecutionShape {
+        ExecutionShape::PerSource
+    }
+
+    fn run_source(&mut self, source: VertexId) {
+        let parents = self.prep.run(source);
+        self.reached += parents.iter().filter(|&&p| p != u32::MAX).count() as u64;
+    }
+
+    /// Total vertices reached over all sources run so far.
+    fn summary(&self) -> f64 {
+        self.reached as f64
+    }
+}
+
+/// Registry adapter: BFS as a [`GraphApp`].
+pub struct App;
+
+const VARIANTS: &[VariantInfo] = &[
+    VariantInfo {
+        name: "baseline",
+        aliases: &[],
+        kind: AppKind::Bfs(Variant::Baseline),
+    },
+    VariantInfo {
+        name: "reordering",
+        aliases: &["reorder"],
+        kind: AppKind::Bfs(Variant::Reordered),
+    },
+    VariantInfo {
+        name: "bitvector",
+        aliases: &[],
+        kind: AppKind::Bfs(Variant::Bitvector),
+    },
+    VariantInfo {
+        name: "both",
+        aliases: &["optimized", "reordering+bitvector"],
+        kind: AppKind::Bfs(Variant::ReorderedBitvector),
+    },
+];
+
+impl GraphApp for App {
+    fn name(&self) -> &'static str {
+        "bfs"
+    }
+
+    fn description(&self) -> &'static str {
+        "Breadth-First Search — direction-optimizing, activeness-only (smallest working set)"
+    }
+
+    fn variants(&self) -> &'static [VariantInfo] {
+        VARIANTS
+    }
+
+    fn default_variant(&self) -> AppKind {
+        AppKind::Bfs(Variant::ReorderedBitvector)
+    }
+
+    fn uses_store(&self, kind: AppKind) -> bool {
+        matches!(kind, AppKind::Bfs(v) if v.reordered())
+    }
+
+    fn prepare(
+        &self,
+        g: &Csr,
+        cfg: &SystemConfig,
+        kind: AppKind,
+        store: Option<StoreCtx<'_>>,
+    ) -> Result<Box<dyn PreparedApp>> {
+        let AppKind::Bfs(v) = kind else {
+            bail!("bfs app handed foreign kind {kind:?}")
+        };
+        Ok(Box::new(PreparedBfs {
+            prep: Prepared::new_cached(g, cfg, v, store),
+            reached: 0,
+        }))
     }
 }
 

@@ -7,10 +7,13 @@
 //! Components are computed over the *undirected* view (labels flow both
 //! ways), matching the usual CC definition on these datasets.
 
+use super::app::{AppKind, ExecutionShape, GraphApp, PreparedApp, VariantInfo};
 use crate::coordinator::SystemConfig;
 use crate::engine::segmented_edge_map;
 use crate::graph::{Csr, CsrBuilder, VertexId};
 use crate::segment::SegmentedCsr;
+use crate::store::StoreCtx;
+use anyhow::{bail, Result};
 
 /// CC execution variant.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -19,6 +22,19 @@ pub enum Variant {
     Baseline,
     /// Sweeps through the generic SegmentedEdgeMap.
     Segmented,
+}
+
+impl Variant {
+    pub fn name(self) -> &'static str {
+        match self {
+            Variant::Baseline => "baseline",
+            Variant::Segmented => "segmenting",
+        }
+    }
+
+    pub fn all() -> &'static [Variant] {
+        &[Variant::Baseline, Variant::Segmented]
+    }
 }
 
 /// Result labels: `labels[v]` = min vertex id in v's component.
@@ -39,37 +55,66 @@ pub fn symmetrize(g: &Csr) -> Csr {
     b.build()
 }
 
-/// Run CC until the labels stop changing.
-pub fn run(g: &Csr, cfg: &SystemConfig, variant: Variant, max_iters: usize) -> CcResult {
-    let n = g.num_vertices();
-    let sym = symmetrize(g);
-    let seg = match variant {
-        Variant::Segmented => Some(SegmentedCsr::build_with_block(
-            &sym,
-            cfg.segment_size(4),
-            cfg.merge_block(4),
-        )),
-        Variant::Baseline => None,
-    };
-    let pull = match variant {
-        Variant::Baseline => Some(sym.transpose()),
-        Variant::Segmented => None,
-    };
-    let mut labels: Vec<VertexId> = (0..n as VertexId).collect();
-    let mut next = vec![0 as VertexId; n];
-    let mut iterations = 0;
-    while iterations < max_iters {
-        iterations += 1;
-        match variant {
+/// Preprocessed CC state: the symmetrized view (and its segmented or
+/// pull form) is built once; [`Prepared::sweep`] runs one min-label
+/// propagation pass.
+pub struct Prepared {
+    variant: Variant,
+    seg: Option<SegmentedCsr>,
+    pull: Option<Csr>,
+    labels: Vec<VertexId>,
+    next: Vec<VertexId>,
+    iterations: usize,
+    converged: bool,
+}
+
+impl Prepared {
+    pub fn new(g: &Csr, cfg: &SystemConfig, variant: Variant) -> Prepared {
+        let n = g.num_vertices();
+        let sym = symmetrize(g);
+        let seg = match variant {
+            Variant::Segmented => Some(SegmentedCsr::build_with_block(
+                &sym,
+                cfg.segment_size(4),
+                cfg.merge_block(4),
+            )),
+            Variant::Baseline => None,
+        };
+        let pull = match variant {
+            Variant::Baseline => Some(sym.transpose()),
+            Variant::Segmented => None,
+        };
+        Prepared {
+            variant,
+            seg,
+            pull,
+            labels: (0..n as VertexId).collect(),
+            next: vec![0 as VertexId; n],
+            iterations: 0,
+            converged: false,
+        }
+    }
+
+    /// One propagation sweep; returns whether any label changed.
+    pub fn sweep(&mut self) -> bool {
+        let n = self.labels.len();
+        self.iterations += 1;
+        match self.variant {
             Variant::Segmented => {
-                let sg = seg.as_ref().unwrap();
-                let l = &labels;
-                segmented_edge_map(sg, |u| l[u as usize], |a, b| a.min(b), VertexId::MAX, &mut next);
+                let sg = self.seg.as_ref().unwrap();
+                let l = &self.labels;
+                segmented_edge_map(
+                    sg,
+                    |u| l[u as usize],
+                    |a, b| a.min(b),
+                    VertexId::MAX,
+                    &mut self.next,
+                );
             }
             Variant::Baseline => {
-                let p = pull.as_ref().unwrap();
-                let l = &labels;
-                let slice = crate::parallel::UnsafeSlice::new(&mut next);
+                let p = self.pull.as_ref().unwrap();
+                let l = &self.labels;
+                let slice = crate::parallel::UnsafeSlice::new(&mut self.next);
                 crate::parallel::parallel_for(n, |v| {
                     let mut m = VertexId::MAX;
                     for &u in p.neighbors(v as VertexId) {
@@ -82,25 +127,112 @@ pub fn run(g: &Csr, cfg: &SystemConfig, variant: Variant, max_iters: usize) -> C
         // Apply: label = min(own, best neighbor); detect fixpoint.
         let mut changed = false;
         for v in 0..n {
-            let cand = next[v].min(labels[v]);
-            if cand != labels[v] {
-                labels[v] = cand;
+            let cand = self.next[v].min(self.labels[v]);
+            if cand != self.labels[v] {
+                self.labels[v] = cand;
                 changed = true;
             }
         }
-        if !changed {
+        self.converged = !changed;
+        changed
+    }
+
+    /// Current labels (min vertex id seen per component so far).
+    pub fn labels(&self) -> &[VertexId] {
+        &self.labels
+    }
+
+    pub fn iterations(&self) -> usize {
+        self.iterations
+    }
+
+    /// Components implied by the current labels (exact once converged).
+    pub fn num_components(&self) -> usize {
+        self.labels
+            .iter()
+            .enumerate()
+            .filter(|&(v, &l)| l as usize == v)
+            .count()
+    }
+}
+
+impl PreparedApp for Prepared {
+    fn shape(&self) -> ExecutionShape {
+        ExecutionShape::Iterative
+    }
+
+    fn step(&mut self) {
+        if !self.converged {
+            self.sweep();
+        }
+    }
+
+    /// Number of components implied by the labels so far (≥ 1 on any
+    /// nonempty graph).
+    fn summary(&self) -> f64 {
+        self.num_components() as f64
+    }
+}
+
+/// Registry adapter: Connected Components as a [`GraphApp`].
+pub struct App;
+
+const VARIANTS: &[VariantInfo] = &[
+    VariantInfo {
+        name: "baseline",
+        aliases: &[],
+        kind: AppKind::Cc(Variant::Baseline),
+    },
+    VariantInfo {
+        name: "segmenting",
+        aliases: &["segment", "optimized"],
+        kind: AppKind::Cc(Variant::Segmented),
+    },
+];
+
+impl GraphApp for App {
+    fn name(&self) -> &'static str {
+        "cc"
+    }
+
+    fn description(&self) -> &'static str {
+        "Connected Components — min-label propagation through the generic SegmentedEdgeMap (§4.4)"
+    }
+
+    fn variants(&self) -> &'static [VariantInfo] {
+        VARIANTS
+    }
+
+    fn default_variant(&self) -> AppKind {
+        AppKind::Cc(Variant::Segmented)
+    }
+
+    fn prepare(
+        &self,
+        g: &Csr,
+        cfg: &SystemConfig,
+        kind: AppKind,
+        _store: Option<StoreCtx<'_>>,
+    ) -> Result<Box<dyn PreparedApp>> {
+        let AppKind::Cc(v) = kind else {
+            bail!("cc app handed foreign kind {kind:?}")
+        };
+        Ok(Box::new(Prepared::new(g, cfg, v)))
+    }
+}
+
+/// Run CC until the labels stop changing.
+pub fn run(g: &Csr, cfg: &SystemConfig, variant: Variant, max_iters: usize) -> CcResult {
+    let mut p = Prepared::new(g, cfg, variant);
+    while p.iterations < max_iters {
+        if !p.sweep() {
             break;
         }
     }
-    let mut num_components = 0;
-    for (v, &l) in labels.iter().enumerate() {
-        if l as usize == v {
-            num_components += 1;
-        }
-    }
+    let num_components = p.num_components();
     CcResult {
-        labels,
-        iterations,
+        labels: p.labels,
+        iterations: p.iterations,
         num_components,
     }
 }

@@ -17,12 +17,14 @@
 //! (1..=5), so runs are reproducible without the (unavailable) Netflix
 //! data.
 
+use super::app::{AppKind, ExecutionShape, GraphApp, PreparedApp, VariantInfo};
 use crate::coordinator::SystemConfig;
 use crate::graph::{Csr, VertexId};
 use crate::parallel::{parallel_for, parallel_for_cost, UnsafeSlice};
 use crate::segment::SegmentedCsr;
 use crate::store::{StoreCtx, StoreKey};
 use crate::util::rng::Rng;
+use anyhow::{bail, Result};
 
 /// Deterministic synthetic rating for edge (u, i) in 1..=5.
 #[inline]
@@ -290,6 +292,72 @@ impl Prepared {
 
     pub fn num_edges(&self) -> usize {
         self.user_pull.num_edges()
+    }
+}
+
+impl PreparedApp for Prepared {
+    fn shape(&self) -> ExecutionShape {
+        ExecutionShape::Iterative
+    }
+
+    fn step(&mut self) {
+        Prepared::step(self)
+    }
+
+    /// RMSE over all ratings after the iterations run so far.
+    fn summary(&self) -> f64 {
+        self.rmse()
+    }
+}
+
+/// Registry adapter: Collaborative Filtering as a [`GraphApp`].
+pub struct App;
+
+const VARIANTS: &[VariantInfo] = &[
+    VariantInfo {
+        name: "baseline",
+        aliases: &[],
+        kind: AppKind::Cf(Variant::Baseline),
+    },
+    VariantInfo {
+        name: "segmenting",
+        aliases: &["segment", "optimized"],
+        kind: AppKind::Cf(Variant::Segmented),
+    },
+];
+
+impl GraphApp for App {
+    fn name(&self) -> &'static str {
+        "cf"
+    }
+
+    fn description(&self) -> &'static str {
+        "Collaborative Filtering — gradient-descent matrix factorization (K-double latent rows)"
+    }
+
+    fn variants(&self) -> &'static [VariantInfo] {
+        VARIANTS
+    }
+
+    fn default_variant(&self) -> AppKind {
+        AppKind::Cf(Variant::Segmented)
+    }
+
+    fn uses_store(&self, kind: AppKind) -> bool {
+        kind == AppKind::Cf(Variant::Segmented)
+    }
+
+    fn prepare(
+        &self,
+        g: &Csr,
+        cfg: &SystemConfig,
+        kind: AppKind,
+        store: Option<StoreCtx<'_>>,
+    ) -> Result<Box<dyn PreparedApp>> {
+        let AppKind::Cf(v) = kind else {
+            bail!("cf app handed foreign kind {kind:?}")
+        };
+        Ok(Box::new(Prepared::new_cached(g, cfg, v, store)))
     }
 }
 

@@ -1,7 +1,16 @@
-//! The evaluation's applications (§6.1 "Applications"):
+//! The evaluation's applications (§6.1 "Applications"), unified behind
+//! one API.
 //!
-//! - [`pagerank`] — iterative, activeness-free, dominated by random vertex
-//!   reads (the running example).
+//! Every workload implements [`GraphApp`] (defined in [`app`]) and is
+//! listed in [`registry::APPS`]; the coordinator's `run_job`, the CLI,
+//! and the benches drive all of them through the same
+//! prepare → execute → summarize pipeline, so the paper's cache
+//! optimizations stay framework-level instead of per-app wiring:
+//!
+//! - [`pagerank`] — iterative, activeness-free, dominated by random
+//!   vertex reads (the running example).
+//! - [`pagerank_delta`] — PageRank-Delta (frontier-thinned PageRank;
+//!   activeness checks + unpredictable vertex reads).
 //! - [`cf`] — Collaborative Filtering: matrix factorization by gradient
 //!   descent; full cache lines per vertex (K-double latent vectors).
 //! - [`bc`] — Betweenness Centrality (Brandes): frontier-driven with
@@ -10,10 +19,17 @@
 //!   set.
 //! - [`sssp`] — single-source shortest paths (Bellman–Ford over
 //!   frontiers), the class BC represents.
-//! - [`pagerank_delta`] — PageRank-Delta (frontier-thinned PageRank).
 //! - [`triangle`] — Triangle Counting (degree-ordered, activeness-free).
 //! - [`cc`] — Connected Components via min-label propagation through the
 //!   generic SegmentedEdgeMap (the §4.4 associative-commutative claim).
+//!
+//! Each module contributes: its typed `Variant` enum, a `Prepared`
+//! execution state (preprocessing separated from iteration, Table 9), a
+//! serial reference implementation for the golden tests, and a zero-sized
+//! `App` adapter implementing [`GraphApp`].
+
+pub mod app;
+pub mod registry;
 
 pub mod pagerank;
 pub mod cf;
@@ -23,3 +39,5 @@ pub mod sssp;
 pub mod pagerank_delta;
 pub mod triangle;
 pub mod cc;
+
+pub use app::{default_sources, AppKind, ExecutionShape, GraphApp, PreparedApp, VariantInfo};

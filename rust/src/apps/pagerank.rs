@@ -8,12 +8,15 @@
 //! reciprocal multiply ("we change division operations to multiplication
 //! of reciprocal").
 
+use super::app::{AppKind, ExecutionShape, GraphApp, PreparedApp, VariantInfo};
+use crate::cache::StallEstimate;
 use crate::coordinator::SystemConfig;
 use crate::graph::{degree_prefix, Csr, VertexId};
 use crate::parallel::{parallel_for, parallel_for_cost, UnsafeSlice};
 use crate::reorder;
 use crate::segment::{SegmentBuffers, SegmentedCsr};
 use crate::store::{StoreCtx, StoreKey};
+use anyhow::{bail, Result};
 
 /// Which optimization mix to run (Figure 2 / Figure 8's bar groups).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -138,19 +141,14 @@ impl Prepared {
     ) -> Prepared {
         let n = g.num_vertices();
         // Honor cfg.coarsen exactly (coarsen = 1 is the §3.2 exact sort,
-        // anything else the §3.3 banded sort) and bake it into the store
-        // label so differently-coarsened artifacts can never alias.
+        // anything else the §3.3 banded sort); the store label comes from
+        // reorder::degree_sort_label so differently-coarsened artifacts
+        // can never alias and the permutation is shared with BC/BFS.
         let coarsen = cfg.coarsen.max(1);
-        let ord_label = format!("degree-sorted-c{coarsen}");
+        let ord_label = reorder::degree_sort_label(coarsen);
         let perm = match variant {
             Variant::Reordered | Variant::ReorderedSegmented => {
-                let build_perm = || reorder::degree_sort_perm(g, coarsen);
-                Some(match store {
-                    Some(c) => {
-                        c.get_or_build(StoreKey::ordering(c.fingerprint, &ord_label), build_perm)
-                    }
-                    None => build_perm(),
-                })
+                Some(reorder::cached_degree_sort_perm(g, coarsen, store))
             }
             _ => None,
         };
@@ -343,6 +341,104 @@ impl Prepared {
             (_, Some(s)) => s.num_edges(),
             _ => 0,
         }
+    }
+}
+
+impl PreparedApp for Prepared {
+    fn shape(&self) -> ExecutionShape {
+        ExecutionShape::Iterative
+    }
+
+    fn step(&mut self) {
+        Prepared::step(self)
+    }
+
+    /// Rank L1 mass in original id space — deterministic, so warm and
+    /// cold store runs must agree bitwise.
+    fn summary(&self) -> f64 {
+        self.values().iter().sum()
+    }
+}
+
+/// Registry adapter: PageRank as a [`GraphApp`].
+pub struct App;
+
+const VARIANTS: &[VariantInfo] = &[
+    VariantInfo {
+        name: "baseline",
+        aliases: &[],
+        kind: AppKind::PageRank(Variant::Baseline),
+    },
+    VariantInfo {
+        name: "reordering",
+        aliases: &["reorder"],
+        kind: AppKind::PageRank(Variant::Reordered),
+    },
+    VariantInfo {
+        name: "segmenting",
+        aliases: &["segment"],
+        kind: AppKind::PageRank(Variant::Segmented),
+    },
+    VariantInfo {
+        name: "both",
+        aliases: &["optimized", "reordering+segmenting"],
+        kind: AppKind::PageRank(Variant::ReorderedSegmented),
+    },
+    VariantInfo {
+        name: "lower-bound",
+        aliases: &["no-random-lower-bound"],
+        kind: AppKind::PageRank(Variant::NoRandomLowerBound),
+    },
+];
+
+impl GraphApp for App {
+    fn name(&self) -> &'static str {
+        "pagerank"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["pr"]
+    }
+
+    fn description(&self) -> &'static str {
+        "PageRank — iterative, activeness-free random vertex reads (the running example)"
+    }
+
+    fn variants(&self) -> &'static [VariantInfo] {
+        VARIANTS
+    }
+
+    fn default_variant(&self) -> AppKind {
+        AppKind::PageRank(Variant::ReorderedSegmented)
+    }
+
+    fn uses_store(&self, kind: AppKind) -> bool {
+        // Only variants that actually preprocess (reorder and/or segment)
+        // have artifacts worth persisting.
+        matches!(
+            kind,
+            AppKind::PageRank(Variant::Reordered)
+                | AppKind::PageRank(Variant::Segmented)
+                | AppKind::PageRank(Variant::ReorderedSegmented)
+        )
+    }
+
+    fn prepare(
+        &self,
+        g: &Csr,
+        cfg: &SystemConfig,
+        kind: AppKind,
+        store: Option<StoreCtx<'_>>,
+    ) -> Result<Box<dyn PreparedApp>> {
+        let AppKind::PageRank(v) = kind else {
+            bail!("pagerank app handed foreign kind {kind:?}")
+        };
+        Ok(Box::new(Prepared::new_cached(g, cfg, v, store)))
+    }
+
+    fn simulate(&self, g: &Csr, cfg: &SystemConfig, kind: AppKind) -> Option<StallEstimate> {
+        let AppKind::PageRank(v) = kind else { return None };
+        Some(crate::coordinator::job::simulate_pagerank(g, cfg, v))
     }
 }
 

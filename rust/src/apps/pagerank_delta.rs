@@ -3,11 +3,29 @@
 //! application (§6.1). Only vertices whose rank changed by more than
 //! `epsilon` propagate updates in the next iteration.
 
+use super::app::{AppKind, ExecutionShape, GraphApp, PreparedApp, VariantInfo};
 use crate::coordinator::SystemConfig;
 use crate::graph::{Csr, VertexId};
 use crate::parallel::atomics::AtomicF64;
 use crate::parallel::parallel_for;
+use crate::store::StoreCtx;
+use anyhow::{bail, Result};
 use std::sync::atomic::Ordering;
+
+/// Execution variant. PageRank-Delta's cache behaviour is dominated by
+/// the shrinking frontier itself, so a single configuration is measured.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Variant {
+    Baseline,
+}
+
+impl Variant {
+    pub fn name(self) -> &'static str {
+        match self {
+            Variant::Baseline => "baseline",
+        }
+    }
+}
 
 /// Result of a PageRank-Delta run.
 #[derive(Debug, Clone)]
@@ -18,42 +36,89 @@ pub struct DeltaResult {
     pub active_history: Vec<usize>,
 }
 
-/// Run PageRank-Delta until no vertex moves more than `epsilon`, or
-/// `max_iters`.
-pub fn run(g: &Csr, cfg: &SystemConfig, epsilon: f64, max_iters: usize) -> DeltaResult {
-    let n = g.num_vertices();
-    let d = cfg.damping;
-    let pull = g.transpose();
-    let inv_deg: Vec<f64> = (0..n)
-        .map(|v| {
-            let deg = g.degree(v as VertexId);
-            if deg == 0 {
-                0.0
-            } else {
-                1.0 / deg as f64
-            }
-        })
-        .collect();
-    let mut rank = vec![(1.0 - d) / n as f64; n];
-    // delta[u] = change in u's rank last iteration (still to propagate).
-    let mut delta: Vec<f64> = rank.clone();
-    let mut active: Vec<bool> = vec![true; n];
-    let mut history = Vec::new();
-    let mut iters = 0;
-    while iters < max_iters {
-        iters += 1;
-        let nactive = active.iter().filter(|&&a| a).count();
-        history.push(nactive);
-        if nactive == 0 {
-            break;
+/// Preprocessed PageRank-Delta state: the pull CSR and reciprocal
+/// degrees are built once; [`Prepared::step`] runs one frontier-thinned
+/// iteration and is a no-op once converged.
+pub struct Prepared {
+    damping: f64,
+    epsilon: f64,
+    pull: Csr,
+    inv_deg: Vec<f64>,
+    rank: Vec<f64>,
+    /// Change in each vertex's rank last iteration (still to propagate).
+    delta: Vec<f64>,
+    active: Vec<bool>,
+    iterations: usize,
+    active_history: Vec<usize>,
+}
+
+impl Prepared {
+    pub fn new(g: &Csr, cfg: &SystemConfig, epsilon: f64) -> Prepared {
+        let n = g.num_vertices();
+        let d = cfg.damping;
+        let pull = g.transpose();
+        let inv_deg: Vec<f64> = (0..n)
+            .map(|v| {
+                let deg = g.degree(v as VertexId);
+                if deg == 0 {
+                    0.0
+                } else {
+                    1.0 / deg as f64
+                }
+            })
+            .collect();
+        let rank = vec![(1.0 - d) / n as f64; n];
+        let delta = rank.clone();
+        Prepared {
+            damping: d,
+            epsilon,
+            pull,
+            inv_deg,
+            rank,
+            delta,
+            active: vec![true; n],
+            iterations: 0,
+            active_history: Vec::new(),
         }
-        // Pull the active neighbors' deltas.
+    }
+
+    /// All frontiers empty: no vertex moved more than `epsilon` last
+    /// iteration, so further steps are no-ops.
+    pub fn converged(&self) -> bool {
+        self.active.iter().all(|&a| !a)
+    }
+
+    pub fn iterations(&self) -> usize {
+        self.iterations
+    }
+
+    pub fn active_history(&self) -> &[usize] {
+        &self.active_history
+    }
+
+    /// Current ranks (original id space; no reordering variant exists).
+    pub fn values(&self) -> &[f64] {
+        &self.rank
+    }
+
+    /// One frontier-thinned iteration: pull the active neighbors' deltas,
+    /// apply, and recompute activeness. A true no-op once converged —
+    /// neither `iterations` nor `active_history` advances.
+    pub fn step(&mut self) {
+        if self.converged() {
+            return;
+        }
+        let n = self.rank.len();
+        self.iterations += 1;
+        self.active_history
+            .push(self.active.iter().filter(|&&a| a).count());
+        let d = self.damping;
         let new_delta: Vec<AtomicF64> = (0..n).map(|_| AtomicF64::new(0.0)).collect();
         {
-            let active = &active;
-            let delta = &delta;
-            let inv_deg = &inv_deg;
-            let pull = &pull;
+            let active = &self.active;
+            let delta = &self.delta;
+            let inv_deg = &self.inv_deg;
+            let pull = &self.pull;
             let nd = &new_delta;
             parallel_for(n, |v| {
                 let mut acc = 0.0;
@@ -67,23 +132,89 @@ pub fn run(g: &Csr, cfg: &SystemConfig, epsilon: f64, max_iters: usize) -> Delta
                 }
             });
         }
-        let mut any = false;
         for v in 0..n {
             let nd = new_delta[v].load(Ordering::Relaxed);
-            rank[v] += nd;
-            delta[v] = nd;
-            let is_active = nd.abs() > epsilon * rank[v].abs().max(1e-300);
-            active[v] = is_active;
-            any |= is_active;
+            self.rank[v] += nd;
+            self.delta[v] = nd;
+            self.active[v] = nd.abs() > self.epsilon * self.rank[v].abs().max(1e-300);
         }
-        if !any {
+    }
+}
+
+impl PreparedApp for Prepared {
+    fn shape(&self) -> ExecutionShape {
+        ExecutionShape::Iterative
+    }
+
+    fn step(&mut self) {
+        Prepared::step(self)
+    }
+
+    /// Accumulated rank mass.
+    fn summary(&self) -> f64 {
+        self.rank.iter().sum()
+    }
+}
+
+/// Run PageRank-Delta until no vertex moves more than `epsilon`, or
+/// `max_iters`.
+pub fn run(g: &Csr, cfg: &SystemConfig, epsilon: f64, max_iters: usize) -> DeltaResult {
+    let mut p = Prepared::new(g, cfg, epsilon);
+    while p.iterations < max_iters {
+        p.step();
+        if p.converged() {
             break;
         }
     }
     DeltaResult {
-        values: rank,
-        iterations: iters,
-        active_history: history,
+        values: p.rank,
+        iterations: p.iterations,
+        active_history: p.active_history,
+    }
+}
+
+/// Registry adapter: PageRank-Delta as a [`GraphApp`]. The convergence
+/// threshold comes from `SystemConfig::delta_epsilon`.
+pub struct App;
+
+const VARIANTS: &[VariantInfo] = &[VariantInfo {
+    name: "baseline",
+    aliases: &[],
+    kind: AppKind::PageRankDelta(Variant::Baseline),
+}];
+
+impl GraphApp for App {
+    fn name(&self) -> &'static str {
+        "pagerank-delta"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["pagerank_delta", "pr-delta", "prdelta"]
+    }
+
+    fn description(&self) -> &'static str {
+        "PageRank-Delta — frontier-thinned PageRank (activeness checks + random vertex reads)"
+    }
+
+    fn variants(&self) -> &'static [VariantInfo] {
+        VARIANTS
+    }
+
+    fn default_variant(&self) -> AppKind {
+        AppKind::PageRankDelta(Variant::Baseline)
+    }
+
+    fn prepare(
+        &self,
+        g: &Csr,
+        cfg: &SystemConfig,
+        kind: AppKind,
+        _store: Option<StoreCtx<'_>>,
+    ) -> Result<Box<dyn PreparedApp>> {
+        let AppKind::PageRankDelta(_) = kind else {
+            bail!("pagerank-delta app handed foreign kind {kind:?}")
+        };
+        Ok(Box::new(Prepared::new(g, cfg, cfg.delta_epsilon)))
     }
 }
 
@@ -120,5 +251,25 @@ mod tests {
             idx
         };
         assert_eq!(top(&exact), top(&approx.values));
+    }
+
+    #[test]
+    fn stepping_past_convergence_is_a_noop() {
+        let (n, e) = generators::rmat(8, 8, generators::RmatParams::graph500(), 97);
+        let g = Csr::from_edges(n, &e);
+        let cfg = SystemConfig::default();
+        let mut p = Prepared::new(&g, &cfg, 1e-3);
+        while !p.converged() && p.iterations() < 200 {
+            p.step();
+        }
+        assert!(p.converged());
+        let frozen = p.values().to_vec();
+        let iters = p.iterations();
+        let hist_len = p.active_history().len();
+        p.step();
+        p.step();
+        assert_eq!(p.values(), &frozen[..]);
+        assert_eq!(p.iterations(), iters, "converged steps must not count");
+        assert_eq!(p.active_history().len(), hist_len);
     }
 }

@@ -1,0 +1,89 @@
+//! The application registry: the one list every pipeline entry point —
+//! `run_job`, the CLI (`cagra run`, `cagra apps`), and the benches —
+//! resolves apps through. Registering an app here is the *only* step
+//! needed to make a new workload reachable from the whole toolchain.
+
+use super::app::{AppKind, GraphApp};
+use super::{bc, bfs, cc, cf, pagerank, pagerank_delta, sssp, triangle};
+use anyhow::{bail, Result};
+
+/// All registered applications — the paper's §6.1 suite, complete.
+pub static APPS: &[&'static dyn GraphApp] = &[
+    &pagerank::App,
+    &pagerank_delta::App,
+    &cf::App,
+    &bc::App,
+    &bfs::App,
+    &sssp::App,
+    &cc::App,
+    &triangle::App,
+];
+
+/// Look an app up by canonical name or alias.
+pub fn find(name: &str) -> Option<&'static dyn GraphApp> {
+    APPS.iter()
+        .copied()
+        .find(|a| a.name() == name || a.aliases().iter().any(|&al| al == name))
+}
+
+/// The registered app a parsed [`AppKind`] belongs to. Infallible by
+/// construction: every `AppKind` arm names a registered app.
+pub fn app_for(kind: AppKind) -> &'static dyn GraphApp {
+    find(kind.app_name()).expect("every AppKind maps to a registered app")
+}
+
+/// Parse `--app` / `--variant` strings into an [`AppKind`].
+pub fn parse(app: &str, variant: &str) -> Result<AppKind> {
+    match find(app) {
+        Some(a) => a.parse_variant(variant),
+        None => {
+            let names: Vec<&str> = APPS.iter().map(|a| a.name()).collect();
+            bail!("unknown app {app:?} (expected one of: {})", names.join("|"))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    #[test]
+    fn eight_apps_registered_with_unique_names() {
+        assert_eq!(APPS.len(), 8);
+        let mut seen = HashSet::new();
+        for app in APPS {
+            assert!(seen.insert(app.name()), "duplicate app name {}", app.name());
+            for alias in app.aliases() {
+                assert!(seen.insert(alias), "alias {alias} collides");
+            }
+            assert!(!app.variants().is_empty(), "{} has no variants", app.name());
+        }
+    }
+
+    #[test]
+    fn default_variant_is_advertised() {
+        for app in APPS {
+            let d = app.default_variant();
+            assert!(
+                app.variants().iter().any(|v| v.kind == d),
+                "{}: default variant not in variants() table",
+                app.name()
+            );
+        }
+    }
+
+    #[test]
+    fn find_resolves_names_and_aliases() {
+        assert_eq!(find("pagerank").unwrap().name(), "pagerank");
+        assert_eq!(find("pr").unwrap().name(), "pagerank");
+        assert_eq!(find("tc").unwrap().name(), "triangle");
+        assert!(find("nope").is_none());
+    }
+
+    #[test]
+    fn parse_rejects_unknown() {
+        assert!(parse("nope", "baseline").is_err());
+        assert!(parse("pagerank", "nope").is_err());
+    }
+}

@@ -3,10 +3,14 @@
 //! Betweenness Centrality represents. Edge weights are synthesized
 //! deterministically (1..=16) from the endpoints.
 
+use super::app::{AppKind, ExecutionShape, GraphApp, PreparedApp, VariantInfo};
+use crate::coordinator::SystemConfig;
 use crate::engine::{edge_map, EdgeMapOpts, VertexSubset};
 use crate::graph::{Csr, VertexId};
 use crate::parallel::atomics::AtomicF64;
 use crate::reorder::{self, Ordering as VOrdering};
+use crate::store::StoreCtx;
+use anyhow::{bail, Result};
 use std::sync::atomic::Ordering;
 
 /// Deterministic edge weight in 1..=16.
@@ -24,6 +28,19 @@ pub fn weight(u: VertexId, v: VertexId) -> f64 {
 pub enum Variant {
     Baseline,
     Reordered,
+}
+
+impl Variant {
+    pub fn name(self) -> &'static str {
+        match self {
+            Variant::Baseline => "baseline",
+            Variant::Reordered => "reordering",
+        }
+    }
+
+    pub fn all() -> &'static [Variant] {
+        &[Variant::Baseline, Variant::Reordered]
+    }
 }
 
 /// Preprocessed SSSP state.
@@ -94,6 +111,81 @@ impl Prepared {
             Some(p) => reorder::unpermute(&raw, p),
             None => raw,
         }
+    }
+}
+
+/// [`PreparedApp`] adapter: accumulates the total finite distance mass
+/// across `run_source` calls.
+pub struct PreparedSssp {
+    prep: Prepared,
+    total: f64,
+}
+
+impl PreparedApp for PreparedSssp {
+    fn shape(&self) -> ExecutionShape {
+        ExecutionShape::PerSource
+    }
+
+    fn run_source(&mut self, source: VertexId) {
+        let dist = self.prep.run(source);
+        self.total += dist.iter().filter(|d| d.is_finite()).sum::<f64>();
+    }
+
+    /// Sum of all finite shortest-path distances over all sources run so
+    /// far (Bellman–Ford converges to the unique distance vector, so this
+    /// is deterministic despite the relaxed atomics).
+    fn summary(&self) -> f64 {
+        self.total
+    }
+}
+
+/// Registry adapter: SSSP as a [`GraphApp`].
+pub struct App;
+
+const VARIANTS: &[VariantInfo] = &[
+    VariantInfo {
+        name: "baseline",
+        aliases: &[],
+        kind: AppKind::Sssp(Variant::Baseline),
+    },
+    VariantInfo {
+        name: "reordering",
+        aliases: &["reorder", "optimized"],
+        kind: AppKind::Sssp(Variant::Reordered),
+    },
+];
+
+impl GraphApp for App {
+    fn name(&self) -> &'static str {
+        "sssp"
+    }
+
+    fn description(&self) -> &'static str {
+        "Single-source shortest paths — frontier Bellman-Ford, deterministic synthetic weights"
+    }
+
+    fn variants(&self) -> &'static [VariantInfo] {
+        VARIANTS
+    }
+
+    fn default_variant(&self) -> AppKind {
+        AppKind::Sssp(Variant::Reordered)
+    }
+
+    fn prepare(
+        &self,
+        g: &Csr,
+        _cfg: &SystemConfig,
+        kind: AppKind,
+        _store: Option<StoreCtx<'_>>,
+    ) -> Result<Box<dyn PreparedApp>> {
+        let AppKind::Sssp(v) = kind else {
+            bail!("sssp app handed foreign kind {kind:?}")
+        };
+        Ok(Box::new(PreparedSssp {
+            prep: Prepared::new(g, v),
+            total: 0.0,
+        }))
     }
 }
 

@@ -28,6 +28,9 @@ pub struct SystemConfig {
     pub cf_k: usize,
     /// CF gradient-descent step.
     pub cf_lr: f64,
+    /// PageRank-Delta activeness threshold: a vertex stays in the
+    /// frontier while its relative rank change exceeds this.
+    pub delta_epsilon: f64,
     /// Seed for [`crate::reorder::Ordering::Random`] permutations.
     /// Defaults to the historical constant so sweeps stay reproducible.
     pub random_seed: u64,
@@ -54,6 +57,7 @@ impl Default for SystemConfig {
             coarsen: 10,
             cf_k: 8,
             cf_lr: 1e-3,
+            delta_epsilon: 1e-4,
             random_seed: crate::reorder::DEFAULT_RANDOM_SEED,
             store_enabled: false,
             store_dir: "target/artifact-store".to_string(),
@@ -74,6 +78,7 @@ impl SystemConfig {
             coarsen: cfg.get_usize("system.coarsen", d.coarsen as usize)? as u32,
             cf_k: cfg.get_usize("system.cf_k", d.cf_k)?,
             cf_lr: cfg.get_f64("system.cf_lr", d.cf_lr)?,
+            delta_epsilon: cfg.get_f64("system.delta_epsilon", d.delta_epsilon)?,
             random_seed: cfg.get_u64("system.random_seed", d.random_seed)?,
             store_enabled: cfg.get_bool("system.store_enabled", d.store_enabled)?,
             store_dir: cfg.get_str("system.store_dir", &d.store_dir).to_string(),

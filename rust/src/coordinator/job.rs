@@ -1,67 +1,36 @@
 //! Job pipeline: dataset → preprocess (reorder / segment) → execute →
 //! metrics. This is the entry point the CLI and benches share, so every
 //! experiment runs through identical plumbing.
+//!
+//! The pipeline is fully app-generic: the job's [`AppKind`] is resolved
+//! through [`crate::apps::registry`] to a [`crate::apps::GraphApp`],
+//! which performs all preprocessing (`prepare`, routed through the artifact store when
+//! the app's variant has cacheable artifacts) and hands back a
+//! [`crate::apps::PreparedApp`] that the one driver loop below executes
+//! according to its [`ExecutionShape`]. Adding a workload means
+//! registering it — `run_job` never names a concrete app.
 
 use super::config::SystemConfig;
 use super::metrics::Metrics;
-use crate::apps::{bc, bfs, cf, pagerank};
+use crate::apps::app::{default_sources, ExecutionShape};
+use crate::apps::registry;
 use crate::cache;
 use crate::graph::datasets::{self, Dataset};
 use crate::store::{fingerprint, ArtifactStore, StoreCtx};
 use crate::util::timer::time;
-use anyhow::{bail, Result};
+use anyhow::Result;
 
-/// Which application to run.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum AppKind {
-    PageRank(pagerank::Variant),
-    Cf(cf::Variant),
-    Bc(bfs::Variant),
-    Bfs(bfs::Variant),
-}
-
-impl AppKind {
-    pub fn parse(app: &str, variant: &str) -> Result<AppKind> {
-        let pr_variant = |v: &str| -> Result<pagerank::Variant> {
-            Ok(match v {
-                "baseline" => pagerank::Variant::Baseline,
-                "reorder" | "reordering" => pagerank::Variant::Reordered,
-                "segment" | "segmenting" => pagerank::Variant::Segmented,
-                "both" | "optimized" => pagerank::Variant::ReorderedSegmented,
-                "lower-bound" => pagerank::Variant::NoRandomLowerBound,
-                _ => bail!("unknown pagerank variant {v:?}"),
-            })
-        };
-        let fr_variant = |v: &str| -> Result<bfs::Variant> {
-            Ok(match v {
-                "baseline" => bfs::Variant::Baseline,
-                "reorder" | "reordering" => bfs::Variant::Reordered,
-                "bitvector" => bfs::Variant::Bitvector,
-                "both" | "optimized" => bfs::Variant::ReorderedBitvector,
-                _ => bail!("unknown frontier variant {v:?}"),
-            })
-        };
-        Ok(match app {
-            "pagerank" | "pr" => AppKind::PageRank(pr_variant(variant)?),
-            "cf" => AppKind::Cf(match variant {
-                "baseline" => cf::Variant::Baseline,
-                "segment" | "segmenting" | "optimized" => cf::Variant::Segmented,
-                _ => bail!("unknown cf variant {variant:?}"),
-            }),
-            "bc" => AppKind::Bc(fr_variant(variant)?),
-            "bfs" => AppKind::Bfs(fr_variant(variant)?),
-            _ => bail!("unknown app {app:?} (pagerank|cf|bc|bfs)"),
-        })
-    }
-}
+pub use crate::apps::app::AppKind;
 
 /// A full job description.
 #[derive(Debug, Clone)]
 pub struct JobSpec {
     pub dataset: String,
     pub app: AppKind,
+    /// Iteration count for [`ExecutionShape::Iterative`] apps.
     pub iters: usize,
-    /// Sources for BC/BFS (count of high-degree starts).
+    /// Source count for [`ExecutionShape::PerSource`] apps (BC/BFS/SSSP;
+    /// count of high-degree starts).
     pub num_sources: usize,
     /// Attach simulated memory-system metrics (slower).
     pub analyze_memory: bool,
@@ -72,7 +41,7 @@ impl Default for JobSpec {
     fn default() -> Self {
         JobSpec {
             dataset: "livejournal-sim".to_string(),
-            app: AppKind::PageRank(pagerank::Variant::ReorderedSegmented),
+            app: AppKind::PageRank(crate::apps::pagerank::Variant::ReorderedSegmented),
             iters: 10,
             num_sources: 12,
             analyze_memory: false,
@@ -86,11 +55,12 @@ impl Default for JobSpec {
 pub struct JobResult {
     pub metrics: Metrics,
     /// App-specific scalar summary (rank L1 mass / RMSE / reached count /
-    /// max BC), used for smoke-checking runs.
+    /// max BC / component count / triangle count), used for smoke-checking
+    /// runs.
     pub summary: f64,
 }
 
-/// Execute a job end-to-end.
+/// Execute a job end-to-end through the app registry.
 pub fn run_job(spec: &JobSpec, cfg: &SystemConfig) -> Result<JobResult> {
     let mut metrics = Metrics::default();
     let (ds, load_s): (Dataset, f64) = {
@@ -100,21 +70,19 @@ pub fn run_job(spec: &JobSpec, cfg: &SystemConfig) -> Result<JobResult> {
     metrics.phases.add("load", load_s);
     metrics.edges = ds.graph.num_edges() as u64;
     let g = &ds.graph;
+    let app = registry::app_for(spec.app);
+    metrics.app = Some(format!(
+        "{}/{}",
+        spec.app.app_name(),
+        spec.app.variant_name()
+    ));
     // Persistent preprocessing-artifact store: cold runs build + persist,
     // warm runs read back. Open failures degrade to uncached operation —
-    // the store must never take a job down. Only variants that actually
-    // preprocess (reorder and/or segment) go through the store; skip the
+    // the store must never take a job down. Only variants whose app
+    // declares cacheable preprocessing go through the store; skip the
     // open + fingerprint entirely otherwise so --store adds no overhead
-    // (and no misleading 0-hit stats) to baselines and frontier apps.
-    let app_uses_store = match spec.app {
-        AppKind::PageRank(v) => !matches!(
-            v,
-            pagerank::Variant::Baseline | pagerank::Variant::NoRandomLowerBound
-        ),
-        AppKind::Cf(v) => v == cf::Variant::Segmented,
-        AppKind::Bc(_) | AppKind::Bfs(_) => false,
-    };
-    let store = if cfg.store_enabled && app_uses_store {
+    // (and no misleading 0-hit stats) to the rest.
+    let store = if cfg.store_enabled && app.uses_store(spec.app) {
         match ArtifactStore::open(&cfg.store_dir, cfg.store_cap_bytes) {
             Ok(s) => Some(s),
             Err(e) => {
@@ -133,77 +101,58 @@ pub fn run_job(spec: &JobSpec, cfg: &SystemConfig) -> Result<JobResult> {
         }
         None => None,
     };
-    let summary = match spec.app {
-        AppKind::PageRank(variant) => {
-            let (mut prep, prep_s) = time(|| pagerank::Prepared::new_cached(g, cfg, variant, ctx));
-            metrics.phases.add("preprocess", prep_s);
-            prep.reset();
+    let (prep, prep_s) = time(|| app.prepare(g, cfg, spec.app, ctx));
+    let mut prep = prep?;
+    metrics.phases.add("preprocess", prep_s);
+    match prep.shape() {
+        ExecutionShape::Iterative => {
             for _ in 0..spec.iters {
                 let (_, s) = time(|| prep.step());
                 metrics.iter_seconds.push(s);
             }
-            if spec.analyze_memory {
-                metrics.stalls = Some(simulate_pagerank(g, cfg, variant));
-            }
-            // Rank L1 mass in original id space — a deterministic smoke
-            // value (warm and cold runs must agree bitwise).
-            prep.values().iter().sum::<f64>()
         }
-        AppKind::Cf(variant) => {
-            let (mut prep, prep_s) = time(|| cf::Prepared::new_cached(g, cfg, variant, ctx));
-            metrics.phases.add("preprocess", prep_s);
-            for _ in 0..spec.iters {
-                let (_, s) = time(|| prep.step());
+        ExecutionShape::PerSource => {
+            for &src in &default_sources(g, spec.num_sources) {
+                let (_, s) = time(|| prep.run_source(src));
                 metrics.iter_seconds.push(s);
             }
-            prep.rmse()
         }
-        AppKind::Bc(variant) => {
-            let (prep, prep_s) = time(|| bc::Prepared::new(g, variant));
-            metrics.phases.add("preprocess", prep_s);
-            let sources = bc::default_sources(g, spec.num_sources);
-            let (scores, s) = time(|| prep.run(&sources));
-            metrics.iter_seconds.push(s);
-            scores.iter().cloned().fold(0.0, f64::max)
-        }
-        AppKind::Bfs(variant) => {
-            let (prep, prep_s) = time(|| bfs::Prepared::new(g, variant));
-            metrics.phases.add("preprocess", prep_s);
-            let sources = bc::default_sources(g, spec.num_sources);
-            let mut reached = 0usize;
-            for &s0 in &sources {
-                let (parents, s) = time(|| prep.run(s0));
-                metrics.iter_seconds.push(s);
-                reached += parents.iter().filter(|&&p| p != u32::MAX).count();
-            }
-            reached as f64
-        }
-    };
+        // One-shot apps did their work in prepare; summary() is already
+        // final and there is nothing meaningful to time per iteration.
+        ExecutionShape::OneShot => {}
+    }
+    if spec.analyze_memory {
+        metrics.stalls = app.simulate(g, cfg, spec.app);
+    }
+    let summary = prep.summary();
     metrics.store = store.as_ref().map(|s| s.stats());
     Ok(JobResult { metrics, summary })
 }
 
-/// Simulated stall estimate for one PageRank iteration under `variant`.
+/// Simulated stall estimate for one PageRank iteration under `variant`
+/// (exposed for the figure benches and `cagra simulate`; the pipeline
+/// reaches it through [`crate::apps::GraphApp::simulate`]).
 pub fn simulate_pagerank(
     g: &crate::graph::Csr,
     cfg: &SystemConfig,
-    variant: pagerank::Variant,
+    variant: crate::apps::pagerank::Variant,
 ) -> cache::StallEstimate {
+    use crate::apps::pagerank::Variant;
     use crate::reorder::{self, Ordering as VOrdering};
     let sample = (g.num_edges() / 2_000_000).max(1);
     match variant {
-        pagerank::Variant::Baseline | pagerank::Variant::NoRandomLowerBound => {
+        Variant::Baseline | Variant::NoRandomLowerBound => {
             cache::stall::estimate_pull_iteration(&g.transpose(), 8, cfg.llc_bytes, sample)
         }
-        pagerank::Variant::Reordered => {
+        Variant::Reordered => {
             let (h, _) = reorder::reorder(g, VOrdering::CoarseDegreeSort);
             cache::stall::estimate_pull_iteration(&h.transpose(), 8, cfg.llc_bytes, sample)
         }
-        pagerank::Variant::Segmented => {
+        Variant::Segmented => {
             let sg = crate::segment::SegmentedCsr::build(g, cfg.segment_size(8));
             cache::stall::estimate_segmented_iteration(&sg, 8, cfg.llc_bytes, sample)
         }
-        pagerank::Variant::ReorderedSegmented => {
+        Variant::ReorderedSegmented => {
             let (h, _) = reorder::reorder(g, VOrdering::CoarseDegreeSort);
             let sg = crate::segment::SegmentedCsr::build(&h, cfg.segment_size(8));
             cache::stall::estimate_segmented_iteration(&sg, 8, cfg.llc_bytes, sample)
@@ -214,6 +163,7 @@ pub fn simulate_pagerank(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::apps::{bfs, cc, pagerank, sssp, triangle};
 
     #[test]
     fn parse_app_kinds() {
@@ -224,6 +174,22 @@ mod tests {
         assert!(matches!(
             AppKind::parse("bfs", "bitvector").unwrap(),
             AppKind::Bfs(bfs::Variant::Bitvector)
+        ));
+        assert!(matches!(
+            AppKind::parse("bc", "both").unwrap(),
+            AppKind::Bc(crate::apps::bc::Variant::ReorderedBitvector)
+        ));
+        assert!(matches!(
+            AppKind::parse("sssp", "reordering").unwrap(),
+            AppKind::Sssp(sssp::Variant::Reordered)
+        ));
+        assert!(matches!(
+            AppKind::parse("cc", "segmenting").unwrap(),
+            AppKind::Cc(cc::Variant::Segmented)
+        ));
+        assert!(matches!(
+            AppKind::parse("tc", "degree-ordered").unwrap(),
+            AppKind::Triangle(triangle::Variant::DegreeOrdered)
         ));
         assert!(AppKind::parse("nope", "x").is_err());
         assert!(AppKind::parse("pagerank", "nope").is_err());
@@ -241,6 +207,7 @@ mod tests {
         let r = run_job(&spec, &cfg).unwrap();
         assert_eq!(r.metrics.iter_seconds.len(), 3);
         assert!(r.metrics.edges > 0);
+        assert_eq!(r.metrics.app.as_deref(), Some("pagerank/reordering+segmenting"));
     }
 
     #[test]
@@ -255,5 +222,21 @@ mod tests {
         let cfg = SystemConfig::default();
         let r = run_job(&spec, &cfg).unwrap();
         assert!(r.summary > 0.0); // reached something
+        // Per-source shape: one timing entry per source.
+        assert_eq!(r.metrics.iter_seconds.len(), 3);
+    }
+
+    #[test]
+    fn run_small_cc_job() {
+        let spec = JobSpec {
+            dataset: "livejournal-sim".into(),
+            scale: 1.0 / 64.0,
+            app: AppKind::Cc(cc::Variant::Segmented),
+            iters: 4,
+            ..Default::default()
+        };
+        let cfg = SystemConfig::default();
+        let r = run_job(&spec, &cfg).unwrap();
+        assert!(r.summary >= 1.0, "component count {}", r.summary);
     }
 }

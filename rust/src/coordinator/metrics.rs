@@ -8,8 +8,11 @@ use crate::util::timer::PhaseTimer;
 /// Everything a job run reports.
 #[derive(Debug, Default)]
 pub struct Metrics {
+    /// "app/variant" the job ran (from the registry), e.g. "bfs/both".
+    pub app: Option<String>,
     pub phases: PhaseTimer,
-    /// Per-iteration wall time (seconds).
+    /// Wall time per execution unit (seconds): one entry per iteration
+    /// for iterative apps, one per source for per-source apps.
     pub iter_seconds: Vec<f64>,
     /// Simulated stall estimate for one representative iteration, if the
     /// job asked for memory-system analysis.
@@ -42,6 +45,9 @@ impl Metrics {
     /// Human-readable summary block.
     pub fn render(&self) -> String {
         let mut out = String::new();
+        if let Some(app) = &self.app {
+            out.push_str(&format!("app: {app}\n"));
+        }
         out.push_str(&format!(
             "iterations: {}  median: {:.6}s  throughput: {:.2} MEdge/s\n",
             self.iter_seconds.len(),
@@ -96,6 +102,9 @@ mod tests {
         let r = m.render();
         assert!(r.contains("preprocess"));
         assert!(!r.contains("artifact store"));
+        assert!(!r.contains("app:"));
+        m.app = Some("bfs/both".to_string());
+        assert!(m.render().contains("app: bfs/both"));
         m.store = Some(crate::store::StoreStats {
             hits: 3,
             misses: 1,

@@ -1,6 +1,7 @@
 //! L3 coordinator: system configuration, the preprocessing→execute→metrics
 //! pipeline, and report formatting. The CLI (`main.rs`) and the benches
-//! drive everything through this module.
+//! drive everything through this module; the pipeline itself resolves
+//! workloads through [`crate::apps::registry`], so it stays app-agnostic.
 
 pub mod config;
 pub mod job;

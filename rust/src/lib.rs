@@ -14,10 +14,16 @@
 //! ## Layering
 //!
 //! - **L3 (this crate)** — coordination: preprocessing, segment-at-a-time
-//!   scheduling, cache-aware merge, thread pool, metrics, CLI. The
-//!   [`store`] subsystem persists preprocessing outputs (permutations,
-//!   relabeled CSRs, segmented partitions) in a fingerprint-keyed on-disk
-//!   cache so their cost is amortized across runs (paper Table 9).
+//!   scheduling, cache-aware merge, thread pool, metrics, CLI. Workloads
+//!   implement the [`apps::GraphApp`] trait and register in
+//!   [`apps::registry`]; the coordinator's `run_job` drives every app —
+//!   the full §6.1 suite of eight — through one generic
+//!   prepare → execute → summarize loop, so the cache techniques (and the
+//!   store, and the memory simulator) plug in at the framework level
+//!   instead of per app. The [`store`] subsystem persists preprocessing
+//!   outputs (permutations, relabeled CSRs, segmented partitions) in a
+//!   fingerprint-keyed on-disk cache so their cost is amortized across
+//!   runs (paper Table 9).
 //! - **L2 (python/compile/model.py)** — PageRank / Collaborative-Filtering
 //!   steps over dense segment tiles, lowered once to HLO text.
 //! - **L1 (python/compile/kernels/)** — Pallas tile kernels

@@ -4,6 +4,7 @@
 //! ```text
 //! cagra run     --app pagerank --variant both --graph twitter-sim --iters 20
 //! cagra run     --app pagerank --graph twitter-sim --store   # persist preprocessing
+//! cagra apps    # list registered applications + variants
 //! cagra gen     --graph rmat27-sim --out graph.bin
 //! cagra inspect --graph twitter-sim
 //! cagra simulate --graph twitter-sim --llc 524288
@@ -12,7 +13,8 @@
 //! cagra artifacts
 //! ```
 
-use cagra::coordinator::{run_job, AppKind, JobSpec, SystemConfig};
+use cagra::apps::registry;
+use cagra::coordinator::{run_job, JobSpec, SystemConfig};
 use cagra::graph::datasets;
 use cagra::reorder;
 use cagra::segment;
@@ -20,13 +22,15 @@ use cagra::store::ArtifactStore;
 use cagra::util::cli::Args;
 use cagra::util::{config::Config, fmt_bytes, fmt_count};
 
-const SUBCOMMANDS: &[&str] =
-    &["run", "gen", "inspect", "simulate", "expansion", "cache", "artifacts", "help"];
+const SUBCOMMANDS: &[&str] = &[
+    "run", "apps", "gen", "inspect", "simulate", "expansion", "cache", "artifacts", "help",
+];
 
 fn main() {
     let args = Args::from_env(SUBCOMMANDS);
     let result = match args.subcommand.as_deref() {
         Some("run") => cmd_run(&args),
+        Some("apps") => cmd_apps(),
         Some("gen") => cmd_gen(&args),
         Some("inspect") => cmd_inspect(&args),
         Some("simulate") => cmd_simulate(&args),
@@ -45,13 +49,15 @@ fn main() {
 }
 
 fn usage() {
+    let apps: Vec<&str> = registry::APPS.iter().map(|a| a.name()).collect();
     println!(
         "cagra — cache-optimized graph analytics (vertex reordering + CSR segmenting)\n\
          \n\
          subcommands:\n\
-         \x20 run        run an application       --app pagerank|cf|bc|bfs --variant baseline|reorder|segment|both|bitvector\n\
+         \x20 run        run an application       --app <app> [--variant <variant>]  (see `cagra apps`)\n\
          \x20            --graph <dataset> --iters N [--sources N] [--analyze] [--scale F] [--config FILE]\n\
          \x20            [--store] [--store-dir DIR] [--store-cap BYTES]   persist preprocessing artifacts\n\
+         \x20 apps       list registered applications and their variants\n\
          \x20 gen        generate + cache a dataset  --graph <dataset> [--out file.bin] [--scale F]\n\
          \x20 inspect    dataset statistics          --graph <dataset>\n\
          \x20 simulate   memory-system simulation    --graph <dataset> [--llc BYTES]\n\
@@ -59,9 +65,45 @@ fn usage() {
          \x20 cache      artifact store tools        stats (default) | clear  [--store-dir DIR]\n\
          \x20 artifacts  list PJRT artifacts and check they compile\n\
          \n\
+         apps:     {}\n\
          datasets: {}",
+        apps.join(", "),
         datasets::ALL.join(", ")
     );
+}
+
+/// `cagra apps`: the registry rendered as help text. Because this reads
+/// the same variant tables the parser uses, the listing cannot drift
+/// from what `--app`/`--variant` accept.
+fn cmd_apps() -> anyhow::Result<()> {
+    println!("registered applications (cagra run --app <name> [--variant <variant>]):");
+    for app in registry::APPS {
+        let aliases = if app.aliases().is_empty() {
+            String::new()
+        } else {
+            format!(" (aliases: {})", app.aliases().join(", "))
+        };
+        println!("\n  {}{aliases}\n      {}", app.name(), app.description());
+        for v in app.variants() {
+            let mut notes = Vec::new();
+            if v.kind == app.default_variant() {
+                notes.push("default".to_string());
+            }
+            if !v.aliases.is_empty() {
+                notes.push(format!("aliases: {}", v.aliases.join(", ")));
+            }
+            if app.uses_store(v.kind) {
+                notes.push("store-cacheable".to_string());
+            }
+            let notes = if notes.is_empty() {
+                String::new()
+            } else {
+                format!("  [{}]", notes.join("; "))
+            };
+            println!("      --variant {:<16}{notes}", v.name);
+        }
+    }
+    Ok(())
 }
 
 fn system_config(args: &Args) -> anyhow::Result<SystemConfig> {
@@ -90,18 +132,25 @@ fn system_config(args: &Args) -> anyhow::Result<SystemConfig> {
 
 fn cmd_run(args: &Args) -> anyhow::Result<()> {
     let cfg = system_config(args)?;
-    let app = AppKind::parse(args.get_or("app", "pagerank"), args.get_or("variant", "both"))?;
+    let app_name = args.get_or("app", "pagerank");
+    let app = registry::find(app_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown app {app_name:?} (see `cagra apps`)"))?;
+    let kind = match args.get("variant") {
+        Some(v) => app.parse_variant(v)?,
+        None => app.default_variant(),
+    };
     let spec = JobSpec {
         dataset: args.get_or("graph", "livejournal-sim").to_string(),
-        app,
+        app: kind,
         iters: args.get_usize("iters", 10),
         num_sources: args.get_usize("sources", 12),
         analyze_memory: args.has_flag("analyze"),
         scale: args.get_f64("scale", 1.0),
     };
     println!(
-        "running {:?} on {} ({}), llc={}",
-        spec.app,
+        "running {}/{} on {} ({}), llc={}",
+        spec.app.app_name(),
+        spec.app.variant_name(),
         spec.dataset,
         datasets::paper_name(&spec.dataset),
         fmt_bytes(cfg.llc_bytes)

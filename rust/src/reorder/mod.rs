@@ -136,6 +136,36 @@ pub fn degree_sort_perm(g: &Csr, coarsen: u32) -> Vec<VertexId> {
     perm
 }
 
+/// Store label for [`degree_sort_perm`] artifacts. The single source of
+/// the on-disk key shape: every app that persists a degree sort keys it
+/// through here, so the artifact is shared across apps per dataset.
+pub fn degree_sort_label(coarsen: u32) -> String {
+    format!("degree-sorted-c{}", coarsen.max(1))
+}
+
+/// [`degree_sort_perm`] routed through the artifact store when present:
+/// one key per (dataset fingerprint, coarsen), shared by every reordering
+/// app (PageRank, BC, BFS), so one app's cold run warms the others. The
+/// decoded permutation is length-checked against the live graph before it
+/// can reach any unchecked scatter.
+pub fn cached_degree_sort_perm(
+    g: &Csr,
+    coarsen: u32,
+    store: Option<crate::store::StoreCtx<'_>>,
+) -> Vec<VertexId> {
+    let coarsen = coarsen.max(1);
+    let build = || degree_sort_perm(g, coarsen);
+    let perm = match store {
+        Some(c) => c.get_or_build(
+            crate::store::StoreKey::ordering(c.fingerprint, &degree_sort_label(coarsen)),
+            build,
+        ),
+        None => build(),
+    };
+    assert_eq!(perm.len(), g.num_vertices(), "permutation length != graph vertex count");
+    perm
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -23,9 +23,12 @@
 //!   storage with mtime-LRU eviction, stats, and `clear`.
 //!
 //! Wiring: [`crate::coordinator::job::run_job`] opens the store when
-//! `SystemConfig::store_enabled` is set and threads a [`StoreCtx`] into
-//! the apps' `Prepared::new_cached` constructors; `cagra cache
-//! stats|clear` exposes it on the CLI.
+//! `SystemConfig::store_enabled` is set and the app's variant declares
+//! cacheable preprocessing ([`crate::apps::GraphApp::uses_store`]), then
+//! threads a [`StoreCtx`] through [`crate::apps::GraphApp::prepare`]
+//! into the apps' `Prepared::new_cached` constructors (PageRank, CF, and
+//! the BC/BFS reordering permutation); `cagra cache stats|clear` exposes
+//! it on the CLI.
 
 pub mod artifact_store;
 pub mod codec;

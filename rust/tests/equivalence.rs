@@ -1,12 +1,26 @@
 //! Golden equivalence suite: every optimized path must produce the same
 //! answer as the naive reference on the same input — across apps,
-//! orderings, segment sizes, and baseline frameworks.
+//! orderings, segment sizes, and baseline frameworks — and the dyn
+//! `GraphApp` pipeline must agree with the typed per-app paths it wraps.
 
-use cagra::apps::{bc, bfs, pagerank, sssp};
+use cagra::apps::{bc, bfs, cc, pagerank, pagerank_delta, registry, sssp, triangle};
+use cagra::apps::{AppKind, PreparedApp};
 use cagra::baselines::{graphmat_style, gridgraph_style, hilbert, ligra_style, xstream_style};
 use cagra::coordinator::SystemConfig;
 use cagra::graph::{generators, Csr};
 use cagra::reorder;
+
+/// Prepare an app variant through the registry, exactly as `run_job`
+/// does (no artifact store).
+fn registry_prepare(
+    app: &str,
+    variant: &str,
+    g: &Csr,
+    cfg: &SystemConfig,
+) -> Box<dyn PreparedApp> {
+    let kind = AppKind::parse(app, variant).unwrap();
+    registry::app_for(kind).prepare(g, cfg, kind, None).unwrap()
+}
 
 fn graph(seed: u64) -> Csr {
     let (n, e) = generators::rmat(11, 8, generators::RmatParams::graph500(), seed);
@@ -123,6 +137,110 @@ fn bfs_and_bc_and_sssp_agree_with_references() {
             (a == b) || (a.is_infinite() && b.is_infinite()),
             "sssp v={i}: {a} vs {b}"
         );
+    }
+}
+
+#[test]
+fn registry_pipeline_matches_typed_paths() {
+    // The dyn GraphApp surface is a refactor, not a reimplementation:
+    // driving each app through prepare()/step()/run_source() must land on
+    // the same numbers as the typed per-app entry points.
+    let g = graph(1006);
+    let cfg = SystemConfig {
+        llc_bytes: 64 * 1024,
+        ..Default::default()
+    };
+    // PageRank (all variants, including the lower bound): bitwise.
+    let mut pr_variants = pagerank::Variant::all().to_vec();
+    pr_variants.push(pagerank::Variant::NoRandomLowerBound);
+    for &v in &pr_variants {
+        let mut dyn_prep = registry_prepare("pagerank", v.name(), &g, &cfg);
+        for _ in 0..4 {
+            dyn_prep.step();
+        }
+        let typed: f64 = pagerank::run(&g, &cfg, v, 4).values.iter().sum();
+        assert_eq!(
+            dyn_prep.summary().to_bits(),
+            typed.to_bits(),
+            "pagerank/{}",
+            v.name()
+        );
+    }
+    // PageRank-Delta: bitwise against the convenience runner at the same
+    // epsilon (extra steps past convergence are no-ops).
+    {
+        let mut dyn_prep = registry_prepare("pagerank-delta", "baseline", &g, &cfg);
+        for _ in 0..30 {
+            dyn_prep.step();
+        }
+        let typed: f64 = pagerank_delta::run(&g, &cfg, cfg.delta_epsilon, 30)
+            .values
+            .iter()
+            .sum();
+        assert_eq!(dyn_prep.summary().to_bits(), typed.to_bits(), "pagerank-delta");
+    }
+    // BFS: reached count over sources.
+    let sources = bc::default_sources(&g, 3);
+    for &v in bfs::Variant::all() {
+        let mut dyn_prep = registry_prepare("bfs", v.name(), &g, &cfg);
+        let prep = bfs::Prepared::new(&g, v);
+        let mut reached = 0usize;
+        for &s in &sources {
+            dyn_prep.run_source(s);
+            reached += prep.run(s).iter().filter(|&&p| p != u32::MAX).count();
+        }
+        assert_eq!(dyn_prep.summary(), reached as f64, "bfs/{}", v.name());
+    }
+    // BC: max centrality (atomics reassociate floats; compare with
+    // tolerance).
+    for &v in bc::Variant::all() {
+        let mut dyn_prep = registry_prepare("bc", v.name(), &g, &cfg);
+        for &s in &sources {
+            dyn_prep.run_source(s);
+        }
+        let typed = bc::Prepared::new(&g, v)
+            .run(&sources)
+            .iter()
+            .cloned()
+            .fold(0.0, f64::max);
+        let got = dyn_prep.summary();
+        assert!(
+            (got - typed).abs() <= 1e-7 * typed.abs().max(1.0),
+            "bc/{}: {got} vs {typed}",
+            v.name()
+        );
+    }
+    // SSSP: finite-distance mass (Bellman-Ford distances are unique).
+    for &v in sssp::Variant::all() {
+        let mut dyn_prep = registry_prepare("sssp", v.name(), &g, &cfg);
+        let prep = sssp::Prepared::new(&g, v);
+        let mut total = 0.0;
+        for &s in &sources {
+            dyn_prep.run_source(s);
+            total += prep.run(s).iter().filter(|d| d.is_finite()).sum::<f64>();
+        }
+        assert_eq!(dyn_prep.summary(), total, "sssp/{}", v.name());
+    }
+    // CC: component count at the fixpoint.
+    let want_components = {
+        let labels = cc::reference(&g);
+        labels
+            .iter()
+            .enumerate()
+            .filter(|&(v, &l)| l as usize == v)
+            .count() as f64
+    };
+    for &v in cc::Variant::all() {
+        let mut dyn_prep = registry_prepare("cc", v.name(), &g, &cfg);
+        for _ in 0..g.num_vertices() {
+            dyn_prep.step();
+        }
+        assert_eq!(dyn_prep.summary(), want_components, "cc/{}", v.name());
+    }
+    // Triangle counting: exact count, available immediately (one-shot).
+    {
+        let dyn_prep = registry_prepare("triangle", "degree-ordered", &g, &cfg);
+        assert_eq!(dyn_prep.summary(), triangle::count(&g) as f64);
     }
 }
 

@@ -1,7 +1,8 @@
 //! End-to-end coordinator pipeline tests over real (scaled) datasets:
-//! load → preprocess → run → metrics, for every app and dataset family.
+//! load → preprocess → run → metrics, for every registered app and
+//! dataset family — all through the `GraphApp` registry.
 
-use cagra::apps::{bfs, cf, pagerank};
+use cagra::apps::{bc, bfs, cf, pagerank, registry};
 use cagra::coordinator::{run_job, AppKind, JobSpec, SystemConfig};
 
 const SCALE: f64 = 1.0 / 64.0;
@@ -15,6 +16,61 @@ fn spec(dataset: &str, app: AppKind, iters: usize) -> JobSpec {
         analyze_memory: false,
         scale: SCALE,
     }
+}
+
+#[test]
+fn every_registered_app_variant_runs_through_the_pipeline() {
+    // The §6.1 suite, complete: all 8 apps, every advertised variant,
+    // through the one generic run_job loop.
+    let cfg = SystemConfig {
+        llc_bytes: 32 * 1024, // scaled so small graphs still segment
+        ..Default::default()
+    };
+    assert_eq!(registry::APPS.len(), 8);
+    for app in registry::APPS {
+        for v in app.variants() {
+            let r = run_job(&spec("livejournal-sim", v.kind, 2), &cfg)
+                .unwrap_or_else(|e| panic!("{}/{}: {e:#}", app.name(), v.name));
+            assert!(
+                r.summary.is_finite() && r.summary != 0.0,
+                "{}/{}: summary {}",
+                app.name(),
+                v.name,
+                r.summary
+            );
+            assert!(r.metrics.edges > 0);
+            assert_eq!(
+                r.metrics.app.as_deref(),
+                Some(format!("{}/{}", v.kind.app_name(), v.kind.variant_name()).as_str())
+            );
+        }
+    }
+}
+
+#[test]
+fn registry_variants_round_trip_through_parse() {
+    for app in registry::APPS {
+        for v in app.variants() {
+            let parsed = AppKind::parse(app.name(), v.name)
+                .unwrap_or_else(|e| panic!("{}/{}: {e:#}", app.name(), v.name));
+            assert_eq!(parsed, v.kind, "{}/{}", app.name(), v.name);
+            for alias in v.aliases {
+                assert_eq!(
+                    AppKind::parse(app.name(), alias).unwrap(),
+                    v.kind,
+                    "{} alias {alias}",
+                    app.name()
+                );
+            }
+        }
+        // App aliases resolve to the same app.
+        for alias in app.aliases() {
+            let via_alias = AppKind::parse(alias, app.variants()[0].name).unwrap();
+            assert_eq!(via_alias, app.variants()[0].kind, "app alias {alias}");
+        }
+        assert!(AppKind::parse(app.name(), "definitely-not-a-variant").is_err());
+    }
+    assert!(AppKind::parse("definitely-not-an-app", "baseline").is_err());
 }
 
 #[test]
@@ -49,10 +105,12 @@ fn frontier_apps_run() {
     let cfg = SystemConfig::default();
     for app in [
         AppKind::Bfs(bfs::Variant::ReorderedBitvector),
-        AppKind::Bc(bfs::Variant::Baseline),
+        AppKind::Bc(bc::Variant::Baseline),
     ] {
         let r = run_job(&spec("livejournal-sim", app, 1), &cfg).unwrap();
         assert!(r.summary > 0.0);
+        // Per-source apps record one timing entry per source.
+        assert_eq!(r.metrics.iter_seconds.len(), 2);
     }
 }
 

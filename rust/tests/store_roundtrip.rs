@@ -121,6 +121,65 @@ fn run_job_second_run_hits_store_with_identical_summary() {
 }
 
 #[test]
+fn bc_and_bfs_reordered_warm_runs_hit_store() {
+    // The reordering permutation is the cacheable preprocessing for the
+    // frontier apps (ROADMAP open item, closed by the GraphApp redesign):
+    // cold runs persist the degree sort, warm runs decode it.
+    for (app, variant) in [("bc", "both"), ("bfs", "both")] {
+        let dir = temp_dir(&format!("frontier-{app}"));
+        let mut cfg = small_cfg();
+        cfg.store_enabled = true;
+        cfg.store_dir = dir.to_string_lossy().into_owned();
+        let spec = JobSpec {
+            dataset: "livejournal-sim".into(),
+            scale: SCALE,
+            iters: 1,
+            num_sources: 2,
+            app: AppKind::parse(app, variant).unwrap(),
+            ..Default::default()
+        };
+        let r1 = run_job(&spec, &cfg).unwrap();
+        let s1 = r1.metrics.store.unwrap_or_else(|| panic!("{app}: store stats attached"));
+        assert_eq!((s1.hits, s1.misses), (0, 1), "{app}: cold run builds the permutation");
+        let r2 = run_job(&spec, &cfg).unwrap();
+        let s2 = r2.metrics.store.unwrap();
+        assert_eq!((s2.hits, s2.misses), (1, 0), "{app}: warm run must hit");
+        if app == "bfs" {
+            // Reached count is deterministic (the reachable set is fixed).
+            assert_eq!(r1.summary, r2.summary, "{app} summary");
+        } else {
+            // BC accumulates through relaxed atomics; scores are equal up
+            // to float reassociation, not bitwise.
+            let rel = (r1.summary - r2.summary).abs() / r1.summary.abs().max(1e-12);
+            assert!(rel < 1e-6, "{app} summary {} vs {}", r1.summary, r2.summary);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+#[test]
+fn baseline_frontier_jobs_skip_the_store() {
+    // Baseline BC/BFS do no cacheable preprocessing; --store must attach
+    // no stats (and plant no store) for them.
+    let dir = temp_dir("frontier-baseline");
+    let mut cfg = small_cfg();
+    cfg.store_enabled = true;
+    cfg.store_dir = dir.to_string_lossy().into_owned();
+    let spec = JobSpec {
+        dataset: "livejournal-sim".into(),
+        scale: SCALE,
+        iters: 1,
+        num_sources: 1,
+        app: AppKind::parse("bfs", "baseline").unwrap(),
+        ..Default::default()
+    };
+    let r = run_job(&spec, &cfg).unwrap();
+    assert!(r.metrics.store.is_none());
+    assert!(!dir.exists(), "no store directory should be created");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn store_disabled_attaches_no_stats() {
     let spec = JobSpec {
         dataset: "livejournal-sim".into(),
