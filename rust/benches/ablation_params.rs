@@ -11,67 +11,70 @@
 mod common;
 
 use cagra::apps::pagerank::{Prepared, Variant};
-use cagra::bench::{header, Bencher, Table};
+use cagra::bench::Table;
 use cagra::coordinator::SystemConfig;
 
-fn time_iter(b: &mut Bencher, label: &str, g: &cagra::graph::Csr, cfg: &SystemConfig) -> f64 {
+fn time_iter(s: &mut common::Suite, label: &str, g: &cagra::graph::Csr, cfg: &SystemConfig) -> f64 {
     let mut p = Prepared::new(g, cfg, Variant::ReorderedSegmented);
     p.reset();
-    b.bench_work(label, Some(g.num_edges() as u64), &mut || p.step())
+    s.bench_work(label, Some(g.num_edges() as u64), &mut || p.step())
         .secs()
 }
 
 fn main() {
-    header("Ablations: coarsen / merge block / segment fill", "DESIGN.md design choices");
-    let ds = common::load("twitter-sim");
-    let g = &ds.graph;
-    let mut b = Bencher::new();
-    b.reps = b.reps.min(3);
+    common::run_suite("ablation_params", |s| {
+        let ds = common::load("twitter-sim");
+        let g = &ds.graph;
+        s.cap_reps(3);
 
-    println!("\n1. reordering coarsen threshold (twitter-sim, inherent locality):");
-    let mut t = Table::new(&["coarsen", "per-iter"]);
-    for coarsen in [1u32, 10, 100, 1000] {
-        let cfg = SystemConfig {
-            coarsen,
-            ..common::config()
-        };
-        let secs = time_iter(&mut b, &format!("coarsen={coarsen}"), g, &cfg);
-        t.row(&[coarsen.to_string(), format!("{:.1}ms", secs * 1e3)]);
-    }
-    t.print();
-    println!("§3.3 expectation: coarse (10) ≥ exact (1) on locality-ordered graphs");
+        println!("\n1. reordering coarsen threshold (twitter-sim, inherent locality):");
+        let mut t = Table::new(&["coarsen", "per-iter"]);
+        s.set_scope("coarsen");
+        for coarsen in [1u32, 10, 100, 1000] {
+            let cfg = SystemConfig {
+                coarsen,
+                ..common::config()
+            };
+            let secs = time_iter(s, &coarsen.to_string(), g, &cfg);
+            t.row(&[coarsen.to_string(), format!("{:.1}ms", secs * 1e3)]);
+        }
+        t.print();
+        println!("§3.3 expectation: coarse (10) ≥ exact (1) on locality-ordered graphs");
 
-    println!("\n2. cache-aware merge block size:");
-    let mut t = Table::new(&["block vertices", "bytes (f64 out)", "per-iter"]);
-    for l1 in [2 * 1024usize, 32 * 1024, 512 * 1024] {
-        let cfg = SystemConfig {
-            l1_bytes: l1,
-            ..common::config()
-        };
-        let secs = time_iter(&mut b, &format!("l1={l1}"), g, &cfg);
-        t.row(&[
-            cfg.merge_block(8).to_string(),
-            cagra::util::fmt_bytes(cfg.merge_block(8) * 8),
-            format!("{:.1}ms", secs * 1e3),
-        ]);
-    }
-    t.print();
-    println!("§4.3 expectation: L1-sized blocks (32 KiB) at or near the optimum");
+        println!("\n2. cache-aware merge block size:");
+        let mut t = Table::new(&["block vertices", "bytes (f64 out)", "per-iter"]);
+        s.set_scope("merge-block");
+        for l1 in [2 * 1024usize, 32 * 1024, 512 * 1024] {
+            let cfg = SystemConfig {
+                l1_bytes: l1,
+                ..common::config()
+            };
+            let secs = time_iter(s, &format!("l1={l1}"), g, &cfg);
+            t.row(&[
+                cfg.merge_block(8).to_string(),
+                cagra::util::fmt_bytes(cfg.merge_block(8) * 8),
+                format!("{:.1}ms", secs * 1e3),
+            ]);
+        }
+        t.print();
+        println!("§4.3 expectation: L1-sized blocks (32 KiB) at or near the optimum");
 
-    println!("\n3. segment fill fraction of the effective cache:");
-    let mut t = Table::new(&["fill", "segment vertices", "per-iter"]);
-    for fill in [0.125f64, 0.25, 0.5, 1.0] {
-        let cfg = SystemConfig {
-            segment_fill: fill,
-            ..common::config()
-        };
-        let secs = time_iter(&mut b, &format!("fill={fill}"), g, &cfg);
-        t.row(&[
-            format!("{fill}"),
-            cfg.segment_size(8).to_string(),
-            format!("{:.1}ms", secs * 1e3),
-        ]);
-    }
-    t.print();
-    println!("§4.5 expectation: ~0.5 optimal (room left for edge stream + output block); see EXPERIMENTS.md §Perf step 5");
+        println!("\n3. segment fill fraction of the effective cache:");
+        let mut t = Table::new(&["fill", "segment vertices", "per-iter"]);
+        s.set_scope("segment-fill");
+        for fill in [0.125f64, 0.25, 0.5, 1.0] {
+            let cfg = SystemConfig {
+                segment_fill: fill,
+                ..common::config()
+            };
+            let secs = time_iter(s, &format!("fill={fill}"), g, &cfg);
+            t.row(&[
+                format!("{fill}"),
+                cfg.segment_size(8).to_string(),
+                format!("{:.1}ms", secs * 1e3),
+            ]);
+        }
+        t.print();
+        println!("§4.5 expectation: ~0.5 optimal (room left for edge stream + output block); see EXPERIMENTS.md §Perf step 5");
+    });
 }

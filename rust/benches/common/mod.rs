@@ -1,9 +1,22 @@
 //! Shared helpers for the per-table/figure bench targets.
+//!
+//! Every target's `main` is a thin wrapper around [`run_suite`]: the
+//! shared runner (re-exported from `cagra::bench::suite`) prints the
+//! header, threads one [`Suite`] through the body so every timed or
+//! simulated case lands in the suite's report, and emits
+//! `BENCH_<suite>.json` (see `CAGRA_BENCH_OUT`) alongside the tables.
 #![allow(dead_code)] // each bench target uses a different subset
 
 use cagra::apps::{registry, AppKind, PreparedApp};
 use cagra::coordinator::SystemConfig;
 use cagra::graph::datasets::{self, Dataset};
+
+pub use cagra::bench::suite::Suite;
+
+/// Run `body` under the registered suite `name` and emit its report.
+pub fn run_suite(name: &str, body: impl FnOnce(&mut Suite)) {
+    cagra::bench::suite::run(name, body)
+}
 
 /// Load a dataset at the bench scale (`CAGRA_BENCH_SCALE`).
 pub fn load(name: &str) -> Dataset {
@@ -31,9 +44,9 @@ pub fn prepare_app(
 }
 
 /// Median per-iteration seconds of an iterative app variant prepared
-/// through the registry.
+/// through the registry, recorded under the suite's current scope.
 pub fn time_app_iter(
-    b: &mut cagra::bench::Bencher,
+    s: &mut Suite,
     label: &str,
     g: &cagra::graph::Csr,
     cfg: &SystemConfig,
@@ -41,14 +54,14 @@ pub fn time_app_iter(
     variant: &str,
 ) -> f64 {
     let mut prep = prepare_app(g, cfg, app, variant);
-    let m = b.bench_work(label, Some(g.num_edges() as u64), &mut || prep.step());
+    let m = s.bench_work(label, Some(g.num_edges() as u64), &mut || prep.step());
     m.secs()
 }
 
 /// Median seconds for one full pass over `sources` of a per-source app
 /// variant prepared through the registry.
 pub fn time_app_sources(
-    b: &mut cagra::bench::Bencher,
+    s: &mut Suite,
     label: &str,
     g: &cagra::graph::Csr,
     cfg: &SystemConfig,
@@ -57,9 +70,9 @@ pub fn time_app_sources(
     sources: &[cagra::graph::VertexId],
 ) -> f64 {
     let mut prep = prepare_app(g, cfg, app, variant);
-    let m = b.bench_work(label, Some(g.num_edges() as u64), &mut || {
-        for &s in sources {
-            prep.run_source(s);
+    let m = s.bench_work(label, Some(g.num_edges() as u64), &mut || {
+        for &src in sources {
+            prep.run_source(src);
         }
     });
     m.secs()

@@ -12,7 +12,7 @@
 mod common;
 
 use cagra::baselines::hilbert::{self, Mode};
-use cagra::bench::{header, Bencher, Table};
+use cagra::bench::{Bencher, Table};
 
 const MODES: [&str; 4] = ["hserial", "hatomic", "hmerge", "segmenting"];
 
@@ -55,35 +55,38 @@ fn main() {
         run_worker(&args[i + 1]);
         return;
     }
-    header("Figure 10: Hilbert parallelizations vs segmenting", "paper Figure 10");
-    let threads = [1usize, 2, 4];
-    let exe = std::env::current_exe().unwrap();
-    let mut t = Table::new(&["mode", "t=1", "t=2", "t=4"]);
-    for mode in MODES {
-        let mut row = vec![mode.to_string()];
-        for &nt in &threads {
-            if mode == "hserial" && nt > 1 {
-                row.push("-".into());
-                continue;
+    common::run_suite("fig10_hilbert", |s| {
+        let threads = [1usize, 2, 4];
+        let exe = std::env::current_exe().unwrap();
+        let mut t = Table::new(&["mode", "t=1", "t=2", "t=4"]);
+        for mode in MODES {
+            s.set_scope(mode);
+            let mut row = vec![mode.to_string()];
+            for &nt in &threads {
+                if mode == "hserial" && nt > 1 {
+                    row.push("-".into());
+                    continue;
+                }
+                let out = std::process::Command::new(&exe)
+                    .args(["--worker", mode, "--bench"])
+                    .env("CAGRA_THREADS", nt.to_string())
+                    .output()
+                    .expect("spawning worker");
+                let stdout = String::from_utf8_lossy(&out.stdout);
+                let secs: f64 = stdout
+                    .lines()
+                    .find_map(|l| l.strip_prefix("RESULT "))
+                    .unwrap_or_else(|| panic!("worker failed: {stdout}"))
+                    .trim()
+                    .parse()
+                    .unwrap();
+                s.record(&format!("t={nt}"), "s", secs);
+                row.push(format!("{:.0}ms", secs * 1e3));
             }
-            let out = std::process::Command::new(&exe)
-                .args(["--worker", mode, "--bench"])
-                .env("CAGRA_THREADS", nt.to_string())
-                .output()
-                .expect("spawning worker");
-            let stdout = String::from_utf8_lossy(&out.stdout);
-            let secs: f64 = stdout
-                .lines()
-                .find_map(|l| l.strip_prefix("RESULT "))
-                .unwrap_or_else(|| panic!("worker failed: {stdout}"))
-                .trim()
-                .parse()
-                .unwrap();
-            row.push(format!("{:.0}ms", secs * 1e3));
+            t.row(&row);
         }
-        t.row(&row);
-    }
-    t.print();
-    println!("\npaper (Figure 10, 12 cores): HSerial 5.4s, HAtomic 2.3s, HMerge 1.8s, Segmenting 0.5s — Hilbert variants 3x+ slower than segmenting");
-    println!("(single-CPU container: compare within the t=1 column; see DESIGN.md §3)");
+        t.print();
+        println!("\npaper (Figure 10, 12 cores): HSerial 5.4s, HAtomic 2.3s, HMerge 1.8s, Segmenting 0.5s — Hilbert variants 3x+ slower than segmenting");
+        println!("(single-CPU container: compare within the t=1 column; see DESIGN.md §3)");
+    });
 }

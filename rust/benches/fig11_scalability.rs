@@ -11,7 +11,7 @@
 
 mod common;
 
-use cagra::bench::{header, Bencher, Table};
+use cagra::bench::{Bencher, Table};
 
 fn run_worker() {
     let cfg = common::config();
@@ -35,39 +35,41 @@ fn main() {
         run_worker();
         return;
     }
-    header("Figure 11: PageRank thread scalability", "paper Figure 11");
-    let exe = std::env::current_exe().unwrap();
-    let threads = [1usize, 2, 4, 8];
-    let mut results = Vec::new();
-    for &nt in &threads {
-        let out = std::process::Command::new(&exe)
-            .args(["--worker", "--bench"])
-            .env("CAGRA_THREADS", nt.to_string())
-            .output()
-            .expect("spawning worker");
-        let stdout = String::from_utf8_lossy(&out.stdout);
-        let secs: f64 = stdout
-            .lines()
-            .find_map(|l| l.strip_prefix("RESULT "))
-            .unwrap_or_else(|| panic!("worker failed: {stdout}"))
-            .trim()
-            .parse()
-            .unwrap();
-        results.push(secs);
-    }
-    let serial = results[0];
-    let mut t = Table::new(&["threads", "per-iter", "speedup vs 1 thread"]);
-    for (i, &nt) in threads.iter().enumerate() {
-        t.row(&[
-            nt.to_string(),
-            format!("{:.0}ms", results[i] * 1e3),
-            format!("{:.2}x", serial / results[i]),
-        ]);
-    }
-    t.print();
-    println!("\npaper (Figure 11): 8.5x @ 12 cores, 14x @ 24 cores, 16x @ 48 SMT threads");
-    println!(
-        "(this container has {} CPU(s) — wall-clock cannot scale; the shared-working-set argument is validated by Figure 10's t=1 comparison and the cache simulation)",
-        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-    );
+    common::run_suite("fig11_scalability", |s| {
+        let exe = std::env::current_exe().unwrap();
+        let threads = [1usize, 2, 4, 8];
+        let mut results = Vec::new();
+        for &nt in &threads {
+            let out = std::process::Command::new(&exe)
+                .args(["--worker", "--bench"])
+                .env("CAGRA_THREADS", nt.to_string())
+                .output()
+                .expect("spawning worker");
+            let stdout = String::from_utf8_lossy(&out.stdout);
+            let secs: f64 = stdout
+                .lines()
+                .find_map(|l| l.strip_prefix("RESULT "))
+                .unwrap_or_else(|| panic!("worker failed: {stdout}"))
+                .trim()
+                .parse()
+                .unwrap();
+            s.record(&format!("t={nt}"), "s", secs);
+            results.push(secs);
+        }
+        let serial = results[0];
+        let mut t = Table::new(&["threads", "per-iter", "speedup vs 1 thread"]);
+        for (i, &nt) in threads.iter().enumerate() {
+            t.row(&[
+                nt.to_string(),
+                format!("{:.0}ms", results[i] * 1e3),
+                format!("{:.2}x", serial / results[i]),
+            ]);
+        }
+        t.print();
+        println!("\npaper (Figure 11): 8.5x @ 12 cores, 14x @ 24 cores, 16x @ 48 SMT threads");
+        println!(
+            "(this container has {} CPU(s) — wall-clock cannot scale; the shared-working-set argument is validated by Figure 10's t=1 comparison and the cache simulation)",
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        );
+    });
 }

@@ -7,75 +7,75 @@ mod common;
 
 use cagra::apps::{bc, cf};
 use cagra::baselines::{graphmat_style, gridgraph_style, ligra_style};
-use cagra::bench::{header, Bencher, Table};
+use cagra::bench::Table;
 
 fn main() {
-    header("Figure 1: ours vs frameworks, RMAT27", "paper Figure 1");
-    let cfg = common::config();
-    let ds = common::load("rmat27-sim");
-    let g = &ds.graph;
-    let mut b = Bencher::new();
-    b.reps = b.reps.min(3);
+    common::run_suite("fig1_overview", |s| {
+        let cfg = common::config();
+        let ds = common::load("rmat27-sim");
+        let g = &ds.graph;
+        s.cap_reps(3);
 
-    // PageRank per-iteration across systems (ours via the app registry).
-    let pr_opt = common::time_app_iter(&mut b, "pr-opt", g, &cfg, "pagerank", "both");
-    let pr_gm = {
-        let mut p = graphmat_style::Prepared::new(g, &cfg);
-        b.bench("pr-graphmat", || p.step()).secs()
-    };
-    let pr_li = {
-        let mut p = ligra_style::Prepared::new(g, &cfg);
-        b.bench("pr-ligra", || p.step()).secs()
-    };
-    let pr_gg = {
-        let mut p = gridgraph_style::Prepared::new(g, &cfg);
-        b.bench("pr-gridgraph", || p.step()).secs()
-    };
+        // PageRank per-iteration across systems (ours via the app registry).
+        let pr_opt = common::time_app_iter(s, "pr-opt", g, &cfg, "pagerank", "both");
+        let pr_gm = {
+            let mut p = graphmat_style::Prepared::new(g, &cfg);
+            s.bench("pr-graphmat", || p.step()).secs()
+        };
+        let pr_li = {
+            let mut p = ligra_style::Prepared::new(g, &cfg);
+            s.bench("pr-ligra", || p.step()).secs()
+        };
+        let pr_gg = {
+            let mut p = gridgraph_style::Prepared::new(g, &cfg);
+            s.bench("pr-gridgraph", || p.step()).secs()
+        };
 
-    // CF per-iteration (ours vs GraphMat-shaped baseline).
-    let nf = common::load("netflix-sim");
-    let cf_opt = {
-        let mut p = cf::Prepared::new(&nf.graph, &cfg, cf::Variant::Segmented);
-        b.bench("cf-opt", || p.step()).secs()
-    };
-    let cf_gm = {
-        let mut p = cf::Prepared::new(&nf.graph, &cfg, cf::Variant::Baseline);
-        b.bench("cf-graphmat", || p.step()).secs()
-    };
+        // CF per-iteration (ours vs GraphMat-shaped baseline).
+        let nf = common::load("netflix-sim");
+        let cf_opt = {
+            let mut p = cf::Prepared::new(&nf.graph, &cfg, cf::Variant::Segmented);
+            s.bench("cf-opt", || p.step()).secs()
+        };
+        let cf_gm = {
+            let mut p = cf::Prepared::new(&nf.graph, &cfg, cf::Variant::Baseline);
+            s.bench("cf-graphmat", || p.step()).secs()
+        };
 
-    // BC (ours vs Ligra-shaped baseline), 2 sources for time.
-    let sources = bc::default_sources(g, 2);
-    let bc_opt_p = bc::Prepared::new(g, bc::Variant::ReorderedBitvector);
-    let bc_opt = b.bench("bc-opt", || {
-        let _ = bc_opt_p.run(&sources);
+        // BC (ours vs Ligra-shaped baseline), 2 sources for time.
+        let sources = bc::default_sources(g, 2);
+        let bc_opt_p = bc::Prepared::new(g, bc::Variant::ReorderedBitvector);
+        let bc_opt = s.bench("bc-opt", || {
+            let _ = bc_opt_p.run(&sources);
+        });
+        let bc_li_p = bc::Prepared::new(g, bc::Variant::Baseline);
+        let bc_li = s.bench("bc-ligra", || {
+            let _ = bc_li_p.run(&sources);
+        });
+
+        let mut t = Table::new(&["App", "Ours", "GraphMat-style", "Ligra-style", "GridGraph-style"]);
+        t.row(&[
+            "PageRank (per iter)".into(),
+            common::cell(pr_opt, pr_opt),
+            common::cell(pr_gm, pr_opt),
+            common::cell(pr_li, pr_opt),
+            common::cell(pr_gg, pr_opt),
+        ]);
+        t.row(&[
+            "CF (per iter)".into(),
+            common::cell(cf_opt, cf_opt),
+            common::cell(cf_gm, cf_opt),
+            "-".into(),
+            "-".into(),
+        ]);
+        t.row(&[
+            "BC (2 sources)".into(),
+            common::cell(bc_opt.secs(), bc_opt.secs()),
+            "-".into(),
+            common::cell(bc_li.secs(), bc_opt.secs()),
+            "-".into(),
+        ]);
+        t.print();
+        println!("\npaper (Figure 1, RMAT27): PageRank 4.3x vs GraphMat / 8.8x vs Ligra / 11.2x vs GridGraph; CF up to 4x; BC up to 2x");
     });
-    let bc_li_p = bc::Prepared::new(g, bc::Variant::Baseline);
-    let bc_li = b.bench("bc-ligra", || {
-        let _ = bc_li_p.run(&sources);
-    });
-
-    let mut t = Table::new(&["App", "Ours", "GraphMat-style", "Ligra-style", "GridGraph-style"]);
-    t.row(&[
-        "PageRank (per iter)".into(),
-        common::cell(pr_opt, pr_opt),
-        common::cell(pr_gm, pr_opt),
-        common::cell(pr_li, pr_opt),
-        common::cell(pr_gg, pr_opt),
-    ]);
-    t.row(&[
-        "CF (per iter)".into(),
-        common::cell(cf_opt, cf_opt),
-        common::cell(cf_gm, cf_opt),
-        "-".into(),
-        "-".into(),
-    ]);
-    t.row(&[
-        "BC (2 sources)".into(),
-        common::cell(bc_opt.secs(), bc_opt.secs()),
-        "-".into(),
-        common::cell(bc_li.secs(), bc_opt.secs()),
-        "-".into(),
-    ]);
-    t.print();
-    println!("\npaper (Figure 1, RMAT27): PageRank 4.3x vs GraphMat / 8.8x vs Ligra / 11.2x vs GridGraph; CF up to 4x; BC up to 2x");
 }

@@ -6,62 +6,63 @@
 mod common;
 
 use cagra::apps::{registry, AppKind};
-use cagra::bench::{header, Bencher, Table};
+use cagra::bench::Table;
 
 fn main() {
-    header("Figure 2: optimization breakdown, PageRank RMAT27", "paper Figure 2");
-    let cfg = common::config();
-    let ds = common::load("rmat27-sim");
-    let g = &ds.graph;
-    let mut b = Bencher::new();
+    common::run_suite("fig2_breakdown", |s| {
+        let cfg = common::config();
+        let ds = common::load("rmat27-sim");
+        let g = &ds.graph;
 
-    // Every PageRank variant the registry advertises, in table order
-    // (baseline, reordering, segmenting, both, lower-bound).
-    let app = registry::find("pagerank").expect("pagerank registered");
-    let mut names = Vec::new();
-    let mut times = Vec::new();
-    let mut stalls = Vec::new();
-    for info in app.variants() {
-        names.push(info.name);
-        times.push(common::time_app_iter(&mut b, info.name, g, &cfg, "pagerank", info.name));
-        // The lower bound's trace is the baseline's without random reads;
-        // model it as all vertex reads hitting L1 (stalls from streams
-        // only) by reusing the baseline estimate minus its random
-        // component — simplest: simulate the baseline with a huge LLC.
-        let est = if info.name == "lower-bound" {
-            let big = cagra::coordinator::SystemConfig {
-                llc_bytes: 1 << 30,
-                ..cfg.clone()
+        // Every PageRank variant the registry advertises, in table order
+        // (baseline, reordering, segmenting, both, lower-bound).
+        let app = registry::find("pagerank").expect("pagerank registered");
+        let mut names = Vec::new();
+        let mut times = Vec::new();
+        let mut stalls = Vec::new();
+        for info in app.variants() {
+            names.push(info.name);
+            times.push(common::time_app_iter(s, info.name, g, &cfg, "pagerank", info.name));
+            // The lower bound's trace is the baseline's without random reads;
+            // model it as all vertex reads hitting L1 (stalls from streams
+            // only) by reusing the baseline estimate minus its random
+            // component — simplest: simulate the baseline with a huge LLC.
+            let est = if info.name == "lower-bound" {
+                let big = cagra::coordinator::SystemConfig {
+                    llc_bytes: 1 << 30,
+                    ..cfg.clone()
+                };
+                let base = AppKind::parse("pagerank", "baseline").unwrap();
+                app.simulate(g, &big, base).expect("pagerank simulates")
+            } else {
+                app.simulate(g, &cfg, info.kind).expect("pagerank simulates")
             };
-            let base = AppKind::parse("pagerank", "baseline").unwrap();
-            app.simulate(g, &big, base).expect("pagerank simulates")
-        } else {
-            app.simulate(g, &cfg, info.kind).expect("pagerank simulates")
+            s.record(&format!("{}-stalls", info.name), "cycles", est.stall_cycles);
+            stalls.push(est.stall_cycles);
+        }
+        // Index by name, not table position — the variant order lives in
+        // pagerank's registry table, another file.
+        let idx = |want: &str| {
+            names
+                .iter()
+                .position(|n| *n == want)
+                .unwrap_or_else(|| panic!("pagerank variant {want:?} not in registry"))
         };
-        stalls.push(est.stall_cycles);
-    }
-    // Index by name, not table position — the variant order lives in
-    // pagerank's registry table, another file.
-    let idx = |want: &str| {
-        names
-            .iter()
-            .position(|n| *n == want)
-            .unwrap_or_else(|| panic!("pagerank variant {want:?} not in registry"))
-    };
-    let t0 = times[idx("baseline")];
-    let s0 = stalls[idx("baseline")];
-    let mut t = Table::new(&["Variant", "Time (norm.)", "Sim. stalls (norm.)"]);
-    for (i, name) in names.iter().enumerate() {
-        t.row(&[
-            name.to_string(),
-            format!("{:.2}", times[i] / t0),
-            format!("{:.2}", stalls[i] / s0),
-        ]);
-    }
-    t.print();
-    println!("\npaper (Figure 2): stall reduction tracks runtime reduction; optimized within 2x of the no-random lower bound");
-    println!(
-        "our gap to lower bound: {:.2}x (paper: ~2x)",
-        times[idx("both")] / times[idx("lower-bound")]
-    );
+        let t0 = times[idx("baseline")];
+        let s0 = stalls[idx("baseline")];
+        let mut t = Table::new(&["Variant", "Time (norm.)", "Sim. stalls (norm.)"]);
+        for (i, name) in names.iter().enumerate() {
+            t.row(&[
+                name.to_string(),
+                format!("{:.2}", times[i] / t0),
+                format!("{:.2}", stalls[i] / s0),
+            ]);
+        }
+        t.print();
+        println!("\npaper (Figure 2): stall reduction tracks runtime reduction; optimized within 2x of the no-random lower bound");
+        println!(
+            "our gap to lower bound: {:.2}x (paper: ~2x)",
+            times[idx("both")] / times[idx("lower-bound")]
+        );
+    });
 }

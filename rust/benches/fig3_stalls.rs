@@ -5,56 +5,50 @@
 
 mod common;
 
-use cagra::bench::{header, Table};
+use cagra::bench::Table;
 
 /// Compute cycles per memory access the ALU work roughly costs in these
 /// kernels (one FMA + bookkeeping); only the *ratio* matters.
 const COMPUTE_PER_ACCESS: f64 = 1.5;
 
 fn main() {
-    header("Figure 3: % cycles stalled on memory (simulated)", "paper Figure 3");
-    let cfg = common::config();
-    let mut t = Table::new(&["App", "Dataset", "stall %"]);
-    // PageRank + CF on their natural datasets.
-    let g = common::load("rmat27-sim");
-    let pull = g.graph.transpose();
-    let sample = (g.graph.num_edges() / 4_000_000).max(1);
-    let pr = cagra::cache::stall::estimate_pull_iteration(&pull, 8, cfg.llc_bytes, sample);
-    t.row(&[
-        "PageRank".into(),
-        "rmat27-sim".into(),
-        format!(
-            "{:.0}%",
-            stall_pct(pr.stall_cycles, pr.accesses)
-        ),
-    ]);
-    let nf = common::load("netflix-sim");
-    let nf_pull = nf.graph.transpose();
-    let cf = cagra::cache::stall::estimate_pull_iteration(
-        &nf_pull,
-        (8 * cfg.cf_k) as u64,
-        cfg.llc_bytes,
-        1,
-    );
-    t.row(&[
-        "CF".into(),
-        "netflix-sim".into(),
-        format!("{:.0}%", stall_pct(cf.stall_cycles, cf.accesses)),
-    ]);
-    let bc = common::frontier_stall_estimate(&pull, 8, false, cfg.llc_bytes, sample);
-    t.row(&[
-        "BC".into(),
-        "rmat27-sim".into(),
-        format!("{:.0}%", stall_pct(bc.stall_cycles, bc.accesses)),
-    ]);
-    let bfs = common::frontier_stall_estimate(&pull, 4, false, cfg.llc_bytes, sample);
-    t.row(&[
-        "BFS".into(),
-        "rmat27-sim".into(),
-        format!("{:.0}%", stall_pct(bfs.stall_cycles, bfs.accesses)),
-    ]);
-    t.print();
-    println!("\npaper (Figure 3): 60-80% of cycles stalled on memory for these applications");
+    common::run_suite("fig3_stalls", |s| {
+        let cfg = common::config();
+        let mut t = Table::new(&["App", "Dataset", "stall %"]);
+        // PageRank + CF on their natural datasets.
+        let g = common::load("rmat27-sim");
+        let pull = g.graph.transpose();
+        let sample = (g.graph.num_edges() / 4_000_000).max(1);
+        let pr = cagra::cache::stall::estimate_pull_iteration(&pull, 8, cfg.llc_bytes, sample);
+        let pr_pct = stall_pct(pr.stall_cycles, pr.accesses);
+        s.set_scope("pagerank");
+        s.record("rmat27-sim", "stall-pct", pr_pct);
+        t.row(&["PageRank".into(), "rmat27-sim".into(), format!("{pr_pct:.0}%")]);
+        let nf = common::load("netflix-sim");
+        let nf_pull = nf.graph.transpose();
+        let cf = cagra::cache::stall::estimate_pull_iteration(
+            &nf_pull,
+            (8 * cfg.cf_k) as u64,
+            cfg.llc_bytes,
+            1,
+        );
+        let cf_pct = stall_pct(cf.stall_cycles, cf.accesses);
+        s.set_scope("cf");
+        s.record("netflix-sim", "stall-pct", cf_pct);
+        t.row(&["CF".into(), "netflix-sim".into(), format!("{cf_pct:.0}%")]);
+        let bc = common::frontier_stall_estimate(&pull, 8, false, cfg.llc_bytes, sample);
+        let bc_pct = stall_pct(bc.stall_cycles, bc.accesses);
+        s.set_scope("bc");
+        s.record("rmat27-sim", "stall-pct", bc_pct);
+        t.row(&["BC".into(), "rmat27-sim".into(), format!("{bc_pct:.0}%")]);
+        let bfs = common::frontier_stall_estimate(&pull, 4, false, cfg.llc_bytes, sample);
+        let bfs_pct = stall_pct(bfs.stall_cycles, bfs.accesses);
+        s.set_scope("bfs");
+        s.record("rmat27-sim", "stall-pct", bfs_pct);
+        t.row(&["BFS".into(), "rmat27-sim".into(), format!("{bfs_pct:.0}%")]);
+        t.print();
+        println!("\npaper (Figure 3): 60-80% of cycles stalled on memory for these applications");
+    });
 }
 
 fn stall_pct(stall_cycles: f64, accesses: u64) -> f64 {

@@ -6,72 +6,77 @@
 
 mod common;
 
-use cagra::bench::{header, Bencher, Table};
+use cagra::bench::Table;
 use cagra::segment::{merge, SegmentBuffers, SegmentedCsr};
 use cagra::util::timer::time;
 
 fn main() {
-    header("Figure 6: segment compute vs merge cost", "paper Figure 6");
-    let cfg = common::config();
-    let mut t = Table::new(&["Dataset", "segment compute", "merge", "other", "total/iter"]);
-    for name in ["twitter-sim", "rmat27-sim"] {
-        let ds = common::load(name);
-        let g = &ds.graph;
-        let n = g.num_vertices();
-        let sg = SegmentedCsr::build_with_block(g, cfg.segment_size(8), cfg.merge_block(8));
-        let mut bufs = SegmentBuffers::for_graph(&sg);
-        let rank = vec![1.0 / n as f64; n];
-        let inv: Vec<f64> = (0..n)
-            .map(|v| {
-                let d = g.degree(v as u32);
-                if d == 0 {
-                    0.0
-                } else {
-                    1.0 / d as f64
-                }
-            })
-            .collect();
-        let mut contrib = vec![0.0f64; n];
-        let mut out = vec![0.0f64; n];
-        let mut b = Bencher::new();
-        b.reps = b.reps.min(3);
-        let mut seg_s = 0.0;
-        let mut merge_s = 0.0;
-        let mut other_s = 0.0;
-        let reps = b.reps.max(1);
-        for _ in 0..reps {
-            let (_, t1) = time(|| {
-                for v in 0..n {
-                    contrib[v] = rank[v] * inv[v];
-                }
-            });
-            let (_, t2) = time(|| {
-                for s in 0..sg.num_segments() {
-                    sg.process_segment(s, |u| contrib[u as usize], &mut bufs.per_segment[s]);
-                }
-            });
-            let (_, t3) = time(|| {
-                out.fill(0.0);
-                merge(&sg, &bufs, &mut out);
-            });
-            let (_, t4) = time(|| {
-                for v in 0..n {
-                    out[v] = 0.15 / n as f64 + 0.85 * out[v];
-                }
-            });
-            seg_s += t2;
-            merge_s += t3;
-            other_s += t1 + t4;
+    common::run_suite("fig6_merge_cost", |s| {
+        let cfg = common::config();
+        let mut t = Table::new(&["Dataset", "segment compute", "merge", "other", "total/iter"]);
+        s.cap_reps(3);
+        let reps = s.reps().max(1);
+        for name in ["twitter-sim", "rmat27-sim"] {
+            let ds = common::load(name);
+            let g = &ds.graph;
+            let n = g.num_vertices();
+            let sg = SegmentedCsr::build_with_block(g, cfg.segment_size(8), cfg.merge_block(8));
+            let mut bufs = SegmentBuffers::for_graph(&sg);
+            let rank = vec![1.0 / n as f64; n];
+            let inv: Vec<f64> = (0..n)
+                .map(|v| {
+                    let d = g.degree(v as u32);
+                    if d == 0 {
+                        0.0
+                    } else {
+                        1.0 / d as f64
+                    }
+                })
+                .collect();
+            let mut contrib = vec![0.0f64; n];
+            let mut out = vec![0.0f64; n];
+            let mut seg_s = 0.0;
+            let mut merge_s = 0.0;
+            let mut other_s = 0.0;
+            for _ in 0..reps {
+                let (_, t1) = time(|| {
+                    for v in 0..n {
+                        contrib[v] = rank[v] * inv[v];
+                    }
+                });
+                let (_, t2) = time(|| {
+                    for i in 0..sg.num_segments() {
+                        sg.process_segment(i, |u| contrib[u as usize], &mut bufs.per_segment[i]);
+                    }
+                });
+                let (_, t3) = time(|| {
+                    out.fill(0.0);
+                    merge(&sg, &bufs, &mut out);
+                });
+                let (_, t4) = time(|| {
+                    for v in 0..n {
+                        out[v] = 0.15 / n as f64 + 0.85 * out[v];
+                    }
+                });
+                seg_s += t2;
+                merge_s += t3;
+                other_s += t1 + t4;
+            }
+            let total = seg_s + merge_s + other_s;
+            s.set_scope(name);
+            s.record("segment-compute", "s", seg_s / reps as f64);
+            s.record("merge", "s", merge_s / reps as f64);
+            s.record("other", "s", other_s / reps as f64);
+            s.record("total-iter", "s", total / reps as f64);
+            t.row(&[
+                name.to_string(),
+                format!("{:.1}%", seg_s / total * 100.0),
+                format!("{:.1}%", merge_s / total * 100.0),
+                format!("{:.1}%", other_s / total * 100.0),
+                format!("{:.1}ms", total / reps as f64 * 1e3),
+            ]);
         }
-        let total = seg_s + merge_s + other_s;
-        t.row(&[
-            name.to_string(),
-            format!("{:.1}%", seg_s / total * 100.0),
-            format!("{:.1}%", merge_s / total * 100.0),
-            format!("{:.1}%", other_s / total * 100.0),
-            format!("{:.1}ms", total / reps as f64 * 1e3),
-        ]);
-    }
-    t.print();
-    println!("\npaper (Figure 6): merge is a minor slice of the iteration; segment-local edge processing dominates");
+        t.print();
+        println!("\npaper (Figure 6): merge is a minor slice of the iteration; segment-local edge processing dominates");
+    });
 }

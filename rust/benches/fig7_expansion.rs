@@ -5,32 +5,41 @@
 
 mod common;
 
-use cagra::bench::{header, Table};
+use cagra::bench::Table;
 use cagra::reorder::{self, Ordering as VOrdering};
 use cagra::segment::expansion::expansion_sweep;
 
 fn main() {
-    header("Figure 7: expansion factor vs segment count", "paper Figure 7");
-    let counts = [1usize, 2, 4, 8, 16, 32, 64, 128, 256];
-    for name in ["rmat27-sim", "twitter-sim"] {
-        let ds = common::load(name);
-        let g = &ds.graph;
-        println!("\n{name} (V={}, d̄={:.0}):", g.num_vertices(), g.num_edges() as f64 / g.num_vertices() as f64);
-        let mut t = Table::new(&[
-            "ordering", "k=1", "2", "4", "8", "16", "32", "64", "128", "256",
-        ]);
-        for &o in &[VOrdering::Identity, VOrdering::DegreeSort, VOrdering::Random] {
-            let (h, _) = reorder::reorder(g, o);
-            let sweep = expansion_sweep(&h, &counts);
-            let mut row = vec![o.name().to_string()];
-            row.extend(sweep.iter().map(|(_, q)| format!("{q:.2}")));
-            t.row(&row);
+    common::run_suite("fig7_expansion", |s| {
+        let counts = [1usize, 2, 4, 8, 16, 32, 64, 128, 256];
+        for name in ["rmat27-sim", "twitter-sim"] {
+            let ds = common::load(name);
+            let g = &ds.graph;
+            println!(
+                "\n{name} (V={}, d̄={:.0}):",
+                g.num_vertices(),
+                g.num_edges() as f64 / g.num_vertices() as f64
+            );
+            let mut t = Table::new(&[
+                "ordering", "k=1", "2", "4", "8", "16", "32", "64", "128", "256",
+            ]);
+            for &o in &[VOrdering::Identity, VOrdering::DegreeSort, VOrdering::Random] {
+                let (h, _) = reorder::reorder(g, o);
+                let sweep = expansion_sweep(&h, &counts);
+                s.set_scope(&format!("{name}/{}", o.name()));
+                for &(k, q) in &sweep {
+                    s.record(&format!("k={k}"), "q", q);
+                }
+                let mut row = vec![o.name().to_string()];
+                row.extend(sweep.iter().map(|(_, q)| format!("{q:.2}")));
+                t.row(&row);
+            }
+            t.print();
+            // Mark the LLC-sized segment count.
+            let cfg = common::config();
+            let k_llc = g.num_vertices().div_ceil(cfg.segment_size(8));
+            println!("LLC-sized segments for 8B/vertex: k = {k_llc}");
         }
-        t.print();
-        // Mark the LLC-sized segment count.
-        let cfg = common::config();
-        let k_llc = g.num_vertices().div_ceil(cfg.segment_size(8));
-        println!("LLC-sized segments for 8B/vertex: k = {k_llc}");
-    }
-    println!("\npaper (Figure 7): q < 5 at LLC-sized segments; random order much worse; sorting best (esp. Twitter)");
+        println!("\npaper (Figure 7): q < 5 at LLC-sized segments; random order much worse; sorting best (esp. Twitter)");
+    });
 }

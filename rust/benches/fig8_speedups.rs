@@ -7,94 +7,94 @@
 mod common;
 
 use cagra::apps::{bc, bfs, cf};
-use cagra::bench::{header, Bencher, Table};
+use cagra::bench::Table;
 use cagra::graph::datasets::GRAPH_DATASETS;
 
 fn main() {
-    header("Figure 8: per-optimization speedups", "paper Figure 8");
-    let cfg = common::config();
+    common::run_suite("fig8_speedups", |s| {
+        let cfg = common::config();
 
-    println!("\nPageRank (speedup vs baseline, per iteration):");
-    let mut t = Table::new(&["Dataset", "reorder", "segment", "both"]);
-    for name in GRAPH_DATASETS {
-        let ds = common::load(name);
-        let g = &ds.graph;
-        let mut b = Bencher::new();
-        b.reps = b.reps.min(3);
-        let base = common::time_app_iter(&mut b, "base", g, &cfg, "pagerank", "baseline");
-        let r = common::time_app_iter(&mut b, "reorder", g, &cfg, "pagerank", "reordering");
-        let s = common::time_app_iter(&mut b, "segment", g, &cfg, "pagerank", "segmenting");
-        let rs = common::time_app_iter(&mut b, "both", g, &cfg, "pagerank", "both");
-        t.row(&[
-            name.to_string(),
-            format!("{:.2}x", base / r),
-            format!("{:.2}x", base / s),
-            format!("{:.2}x", base / rs),
-        ]);
-    }
-    t.print();
-
-    println!("\nCollaborative Filtering (speedup vs baseline):");
-    let mut t = Table::new(&["Dataset", "segment"]);
-    for name in ["netflix-sim", "netflix2x-sim"] {
-        let ds = common::load(name);
-        let mut b = Bencher::new();
-        b.reps = b.reps.min(2);
-        let mut pb = cf::Prepared::new(&ds.graph, &cfg, cf::Variant::Baseline);
-        let base = b.bench("cf-base", || pb.step()).secs();
-        let mut ps = cf::Prepared::new(&ds.graph, &cfg, cf::Variant::Segmented);
-        let seg = b.bench("cf-seg", || ps.step()).secs();
-        t.row(&[name.to_string(), format!("{:.2}x", base / seg)]);
-    }
-    t.print();
-
-    println!("\nBC and BFS (speedup vs baseline, 2 sources):");
-    let mut t = Table::new(&["Dataset", "app", "reorder", "bitvector", "both"]);
-    for name in ["twitter-sim", "rmat27-sim"] {
-        let ds = common::load(name);
-        let g = &ds.graph;
-        let sources = bc::default_sources(g, 2);
-        let mut b = Bencher::new();
-        b.reps = b.reps.min(2);
-        // BC grid (BC's own variant enum since the AppKind redesign).
-        let mut bc_times = Vec::new();
-        for v in bc::Variant::all() {
-            let p = bc::Prepared::new(g, *v);
-            bc_times.push(
-                b.bench(&format!("bc-{}", v.name()), || {
-                    let _ = p.run(&sources);
-                })
-                .secs(),
-            );
+        println!("\nPageRank (speedup vs baseline, per iteration):");
+        let mut t = Table::new(&["Dataset", "reorder", "segment", "both"]);
+        s.cap_reps(3);
+        for name in GRAPH_DATASETS {
+            let ds = common::load(name);
+            let g = &ds.graph;
+            s.set_scope(name);
+            let base = common::time_app_iter(s, "base", g, &cfg, "pagerank", "baseline");
+            let r = common::time_app_iter(s, "reorder", g, &cfg, "pagerank", "reordering");
+            let seg = common::time_app_iter(s, "segment", g, &cfg, "pagerank", "segmenting");
+            let rs = common::time_app_iter(s, "both", g, &cfg, "pagerank", "both");
+            t.row(&[
+                name.to_string(),
+                format!("{:.2}x", base / r),
+                format!("{:.2}x", base / seg),
+                format!("{:.2}x", base / rs),
+            ]);
         }
-        t.row(&[
-            name.to_string(),
-            "BC".into(),
-            format!("{:.2}x", bc_times[0] / bc_times[1]),
-            format!("{:.2}x", bc_times[0] / bc_times[2]),
-            format!("{:.2}x", bc_times[0] / bc_times[3]),
-        ]);
-        // BFS grid.
-        let mut bfs_times = Vec::new();
-        for v in bfs::Variant::all() {
-            let p = bfs::Prepared::new(g, *v);
-            bfs_times.push(
-                b.bench(&format!("bfs-{}", v.name()), || {
-                    for &s in &sources {
-                        let _ = p.run(s);
-                    }
-                })
-                .secs(),
-            );
+        t.print();
+
+        println!("\nCollaborative Filtering (speedup vs baseline):");
+        let mut t = Table::new(&["Dataset", "segment"]);
+        s.cap_reps(2);
+        for name in ["netflix-sim", "netflix2x-sim"] {
+            let ds = common::load(name);
+            s.set_scope(name);
+            let mut pb = cf::Prepared::new(&ds.graph, &cfg, cf::Variant::Baseline);
+            let base = s.bench("cf-base", || pb.step()).secs();
+            let mut ps = cf::Prepared::new(&ds.graph, &cfg, cf::Variant::Segmented);
+            let seg = s.bench("cf-seg", || ps.step()).secs();
+            t.row(&[name.to_string(), format!("{:.2}x", base / seg)]);
         }
-        t.row(&[
-            name.to_string(),
-            "BFS".into(),
-            format!("{:.2}x", bfs_times[0] / bfs_times[1]),
-            format!("{:.2}x", bfs_times[0] / bfs_times[2]),
-            format!("{:.2}x", bfs_times[0] / bfs_times[3]),
-        ]);
-    }
-    t.print();
-    println!("\npaper (Figure 8): PR/CF driven by segmenting (2x+); BC/BFS reorder ≈ bitvector, +20% combined; all grow with graph size");
+        t.print();
+
+        println!("\nBC and BFS (speedup vs baseline, 2 sources):");
+        let mut t = Table::new(&["Dataset", "app", "reorder", "bitvector", "both"]);
+        for name in ["twitter-sim", "rmat27-sim"] {
+            let ds = common::load(name);
+            let g = &ds.graph;
+            let sources = bc::default_sources(g, 2);
+            s.set_scope(name);
+            // BC grid (BC's own variant enum since the AppKind redesign).
+            let mut bc_times = Vec::new();
+            for v in bc::Variant::all() {
+                let p = bc::Prepared::new(g, *v);
+                bc_times.push(
+                    s.bench(&format!("bc-{}", v.name()), || {
+                        let _ = p.run(&sources);
+                    })
+                    .secs(),
+                );
+            }
+            t.row(&[
+                name.to_string(),
+                "BC".into(),
+                format!("{:.2}x", bc_times[0] / bc_times[1]),
+                format!("{:.2}x", bc_times[0] / bc_times[2]),
+                format!("{:.2}x", bc_times[0] / bc_times[3]),
+            ]);
+            // BFS grid.
+            let mut bfs_times = Vec::new();
+            for v in bfs::Variant::all() {
+                let p = bfs::Prepared::new(g, *v);
+                bfs_times.push(
+                    s.bench(&format!("bfs-{}", v.name()), || {
+                        for &src in &sources {
+                            let _ = p.run(src);
+                        }
+                    })
+                    .secs(),
+                );
+            }
+            t.row(&[
+                name.to_string(),
+                "BFS".into(),
+                format!("{:.2}x", bfs_times[0] / bfs_times[1]),
+                format!("{:.2}x", bfs_times[0] / bfs_times[2]),
+                format!("{:.2}x", bfs_times[0] / bfs_times[3]),
+            ]);
+        }
+        t.print();
+        println!("\npaper (Figure 8): PR/CF driven by segmenting (2x+); BC/BFS reorder ≈ bitvector, +20% combined; all grow with graph size");
+    });
 }

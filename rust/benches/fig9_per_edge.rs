@@ -6,69 +6,71 @@
 mod common;
 
 use cagra::apps::{cf, pagerank};
-use cagra::bench::{header, Bencher, Table};
+use cagra::bench::Table;
 use cagra::coordinator::job::simulate_pagerank;
 use cagra::graph::datasets::GRAPH_DATASETS;
 
 fn main() {
-    header("Figure 9: per-edge time and stalls", "paper Figure 9");
-    let cfg = common::config();
+    common::run_suite("fig9_per_edge", |s| {
+        let cfg = common::config();
 
-    println!("\nPageRank: ns/edge (measured) and stall-cycles/edge (simulated):");
-    let mut t = Table::new(&[
-        "Dataset",
-        "edges",
-        "base ns/e",
-        "reord ns/e",
-        "seg ns/e",
-        "both ns/e",
-        "base stall/e",
-        "both stall/e",
-    ]);
-    for name in GRAPH_DATASETS {
-        let ds = common::load(name);
-        let g = &ds.graph;
-        let m = g.num_edges() as f64;
-        let mut b = Bencher::new();
-        b.reps = b.reps.min(3);
-        let times: Vec<f64> = pagerank::Variant::all()
-            .iter()
-            .map(|&v| common::time_app_iter(&mut b, v.name(), g, &cfg, "pagerank", v.name()) / m * 1e9)
-            .collect();
-        let sim_base = simulate_pagerank(g, &cfg, pagerank::Variant::Baseline);
-        let sim_both = simulate_pagerank(g, &cfg, pagerank::Variant::ReorderedSegmented);
-        let spe = |e: &cagra::cache::StallEstimate| e.stall_cycles / (e.accesses as f64 / 2.0);
-        t.row(&[
-            name.to_string(),
-            format!("{:.1}M", m / 1e6),
-            format!("{:.2}", times[0]),
-            format!("{:.2}", times[1]),
-            format!("{:.2}", times[2]),
-            format!("{:.2}", times[3]),
-            format!("{:.1}", spe(&sim_base)),
-            format!("{:.1}", spe(&sim_both)),
+        println!("\nPageRank: ns/edge (measured) and stall-cycles/edge (simulated):");
+        let mut t = Table::new(&[
+            "Dataset",
+            "edges",
+            "base ns/e",
+            "reord ns/e",
+            "seg ns/e",
+            "both ns/e",
+            "base stall/e",
+            "both stall/e",
         ]);
-    }
-    t.print();
+        s.cap_reps(3);
+        for name in GRAPH_DATASETS {
+            let ds = common::load(name);
+            let g = &ds.graph;
+            let m = g.num_edges() as f64;
+            s.set_scope(name);
+            let mut times = Vec::new();
+            for &v in pagerank::Variant::all() {
+                let secs = common::time_app_iter(s, v.name(), g, &cfg, "pagerank", v.name());
+                times.push(secs / m * 1e9);
+            }
+            let sim_base = simulate_pagerank(g, &cfg, pagerank::Variant::Baseline);
+            let sim_both = simulate_pagerank(g, &cfg, pagerank::Variant::ReorderedSegmented);
+            let spe = |e: &cagra::cache::StallEstimate| e.stall_cycles / (e.accesses as f64 / 2.0);
+            t.row(&[
+                name.to_string(),
+                format!("{:.1}M", m / 1e6),
+                format!("{:.2}", times[0]),
+                format!("{:.2}", times[1]),
+                format!("{:.2}", times[2]),
+                format!("{:.2}", times[3]),
+                format!("{:.1}", spe(&sim_base)),
+                format!("{:.1}", spe(&sim_both)),
+            ]);
+        }
+        t.print();
 
-    println!("\nCF: ns/edge per iteration:");
-    let mut t = Table::new(&["Dataset", "baseline ns/e", "segmented ns/e"]);
-    for name in ["netflix-sim", "netflix2x-sim", "netflix4x-sim"] {
-        let ds = common::load(name);
-        let g = &ds.graph;
-        let m = g.num_edges() as f64;
-        let mut b = Bencher::new();
-        b.reps = b.reps.min(2);
-        let mut pb = cf::Prepared::new(g, &cfg, cf::Variant::Baseline);
-        let base = b.bench("cf-base", || pb.step()).secs() / m * 1e9;
-        let mut ps = cf::Prepared::new(g, &cfg, cf::Variant::Segmented);
-        let seg = b.bench("cf-seg", || ps.step()).secs() / m * 1e9;
-        t.row(&[
-            name.to_string(),
-            format!("{base:.2}"),
-            format!("{seg:.2}"),
-        ]);
-    }
-    t.print();
-    println!("\npaper (Figure 9): segmented cycles/edge stays flat with graph size; baseline grows as more random reads hit DRAM");
+        println!("\nCF: ns/edge per iteration:");
+        let mut t = Table::new(&["Dataset", "baseline ns/e", "segmented ns/e"]);
+        s.cap_reps(2);
+        for name in ["netflix-sim", "netflix2x-sim", "netflix4x-sim"] {
+            let ds = common::load(name);
+            let g = &ds.graph;
+            let m = g.num_edges() as f64;
+            s.set_scope(name);
+            let mut pb = cf::Prepared::new(g, &cfg, cf::Variant::Baseline);
+            let base = s.bench("cf-base", || pb.step()).secs() / m * 1e9;
+            let mut ps = cf::Prepared::new(g, &cfg, cf::Variant::Segmented);
+            let seg = s.bench("cf-seg", || ps.step()).secs() / m * 1e9;
+            t.row(&[
+                name.to_string(),
+                format!("{base:.2}"),
+                format!("{seg:.2}"),
+            ]);
+        }
+        t.print();
+        println!("\npaper (Figure 9): segmented cycles/edge stays flat with graph size; baseline grows as more random reads hit DRAM");
+    });
 }

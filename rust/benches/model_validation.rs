@@ -7,71 +7,77 @@
 
 mod common;
 
-use cagra::bench::{header, Table};
+use cagra::bench::Table;
 use cagra::cache::model::{predicted_miss_rate, CacheGeometry};
 use cagra::cache::sim::CacheSim;
 use cagra::cache::trace::vertex_trace;
 use cagra::reorder::{self, Ordering as VOrdering};
 
 fn main() {
-    header("Section 5: analytical model vs simulator", "paper §5 (within-5% claim)");
-    let mut t = Table::new(&["graph", "ordering", "cache", "simulated", "model", "|err| pp"]);
-    let mut worst: f64 = 0.0;
-    let mut worst_random: f64 = 0.0;
-    for name in ["rmat25-sim", "twitter-sim"] {
-        let ds = common::load(name);
-        for &o in &[VOrdering::Identity, VOrdering::DegreeSort, VOrdering::Random] {
-            let (h, _) = reorder::reorder(&ds.graph, o);
-            let pull = h.transpose();
-            let sample = (h.num_edges() / 2_000_000).max(1);
-            let stream = vertex_trace(&pull, 8, sample);
-            let weights: Vec<u64> = h.out_degrees().iter().map(|&d| d as u64).collect();
-            for kib in [32usize, 64, 128] {
-                let geom = CacheGeometry::new(kib * 1024, 16, 64);
-                let mut sim = CacheSim::new(geom);
-                for &a in &stream {
-                    sim.access(a);
+    common::run_suite("model_validation", |s| {
+        let mut t = Table::new(&["graph", "ordering", "cache", "simulated", "model", "|err| pp"]);
+        let mut worst: f64 = 0.0;
+        let mut worst_random: f64 = 0.0;
+        for name in ["rmat25-sim", "twitter-sim"] {
+            let ds = common::load(name);
+            for &o in &[VOrdering::Identity, VOrdering::DegreeSort, VOrdering::Random] {
+                let (h, _) = reorder::reorder(&ds.graph, o);
+                let pull = h.transpose();
+                let sample = (h.num_edges() / 2_000_000).max(1);
+                let stream = vertex_trace(&pull, 8, sample);
+                let weights: Vec<u64> = h.out_degrees().iter().map(|&d| d as u64).collect();
+                s.set_scope(&format!("{name}/{}", o.name()));
+                for kib in [32usize, 64, 128] {
+                    let geom = CacheGeometry::new(kib * 1024, 16, 64);
+                    let mut sim = CacheSim::new(geom);
+                    for &a in &stream {
+                        sim.access(a);
+                    }
+                    let model = predicted_miss_rate(&weights, 8, geom);
+                    let err = (sim.miss_rate() - model).abs() * 100.0;
+                    worst = worst.max(err);
+                    if o == VOrdering::Random {
+                        worst_random = worst_random.max(err);
+                    }
+                    s.record(&format!("{kib}KiB"), "pp", err);
+                    t.row(&[
+                        name.to_string(),
+                        o.name().to_string(),
+                        format!("{kib} KiB"),
+                        format!("{:.1}%", sim.miss_rate() * 100.0),
+                        format!("{:.1}%", model * 100.0),
+                        format!("{err:.1}"),
+                    ]);
                 }
-                let model = predicted_miss_rate(&weights, 8, geom);
-                let err = (sim.miss_rate() - model).abs() * 100.0;
-                worst = worst.max(err);
-                if o == VOrdering::Random {
-                    worst_random = worst_random.max(err);
-                }
-                t.row(&[
-                    name.to_string(),
-                    o.name().to_string(),
-                    format!("{kib} KiB"),
-                    format!("{:.1}%", sim.miss_rate() * 100.0),
-                    format!("{:.1}%", model * 100.0),
-                    format!("{err:.1}"),
-                ]);
             }
         }
-    }
-    t.print();
-    println!("\nworst |error|: {worst:.1} percentage points");
-    println!("within-5% claim holds in the model's own regime (working set >> cache, independent accesses = random order rows); degree-sorted rows overshoot because sorting *creates* the temporal locality the independence assumption ignores — the community-structure bias the paper itself notes (Section 5).");
-    println!("note: community structure (ignored by the independent-access model) makes the simulator *hit more* than predicted on BFS-ordered graphs — the same bias the paper describes.");
+        t.print();
+        println!("\nworst |error|: {worst:.1} percentage points");
+        println!("within-5% claim holds in the model's own regime (working set >> cache, independent accesses = random order rows); degree-sorted rows overshoot because sorting *creates* the temporal locality the independence assumption ignores — the community-structure bias the paper itself notes (Section 5).");
+        println!("note: community structure (ignored by the independent-access model) makes the simulator *hit more* than predicted on BFS-ordered graphs — the same bias the paper describes.");
 
-    // Proposition 2 spot-check: degree sort beats 50 random permutations.
-    let ds = common::load("rmat25-sim");
-    let weights: Vec<u64> = ds.graph.out_degrees().iter().map(|&d| d as u64).collect();
-    let geom = CacheGeometry::new(512 * 1024, 16, 64);
-    let mut sorted = weights.clone();
-    sorted.sort_unstable_by(|a, b| b.cmp(a));
-    let best = predicted_miss_rate(&sorted, 8, geom);
-    let mut rng = cagra::util::rng::Rng::new(7);
-    let mut beaten = 0;
-    for _ in 0..50 {
-        let perm = rng.permutation(weights.len());
-        let m = cagra::cache::model::predicted_miss_rate_permuted(&weights, &perm, 8, geom);
-        if m < best {
-            beaten += 1;
+        // Proposition 2 spot-check: degree sort beats 50 random permutations.
+        let ds = common::load("rmat25-sim");
+        let weights: Vec<u64> = ds.graph.out_degrees().iter().map(|&d| d as u64).collect();
+        let geom = CacheGeometry::new(512 * 1024, 16, 64);
+        let mut sorted = weights.clone();
+        sorted.sort_unstable_by(|a, b| b.cmp(a));
+        let best = predicted_miss_rate(&sorted, 8, geom);
+        let mut rng = cagra::util::rng::Rng::new(7);
+        let mut beaten = 0;
+        for _ in 0..50 {
+            let perm = rng.permutation(weights.len());
+            let m = cagra::cache::model::predicted_miss_rate_permuted(&weights, &perm, 8, geom);
+            if m < best {
+                beaten += 1;
+            }
         }
-    }
-    println!("random-order (iid-assumption) worst |error|: {worst_random:.1} pp (paper claim: <5)");
-    assert!(worst_random < 6.0, "model outside tolerance in its own regime");
-    println!("\nProposition 2 check: degree-sorted layout predicted miss {best:.3}; beaten by {beaten}/50 random permutations (expect 0)");
-    assert_eq!(beaten, 0, "a random permutation beat the degree sort");
+        s.set_scope("");
+        s.record("worst-random-pp", "pp", worst_random);
+        s.record("prop2-beaten", "count", beaten as f64);
+        println!("random-order (iid-assumption) worst |error|: {worst_random:.1} pp (paper claim: <5)");
+        assert!(worst_random < 6.0, "model outside tolerance in its own regime");
+        println!("\nProposition 2 check: degree-sorted layout predicted miss {best:.3}; beaten by {beaten}/50 random permutations (expect 0)");
+        assert_eq!(beaten, 0, "a random permutation beat the degree sort");
+    });
 }

@@ -5,41 +5,47 @@
 
 mod common;
 
-use cagra::bench::{header, Table};
+use cagra::bench::Table;
 use cagra::segment::expansion::{self, traffic};
 use cagra::segment::SegmentedCsr;
 
 fn main() {
-    header("Table 10: sequential-DRAM-traffic model", "paper Table 10");
-    let cfg = common::config();
-    let mut t = Table::new(&[
-        "Dataset",
-        "q (measured)",
-        "P (grid)",
-        "Ours E+2qV",
-        "GridGraph E+(P+2)V",
-        "X-Stream 3E+KV",
-    ]);
-    for name in ["twitter-sim", "rmat27-sim"] {
-        let ds = common::load(name);
-        let g = &ds.graph;
-        let e = g.num_edges() as u64;
-        let v = g.num_vertices() as u64;
-        let sg = SegmentedCsr::build(g, cfg.segment_size(8));
-        let q = expansion::expansion_factor(&sg);
-        let p = (v * 8).div_ceil((cfg.llc_bytes / 2) as u64).max(1);
-        let ours = traffic::segmenting(e, v, q);
-        let grid = traffic::gridgraph(e, v, p);
-        let xs = traffic::xstream(e, v, q.max(2.0));
-        t.row(&[
-            name.to_string(),
-            format!("{q:.2}"),
-            format!("{p}"),
-            format!("{:.1} Mwords (1.00x)", ours / 1e6),
-            format!("{:.1} Mwords ({:.2}x)", grid / 1e6, grid / ours),
-            format!("{:.1} Mwords ({:.2}x)", xs / 1e6, xs / ours),
+    common::run_suite("table10_traffic", |s| {
+        let cfg = common::config();
+        let mut t = Table::new(&[
+            "Dataset",
+            "q (measured)",
+            "P (grid)",
+            "Ours E+2qV",
+            "GridGraph E+(P+2)V",
+            "X-Stream 3E+KV",
         ]);
-    }
-    t.print();
-    println!("\npaper (Table 10): on Twitter E=36V, q=2.3, P=32 — ours E+2qV ≈ 40.6V, GridGraph ≈ 70V, X-Stream ≥ 108V");
+        for name in ["twitter-sim", "rmat27-sim"] {
+            let ds = common::load(name);
+            let g = &ds.graph;
+            let e = g.num_edges() as u64;
+            let v = g.num_vertices() as u64;
+            let sg = SegmentedCsr::build(g, cfg.segment_size(8));
+            let q = expansion::expansion_factor(&sg);
+            let p = (v * 8).div_ceil((cfg.llc_bytes / 2) as u64).max(1);
+            let ours = traffic::segmenting(e, v, q);
+            let grid = traffic::gridgraph(e, v, p);
+            let xs = traffic::xstream(e, v, q.max(2.0));
+            s.set_scope(name);
+            s.record("q", "q", q);
+            s.record("ours", "Mwords", ours / 1e6);
+            s.record("gridgraph", "Mwords", grid / 1e6);
+            s.record("xstream", "Mwords", xs / 1e6);
+            t.row(&[
+                name.to_string(),
+                format!("{q:.2}"),
+                format!("{p}"),
+                format!("{:.1} Mwords (1.00x)", ours / 1e6),
+                format!("{:.1} Mwords ({:.2}x)", grid / 1e6, grid / ours),
+                format!("{:.1} Mwords ({:.2}x)", xs / 1e6, xs / ours),
+            ]);
+        }
+        t.print();
+        println!("\npaper (Table 10): on Twitter E=36V, q=2.3, P=32 — ours E+2qV ≈ 40.6V, GridGraph ≈ 70V, X-Stream ≥ 108V");
+    });
 }

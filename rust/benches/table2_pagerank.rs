@@ -6,55 +6,56 @@
 mod common;
 
 use cagra::baselines::{graphmat_style, gridgraph_style, ligra_style};
-use cagra::bench::{header, Bencher, Table};
+use cagra::bench::Table;
 use cagra::graph::datasets::GRAPH_DATASETS;
 
 fn main() {
-    header("Table 2: PageRank per-iteration runtime", "paper Table 2");
-    let cfg = common::config();
-    let mut table = Table::new(&[
-        "Dataset",
-        "Optimized",
-        "Our Baseline",
-        "GraphMat-style",
-        "Ligra-style",
-        "GridGraph-style",
-    ]);
-    for name in GRAPH_DATASETS {
-        let ds = common::load(name);
-        let g = &ds.graph;
-        let mut b = Bencher::new();
-        // Our variants run through the app registry — the same pipeline
-        // the CLI uses; the baseline frameworks keep their own drivers.
-        let opt = common::time_app_iter(&mut b, "optimized", g, &cfg, "pagerank", "both");
-        let base = common::time_app_iter(&mut b, "baseline", g, &cfg, "pagerank", "baseline");
-        let gm = {
-            let mut p = graphmat_style::Prepared::new(g, &cfg);
-            p.reset();
-            b.bench_work("graphmat", Some(g.num_edges() as u64), &mut || p.step())
-                .secs()
-        };
-        let li = {
-            let mut p = ligra_style::Prepared::new(g, &cfg);
-            p.reset();
-            b.bench_work("ligra", Some(g.num_edges() as u64), &mut || p.step())
-                .secs()
-        };
-        let gg = {
-            let mut p = gridgraph_style::Prepared::new(g, &cfg);
-            p.reset();
-            b.bench_work("gridgraph", Some(g.num_edges() as u64), &mut || p.step())
-                .secs()
-        };
-        table.row(&[
-            name.to_string(),
-            common::cell(opt, opt),
-            common::cell(base, opt),
-            common::cell(gm, opt),
-            common::cell(li, opt),
-            common::cell(gg, opt),
+    common::run_suite("table2_pagerank", |s| {
+        let cfg = common::config();
+        let mut table = Table::new(&[
+            "Dataset",
+            "Optimized",
+            "Our Baseline",
+            "GraphMat-style",
+            "Ligra-style",
+            "GridGraph-style",
         ]);
-    }
-    table.print();
-    println!("\npaper (Table 2, RMAT27 row): optimized 0.58s, baseline 2.80x, GraphMat 4.30x, Ligra 8.53x, GridGraph 11.20x");
+        for name in GRAPH_DATASETS {
+            let ds = common::load(name);
+            let g = &ds.graph;
+            s.set_scope(name);
+            // Our variants run through the app registry — the same pipeline
+            // the CLI uses; the baseline frameworks keep their own drivers.
+            let opt = common::time_app_iter(s, "optimized", g, &cfg, "pagerank", "both");
+            let base = common::time_app_iter(s, "baseline", g, &cfg, "pagerank", "baseline");
+            let gm = {
+                let mut p = graphmat_style::Prepared::new(g, &cfg);
+                p.reset();
+                s.bench_work("graphmat", Some(g.num_edges() as u64), &mut || p.step())
+                    .secs()
+            };
+            let li = {
+                let mut p = ligra_style::Prepared::new(g, &cfg);
+                p.reset();
+                s.bench_work("ligra", Some(g.num_edges() as u64), &mut || p.step())
+                    .secs()
+            };
+            let gg = {
+                let mut p = gridgraph_style::Prepared::new(g, &cfg);
+                p.reset();
+                s.bench_work("gridgraph", Some(g.num_edges() as u64), &mut || p.step())
+                    .secs()
+            };
+            table.row(&[
+                name.to_string(),
+                common::cell(opt, opt),
+                common::cell(base, opt),
+                common::cell(gm, opt),
+                common::cell(li, opt),
+                common::cell(gg, opt),
+            ]);
+        }
+        table.print();
+        println!("\npaper (Table 2, RMAT27 row): optimized 0.58s, baseline 2.80x, GraphMat 4.30x, Ligra 8.53x, GridGraph 11.20x");
+    });
 }

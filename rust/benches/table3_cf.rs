@@ -5,28 +5,29 @@
 
 mod common;
 
-use cagra::bench::{header, Bencher, Table};
+use cagra::bench::Table;
 use cagra::graph::datasets::CF_DATASETS;
 
 fn main() {
-    header("Table 3: Collaborative Filtering per-iteration runtime", "paper Table 3");
-    let cfg = common::config();
-    let mut table = Table::new(&["Dataset", "Optimized", "Our Baseline (GraphMat-shape)"]);
-    for name in CF_DATASETS {
-        let ds = common::load(name);
-        let g = &ds.graph;
-        let mut b = Bencher::new();
+    common::run_suite("table3_cf", |s| {
+        let cfg = common::config();
+        let mut table = Table::new(&["Dataset", "Optimized", "Our Baseline (GraphMat-shape)"]);
         // Reps trimmed: CF iterations are heavy on the 4x dataset.
-        b.reps = b.reps.min(3);
-        // Both variants run through the app registry pipeline.
-        let opt = common::time_app_iter(&mut b, "optimized", g, &cfg, "cf", "segmenting");
-        let base = common::time_app_iter(&mut b, "baseline", g, &cfg, "cf", "baseline");
-        table.row(&[
-            name.to_string(),
-            common::cell(opt, opt),
-            common::cell(base, opt),
-        ]);
-    }
-    table.print();
-    println!("\npaper (Table 3): Netflix 0.20s/1.56x/2.50x; Netflix4x 1.61s/2.80x/4.35x (Optimized/OurBaseline/GraphMat)");
+        s.cap_reps(3);
+        for name in CF_DATASETS {
+            let ds = common::load(name);
+            let g = &ds.graph;
+            s.set_scope(name);
+            // Both variants run through the app registry pipeline.
+            let opt = common::time_app_iter(s, "optimized", g, &cfg, "cf", "segmenting");
+            let base = common::time_app_iter(s, "baseline", g, &cfg, "cf", "baseline");
+            table.row(&[
+                name.to_string(),
+                common::cell(opt, opt),
+                common::cell(base, opt),
+            ]);
+        }
+        table.print();
+        println!("\npaper (Table 3): Netflix 0.20s/1.56x/2.50x; Netflix4x 1.61s/2.80x/4.35x (Optimized/OurBaseline/GraphMat)");
+    });
 }

@@ -5,32 +5,33 @@
 mod common;
 
 use cagra::apps::bc;
-use cagra::bench::{header, Bencher, Table};
+use cagra::bench::Table;
 use cagra::graph::datasets::GRAPH_DATASETS;
 
 fn main() {
-    header("Table 4: Betweenness Centrality runtime", "paper Table 4");
-    let sources_n = std::env::var("CAGRA_BC_SOURCES")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(4usize); // paper uses 12; scaled default 4
-    let mut table = Table::new(&["Dataset", "Optimized", "Ligra-style (baseline)"]);
-    for name in GRAPH_DATASETS {
-        let ds = common::load(name);
-        let g = &ds.graph;
-        let sources = bc::default_sources(g, sources_n);
-        let mut b = Bencher::new();
-        b.reps = b.reps.min(3);
-        // Both variants run through the app registry pipeline.
-        let cfg = common::config();
-        let opt = common::time_app_sources(&mut b, "optimized", g, &cfg, "bc", "both", &sources);
-        let base = common::time_app_sources(&mut b, "ligra", g, &cfg, "bc", "baseline", &sources);
-        table.row(&[
-            name.to_string(),
-            common::cell(opt, opt),
-            common::cell(base, opt),
-        ]);
-    }
-    table.print();
-    println!("\npaper (Table 4): LiveJournal 1.00x; Twitter 1.19x; RMAT25 1.56x; RMAT27 1.95x (Ligra vs optimized), 12 sources");
+    common::run_suite("table4_bc", |s| {
+        let sources_n = std::env::var("CAGRA_BC_SOURCES")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(4usize); // paper uses 12; scaled default 4
+        let mut table = Table::new(&["Dataset", "Optimized", "Ligra-style (baseline)"]);
+        s.cap_reps(3);
+        for name in GRAPH_DATASETS {
+            let ds = common::load(name);
+            let g = &ds.graph;
+            let sources = bc::default_sources(g, sources_n);
+            s.set_scope(name);
+            // Both variants run through the app registry pipeline.
+            let cfg = common::config();
+            let opt = common::time_app_sources(s, "optimized", g, &cfg, "bc", "both", &sources);
+            let base = common::time_app_sources(s, "ligra", g, &cfg, "bc", "baseline", &sources);
+            table.row(&[
+                name.to_string(),
+                common::cell(opt, opt),
+                common::cell(base, opt),
+            ]);
+        }
+        table.print();
+        println!("\npaper (Table 4): LiveJournal 1.00x; Twitter 1.19x; RMAT25 1.56x; RMAT27 1.95x (Ligra vs optimized), 12 sources");
+    });
 }

@@ -6,32 +6,33 @@
 mod common;
 
 use cagra::apps::bc;
-use cagra::bench::{header, Bencher, Table};
+use cagra::bench::Table;
 use cagra::graph::datasets::GRAPH_DATASETS;
 
 fn main() {
-    header("Table 5: BFS runtime", "paper Table 5");
-    let sources_n = std::env::var("CAGRA_BFS_SOURCES")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(6usize); // paper uses 12; scaled default 6
-    let mut table = Table::new(&["Dataset", "Optimized", "Ligra-style (baseline)"]);
-    for name in GRAPH_DATASETS {
-        let ds = common::load(name);
-        let g = &ds.graph;
-        let sources = bc::default_sources(g, sources_n);
-        let mut b = Bencher::new();
-        b.reps = b.reps.min(3);
-        // Both variants run through the app registry pipeline.
-        let cfg = common::config();
-        let opt = common::time_app_sources(&mut b, "optimized", g, &cfg, "bfs", "both", &sources);
-        let base = common::time_app_sources(&mut b, "ligra", g, &cfg, "bfs", "baseline", &sources);
-        table.row(&[
-            name.to_string(),
-            common::cell(opt, opt),
-            common::cell(base, opt),
-        ]);
-    }
-    table.print();
-    println!("\npaper (Table 5): LiveJournal 0.93x; Twitter 1.09x; RMAT25 1.24x; RMAT27 1.54x (Ligra vs optimized), 12 sources");
+    common::run_suite("table5_bfs", |s| {
+        let sources_n = std::env::var("CAGRA_BFS_SOURCES")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(6usize); // paper uses 12; scaled default 6
+        let mut table = Table::new(&["Dataset", "Optimized", "Ligra-style (baseline)"]);
+        s.cap_reps(3);
+        for name in GRAPH_DATASETS {
+            let ds = common::load(name);
+            let g = &ds.graph;
+            let sources = bc::default_sources(g, sources_n);
+            s.set_scope(name);
+            // Both variants run through the app registry pipeline.
+            let cfg = common::config();
+            let opt = common::time_app_sources(s, "optimized", g, &cfg, "bfs", "both", &sources);
+            let base = common::time_app_sources(s, "ligra", g, &cfg, "bfs", "baseline", &sources);
+            table.row(&[
+                name.to_string(),
+                common::cell(opt, opt),
+                common::cell(base, opt),
+            ]);
+        }
+        table.print();
+        println!("\npaper (Table 5): LiveJournal 0.93x; Twitter 1.09x; RMAT25 1.24x; RMAT27 1.54x (Ligra vs optimized), 12 sources");
+    });
 }

@@ -7,44 +7,41 @@
 mod common;
 
 use cagra::baselines::{graphmat_style, gridgraph_style, xstream_style};
-use cagra::bench::{header, Bencher, Table};
+use cagra::bench::Table;
 
 fn main() {
-    header(
-        "Table 6: 20-iteration in-memory PageRank, LiveJournal",
-        "paper Table 6",
-    );
-    let cfg = common::config();
-    let ds = common::load("livejournal-sim");
-    let g = &ds.graph;
-    let iters = 20;
-    let mut b = Bencher::new();
-    b.reps = b.reps.min(2);
-    let gm = {
-        let mut p = graphmat_style::Prepared::new(g, &cfg);
-        b.bench_work("graphmat", None, &mut || {
-            let _ = p.run(iters);
-        })
-        .secs()
-    };
-    let gg = {
-        let mut p = gridgraph_style::Prepared::new(g, &cfg);
-        b.bench_work("gridgraph", None, &mut || {
-            let _ = p.run(iters);
-        })
-        .secs()
-    };
-    let xs = {
-        let mut p = xstream_style::Prepared::new(g, &cfg);
-        b.bench_work("xstream", None, &mut || {
-            let _ = p.run(iters);
-        })
-        .secs()
-    };
-    let mut t = Table::new(&["Framework", "Running Time", "Slow Down vs GraphMat"]);
-    t.row(&["GridGraph-style".into(), common::cell(gg, gg), common::cell(gg, gm)]);
-    t.row(&["X-Stream-style".into(), common::cell(xs, xs), common::cell(xs, gm)]);
-    t.row(&["GraphMat-style".into(), common::cell(gm, gm), "(1.00x)".into()]);
-    t.print();
-    println!("\npaper (Table 6): GridGraph 12.86s (3.06x), X-Stream 18.22s (4.33x), GraphMat 4.2s (1.00x)");
+    common::run_suite("table6_inmem", |s| {
+        let cfg = common::config();
+        let ds = common::load("livejournal-sim");
+        let g = &ds.graph;
+        let iters = 20;
+        s.cap_reps(2);
+        let gm = {
+            let mut p = graphmat_style::Prepared::new(g, &cfg);
+            s.bench_work("graphmat", None, &mut || {
+                let _ = p.run(iters);
+            })
+            .secs()
+        };
+        let gg = {
+            let mut p = gridgraph_style::Prepared::new(g, &cfg);
+            s.bench_work("gridgraph", None, &mut || {
+                let _ = p.run(iters);
+            })
+            .secs()
+        };
+        let xs = {
+            let mut p = xstream_style::Prepared::new(g, &cfg);
+            s.bench_work("xstream", None, &mut || {
+                let _ = p.run(iters);
+            })
+            .secs()
+        };
+        let mut t = Table::new(&["Framework", "Running Time", "Slow Down vs GraphMat"]);
+        t.row(&["GridGraph-style".into(), common::cell(gg, gg), common::cell(gg, gm)]);
+        t.row(&["X-Stream-style".into(), common::cell(xs, xs), common::cell(xs, gm)]);
+        t.row(&["GraphMat-style".into(), common::cell(gm, gm), "(1.00x)".into()]);
+        t.print();
+        println!("\npaper (Table 6): GridGraph 12.86s (3.06x), X-Stream 18.22s (4.33x), GraphMat 4.2s (1.00x)");
+    });
 }

@@ -7,46 +7,53 @@
 
 mod common;
 
-use cagra::bench::{header, Table};
+use cagra::bench::Table;
 use cagra::graph::datasets::GRAPH_DATASETS;
 use cagra::reorder::{self, Ordering as VOrdering};
 
+const VARIANTS: [&str; 4] = ["baseline", "reordering", "bitvector", "reordering+bitvector"];
+
 fn main() {
-    header("Table 7: simulated stall cycles, Betweenness Centrality", "paper Table 7");
-    let cfg = common::config();
-    let mut t = Table::new(&[
-        "Dataset",
-        "Baseline",
-        "Reordering",
-        "Bitvector",
-        "Reordering+Bitvector",
-    ]);
-    for name in GRAPH_DATASETS {
-        let ds = common::load(name);
-        let g = &ds.graph;
-        let sample = (g.num_edges() / 4_000_000).max(1);
-        let pull = g.transpose();
-        let (reord, _) = reorder::reorder(g, VOrdering::CoarseDegreeSort);
-        let reord_pull = reord.transpose();
-        // BC reads σ (8B) + frontier per edge.
-        let cells: Vec<f64> = [
-            common::frontier_stall_estimate(&pull, 8, false, cfg.llc_bytes, sample),
-            common::frontier_stall_estimate(&reord_pull, 8, false, cfg.llc_bytes, sample),
-            common::frontier_stall_estimate(&pull, 8, true, cfg.llc_bytes, sample),
-            common::frontier_stall_estimate(&reord_pull, 8, true, cfg.llc_bytes, sample),
-        ]
-        .iter()
-        .map(|e| e.stall_cycles * sample as f64 / 1e9)
-        .collect();
-        t.row(&[
-            name.to_string(),
-            format!("{:.2}B", cells[0]),
-            format!("{:.2}B", cells[1]),
-            format!("{:.2}B", cells[2]),
-            format!("{:.2}B", cells[3]),
+    common::run_suite("table7_bc_stalls", |s| {
+        let cfg = common::config();
+        let mut t = Table::new(&[
+            "Dataset",
+            "Baseline",
+            "Reordering",
+            "Bitvector",
+            "Reordering+Bitvector",
         ]);
-    }
-    t.print();
-    println!("\npaper (Table 7, billions of stall cycles): RMAT27 row 23,264 / 11,918 / 12,578 / 9,152");
-    println!("(absolute magnitudes differ — scaled datasets and one sweep vs the paper's full runs; the ordering across columns is the reproduced shape)");
+        for name in GRAPH_DATASETS {
+            let ds = common::load(name);
+            let g = &ds.graph;
+            let sample = (g.num_edges() / 4_000_000).max(1);
+            let pull = g.transpose();
+            let (reord, _) = reorder::reorder(g, VOrdering::CoarseDegreeSort);
+            let reord_pull = reord.transpose();
+            // BC reads σ (8B) + frontier per edge.
+            let cells: Vec<f64> = [
+                common::frontier_stall_estimate(&pull, 8, false, cfg.llc_bytes, sample),
+                common::frontier_stall_estimate(&reord_pull, 8, false, cfg.llc_bytes, sample),
+                common::frontier_stall_estimate(&pull, 8, true, cfg.llc_bytes, sample),
+                common::frontier_stall_estimate(&reord_pull, 8, true, cfg.llc_bytes, sample),
+            ]
+            .iter()
+            .map(|e| e.stall_cycles * sample as f64 / 1e9)
+            .collect();
+            s.set_scope(name);
+            for (variant, cell) in VARIANTS.iter().zip(&cells) {
+                s.record(variant, "GCycles", *cell);
+            }
+            t.row(&[
+                name.to_string(),
+                format!("{:.2}B", cells[0]),
+                format!("{:.2}B", cells[1]),
+                format!("{:.2}B", cells[2]),
+                format!("{:.2}B", cells[3]),
+            ]);
+        }
+        t.print();
+        println!("\npaper (Table 7, billions of stall cycles): RMAT27 row 23,264 / 11,918 / 12,578 / 9,152");
+        println!("(absolute magnitudes differ — scaled datasets and one sweep vs the paper's full runs; the ordering across columns is the reproduced shape)");
+    });
 }

@@ -11,7 +11,7 @@
 
 mod common;
 
-use cagra::bench::{header, table::fmt_secs, Bencher, Table};
+use cagra::bench::{table::fmt_secs, Table};
 use cagra::graph::Csr;
 use cagra::reorder;
 use cagra::segment::SegmentedCsr;
@@ -19,79 +19,83 @@ use cagra::store::{fingerprint, ArtifactStore, StoreKey};
 use cagra::util::timer::time;
 
 fn main() {
-    header("Table 9: preprocessing runtime", "paper Table 9");
-    let cfg = common::config();
-    let store_dir = std::env::temp_dir().join(format!("cagra-table9-store-{}", std::process::id()));
-    std::fs::remove_dir_all(&store_dir).ok();
-    let store = ArtifactStore::open(&store_dir, 0).expect("opening artifact store");
-    let mut t = Table::new(&[
-        "Dataset",
-        "Reordering",
-        "Segmenting",
-        "Build CSR",
-        "Seg cold",
-        "Seg warm",
-        "1 PR iter",
-    ]);
-    for name in ["livejournal-sim", "twitter-sim", "rmat27-sim"] {
-        let ds = common::load(name);
-        let g = &ds.graph;
-        let edges: Vec<_> = g.edges().collect();
-        let mut b = Bencher::new();
-        b.reps = b.reps.min(3);
-        let reord = b
-            .bench("reorder", || {
-                let _ = reorder::degree_sort_perm(g, cfg.coarsen);
-            })
-            .secs();
-        let seg = b
-            .bench("segment", || {
-                let _ = SegmentedCsr::build_with_block(g, cfg.segment_size(8), cfg.merge_block(8));
-            })
-            .secs();
-        let csr = b
-            .bench("csr", || {
-                let _ = Csr::from_edges(g.num_vertices(), &edges);
-            })
-            .secs();
-        // Amortization measurement. Cold must run exactly once (a second
-        // rep would hit the store), so it is timed single-shot; warm reps
-        // all hit.
-        let fp = fingerprint::fingerprint_dataset(name, cagra::bench::scale(), g);
-        let key = StoreKey::segmented(fp, "table9", cfg.segment_size(8), cfg.merge_block(8));
-        let (_, cold) = time(|| {
-            store.get_or_build(&key, || {
-                SegmentedCsr::build_with_block(g, cfg.segment_size(8), cfg.merge_block(8))
-            })
-        });
-        let warm = b
-            .bench("seg-warm", || {
-                let _ = store.get_or_build(&key, || {
-                    SegmentedCsr::build_with_block(g, cfg.segment_size(8), cfg.merge_block(8))
-                });
-            })
-            .secs();
-        let iter = common::time_app_iter(&mut b, "pr-iter", g, &cfg, "pagerank", "baseline");
-        t.row(&[
-            name.to_string(),
-            fmt_secs(reord),
-            fmt_secs(seg),
-            fmt_secs(csr),
-            fmt_secs(cold),
-            fmt_secs(warm),
-            fmt_secs(iter),
+    common::run_suite("table9_preprocessing", |s| {
+        let cfg = common::config();
+        let store_dir =
+            std::env::temp_dir().join(format!("cagra-table9-store-{}", std::process::id()));
+        std::fs::remove_dir_all(&store_dir).ok();
+        let store = ArtifactStore::open(&store_dir, 0).expect("opening artifact store");
+        let mut t = Table::new(&[
+            "Dataset",
+            "Reordering",
+            "Segmenting",
+            "Build CSR",
+            "Seg cold",
+            "Seg warm",
+            "1 PR iter",
         ]);
-    }
-    t.print();
-    let s = store.stats();
-    println!(
-        "\nartifact store: {} hits / {} misses, {} written, {} read back",
-        s.hits,
-        s.misses,
-        cagra::util::fmt_bytes(s.bytes_written as usize),
-        cagra::util::fmt_bytes(s.bytes_read as usize)
-    );
-    println!("paper (Table 9): Twitter 0.5s / 3.8s / 12.7s; RMAT27 1.4s / 6.3s / 39.3s");
-    println!("(GridGraph's own grid build took 193s for Twitter — our gridgraph_style::Grid::build is measured in fig1)");
-    std::fs::remove_dir_all(&store_dir).ok();
+        s.cap_reps(3);
+        for name in ["livejournal-sim", "twitter-sim", "rmat27-sim"] {
+            let ds = common::load(name);
+            let g = &ds.graph;
+            let edges: Vec<_> = g.edges().collect();
+            s.set_scope(name);
+            let reord = s
+                .bench("reorder", || {
+                    let _ = reorder::degree_sort_perm(g, cfg.coarsen);
+                })
+                .secs();
+            let seg = s
+                .bench("segment", || {
+                    let _ =
+                        SegmentedCsr::build_with_block(g, cfg.segment_size(8), cfg.merge_block(8));
+                })
+                .secs();
+            let csr = s
+                .bench("csr", || {
+                    let _ = Csr::from_edges(g.num_vertices(), &edges);
+                })
+                .secs();
+            // Amortization measurement. Cold must run exactly once (a second
+            // rep would hit the store), so it is timed single-shot; warm reps
+            // all hit.
+            let fp = fingerprint::fingerprint_dataset(name, cagra::bench::scale(), g);
+            let key = StoreKey::segmented(fp, "table9", cfg.segment_size(8), cfg.merge_block(8));
+            let (_, cold) = time(|| {
+                store.get_or_build(&key, || {
+                    SegmentedCsr::build_with_block(g, cfg.segment_size(8), cfg.merge_block(8))
+                })
+            });
+            s.record("seg-cold", "s", cold);
+            let warm = s
+                .bench("seg-warm", || {
+                    let _ = store.get_or_build(&key, || {
+                        SegmentedCsr::build_with_block(g, cfg.segment_size(8), cfg.merge_block(8))
+                    });
+                })
+                .secs();
+            let iter = common::time_app_iter(s, "pr-iter", g, &cfg, "pagerank", "baseline");
+            t.row(&[
+                name.to_string(),
+                fmt_secs(reord),
+                fmt_secs(seg),
+                fmt_secs(csr),
+                fmt_secs(cold),
+                fmt_secs(warm),
+                fmt_secs(iter),
+            ]);
+        }
+        t.print();
+        let stats = store.stats();
+        println!(
+            "\nartifact store: {} hits / {} misses, {} written, {} read back",
+            stats.hits,
+            stats.misses,
+            cagra::util::fmt_bytes(stats.bytes_written as usize),
+            cagra::util::fmt_bytes(stats.bytes_read as usize)
+        );
+        println!("paper (Table 9): Twitter 0.5s / 3.8s / 12.7s; RMAT27 1.4s / 6.3s / 39.3s");
+        println!("(GridGraph's own grid build took 193s for Twitter — our gridgraph_style::Grid::build is measured in fig1)");
+        std::fs::remove_dir_all(&store_dir).ok();
+    });
 }

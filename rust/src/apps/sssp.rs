@@ -8,7 +8,7 @@ use crate::coordinator::SystemConfig;
 use crate::engine::{edge_map, EdgeMapOpts, VertexSubset};
 use crate::graph::{Csr, VertexId};
 use crate::parallel::atomics::AtomicF64;
-use crate::reorder::{self, Ordering as VOrdering};
+use crate::reorder;
 use crate::store::StoreCtx;
 use anyhow::{bail, Result};
 use std::sync::atomic::Ordering;
@@ -52,11 +52,26 @@ pub struct Prepared {
 }
 
 impl Prepared {
+    /// Preprocess without the artifact store (coarsening threshold from
+    /// the default [`SystemConfig`]).
     pub fn new(g: &Csr, variant: Variant) -> Prepared {
+        Self::new_cached(g, &SystemConfig::default(), variant, None)
+    }
+
+    /// Like [`Prepared::new`], but the reordering permutation goes
+    /// through the persistent store when `store` is present — the same
+    /// degree-sort key PageRank/BC/BFS share, so any of them warms the
+    /// others on the same dataset.
+    pub fn new_cached(
+        g: &Csr,
+        cfg: &SystemConfig,
+        variant: Variant,
+        store: Option<StoreCtx<'_>>,
+    ) -> Prepared {
         let (work, perm) = match variant {
             Variant::Reordered => {
-                let (h, p) = reorder::reorder(g, VOrdering::CoarseDegreeSort);
-                (h, Some(p))
+                let perm = reorder::cached_degree_sort_perm(g, cfg.coarsen, store);
+                (g.relabel(&perm), Some(perm))
             }
             Variant::Baseline => (g.clone(), None),
         };
@@ -172,18 +187,22 @@ impl GraphApp for App {
         AppKind::Sssp(Variant::Reordered)
     }
 
+    fn uses_store(&self, kind: AppKind) -> bool {
+        matches!(kind, AppKind::Sssp(Variant::Reordered))
+    }
+
     fn prepare(
         &self,
         g: &Csr,
-        _cfg: &SystemConfig,
+        cfg: &SystemConfig,
         kind: AppKind,
-        _store: Option<StoreCtx<'_>>,
+        store: Option<StoreCtx<'_>>,
     ) -> Result<Box<dyn PreparedApp>> {
         let AppKind::Sssp(v) = kind else {
             bail!("sssp app handed foreign kind {kind:?}")
         };
         Ok(Box::new(PreparedSssp {
-            prep: Prepared::new(g, v),
+            prep: Prepared::new_cached(g, cfg, v, store),
             total: 0.0,
         }))
     }

@@ -1,0 +1,415 @@
+//! Noise-aware comparison of two bench report files (`cagra bench diff`).
+//!
+//! A case regresses when its new median exceeds the baseline median by
+//! more than the relative tolerance *plus* a noise margin derived from
+//! the recorded standard deviations:
+//!
+//! ```text
+//! regression  ⟺  new > old·(1 + tolerance) + sigma·√(old_sd² + new_sd²)
+//! improvement ⟺  new < old·(1 − tolerance) − sigma·√(old_sd² + new_sd²)
+//! ```
+//!
+//! so single-rep smoke runs (stddev 0) fall back to the pure tolerance
+//! band, while noisy measurements widen their own band instead of
+//! producing false alarms. Units must match (all comparisons treat a
+//! larger median as worse, which holds for every unit the suites emit:
+//! seconds, stall cycles, expansion factors, miss-rate error).
+//!
+//! Environments must match too: a suite measured at a different
+//! `CAGRA_BENCH_SCALE` is a different workload, so **all** its cases are
+//! flagged not-comparable instead of producing spurious 20x
+//! "regressions"; a different thread count invalidates only the timing
+//! (`"s"`) cases — simulated/analytic metrics are thread-independent.
+//! Not-comparable cases always fail the diff (they mean the baseline
+//! needs refreshing), independent of `--allow-missing`.
+//!
+//! Cases present in the baseline but missing from the new run are
+//! treated as regressions by default — that is exactly the bench bit-rot
+//! this subsystem exists to catch. New cases are informational.
+
+use crate::bench::report::BenchFile;
+use crate::bench::Table;
+use crate::util::stats::quadrature;
+
+/// Comparison knobs (`--tolerance`, `--sigma`, `--allow-missing`).
+#[derive(Debug, Clone, Copy)]
+pub struct DiffOptions {
+    /// Relative slack on the baseline median (0.10 = +10%).
+    pub tolerance: f64,
+    /// Multiplier on the combined stddev added to the band.
+    pub sigma: f64,
+    /// Whether a baseline case absent from the new file fails the diff.
+    pub fail_on_missing: bool,
+}
+
+impl Default for DiffOptions {
+    fn default() -> Self {
+        DiffOptions {
+            tolerance: 0.10,
+            sigma: 2.0,
+            fail_on_missing: true,
+        }
+    }
+}
+
+/// Per-case outcome.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    /// Within the tolerance + noise band.
+    Within,
+    /// Better than the band — report, never fail.
+    Improved,
+    /// Worse than the band.
+    Regressed,
+    /// In the baseline, absent from the new file (bench bit-rot).
+    Missing,
+    /// In the new file only (informational).
+    New,
+    /// Unit changed, or the two runs' environments (scale; threads for
+    /// timing cases) differ — comparing the medians would be
+    /// meaningless. Always fails the diff.
+    Incomparable,
+}
+
+impl Verdict {
+    pub fn label(self) -> &'static str {
+        match self {
+            Verdict::Within => "ok",
+            Verdict::Improved => "improved",
+            Verdict::Regressed => "REGRESSED",
+            Verdict::Missing => "MISSING",
+            Verdict::New => "new",
+            Verdict::Incomparable => "NOT COMPARABLE",
+        }
+    }
+}
+
+/// One compared case.
+#[derive(Debug, Clone)]
+pub struct CaseDelta {
+    pub suite: String,
+    pub name: String,
+    pub unit: String,
+    pub old_median: Option<f64>,
+    pub new_median: Option<f64>,
+    pub verdict: Verdict,
+}
+
+impl CaseDelta {
+    /// new/old ratio when both sides exist and old is nonzero.
+    pub fn ratio(&self) -> Option<f64> {
+        match (self.old_median, self.new_median) {
+            (Some(o), Some(n)) if o > 0.0 => Some(n / o),
+            _ => None,
+        }
+    }
+}
+
+/// The full comparison result.
+#[derive(Debug, Clone)]
+pub struct Diff {
+    pub opts: DiffOptions,
+    pub deltas: Vec<CaseDelta>,
+    /// Per-suite environment mismatches (scale/threads) explaining any
+    /// NOT COMPARABLE verdicts; rendered above the summary.
+    pub notes: Vec<String>,
+}
+
+impl Diff {
+    /// Compare every baseline case against the new file, then append the
+    /// new file's unmatched cases as [`Verdict::New`].
+    pub fn compare(baseline: &BenchFile, new: &BenchFile, opts: DiffOptions) -> Diff {
+        let mut deltas = Vec::new();
+        let mut notes = Vec::new();
+        for bs in &baseline.suites {
+            let ns = new.suite(&bs.suite);
+            let scale_mismatch = ns.is_some_and(|s| s.scale != bs.scale);
+            let thread_mismatch = ns.is_some_and(|s| s.threads != bs.threads);
+            if let Some(ns) = ns {
+                if scale_mismatch {
+                    notes.push(format!(
+                        "suite {}: scale {} (baseline) vs {} (new) — no case is comparable",
+                        bs.suite, bs.scale, ns.scale
+                    ));
+                } else if thread_mismatch {
+                    notes.push(format!(
+                        "suite {}: threads {} (baseline) vs {} (new) — timing cases not comparable",
+                        bs.suite, bs.threads, ns.threads
+                    ));
+                }
+            }
+            for bc in &bs.cases {
+                let nc = ns.and_then(|s| s.case(&bc.name));
+                let delta = match nc {
+                    None => CaseDelta {
+                        suite: bs.suite.clone(),
+                        name: bc.name.clone(),
+                        unit: bc.unit.clone(),
+                        old_median: Some(bc.median),
+                        new_median: None,
+                        verdict: Verdict::Missing,
+                    },
+                    Some(nc) => {
+                        let env_mismatch = scale_mismatch
+                            || (thread_mismatch && bc.unit == crate::bench::report::UNIT_SECS);
+                        let verdict = if nc.unit != bc.unit || env_mismatch {
+                            Verdict::Incomparable
+                        } else {
+                            let noise = opts.sigma * quadrature(bc.stddev, nc.stddev);
+                            let upper = bc.median * (1.0 + opts.tolerance) + noise;
+                            let lower = bc.median * (1.0 - opts.tolerance) - noise;
+                            if nc.median > upper {
+                                Verdict::Regressed
+                            } else if nc.median < lower {
+                                Verdict::Improved
+                            } else {
+                                Verdict::Within
+                            }
+                        };
+                        CaseDelta {
+                            suite: bs.suite.clone(),
+                            name: bc.name.clone(),
+                            unit: bc.unit.clone(),
+                            old_median: Some(bc.median),
+                            new_median: Some(nc.median),
+                            verdict,
+                        }
+                    }
+                };
+                deltas.push(delta);
+            }
+        }
+        for ns in &new.suites {
+            let bs = baseline.suite(&ns.suite);
+            for nc in &ns.cases {
+                if bs.and_then(|s| s.case(&nc.name)).is_none() {
+                    deltas.push(CaseDelta {
+                        suite: ns.suite.clone(),
+                        name: nc.name.clone(),
+                        unit: nc.unit.clone(),
+                        old_median: None,
+                        new_median: Some(nc.median),
+                        verdict: Verdict::New,
+                    });
+                }
+            }
+        }
+        Diff {
+            opts,
+            deltas,
+            notes,
+        }
+    }
+
+    /// Cases that fail the gate under the configured options.
+    /// Not-comparable cases always fail — they mean the baseline itself
+    /// is stale, which `--allow-missing` must not waive.
+    pub fn failures(&self) -> Vec<&CaseDelta> {
+        self.deltas
+            .iter()
+            .filter(|d| match d.verdict {
+                Verdict::Regressed | Verdict::Incomparable => true,
+                Verdict::Missing => self.opts.fail_on_missing,
+                _ => false,
+            })
+            .collect()
+    }
+
+    pub fn is_regression(&self) -> bool {
+        !self.failures().is_empty()
+    }
+
+    /// Per-case delta table plus a one-line summary.
+    pub fn render(&self) -> String {
+        let mut t = Table::new(&["Suite", "Case", "Baseline", "New", "Delta", "Verdict"]);
+        for d in &self.deltas {
+            let delta = match d.ratio() {
+                Some(r) => format!("{:+.1}%", (r - 1.0) * 100.0),
+                None => "-".to_string(),
+            };
+            t.row(&[
+                d.suite.clone(),
+                d.name.clone(),
+                fmt_metric(d.old_median, &d.unit),
+                fmt_metric(d.new_median, &d.unit),
+                delta,
+                d.verdict.label().to_string(),
+            ]);
+        }
+        let count = |v: Verdict| self.deltas.iter().filter(|d| d.verdict == v).count();
+        let mut out = t.render();
+        for note in &self.notes {
+            out.push_str(&format!("\nnote: {note}"));
+        }
+        if !self.notes.is_empty() {
+            out.push('\n');
+        }
+        out.push_str(&format!(
+            "\n{} case(s): {} ok, {} improved, {} regressed, {} missing, {} new, \
+             {} not-comparable (tolerance {:.0}%, sigma {:.1})\n",
+            self.deltas.len(),
+            count(Verdict::Within),
+            count(Verdict::Improved),
+            count(Verdict::Regressed),
+            count(Verdict::Missing),
+            count(Verdict::New),
+            count(Verdict::Incomparable),
+            self.opts.tolerance * 100.0,
+            self.opts.sigma,
+        ));
+        out
+    }
+}
+
+fn fmt_metric(v: Option<f64>, unit: &str) -> String {
+    match v {
+        None => "-".to_string(),
+        Some(v) if unit == crate::bench::report::UNIT_SECS => crate::bench::table::fmt_secs(v),
+        Some(v) => format!("{v:.4} {unit}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::report::{BenchReport, CaseResult, UNIT_SECS};
+
+    fn file_with(cases: Vec<CaseResult>) -> BenchFile {
+        BenchFile::single(BenchReport {
+            suite: "s".into(),
+            git_sha: "x".into(),
+            scale: 1.0,
+            threads: 1,
+            cases,
+        })
+    }
+
+    fn timed(name: &str, median: f64, stddev: f64) -> CaseResult {
+        CaseResult {
+            name: name.into(),
+            unit: UNIT_SECS.into(),
+            reps: 5,
+            median,
+            mean: median,
+            stddev,
+            min: median - stddev,
+            max: median + stddev,
+            work: None,
+        }
+    }
+
+    #[test]
+    fn injected_slowdown_regresses() {
+        let base = file_with(vec![timed("a", 0.100, 0.001)]);
+        let new = file_with(vec![timed("a", 0.200, 0.001)]);
+        let d = Diff::compare(&base, &new, DiffOptions::default());
+        assert!(d.is_regression());
+        assert_eq!(d.deltas[0].verdict, Verdict::Regressed);
+        assert!((d.deltas[0].ratio().unwrap() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn within_tolerance_jitter_passes() {
+        let base = file_with(vec![timed("a", 0.100, 0.001)]);
+        let new = file_with(vec![timed("a", 0.105, 0.001)]);
+        let d = Diff::compare(&base, &new, DiffOptions::default());
+        assert!(!d.is_regression());
+        assert_eq!(d.deltas[0].verdict, Verdict::Within);
+    }
+
+    #[test]
+    fn noisy_measurements_widen_the_band() {
+        // +15% exceeds the 10% tolerance, but both sides carry stddev
+        // 0.01 — 2σ of the combined noise covers it.
+        let base = file_with(vec![timed("a", 0.100, 0.01)]);
+        let new = file_with(vec![timed("a", 0.115, 0.01)]);
+        let d = Diff::compare(&base, &new, DiffOptions::default());
+        assert_eq!(d.deltas[0].verdict, Verdict::Within);
+        // The same +15% with tight stddev regresses.
+        let base = file_with(vec![timed("a", 0.100, 0.0)]);
+        let new = file_with(vec![timed("a", 0.115, 0.0)]);
+        let d = Diff::compare(&base, &new, DiffOptions::default());
+        assert_eq!(d.deltas[0].verdict, Verdict::Regressed);
+    }
+
+    #[test]
+    fn improvement_never_fails() {
+        let base = file_with(vec![timed("a", 0.100, 0.0)]);
+        let new = file_with(vec![timed("a", 0.050, 0.0)]);
+        let d = Diff::compare(&base, &new, DiffOptions::default());
+        assert_eq!(d.deltas[0].verdict, Verdict::Improved);
+        assert!(!d.is_regression());
+    }
+
+    #[test]
+    fn missing_case_is_bit_rot() {
+        let base = file_with(vec![timed("a", 0.1, 0.0), timed("b", 0.1, 0.0)]);
+        let new = file_with(vec![timed("a", 0.1, 0.0)]);
+        let d = Diff::compare(&base, &new, DiffOptions::default());
+        assert!(d.is_regression());
+        assert_eq!(d.failures()[0].verdict, Verdict::Missing);
+        let lenient = DiffOptions {
+            fail_on_missing: false,
+            ..Default::default()
+        };
+        assert!(!Diff::compare(&base, &new, lenient).is_regression());
+    }
+
+    #[test]
+    fn empty_baseline_only_reports_new_cases() {
+        let base = BenchFile::default();
+        let new = file_with(vec![timed("a", 0.1, 0.0)]);
+        let d = Diff::compare(&base, &new, DiffOptions::default());
+        assert!(!d.is_regression());
+        assert_eq!(d.deltas.len(), 1);
+        assert_eq!(d.deltas[0].verdict, Verdict::New);
+    }
+
+    #[test]
+    fn unit_change_is_flagged_even_with_allow_missing() {
+        let base = file_with(vec![timed("a", 0.1, 0.0)]);
+        let new = file_with(vec![CaseResult::single("a", "GCycles", 0.1)]);
+        let opts = DiffOptions {
+            fail_on_missing: false,
+            ..Default::default()
+        };
+        let d = Diff::compare(&base, &new, opts);
+        assert_eq!(d.deltas[0].verdict, Verdict::Incomparable);
+        assert!(d.is_regression(), "--allow-missing must not waive unit changes");
+    }
+
+    #[test]
+    fn scale_mismatch_makes_every_case_incomparable() {
+        let base = file_with(vec![timed("a", 0.1, 0.0), CaseResult::single("q", "q", 2.0)]);
+        let mut new = file_with(vec![timed("a", 0.1, 0.0), CaseResult::single("q", "q", 2.0)]);
+        new.suites[0].scale = 0.05;
+        let d = Diff::compare(&base, &new, DiffOptions::default());
+        assert!(d.deltas.iter().all(|c| c.verdict == Verdict::Incomparable));
+        assert!(d.is_regression());
+        assert_eq!(d.notes.len(), 1);
+        assert!(d.render().contains("scale 1 (baseline) vs 0.05 (new)"), "{}", d.render());
+    }
+
+    #[test]
+    fn thread_mismatch_only_invalidates_timing_cases() {
+        let base = file_with(vec![timed("a", 0.1, 0.0), CaseResult::single("q", "q", 2.0)]);
+        let mut new = file_with(vec![timed("a", 0.1, 0.0), CaseResult::single("q", "q", 2.0)]);
+        new.suites[0].threads = 8;
+        let d = Diff::compare(&base, &new, DiffOptions::default());
+        let verdict = |name: &str| d.deltas.iter().find(|c| c.name == name).unwrap().verdict;
+        assert_eq!(verdict("a"), Verdict::Incomparable, "timing case");
+        assert_eq!(verdict("q"), Verdict::Within, "simulated metric is thread-independent");
+        assert!(d.is_regression());
+    }
+
+    #[test]
+    fn render_mentions_every_case() {
+        let base = file_with(vec![timed("a", 0.1, 0.0), timed("b", 0.1, 0.0)]);
+        let new = file_with(vec![timed("a", 0.3, 0.0), timed("c", 0.1, 0.0)]);
+        let d = Diff::compare(&base, &new, DiffOptions::default());
+        let r = d.render();
+        for needle in ["REGRESSED", "MISSING", "new", "+200.0%"] {
+            assert!(r.contains(needle), "render missing {needle:?}:\n{r}");
+        }
+    }
+}

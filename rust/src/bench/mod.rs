@@ -1,14 +1,23 @@
 //! In-repo benchmark harness (no `criterion` in the offline mirror).
 //!
-//! Each `rust/benches/*.rs` target (`harness = false`) uses [`Bencher`] to
-//! time named cases with warmup + repeated measurement and prints
-//! paper-style tables via [`Table`]. Benches honor environment knobs:
+//! Each `rust/benches/*.rs` target (`harness = false`) registers in
+//! [`suite::SUITES`] and runs through the shared [`suite`] runner, which
+//! uses [`Bencher`] to time named cases with warmup + repeated
+//! measurement, prints paper-style tables via [`Table`], and emits a
+//! machine-readable `BENCH_<suite>.json` ([`report`]) that `cagra bench
+//! diff` ([`diff`]) compares against a baseline. Benches honor
+//! environment knobs:
 //!
 //! - `CAGRA_BENCH_SCALE` — dataset scale factor (default 1.0; smoke runs
-//!   use e.g. 0.25).
+//!   use e.g. 0.25; CI bench-smoke uses 0.05).
 //! - `CAGRA_BENCH_REPS` — measurement repetitions (default 5).
 //! - `CAGRA_BENCH_WARMUP` — warmup repetitions (default 1).
+//! - `CAGRA_BENCH_OUT` — directory for `BENCH_*.json` (default: cwd).
+//! - `CAGRA_GIT_SHA` — overrides the commit stamped into reports.
 
+pub mod diff;
+pub mod report;
+pub mod suite;
 pub mod table;
 
 pub use table::Table;

@@ -1,0 +1,549 @@
+//! Machine-readable bench results (`BENCH_<suite>.json`).
+//!
+//! Every bench suite emits — alongside its paper-style ASCII table — a
+//! versioned JSON report that CI archives and `cagra bench diff` compares
+//! against a committed baseline. The format is hand-rolled over
+//! [`crate::util::json`] (offline mirror — no serde) and versioned so a
+//! newer writer can never be silently misread by an older parser.
+//!
+//! File layout (`FORMAT_NAME` / `FORMAT_VERSION`):
+//!
+//! ```json
+//! {
+//!   "format": "cagra-bench",
+//!   "version": 1,
+//!   "note": "optional free-form provenance",
+//!   "suites": [
+//!     {
+//!       "suite": "table2_pagerank",
+//!       "git_sha": "f41d867…",
+//!       "scale": 0.25,
+//!       "threads": 4,
+//!       "cases": [
+//!         {"name": "twitter-sim/optimized", "unit": "s", "reps": 5,
+//!          "median": 0.141, "mean": 0.143, "stddev": 0.002,
+//!          "min": 0.139, "max": 0.147, "work": 47283456,
+//!          "rate": 335343659.57}
+//!       ]
+//!     }
+//!   ]
+//! }
+//! ```
+//!
+//! `rate` (work units per second at the median) is derived on encode and
+//! ignored on parse, so encode→parse→encode is byte-stable.
+
+use crate::bench::Measurement;
+use crate::util::json::{self, Value};
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Format discriminator in every report file.
+pub const FORMAT_NAME: &str = "cagra-bench";
+/// Schema version this build writes and the newest it can read.
+pub const FORMAT_VERSION: u64 = 1;
+
+/// Unit tag for wall-clock timings (the default for `Bencher` cases).
+pub const UNIT_SECS: &str = "s";
+
+/// One measured (or simulated) case inside a suite.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CaseResult {
+    /// Unique within the suite; scoped as `<scope>/<label>` by the runner.
+    pub name: String,
+    /// Metric unit ("s" for timings; simulation suites use e.g.
+    /// "GCycles", "q", "pp"). `bench diff` only compares like units and
+    /// always treats a larger median as worse.
+    pub unit: String,
+    pub reps: usize,
+    pub median: f64,
+    pub mean: f64,
+    pub stddev: f64,
+    pub min: f64,
+    pub max: f64,
+    /// Optional work units (e.g. edges) for rate reporting.
+    pub work: Option<u64>,
+}
+
+impl CaseResult {
+    /// Convert a harness measurement (always seconds).
+    pub fn from_measurement(m: &Measurement) -> CaseResult {
+        CaseResult {
+            name: m.name.clone(),
+            unit: UNIT_SECS.to_string(),
+            reps: m.summary.n,
+            median: m.summary.median,
+            mean: m.summary.mean,
+            stddev: m.summary.stddev,
+            min: m.summary.min,
+            max: m.summary.max,
+            work: m.work,
+        }
+    }
+
+    /// A single deterministic sample (simulated/analytic metrics).
+    pub fn single(name: &str, unit: &str, value: f64) -> CaseResult {
+        CaseResult {
+            name: name.to_string(),
+            unit: unit.to_string(),
+            reps: 1,
+            median: value,
+            mean: value,
+            stddev: 0.0,
+            min: value,
+            max: value,
+            work: None,
+        }
+    }
+
+    /// Work units per second at the median, if work was recorded.
+    pub fn rate(&self) -> Option<f64> {
+        match self.work {
+            Some(w) if self.median > 0.0 => Some(w as f64 / self.median),
+            _ => None,
+        }
+    }
+
+    fn to_value(&self) -> Value {
+        let mut fields = vec![
+            ("name".to_string(), Value::Str(self.name.clone())),
+            ("unit".to_string(), Value::Str(self.unit.clone())),
+            ("reps".to_string(), Value::Num(self.reps as f64)),
+            ("median".to_string(), Value::Num(self.median)),
+            ("mean".to_string(), Value::Num(self.mean)),
+            ("stddev".to_string(), Value::Num(self.stddev)),
+            ("min".to_string(), Value::Num(self.min)),
+            ("max".to_string(), Value::Num(self.max)),
+        ];
+        if let Some(w) = self.work {
+            fields.push(("work".to_string(), Value::Num(w as f64)));
+        }
+        if let Some(r) = self.rate() {
+            fields.push(("rate".to_string(), Value::Num(r)));
+        }
+        Value::Obj(fields)
+    }
+
+    fn from_value(v: &Value) -> Result<CaseResult> {
+        let name = require_str(v, "name")?;
+        let case = CaseResult {
+            name: name.clone(),
+            unit: require_str(v, "unit")?,
+            reps: require_u64(v, &name, "reps")? as usize,
+            median: require_num(v, &name, "median")?,
+            mean: require_num(v, &name, "mean")?,
+            stddev: require_num(v, &name, "stddev")?,
+            min: require_num(v, &name, "min")?,
+            max: require_num(v, &name, "max")?,
+            work: match v.get("work") {
+                None | Some(Value::Null) => None,
+                Some(w) => Some(
+                    w.as_u64()
+                        .with_context(|| format!("case {name:?}: work must be a u64"))?,
+                ),
+            },
+        };
+        if case.reps == 0 {
+            bail!("case {name:?}: reps must be >= 1");
+        }
+        if case.median < 0.0 || case.stddev < 0.0 {
+            bail!("case {name:?}: negative median/stddev");
+        }
+        Ok(case)
+    }
+}
+
+/// One suite's results: identity + environment + cases.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchReport {
+    /// Suite name from the registry ([`crate::bench::suite::SUITES`]).
+    pub suite: String,
+    /// Commit the binary was built from (best effort; "unknown" offline).
+    pub git_sha: String,
+    /// `CAGRA_BENCH_SCALE` the suite ran at.
+    pub scale: f64,
+    /// Worker threads in the global pool.
+    pub threads: usize,
+    pub cases: Vec<CaseResult>,
+}
+
+impl BenchReport {
+    pub fn case(&self, name: &str) -> Option<&CaseResult> {
+        self.cases.iter().find(|c| c.name == name)
+    }
+
+    fn to_value(&self) -> Value {
+        Value::Obj(vec![
+            ("suite".to_string(), Value::Str(self.suite.clone())),
+            ("git_sha".to_string(), Value::Str(self.git_sha.clone())),
+            ("scale".to_string(), Value::Num(self.scale)),
+            ("threads".to_string(), Value::Num(self.threads as f64)),
+            (
+                "cases".to_string(),
+                Value::Arr(self.cases.iter().map(CaseResult::to_value).collect()),
+            ),
+        ])
+    }
+
+    fn from_value(v: &Value) -> Result<BenchReport> {
+        let suite = require_str(v, "suite")?;
+        let cases = v
+            .get("cases")
+            .and_then(Value::as_arr)
+            .with_context(|| format!("suite {suite:?}: missing cases array"))?;
+        Ok(BenchReport {
+            suite: suite.clone(),
+            git_sha: require_str(v, "git_sha")?,
+            scale: require_num(v, &suite, "scale")?,
+            threads: require_u64(v, &suite, "threads")? as usize,
+            cases: cases
+                .iter()
+                .map(CaseResult::from_value)
+                .collect::<Result<Vec<_>>>()
+                .with_context(|| format!("suite {suite:?}"))?,
+        })
+    }
+}
+
+/// A report file: one or more suites (a single emitted `BENCH_*.json`
+/// holds one; a merged baseline holds many).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct BenchFile {
+    /// Free-form provenance ("" = omitted from the encoding).
+    pub note: String,
+    pub suites: Vec<BenchReport>,
+}
+
+impl BenchFile {
+    pub fn single(report: BenchReport) -> BenchFile {
+        BenchFile {
+            note: String::new(),
+            suites: vec![report],
+        }
+    }
+
+    pub fn suite(&self, name: &str) -> Option<&BenchReport> {
+        self.suites.iter().find(|s| s.suite == name)
+    }
+
+    pub fn case_count(&self) -> usize {
+        self.suites.iter().map(|s| s.cases.len()).sum()
+    }
+
+    /// Encode to the versioned JSON format. Errors on non-finite stats
+    /// (which would otherwise lossily encode as `null`).
+    pub fn to_json(&self) -> Result<String> {
+        for s in &self.suites {
+            if !s.scale.is_finite() {
+                bail!("suite {:?}: non-finite scale", s.suite);
+            }
+            for c in &s.cases {
+                for (field, v) in [
+                    ("median", c.median),
+                    ("mean", c.mean),
+                    ("stddev", c.stddev),
+                    ("min", c.min),
+                    ("max", c.max),
+                ] {
+                    if !v.is_finite() {
+                        bail!("suite {:?} case {:?}: non-finite {field}", s.suite, c.name);
+                    }
+                }
+            }
+        }
+        let mut fields = vec![
+            ("format".to_string(), Value::Str(FORMAT_NAME.to_string())),
+            ("version".to_string(), Value::Num(FORMAT_VERSION as f64)),
+        ];
+        if !self.note.is_empty() {
+            fields.push(("note".to_string(), Value::Str(self.note.clone())));
+        }
+        fields.push((
+            "suites".to_string(),
+            Value::Arr(self.suites.iter().map(BenchReport::to_value).collect()),
+        ));
+        let mut out = Value::Obj(fields).render();
+        out.push('\n');
+        Ok(out)
+    }
+
+    /// Strict parse: wrong format tag, unsupported version, missing
+    /// fields, or malformed JSON all error.
+    pub fn parse(input: &str) -> Result<BenchFile> {
+        let v = json::parse(input).context("bench report is not valid JSON")?;
+        let format = v
+            .get("format")
+            .and_then(Value::as_str)
+            .context("missing format tag")?;
+        if format != FORMAT_NAME {
+            bail!("not a bench report (format {format:?}, expected {FORMAT_NAME:?})");
+        }
+        let version = v
+            .get("version")
+            .and_then(Value::as_u64)
+            .context("missing format version")?;
+        if version > FORMAT_VERSION {
+            bail!("bench report version {version} is newer than this build (max {FORMAT_VERSION})");
+        }
+        let suites = v
+            .get("suites")
+            .and_then(Value::as_arr)
+            .context("missing suites array")?;
+        let file = BenchFile {
+            note: v
+                .get("note")
+                .and_then(Value::as_str)
+                .unwrap_or("")
+                .to_string(),
+            suites: suites
+                .iter()
+                .map(BenchReport::from_value)
+                .collect::<Result<Vec<_>>>()?,
+        };
+        let mut seen = std::collections::BTreeSet::new();
+        for s in &file.suites {
+            if !seen.insert(s.suite.as_str()) {
+                bail!("duplicate suite {:?} in bench report", s.suite);
+            }
+        }
+        Ok(file)
+    }
+
+    /// Combine files into one (for baselines). Duplicate suites error.
+    pub fn merge(files: Vec<BenchFile>) -> Result<BenchFile> {
+        let mut out = BenchFile::default();
+        for f in files {
+            for s in f.suites {
+                if out.suite(&s.suite).is_some() {
+                    bail!("suite {:?} appears in more than one input", s.suite);
+                }
+                out.suites.push(s);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Load one report file.
+    pub fn load(path: &Path) -> Result<BenchFile> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    /// Load a report file, or merge every `BENCH_*.json` in a directory.
+    pub fn load_path(path: &Path) -> Result<BenchFile> {
+        if !path.is_dir() {
+            return Self::load(path);
+        }
+        let mut names: Vec<PathBuf> = std::fs::read_dir(path)
+            .with_context(|| format!("listing {}", path.display()))?
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .filter(|p| {
+                p.file_name()
+                    .and_then(|n| n.to_str())
+                    .is_some_and(|n| n.starts_with("BENCH_") && n.ends_with(".json"))
+            })
+            .collect();
+        if names.is_empty() {
+            bail!("no BENCH_*.json files in {}", path.display());
+        }
+        names.sort();
+        let files = names
+            .iter()
+            .map(|p| Self::load(p))
+            .collect::<Result<Vec<_>>>()?;
+        Self::merge(files)
+    }
+}
+
+fn require_str(v: &Value, key: &str) -> Result<String> {
+    v.get(key)
+        .and_then(Value::as_str)
+        .map(str::to_string)
+        .with_context(|| format!("missing string field {key:?}"))
+}
+
+fn require_num(v: &Value, ctx: &str, key: &str) -> Result<f64> {
+    v.get(key)
+        .and_then(Value::as_f64)
+        .with_context(|| format!("{ctx}: missing numeric field {key:?}"))
+}
+
+fn require_u64(v: &Value, ctx: &str, key: &str) -> Result<u64> {
+    v.get(key)
+        .and_then(Value::as_u64)
+        .with_context(|| format!("{ctx}: missing integer field {key:?}"))
+}
+
+/// Output directory for emitted reports (`CAGRA_BENCH_OUT`, default cwd).
+pub fn out_dir() -> PathBuf {
+    std::env::var("CAGRA_BENCH_OUT")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("."))
+}
+
+/// File name convention every suite emits under.
+pub fn report_filename(suite: &str) -> String {
+    format!("BENCH_{suite}.json")
+}
+
+/// Write `BENCH_<suite>.json` into [`out_dir`], creating it if needed.
+pub fn write_report(report: &BenchReport) -> Result<PathBuf> {
+    let dir = out_dir();
+    std::fs::create_dir_all(&dir).with_context(|| format!("creating {}", dir.display()))?;
+    let path = dir.join(report_filename(&report.suite));
+    let text = BenchFile::single(report.clone()).to_json()?;
+    std::fs::write(&path, text).with_context(|| format!("writing {}", path.display()))?;
+    Ok(path)
+}
+
+/// Commit the running binary's tree corresponds to, best effort:
+/// `CAGRA_GIT_SHA` / `GITHUB_SHA` env, else `.git/HEAD` found by walking
+/// up from the current directory, else "unknown". No subprocesses.
+pub fn git_sha() -> String {
+    for var in ["CAGRA_GIT_SHA", "GITHUB_SHA"] {
+        if let Ok(v) = std::env::var(var) {
+            if !v.trim().is_empty() {
+                return v.trim().to_string();
+            }
+        }
+    }
+    resolve_git_head().unwrap_or_else(|| "unknown".to_string())
+}
+
+fn resolve_git_head() -> Option<String> {
+    let mut dir = std::env::current_dir().ok()?;
+    loop {
+        let git = dir.join(".git");
+        if let Ok(head) = std::fs::read_to_string(git.join("HEAD")) {
+            let head = head.trim();
+            let Some(refname) = head.strip_prefix("ref: ") else {
+                // Detached HEAD: the file holds the sha directly.
+                return Some(head.to_string());
+            };
+            if let Ok(sha) = std::fs::read_to_string(git.join(refname)) {
+                return Some(sha.trim().to_string());
+            }
+            if let Ok(packed) = std::fs::read_to_string(git.join("packed-refs")) {
+                for line in packed.lines() {
+                    if line.starts_with('#') {
+                        continue;
+                    }
+                    if let Some(sha) = line.strip_suffix(refname) {
+                        if sha.ends_with(' ') {
+                            return Some(sha.trim().to_string());
+                        }
+                    }
+                }
+            }
+            return None;
+        }
+        if !dir.pop() {
+            return None;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_file() -> BenchFile {
+        BenchFile {
+            note: String::new(),
+            suites: vec![BenchReport {
+                suite: "table2_pagerank".into(),
+                git_sha: "deadbeef".into(),
+                scale: 0.25,
+                threads: 4,
+                cases: vec![
+                    CaseResult {
+                        name: "twitter-sim/optimized".into(),
+                        unit: UNIT_SECS.into(),
+                        reps: 5,
+                        median: 0.141,
+                        mean: 0.1432,
+                        stddev: 0.0021,
+                        min: 0.139,
+                        max: 0.147,
+                        work: Some(47_283_456),
+                    },
+                    CaseResult::single("twitter-sim/q", "q", 2.31),
+                ],
+            }],
+        }
+    }
+
+    #[test]
+    fn encode_parse_encode_is_byte_stable() {
+        let f = sample_file();
+        let once = f.to_json().unwrap();
+        let back = BenchFile::parse(&once).unwrap();
+        assert_eq!(back, f);
+        assert_eq!(back.to_json().unwrap(), once);
+    }
+
+    #[test]
+    fn version_and_format_are_enforced() {
+        let good = sample_file().to_json().unwrap();
+        let newer = good.replace("\"version\": 1", "\"version\": 99");
+        assert!(BenchFile::parse(&newer).is_err(), "future version accepted");
+        let alien = good.replace("cagra-bench", "other-tool");
+        assert!(BenchFile::parse(&alien).is_err(), "foreign format accepted");
+    }
+
+    #[test]
+    fn missing_fields_error() {
+        for field in ["\"median\"", "\"unit\"", "\"suite\"", "\"git_sha\""] {
+            let broken = sample_file()
+                .to_json()
+                .unwrap()
+                .replace(field, "\"renamed\"");
+            assert!(BenchFile::parse(&broken).is_err(), "missing {field} accepted");
+        }
+    }
+
+    #[test]
+    fn fractional_counts_are_rejected() {
+        let good = sample_file().to_json().unwrap();
+        for (from, to) in [("\"reps\": 5", "\"reps\": 5.5"), ("\"threads\": 4", "\"threads\": 4.5")]
+        {
+            let bad = good.replacen(from, to, 1);
+            assert!(BenchFile::parse(&bad).is_err(), "accepted fractional {from}");
+        }
+    }
+
+    #[test]
+    fn non_finite_stats_refuse_to_encode() {
+        let mut f = sample_file();
+        f.suites[0].cases[0].median = f64::NAN;
+        assert!(f.to_json().is_err());
+    }
+
+    #[test]
+    fn merge_rejects_duplicate_suites() {
+        let a = sample_file();
+        let b = sample_file();
+        assert!(BenchFile::merge(vec![a.clone(), b]).is_err());
+        let merged = BenchFile::merge(vec![a]).unwrap();
+        assert_eq!(merged.case_count(), 2);
+    }
+
+    #[test]
+    fn rate_derived_from_work() {
+        let c = &sample_file().suites[0].cases[0];
+        let r = c.rate().unwrap();
+        assert!((r - 47_283_456.0 / 0.141).abs() < 1e-6);
+        assert!(CaseResult::single("x", "q", 1.0).rate().is_none());
+    }
+
+    #[test]
+    fn git_sha_prefers_env() {
+        // Can't mutate process env safely in parallel tests; just check
+        // the fallback produces *something* stable.
+        let a = git_sha();
+        let b = git_sha();
+        assert_eq!(a, b);
+        assert!(!a.is_empty());
+    }
+}

@@ -1,0 +1,383 @@
+//! Bench-suite registry and the shared suite runner.
+//!
+//! Every target under `rust/benches/` registers here and runs through
+//! [`run`] (via `benches/common::run_suite`) instead of an ad-hoc `main`:
+//! the runner prints the standard header, collects every case the body
+//! records into one [`BenchReport`], and emits `BENCH_<suite>.json` into
+//! `CAGRA_BENCH_OUT` (default: current directory) alongside the ASCII
+//! tables. A suite that records no cases panics — CI's bench-smoke job
+//! turns silent bench bit-rot into a red build.
+//!
+//! [`SUITES`] is the single source of truth the CLI (`cagra bench ls`)
+//! renders; a bench target whose name is not registered panics at
+//! startup, so the registry cannot drift from the actual targets.
+
+use super::report::{self, BenchReport, CaseResult};
+use super::{header, Bencher, Measurement};
+use anyhow::{bail, Result};
+
+/// Static description of one bench suite (one `rust/benches/*.rs` target).
+#[derive(Debug, Clone, Copy)]
+pub struct SuiteInfo {
+    /// Target name (`cargo bench --bench <name>`; `BENCH_<name>.json`).
+    pub name: &'static str,
+    /// Header line printed before the tables.
+    pub title: &'static str,
+    /// What the suite reproduces.
+    pub paper_ref: &'static str,
+    /// Case labels the suite records (full case names are
+    /// `<scope>/<label>`; unscoped suites record the label alone).
+    pub cases: &'static [&'static str],
+    /// What the scope component ranges over.
+    pub scopes: &'static str,
+}
+
+/// Every bench target, in paper order.
+pub const SUITES: &[SuiteInfo] = &[
+    SuiteInfo {
+        name: "fig1_overview",
+        title: "Figure 1: ours vs frameworks, RMAT27",
+        paper_ref: "paper Figure 1",
+        cases: &[
+            "pr-opt",
+            "pr-graphmat",
+            "pr-ligra",
+            "pr-gridgraph",
+            "cf-opt",
+            "cf-graphmat",
+            "bc-opt",
+            "bc-ligra",
+        ],
+        scopes: "unscoped (rmat27-sim + netflix-sim)",
+    },
+    SuiteInfo {
+        name: "fig2_breakdown",
+        title: "Figure 2: optimization breakdown, PageRank RMAT27",
+        paper_ref: "paper Figure 2",
+        cases: &["<variant>", "<variant>-stalls"],
+        scopes: "unscoped (rmat27-sim, every registry PageRank variant)",
+    },
+    SuiteInfo {
+        name: "fig3_stalls",
+        title: "Figure 3: % cycles stalled on memory (simulated)",
+        paper_ref: "paper Figure 3",
+        cases: &["<dataset>"],
+        scopes: "apps (pagerank, cf, bc, bfs)",
+    },
+    SuiteInfo {
+        name: "fig6_merge_cost",
+        title: "Figure 6: segment compute vs merge cost",
+        paper_ref: "paper Figure 6",
+        cases: &["segment-compute", "merge", "other", "total-iter"],
+        scopes: "datasets (twitter-sim, rmat27-sim)",
+    },
+    SuiteInfo {
+        name: "fig7_expansion",
+        title: "Figure 7: expansion factor vs segment count",
+        paper_ref: "paper Figure 7",
+        cases: &["k=<segments>"],
+        scopes: "dataset/ordering",
+    },
+    SuiteInfo {
+        name: "fig8_speedups",
+        title: "Figure 8: per-optimization speedups",
+        paper_ref: "paper Figure 8",
+        cases: &[
+            "base",
+            "reorder",
+            "segment",
+            "both",
+            "cf-base",
+            "cf-seg",
+            "bc-<variant>",
+            "bfs-<variant>",
+        ],
+        scopes: "datasets",
+    },
+    SuiteInfo {
+        name: "fig9_per_edge",
+        title: "Figure 9: per-edge time and stalls",
+        paper_ref: "paper Figure 9",
+        cases: &["<pagerank variant>", "cf-base", "cf-seg"],
+        scopes: "datasets",
+    },
+    SuiteInfo {
+        name: "fig10_hilbert",
+        title: "Figure 10: Hilbert parallelizations vs segmenting",
+        paper_ref: "paper Figure 10",
+        cases: &["t=<threads>"],
+        scopes: "modes (hserial, hatomic, hmerge, segmenting)",
+    },
+    SuiteInfo {
+        name: "fig11_scalability",
+        title: "Figure 11: PageRank thread scalability",
+        paper_ref: "paper Figure 11",
+        cases: &["t=<threads>"],
+        scopes: "unscoped (twitter-sim)",
+    },
+    SuiteInfo {
+        name: "model_validation",
+        title: "Section 5: analytical model vs simulator",
+        paper_ref: "paper §5 (within-5% claim)",
+        cases: &["<cache KiB>", "worst-random-pp", "prop2-beaten"],
+        scopes: "graph/ordering",
+    },
+    SuiteInfo {
+        name: "table2_pagerank",
+        title: "Table 2: PageRank per-iteration runtime",
+        paper_ref: "paper Table 2",
+        cases: &["optimized", "baseline", "graphmat", "ligra", "gridgraph"],
+        scopes: "graph datasets",
+    },
+    SuiteInfo {
+        name: "table3_cf",
+        title: "Table 3: Collaborative Filtering per-iteration runtime",
+        paper_ref: "paper Table 3",
+        cases: &["optimized", "baseline"],
+        scopes: "CF datasets",
+    },
+    SuiteInfo {
+        name: "table4_bc",
+        title: "Table 4: Betweenness Centrality runtime",
+        paper_ref: "paper Table 4",
+        cases: &["optimized", "ligra"],
+        scopes: "graph datasets",
+    },
+    SuiteInfo {
+        name: "table5_bfs",
+        title: "Table 5: BFS runtime",
+        paper_ref: "paper Table 5",
+        cases: &["optimized", "ligra"],
+        scopes: "graph datasets",
+    },
+    SuiteInfo {
+        name: "table6_inmem",
+        title: "Table 6: 20-iteration in-memory PageRank, LiveJournal",
+        paper_ref: "paper Table 6",
+        cases: &["graphmat", "gridgraph", "xstream"],
+        scopes: "unscoped (livejournal-sim)",
+    },
+    SuiteInfo {
+        name: "table7_bc_stalls",
+        title: "Table 7: simulated stall cycles, Betweenness Centrality",
+        paper_ref: "paper Table 7",
+        cases: &["baseline", "reordering", "bitvector", "reordering+bitvector"],
+        scopes: "graph datasets",
+    },
+    SuiteInfo {
+        name: "table8_bfs_stalls",
+        title: "Table 8: simulated stall cycles, BFS",
+        paper_ref: "paper Table 8",
+        cases: &["baseline", "reordering", "bitvector", "reordering+bitvector"],
+        scopes: "graph datasets",
+    },
+    SuiteInfo {
+        name: "table9_preprocessing",
+        title: "Table 9: preprocessing runtime",
+        paper_ref: "paper Table 9",
+        cases: &["reorder", "segment", "csr", "seg-cold", "seg-warm", "pr-iter"],
+        scopes: "datasets (livejournal, twitter, rmat27)",
+    },
+    SuiteInfo {
+        name: "table10_traffic",
+        title: "Table 10: sequential-DRAM-traffic model",
+        paper_ref: "paper Table 10",
+        cases: &["q", "ours", "gridgraph", "xstream"],
+        scopes: "datasets (twitter-sim, rmat27-sim)",
+    },
+    SuiteInfo {
+        name: "ablation_params",
+        title: "Ablations: coarsen / merge block / segment fill",
+        paper_ref: "DESIGN.md design choices",
+        cases: &["<value>"],
+        scopes: "knobs (coarsen, merge-block, segment-fill)",
+    },
+];
+
+/// Look up a suite by target name.
+pub fn find(name: &str) -> Option<&'static SuiteInfo> {
+    SUITES.iter().find(|s| s.name == name)
+}
+
+/// Per-run suite context: a [`Bencher`] plus case collection under a
+/// current scope, accumulated into the suite's [`BenchReport`].
+pub struct Suite {
+    pub info: &'static SuiteInfo,
+    pub bencher: Bencher,
+    scope: String,
+    cases: Vec<CaseResult>,
+}
+
+impl Suite {
+    pub fn new(info: &'static SuiteInfo) -> Suite {
+        Suite {
+            info,
+            bencher: Bencher::new(),
+            scope: String::new(),
+            cases: Vec::new(),
+        }
+    }
+
+    /// Set the scope prefixed onto subsequent case labels (typically the
+    /// dataset). Empty scope = labels used verbatim.
+    pub fn set_scope(&mut self, scope: &str) {
+        self.scope = scope.to_string();
+    }
+
+    /// Cap measurement repetitions (suites trim reps on heavy sections;
+    /// the env-driven default still lowers it further for smoke runs).
+    pub fn cap_reps(&mut self, max: usize) {
+        self.bencher.reps = self.bencher.reps.min(max.max(1));
+    }
+
+    pub fn reps(&self) -> usize {
+        self.bencher.reps
+    }
+
+    fn qualify(&self, label: &str) -> String {
+        if self.scope.is_empty() {
+            label.to_string()
+        } else {
+            format!("{}/{label}", self.scope)
+        }
+    }
+
+    /// Time `f` under the current scope (warmup + reps, median etc.).
+    pub fn bench(&mut self, label: &str, f: impl FnMut()) -> Measurement {
+        let mut f = f;
+        self.bench_work(label, None, &mut f)
+    }
+
+    /// Like [`Suite::bench`] with a work-unit count for rate reporting.
+    pub fn bench_work(
+        &mut self,
+        label: &str,
+        work: Option<u64>,
+        f: &mut dyn FnMut(),
+    ) -> Measurement {
+        let name = self.qualify(label);
+        let m = self.bencher.bench_work(&name, work, f);
+        self.cases.push(CaseResult::from_measurement(&m));
+        m
+    }
+
+    /// Record an externally-obtained deterministic metric (simulated
+    /// stalls, expansion factors, subprocess timings) as a single-rep
+    /// case under the current scope.
+    pub fn record(&mut self, label: &str, unit: &str, value: f64) {
+        let name = self.qualify(label);
+        self.cases.push(CaseResult::single(&name, unit, value));
+    }
+
+    /// The accumulated report. Errors on an empty suite or duplicate case
+    /// names (almost always a missing [`Suite::set_scope`] call).
+    pub fn report(&self) -> Result<BenchReport> {
+        if self.cases.is_empty() {
+            bail!("suite {:?} recorded no cases", self.info.name);
+        }
+        let mut seen = std::collections::BTreeSet::new();
+        for c in &self.cases {
+            if !seen.insert(c.name.as_str()) {
+                bail!(
+                    "suite {:?} recorded case {:?} twice (missing set_scope?)",
+                    self.info.name,
+                    c.name
+                );
+            }
+        }
+        Ok(BenchReport {
+            suite: self.info.name.to_string(),
+            git_sha: report::git_sha(),
+            scale: super::scale(),
+            threads: crate::parallel::num_threads(),
+            cases: self.cases.clone(),
+        })
+    }
+}
+
+/// Run a registered suite: header, body, then report emission. Panics
+/// (nonzero bench exit) on unregistered names, empty reports, duplicate
+/// cases, or emission failure — all bugs CI must surface.
+pub fn run(name: &str, body: impl FnOnce(&mut Suite)) {
+    let info = find(name).unwrap_or_else(|| {
+        panic!("bench suite {name:?} is not registered in bench::suite::SUITES")
+    });
+    header(info.title, info.paper_ref);
+    let mut suite = Suite::new(info);
+    body(&mut suite);
+    let report = suite
+        .report()
+        .unwrap_or_else(|e| panic!("bench suite {name}: {e:#}"));
+    match report::write_report(&report) {
+        Ok(path) => println!(
+            "\nmachine-readable results: {} ({} cases)",
+            path.display(),
+            report.cases.len()
+        ),
+        Err(e) => panic!("bench suite {name}: emitting report: {e:#}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_names_are_unique_and_findable() {
+        let mut seen = std::collections::BTreeSet::new();
+        for s in SUITES {
+            assert!(seen.insert(s.name), "duplicate suite {:?}", s.name);
+            assert!(find(s.name).is_some());
+            assert!(!s.title.is_empty() && !s.paper_ref.is_empty());
+            assert!(!s.cases.is_empty());
+        }
+        assert_eq!(SUITES.len(), 20, "one entry per benches/*.rs target");
+        assert!(find("no_such_suite").is_none());
+    }
+
+    #[test]
+    fn suite_scopes_and_collects_cases() {
+        let info = find("table2_pagerank").unwrap();
+        let mut s = Suite::new(info);
+        s.bencher.reps = 1;
+        s.bencher.warmup = 0;
+        s.set_scope("ds-a");
+        s.bench("optimized", || {});
+        s.record("q", "q", 2.5);
+        s.set_scope("ds-b");
+        s.bench("optimized", || {});
+        let r = s.report().unwrap();
+        assert_eq!(r.suite, "table2_pagerank");
+        assert_eq!(r.cases.len(), 3);
+        assert_eq!(r.cases[0].name, "ds-a/optimized");
+        assert_eq!(r.cases[1].name, "ds-a/q");
+        assert_eq!(r.cases[2].name, "ds-b/optimized");
+        assert!(r.threads >= 1);
+    }
+
+    #[test]
+    fn empty_or_duplicate_reports_error() {
+        let info = find("table3_cf").unwrap();
+        let s = Suite::new(info);
+        assert!(s.report().is_err(), "empty suite must not emit");
+        let mut s = Suite::new(info);
+        s.bencher.reps = 1;
+        s.bencher.warmup = 0;
+        s.bench("optimized", || {});
+        s.bench("optimized", || {});
+        assert!(s.report().is_err(), "duplicate case names must error");
+    }
+
+    #[test]
+    fn cap_reps_only_lowers() {
+        let info = find("table3_cf").unwrap();
+        let mut s = Suite::new(info);
+        s.bencher.reps = 5;
+        s.cap_reps(3);
+        assert_eq!(s.reps(), 3);
+        s.cap_reps(10);
+        assert_eq!(s.reps(), 3);
+        s.cap_reps(0);
+        assert_eq!(s.reps(), 1);
+    }
+}

@@ -10,10 +10,16 @@
 //! cagra simulate --graph twitter-sim --llc 524288
 //! cagra expansion --graph twitter-sim
 //! cagra cache stats / cagra cache clear
+//! cagra bench ls
+//! cagra bench diff baseline.json new.json --tolerance 0.1
+//! cagra bench merge out/ --out baseline.json
 //! cagra artifacts
 //! ```
 
 use cagra::apps::registry;
+use cagra::bench::diff::{Diff, DiffOptions};
+use cagra::bench::report::BenchFile;
+use cagra::bench::suite::SUITES;
 use cagra::coordinator::{run_job, JobSpec, SystemConfig};
 use cagra::graph::datasets;
 use cagra::reorder;
@@ -23,7 +29,8 @@ use cagra::util::cli::Args;
 use cagra::util::{config::Config, fmt_bytes, fmt_count};
 
 const SUBCOMMANDS: &[&str] = &[
-    "run", "apps", "gen", "inspect", "simulate", "expansion", "cache", "artifacts", "help",
+    "run", "apps", "gen", "inspect", "simulate", "expansion", "cache", "bench", "artifacts",
+    "help",
 ];
 
 fn main() {
@@ -36,6 +43,7 @@ fn main() {
         Some("simulate") => cmd_simulate(&args),
         Some("expansion") => cmd_expansion(&args),
         Some("cache") => cmd_cache(&args),
+        Some("bench") => cmd_bench(&args),
         Some("artifacts") => cmd_artifacts(),
         _ => {
             usage();
@@ -63,6 +71,8 @@ fn usage() {
          \x20 simulate   memory-system simulation    --graph <dataset> [--llc BYTES]\n\
          \x20 expansion  expansion-factor sweep      --graph <dataset> [--random-seed N]\n\
          \x20 cache      artifact store tools        stats (default) | clear  [--store-dir DIR]\n\
+         \x20 bench      bench-result tools          ls [--names] | diff <baseline> <new> [--tolerance F]\n\
+         \x20            [--sigma F] [--allow-missing] | merge <file-or-dir>... --out FILE\n\
          \x20 artifacts  list PJRT artifacts and check they compile\n\
          \n\
          apps:     {}\n\
@@ -278,6 +288,98 @@ fn cmd_cache(args: &Args) -> anyhow::Result<()> {
         }
         Some(other) => anyhow::bail!("unknown cache action {other:?} (expected stats|clear)"),
     }
+    Ok(())
+}
+
+/// `cagra bench`: machine-readable bench-result tools.
+///
+/// - `ls` renders the suite registry (the same one every bench target
+///   runs through, so the listing cannot drift from the actual targets).
+/// - `diff <baseline> <new>` compares two report files — or directories
+///   of `BENCH_*.json` — with the noise-aware comparator and **exits 2**
+///   when any case regresses beyond tolerance (CI's perf gate).
+/// - `merge <inputs>... --out FILE` combines per-suite reports into one
+///   file (how `rust/bench-baseline.json` is refreshed).
+fn cmd_bench(args: &Args) -> anyhow::Result<()> {
+    match args.positional.first().map(String::as_str) {
+        Some("ls") => cmd_bench_ls(args),
+        Some("diff") => cmd_bench_diff(args),
+        Some("merge") => cmd_bench_merge(args),
+        Some(other) => anyhow::bail!("unknown bench action {other:?} (expected ls|diff|merge)"),
+        None => {
+            anyhow::bail!("usage: cagra bench ls | diff <base> <new> | merge <in>... --out FILE")
+        }
+    }
+}
+
+fn cmd_bench_ls(args: &Args) -> anyhow::Result<()> {
+    // `--names`: machine-readable one-per-line listing (CI derives the
+    // expected report count from it instead of hardcoding it).
+    if args.has_flag("names") {
+        for suite in SUITES {
+            println!("{}", suite.name);
+        }
+        return Ok(());
+    }
+    println!(
+        "registered bench suites (cargo bench --bench <name>; each emits BENCH_<name>.json):"
+    );
+    for suite in SUITES {
+        println!("\n  {}  [{}]\n      {}", suite.name, suite.paper_ref, suite.title);
+        println!("      scopes: {}", suite.scopes);
+        println!("      cases:  {}", suite.cases.join(", "));
+    }
+    println!("\n{} suites; knobs: CAGRA_BENCH_SCALE/_REPS/_WARMUP/_OUT", SUITES.len());
+    Ok(())
+}
+
+fn cmd_bench_diff(args: &Args) -> anyhow::Result<()> {
+    let (Some(base_path), Some(new_path)) = (args.positional.get(1), args.positional.get(2))
+    else {
+        anyhow::bail!(
+            "usage: cagra bench diff <baseline.json|dir> <new.json|dir> \
+             [--tolerance F] [--sigma F] [--allow-missing]"
+        );
+    };
+    let baseline = BenchFile::load_path(std::path::Path::new(base_path))?;
+    let new = BenchFile::load_path(std::path::Path::new(new_path))?;
+    let opts = DiffOptions {
+        tolerance: args.get_f64("tolerance", 0.10),
+        sigma: args.get_f64("sigma", 2.0),
+        fail_on_missing: !args.has_flag("allow-missing"),
+    };
+    let diff = Diff::compare(&baseline, &new, opts);
+    print!("{}", diff.render());
+    if diff.is_regression() {
+        eprintln!(
+            "perf regression: {} case(s) beyond tolerance (see table above)",
+            diff.failures().len()
+        );
+        std::process::exit(2);
+    }
+    Ok(())
+}
+
+fn cmd_bench_merge(args: &Args) -> anyhow::Result<()> {
+    let inputs = &args.positional[1..];
+    if inputs.is_empty() {
+        anyhow::bail!("usage: cagra bench merge <file-or-dir>... --out FILE");
+    }
+    let out = args
+        .get("out")
+        .ok_or_else(|| anyhow::anyhow!("--out FILE is required"))?;
+    let files = inputs
+        .iter()
+        .map(|p| BenchFile::load_path(std::path::Path::new(p)))
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    let mut merged = BenchFile::merge(files)?;
+    merged.note = format!("merged from {} input(s) by `cagra bench merge`", inputs.len());
+    std::fs::write(out, merged.to_json()?)?;
+    println!(
+        "wrote {out}: {} suite(s), {} case(s)",
+        merged.suites.len(),
+        merged.case_count()
+    );
     Ok(())
 }
 

@@ -1,0 +1,520 @@
+//! Minimal JSON encoder/parser for the offline mirror (no `serde`).
+//!
+//! The bench-report subsystem ([`crate::bench::report`]) needs a
+//! machine-readable interchange format that CI and `cagra bench diff` can
+//! both speak. This module provides the smallest JSON implementation that
+//! supports it: an ordered [`Value`] tree, a deterministic pretty-printer,
+//! and a strict recursive-descent parser.
+//!
+//! Guarantees the bench code relies on:
+//! - **Stable round trips**: `render(parse(render(v))) == render(v)`.
+//!   Object key order is preserved (objects are association lists, not
+//!   maps) and numbers print via Rust's shortest-round-trip `Display`.
+//! - **Corrupt input always errors**: truncation, trailing garbage,
+//!   malformed escapes, and over-deep nesting all return `Err`, never a
+//!   silently-wrong tree.
+//! - **Non-finite numbers render as `null`** (JSON has no NaN/Inf);
+//!   callers that must not lose data validate finiteness before encoding.
+
+use anyhow::{bail, Result};
+use std::fmt::Write as _;
+
+/// Maximum nesting depth accepted by the parser (stack-overflow guard).
+const MAX_DEPTH: usize = 64;
+
+/// A JSON value. Objects preserve insertion order.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Value>),
+    Obj(Vec<(String, Value)>),
+}
+
+impl Value {
+    /// Object field lookup (first match; `None` for non-objects).
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        match self {
+            Value::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    /// Number as a non-negative integer, if exactly representable.
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Value::Num(n) if *n >= 0.0 && n.fract() == 0.0 && *n <= 9_007_199_254_740_992.0 => {
+                Some(*n as u64)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s.as_str()),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Value]> {
+        match self {
+            Value::Arr(items) => Some(items.as_slice()),
+            _ => None,
+        }
+    }
+
+    /// Deterministic pretty-printed JSON (2-space indent, no trailing
+    /// newline).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        write_value(self, 0, &mut out);
+        out
+    }
+}
+
+fn write_value(v: &Value, indent: usize, out: &mut String) {
+    match v {
+        Value::Null => out.push_str("null"),
+        Value::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+        Value::Num(n) => write_num(*n, out),
+        Value::Str(s) => write_string(s, out),
+        Value::Arr(items) => {
+            if items.is_empty() {
+                out.push_str("[]");
+                return;
+            }
+            out.push('[');
+            for (i, item) in items.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                out.push('\n');
+                pad(indent + 1, out);
+                write_value(item, indent + 1, out);
+            }
+            out.push('\n');
+            pad(indent, out);
+            out.push(']');
+        }
+        Value::Obj(fields) => {
+            if fields.is_empty() {
+                out.push_str("{}");
+                return;
+            }
+            out.push('{');
+            for (i, (k, item)) in fields.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                out.push('\n');
+                pad(indent + 1, out);
+                write_string(k, out);
+                out.push_str(": ");
+                write_value(item, indent + 1, out);
+            }
+            out.push('\n');
+            pad(indent, out);
+            out.push('}');
+        }
+    }
+}
+
+fn pad(indent: usize, out: &mut String) {
+    for _ in 0..indent {
+        out.push_str("  ");
+    }
+}
+
+fn write_num(n: f64, out: &mut String) {
+    if !n.is_finite() {
+        // JSON has no NaN/Inf; encoders that cannot tolerate the loss
+        // validate before rendering (see BenchFile::to_json).
+        out.push_str("null");
+    } else if n.fract() == 0.0 && n.abs() <= 9_007_199_254_740_992.0 {
+        let _ = write!(out, "{}", n as i64);
+    } else {
+        // Rust's Display for f64 is the shortest string that parses back
+        // to the same value — exactly what a stable round trip needs.
+        let _ = write!(out, "{n}");
+    }
+}
+
+fn write_string(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            '\u{08}' => out.push_str("\\b"),
+            '\u{0C}' => out.push_str("\\f"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+/// Parse a complete JSON document. Trailing non-whitespace is an error.
+pub fn parse(input: &str) -> Result<Value> {
+    let mut p = Parser {
+        bytes: input.as_bytes(),
+        pos: 0,
+    };
+    p.skip_ws();
+    let v = p.value(0)?;
+    p.skip_ws();
+    if p.pos != p.bytes.len() {
+        bail!("trailing garbage at byte {} of JSON input", p.pos);
+    }
+    Ok(v)
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl Parser<'_> {
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn expect(&mut self, b: u8) -> Result<()> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            bail!(
+                "expected {:?} at byte {} of JSON input",
+                b as char,
+                self.pos
+            );
+        }
+    }
+
+    fn eat_literal(&mut self, lit: &str) -> bool {
+        if self.bytes[self.pos..].starts_with(lit.as_bytes()) {
+            self.pos += lit.len();
+            true
+        } else {
+            false
+        }
+    }
+
+    fn value(&mut self, depth: usize) -> Result<Value> {
+        if depth > MAX_DEPTH {
+            bail!("JSON nested deeper than {MAX_DEPTH} levels");
+        }
+        self.skip_ws();
+        let Some(b) = self.peek() else {
+            bail!("unexpected end of JSON input");
+        };
+        match b {
+            b'n' | b't' | b'f' => self.literal(),
+            b'"' => Ok(Value::Str(self.string()?)),
+            b'[' => self.array(depth),
+            b'{' => self.object(depth),
+            b'-' | b'0'..=b'9' => self.number(),
+            other => bail!(
+                "unexpected byte {:?} at position {} of JSON input",
+                other as char,
+                self.pos
+            ),
+        }
+    }
+
+    fn literal(&mut self) -> Result<Value> {
+        if self.eat_literal("null") {
+            Ok(Value::Null)
+        } else if self.eat_literal("true") {
+            Ok(Value::Bool(true))
+        } else if self.eat_literal("false") {
+            Ok(Value::Bool(false))
+        } else {
+            bail!("invalid JSON literal at byte {}", self.pos);
+        }
+    }
+
+    fn array(&mut self, depth: usize) -> Result<Value> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Value::Arr(items));
+        }
+        loop {
+            items.push(self.value(depth + 1)?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => {
+                    self.pos += 1;
+                }
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(Value::Arr(items));
+                }
+                _ => bail!("expected ',' or ']' at byte {} of JSON input", self.pos),
+            }
+        }
+    }
+
+    fn object(&mut self, depth: usize) -> Result<Value> {
+        self.expect(b'{')?;
+        let mut fields = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Value::Obj(fields));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            fields.push((key, self.value(depth + 1)?));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => {
+                    self.pos += 1;
+                }
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(Value::Obj(fields));
+                }
+                _ => bail!("expected ',' or '}}' at byte {} of JSON input", self.pos),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            let Some(b) = self.peek() else {
+                bail!("unterminated JSON string");
+            };
+            self.pos += 1;
+            match b {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let Some(esc) = self.peek() else {
+                        bail!("unterminated escape in JSON string");
+                    };
+                    self.pos += 1;
+                    match esc {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'b' => out.push('\u{08}'),
+                        b'f' => out.push('\u{0C}'),
+                        b'u' => out.push(self.unicode_escape()?),
+                        other => bail!("invalid escape '\\{}' in JSON string", other as char),
+                    }
+                }
+                b if b < 0x80 => out.push(b as char),
+                _ => {
+                    // Multi-byte UTF-8: re-scan from the byte we consumed,
+                    // decoding at most one 4-byte sequence (never the whole
+                    // remaining input — that would make parsing O(n²)).
+                    self.pos -= 1;
+                    let end = (self.pos + 4).min(self.bytes.len());
+                    let chunk = &self.bytes[self.pos..end];
+                    let c = match std::str::from_utf8(chunk) {
+                        Ok(s) => s.chars().next().unwrap(),
+                        // A trailing sequence cut off by `end` still decodes
+                        // its leading char; an error here with a valid-UTF-8
+                        // input (&str) can only mean a truncated tail.
+                        Err(e) if e.valid_up_to() > 0 => {
+                            let s = std::str::from_utf8(&chunk[..e.valid_up_to()]).unwrap();
+                            s.chars().next().unwrap()
+                        }
+                        Err(_) => bail!("invalid UTF-8 in JSON string"),
+                    };
+                    out.push(c);
+                    self.pos += c.len_utf8();
+                }
+            }
+        }
+    }
+
+    fn unicode_escape(&mut self) -> Result<char> {
+        let hi = self.hex4()?;
+        let code = if (0xD800..=0xDBFF).contains(&hi) {
+            // High surrogate: a low surrogate escape must follow.
+            if !self.eat_literal("\\u") {
+                bail!("high surrogate not followed by \\u escape");
+            }
+            let lo = self.hex4()?;
+            if !(0xDC00..=0xDFFF).contains(&lo) {
+                bail!("invalid low surrogate {lo:#06x}");
+            }
+            0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00)
+        } else {
+            hi
+        };
+        char::from_u32(code).ok_or_else(|| anyhow::anyhow!("invalid unicode escape {code:#x}"))
+    }
+
+    fn hex4(&mut self) -> Result<u32> {
+        let mut code = 0u32;
+        for _ in 0..4 {
+            let Some(b) = self.peek() else {
+                bail!("truncated \\u escape");
+            };
+            self.pos += 1;
+            let digit = match b {
+                b'0'..=b'9' => (b - b'0') as u32,
+                b'a'..=b'f' => (b - b'a') as u32 + 10,
+                b'A'..=b'F' => (b - b'A') as u32 + 10,
+                _ => bail!("invalid hex digit {:?} in \\u escape", b as char),
+            };
+            code = code * 16 + digit;
+        }
+        Ok(code)
+    }
+
+    fn number(&mut self) -> Result<Value> {
+        let start = self.pos;
+        while matches!(
+            self.peek(),
+            Some(b'-' | b'+' | b'.' | b'e' | b'E' | b'0'..=b'9')
+        ) {
+            self.pos += 1;
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
+        let n: f64 = text
+            .parse()
+            .map_err(|_| anyhow::anyhow!("invalid JSON number {text:?}"))?;
+        if !n.is_finite() {
+            bail!("non-finite JSON number {text:?}");
+        }
+        Ok(Value::Num(n))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_is_stable() {
+        let v = Value::Obj(vec![
+            ("name".into(), Value::Str("table2/optimized".into())),
+            ("median".into(), Value::Num(0.1415926535)),
+            ("reps".into(), Value::Num(5.0)),
+            ("work".into(), Value::Null),
+            ("ok".into(), Value::Bool(true)),
+            (
+                "samples".into(),
+                Value::Arr(vec![Value::Num(1.0), Value::Num(2.5)]),
+            ),
+        ]);
+        let once = v.render();
+        let reparsed = parse(&once).unwrap();
+        assert_eq!(reparsed, v);
+        assert_eq!(reparsed.render(), once, "encode→parse→encode must be stable");
+    }
+
+    #[test]
+    fn numbers_roundtrip_exactly() {
+        for n in [0.0, -1.5, 1e-9, 123456789.0, 0.1 + 0.2, f64::MIN_POSITIVE] {
+            let s = Value::Num(n).render();
+            let back = parse(&s).unwrap().as_f64().unwrap();
+            assert_eq!(back.to_bits(), n.to_bits(), "{n} rendered as {s}");
+        }
+    }
+
+    #[test]
+    fn string_escapes() {
+        let v = Value::Str("a\"b\\c\nd\tе\u{1}".into());
+        let s = v.render();
+        assert_eq!(parse(&s).unwrap(), v);
+        assert_eq!(parse(r#""\u0041\u00e9\ud83d\ude00""#).unwrap(), Value::Str("Aé😀".into()));
+    }
+
+    #[test]
+    fn preserves_key_order() {
+        let s = r#"{"z": 1, "a": 2, "m": 3}"#;
+        let Value::Obj(fields) = parse(s).unwrap() else {
+            panic!("not an object")
+        };
+        let keys: Vec<&str> = fields.iter().map(|(k, _)| k.as_str()).collect();
+        assert_eq!(keys, ["z", "a", "m"]);
+    }
+
+    #[test]
+    fn corrupt_inputs_error() {
+        for bad in [
+            "",
+            "{",
+            "[1, 2",
+            "\"unterminated",
+            "{\"a\": }",
+            "nul",
+            "[1] trailing",
+            "{\"a\": 1,}",
+            "\"\\u12\"",
+            "\"\\ud800\"",
+            "--5",
+            "1e",
+            "{\"a\" 1}",
+        ] {
+            assert!(parse(bad).is_err(), "accepted corrupt input {bad:?}");
+        }
+    }
+
+    #[test]
+    fn truncation_always_errors() {
+        let full = Value::Obj(vec![
+            ("cases".into(), Value::Arr(vec![Value::Num(1.0)])),
+            ("name".into(), Value::Str("x".into())),
+        ])
+        .render();
+        for cut in 1..full.len() {
+            assert!(
+                parse(&full[..cut]).is_err(),
+                "accepted truncation at {cut}: {:?}",
+                &full[..cut]
+            );
+        }
+    }
+
+    #[test]
+    fn depth_limit_enforced() {
+        let deep = "[".repeat(100) + &"]".repeat(100);
+        assert!(parse(&deep).is_err());
+        let ok = "[".repeat(40) + &"]".repeat(40);
+        assert!(parse(&ok).is_ok());
+    }
+
+    #[test]
+    fn non_finite_renders_null() {
+        assert_eq!(Value::Num(f64::NAN).render(), "null");
+        assert_eq!(Value::Num(f64::INFINITY).render(), "null");
+    }
+}

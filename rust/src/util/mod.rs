@@ -5,6 +5,7 @@
 pub mod rng;
 pub mod cli;
 pub mod config;
+pub mod json;
 pub mod logger;
 pub mod timer;
 pub mod stats;

@@ -54,6 +54,14 @@ pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
     }
 }
 
+/// Combine two independent standard deviations in quadrature
+/// (`√(a² + b²)`) — the noise margin `bench diff` adds on top of its
+/// relative tolerance when comparing two measured medians. Delegates to
+/// [`f64::hypot`] (no intermediate overflow/underflow).
+pub fn quadrature(a: f64, b: f64) -> f64 {
+    a.hypot(b)
+}
+
 /// Geometric mean (all samples must be positive).
 pub fn geomean(samples: &[f64]) -> f64 {
     assert!(!samples.is_empty());
@@ -125,6 +133,13 @@ mod tests {
         assert_eq!(percentile_sorted(&sorted, 0.5), 5.0);
         assert_eq!(percentile_sorted(&sorted, 0.0), 0.0);
         assert_eq!(percentile_sorted(&sorted, 1.0), 10.0);
+    }
+
+    #[test]
+    fn quadrature_basics() {
+        assert_eq!(quadrature(3.0, 4.0), 5.0);
+        assert_eq!(quadrature(0.0, 0.0), 0.0);
+        assert_eq!(quadrature(0.0, 2.5), 2.5);
     }
 
     #[test]

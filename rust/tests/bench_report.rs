@@ -1,0 +1,232 @@
+//! Acceptance tests for the machine-readable bench-results subsystem:
+//! the JSON report round trip is byte-stable, corrupt input always
+//! errors, and `cagra bench diff` (library *and* CLI exit code) flags an
+//! injected slowdown while passing within-noise jitter.
+
+use cagra::bench::diff::{Diff, DiffOptions, Verdict};
+use cagra::bench::report::{BenchFile, BenchReport, CaseResult, UNIT_SECS};
+use std::path::PathBuf;
+use std::process::Command;
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("cagra-benchrep-{tag}-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn timed(name: &str, median: f64, stddev: f64) -> CaseResult {
+    CaseResult {
+        name: name.into(),
+        unit: UNIT_SECS.into(),
+        reps: 3,
+        median,
+        mean: median * 1.01,
+        stddev,
+        min: median - stddev,
+        max: median + 2.0 * stddev,
+        work: Some(1_000_000),
+    }
+}
+
+fn report(suite: &str, cases: Vec<CaseResult>) -> BenchReport {
+    BenchReport {
+        suite: suite.into(),
+        git_sha: "cafef00d".into(),
+        scale: 0.25,
+        threads: 2,
+        cases,
+    }
+}
+
+#[test]
+fn round_trip_is_byte_stable_across_suites() {
+    let file = BenchFile {
+        note: "two suites".into(),
+        suites: vec![
+            report(
+                "table2_pagerank",
+                vec![
+                    timed("twitter-sim/optimized", 0.141, 0.002),
+                    timed("twitter-sim/baseline", 0.397, 0.004),
+                    CaseResult::single("twitter-sim/q", "q", 2.31),
+                ],
+            ),
+            report("fig7_expansion", vec![CaseResult::single("rmat27-sim/original/k=8", "q", 3.7)]),
+        ],
+    };
+    let encoded = file.to_json().unwrap();
+    let parsed = BenchFile::parse(&encoded).unwrap();
+    assert_eq!(parsed, file);
+    assert_eq!(
+        parsed.to_json().unwrap(),
+        encoded,
+        "encode→parse→encode must be byte-stable"
+    );
+}
+
+#[test]
+fn every_truncation_and_bitflip_errors_or_changes_meaning() {
+    let encoded = BenchFile::single(report(
+        "table3_cf",
+        vec![timed("netflix-sim/optimized", 0.2, 0.01)],
+    ))
+    .to_json()
+    .unwrap();
+    // Truncations: never a silent partial parse.
+    for cut in 0..encoded.len() - 1 {
+        assert!(
+            BenchFile::parse(&encoded[..cut]).is_err(),
+            "accepted truncated report at byte {cut}"
+        );
+    }
+    // Structural corruption: a few representative mutations.
+    for (from, to) in [
+        ("\"median\"", "\"mediam\""),
+        ("\"suites\"", "\"suires\""),
+        ("\"version\": 1", "\"version\": 2"),
+        ("\"format\": \"cagra-bench\"", "\"format\": \"x\""),
+        ("{", "["),
+    ] {
+        let bad = encoded.replacen(from, to, 1);
+        assert!(BenchFile::parse(&bad).is_err(), "accepted corruption {from} -> {to}");
+    }
+}
+
+#[test]
+fn diff_flags_injected_slowdown_and_passes_jitter() {
+    let baseline = BenchFile::single(report(
+        "table2_pagerank",
+        vec![
+            timed("twitter-sim/optimized", 0.100, 0.002),
+            timed("twitter-sim/baseline", 0.300, 0.002),
+        ],
+    ));
+    // 2x slowdown on one case, +3% jitter on the other.
+    let slow = BenchFile::single(report(
+        "table2_pagerank",
+        vec![
+            timed("twitter-sim/optimized", 0.200, 0.002),
+            timed("twitter-sim/baseline", 0.309, 0.002),
+        ],
+    ));
+    let d = Diff::compare(&baseline, &slow, DiffOptions::default());
+    assert!(d.is_regression());
+    let failures = d.failures();
+    assert_eq!(failures.len(), 1);
+    assert_eq!(failures[0].name, "twitter-sim/optimized");
+    assert_eq!(failures[0].verdict, Verdict::Regressed);
+
+    // Pure jitter: both cases inside tolerance + noise.
+    let jitter = BenchFile::single(report(
+        "table2_pagerank",
+        vec![
+            timed("twitter-sim/optimized", 0.104, 0.002),
+            timed("twitter-sim/baseline", 0.293, 0.002),
+        ],
+    ));
+    assert!(!Diff::compare(&baseline, &jitter, DiffOptions::default()).is_regression());
+}
+
+#[test]
+fn cli_diff_exit_codes_gate_regressions() {
+    let dir = temp_dir("cli");
+    let base_path = dir.join("base.json");
+    let ok_path = dir.join("ok.json");
+    let bad_path = dir.join("bad.json");
+    let baseline = BenchFile::single(report(
+        "table3_cf",
+        vec![timed("netflix-sim/optimized", 0.100, 0.0)],
+    ));
+    let ok = BenchFile::single(report(
+        "table3_cf",
+        vec![timed("netflix-sim/optimized", 0.102, 0.0)],
+    ));
+    let bad = BenchFile::single(report(
+        "table3_cf",
+        vec![timed("netflix-sim/optimized", 0.250, 0.0)],
+    ));
+    std::fs::write(&base_path, baseline.to_json().unwrap()).unwrap();
+    std::fs::write(&ok_path, ok.to_json().unwrap()).unwrap();
+    std::fs::write(&bad_path, bad.to_json().unwrap()).unwrap();
+
+    let exe = env!("CARGO_BIN_EXE_cagra");
+    let run = |new: &PathBuf| {
+        Command::new(exe)
+            .args(["bench", "diff"])
+            .arg(&base_path)
+            .arg(new)
+            .output()
+            .expect("running cagra bench diff")
+    };
+    let good = run(&ok_path);
+    assert!(
+        good.status.success(),
+        "within-noise diff must exit 0: {}",
+        String::from_utf8_lossy(&good.stdout)
+    );
+    let regressed = run(&bad_path);
+    assert_eq!(
+        regressed.status.code(),
+        Some(2),
+        "regression must exit 2: {}",
+        String::from_utf8_lossy(&regressed.stdout)
+    );
+    assert!(String::from_utf8_lossy(&regressed.stdout).contains("REGRESSED"));
+
+    // A corrupt file is a hard error (exit 1), not a pass.
+    std::fs::write(&bad_path, "{\"format\": \"cagra-bench\", \"versio").unwrap();
+    let corrupt = run(&bad_path);
+    assert_eq!(corrupt.status.code(), Some(1));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn write_report_and_directory_load_round_trip() {
+    let dir = temp_dir("emit");
+    // write_report emits under CAGRA_BENCH_OUT; emulate it with the same
+    // filename convention without mutating process env (tests run in
+    // parallel threads).
+    let a = BenchFile::single(report("table2_pagerank", vec![timed("x/optimized", 0.1, 0.0)]));
+    let b = BenchFile::single(report("table3_cf", vec![timed("y/optimized", 0.2, 0.0)]));
+    std::fs::write(
+        dir.join(cagra::bench::report::report_filename("table2_pagerank")),
+        a.to_json().unwrap(),
+    )
+    .unwrap();
+    std::fs::write(
+        dir.join(cagra::bench::report::report_filename("table3_cf")),
+        b.to_json().unwrap(),
+    )
+    .unwrap();
+    // Unrelated files are ignored by the directory loader.
+    std::fs::write(dir.join("notes.txt"), "not a report").unwrap();
+
+    let merged = BenchFile::load_path(&dir).unwrap();
+    assert_eq!(merged.suites.len(), 2);
+    assert!(merged.suite("table2_pagerank").is_some());
+    assert!(merged.suite("table3_cf").is_some());
+    assert_eq!(merged.case_count(), 2);
+
+    // Self-diff of a merged directory: everything Within, no failures.
+    let d = Diff::compare(&merged, &merged, DiffOptions::default());
+    assert!(!d.is_regression());
+    assert!(d.deltas.iter().all(|c| c.verdict == Verdict::Within));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn empty_committed_baseline_bootstrap_passes() {
+    // The committed rust/bench-baseline.json starts with zero suites so
+    // the CI gate can run before real numbers exist: every smoke case
+    // shows up as "new" and the diff passes.
+    let committed = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("bench-baseline.json");
+    let baseline = BenchFile::load(&committed).expect("committed baseline parses");
+    let smoke = BenchFile::single(report(
+        "table2_pagerank",
+        vec![timed("twitter-sim/optimized", 0.1, 0.0)],
+    ));
+    let d = Diff::compare(&baseline, &smoke, DiffOptions::default());
+    assert!(!d.is_regression());
+    assert!(d.deltas.iter().all(|c| c.verdict == Verdict::New));
+}

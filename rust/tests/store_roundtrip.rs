@@ -121,11 +121,12 @@ fn run_job_second_run_hits_store_with_identical_summary() {
 }
 
 #[test]
-fn bc_and_bfs_reordered_warm_runs_hit_store() {
+fn bc_bfs_and_sssp_reordered_warm_runs_hit_store() {
     // The reordering permutation is the cacheable preprocessing for the
-    // frontier apps (ROADMAP open item, closed by the GraphApp redesign):
-    // cold runs persist the degree sort, warm runs decode it.
-    for (app, variant) in [("bc", "both"), ("bfs", "both")] {
+    // frontier apps (ROADMAP open item, closed by the GraphApp redesign;
+    // SSSP joined via reorder::cached_degree_sort_perm): cold runs
+    // persist the degree sort, warm runs decode it.
+    for (app, variant) in [("bc", "both"), ("bfs", "both"), ("sssp", "reordering")] {
         let dir = temp_dir(&format!("frontier-{app}"));
         let mut cfg = small_cfg();
         cfg.store_enabled = true;
@@ -144,8 +145,9 @@ fn bc_and_bfs_reordered_warm_runs_hit_store() {
         let r2 = run_job(&spec, &cfg).unwrap();
         let s2 = r2.metrics.store.unwrap();
         assert_eq!((s2.hits, s2.misses), (1, 0), "{app}: warm run must hit");
-        if app == "bfs" {
-            // Reached count is deterministic (the reachable set is fixed).
+        if app == "bfs" || app == "sssp" {
+            // BFS's reached count and SSSP's converged distance vector
+            // are deterministic regardless of the permutation.
             assert_eq!(r1.summary, r2.summary, "{app} summary");
         } else {
             // BC accumulates through relaxed atomics; scores are equal up
