@@ -86,4 +86,25 @@ mod tests {
         assert!(parse("nope", "baseline").is_err());
         assert!(parse("pagerank", "nope").is_err());
     }
+
+    #[test]
+    fn store_policy_matches_preprocessing_cost() {
+        // The pipeline only opens/fingerprints the store for variants that
+        // do cacheable preprocessing. CC preprocesses (symmetrize) in BOTH
+        // variants; frontier baselines and PageRank's baseline do nothing
+        // cacheable and must skip the store entirely.
+        for &v in cc::Variant::all() {
+            let kind = AppKind::Cc(v);
+            assert!(app_for(kind).uses_store(kind), "cc/{v:?} must use the store");
+        }
+        for kind in [
+            AppKind::Bfs(bfs::Variant::Baseline),
+            AppKind::Bc(bc::Variant::Baseline),
+            AppKind::PageRank(pagerank::Variant::Baseline),
+        ] {
+            assert!(!app_for(kind).uses_store(kind), "{kind:?} must skip the store");
+        }
+        let both = AppKind::PageRank(pagerank::Variant::ReorderedSegmented);
+        assert!(app_for(both).uses_store(both));
+    }
 }

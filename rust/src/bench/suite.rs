@@ -175,7 +175,7 @@ pub const SUITES: &[SuiteInfo] = &[
         name: "table9_preprocessing",
         title: "Table 9: preprocessing runtime",
         paper_ref: "paper Table 9",
-        cases: &["reorder", "segment", "csr", "seg-cold", "seg-warm", "pr-iter"],
+        cases: &["reorder", "segment", "csr", "load-warm", "seg-cold", "seg-warm", "pr-iter"],
         scopes: "datasets (livejournal, twitter, rmat27)",
     },
     SuiteInfo {

@@ -1,0 +1,173 @@
+//! Batch driver: many jobs, **one** long-lived artifact store.
+//!
+//! The ROADMAP's serving north star (many jobs, heavy traffic, one
+//! machine) needs the store to be a shared substrate rather than a
+//! per-job cache. [`run_batch`] opens the store exactly once, threads it
+//! through every job via [`run_job_with_store`], and relies on the
+//! store's per-job eviction-exemption scopes: each job's writes are
+//! protected while it runs and released the moment it completes, so the
+//! exemption set stays bounded no matter how many jobs one instance
+//! serves (the old instance-scoped `own_writes` set grew forever).
+//!
+//! Batch files (`cagra batch <file>`) are one job per line: `key=value`
+//! tokens separated by whitespace, `#` starts a comment. Keys:
+//!
+//! ```text
+//! app=<name>            required; any registered app (see `cagra apps`)
+//! variant=<variant>     default: the app's default variant
+//! graph=<dataset>       default: livejournal-sim
+//! iters=N  sources=N  scale=F  analyze=true|false
+//! delta-epsilon=F       per-job SystemConfig::delta_epsilon override
+//! ```
+
+use super::config::SystemConfig;
+use super::job::{run_job_with_store, JobResult, JobSpec};
+use crate::apps::registry;
+use crate::store::ArtifactStore;
+use anyhow::{bail, Context, Result};
+
+/// Parse a batch file into job specs. Lines are independent; the first
+/// malformed one fails the whole parse (a batch with a typo'd job should
+/// not half-run).
+pub fn parse_batch(text: &str) -> Result<Vec<JobSpec>> {
+    let mut jobs = Vec::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let job = parse_job(line).with_context(|| format!("batch line {}: {raw:?}", lineno + 1))?;
+        jobs.push(job);
+    }
+    if jobs.is_empty() {
+        bail!("batch contains no jobs (expected one `app=<name> ...` line per job)");
+    }
+    Ok(jobs)
+}
+
+fn parse_job(line: &str) -> Result<JobSpec> {
+    let mut spec = JobSpec::default();
+    let mut app: Option<&str> = None;
+    let mut variant: Option<&str> = None;
+    for tok in line.split_whitespace() {
+        let Some((k, v)) = tok.split_once('=') else {
+            bail!("expected key=value, got {tok:?}");
+        };
+        match k {
+            "app" => app = Some(v),
+            "variant" => variant = Some(v),
+            "graph" => spec.dataset = v.to_string(),
+            "iters" => spec.iters = v.parse().with_context(|| format!("iters={v:?}"))?,
+            "sources" => {
+                spec.num_sources = v.parse().with_context(|| format!("sources={v:?}"))?
+            }
+            "scale" => spec.scale = v.parse().with_context(|| format!("scale={v:?}"))?,
+            "analyze" => {
+                spec.analyze_memory = v.parse().with_context(|| format!("analyze={v:?}"))?
+            }
+            "delta-epsilon" | "delta_epsilon" => {
+                spec.delta_epsilon =
+                    Some(v.parse().with_context(|| format!("delta-epsilon={v:?}"))?)
+            }
+            _ => bail!(
+                "unknown batch key {k:?} (expected \
+                 app|variant|graph|iters|sources|scale|analyze|delta-epsilon)"
+            ),
+        }
+    }
+    let Some(app) = app else {
+        bail!("missing app=<name>");
+    };
+    let a = registry::find(app)
+        .ok_or_else(|| anyhow::anyhow!("unknown app {app:?} (see `cagra apps`)"))?;
+    spec.app = match variant {
+        Some(v) => a.parse_variant(v)?,
+        None => a.default_variant(),
+    };
+    Ok(spec)
+}
+
+/// Run every job over one shared [`ArtifactStore`] instance (opened at
+/// most once, and only if the config enables the store and some job can
+/// use it). Jobs run in order; the first failure aborts the batch.
+pub fn run_batch(specs: &[JobSpec], cfg: &SystemConfig) -> Result<Vec<JobResult>> {
+    let store = if cfg.store_enabled
+        && specs
+            .iter()
+            .any(|s| registry::app_for(s.app).uses_store(s.app))
+    {
+        match ArtifactStore::open(&cfg.store_dir, cfg.store_cap_bytes) {
+            Ok(s) => Some(s),
+            Err(e) => {
+                crate::log_warn!("artifact store disabled for this batch: {e:#}");
+                None
+            }
+        }
+    } else {
+        None
+    };
+    specs
+        .iter()
+        .enumerate()
+        .map(|(i, spec)| {
+            run_job_with_store(spec, cfg, store.as_ref()).with_context(|| {
+                format!(
+                    "batch job {} ({}/{} on {})",
+                    i + 1,
+                    spec.app.app_name(),
+                    spec.app.variant_name(),
+                    spec.dataset
+                )
+            })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::{cc, pagerank};
+    use crate::coordinator::AppKind;
+
+    #[test]
+    fn parses_jobs_comments_and_defaults() {
+        let text = "\
+# two jobs sharing one store
+app=pagerank variant=both graph=rmat25-sim iters=3 scale=0.015625
+app=cc graph=rmat25-sim iters=2 scale=0.015625  # default variant
+";
+        let jobs = parse_batch(text).unwrap();
+        assert_eq!(jobs.len(), 2);
+        assert!(matches!(
+            jobs[0].app,
+            AppKind::PageRank(pagerank::Variant::ReorderedSegmented)
+        ));
+        assert_eq!(jobs[0].iters, 3);
+        assert_eq!(jobs[0].scale, 0.015625);
+        // Unset keys keep JobSpec defaults; variant falls back to the
+        // app's default.
+        assert!(matches!(jobs[1].app, AppKind::Cc(cc::Variant::Segmented)));
+        assert_eq!(jobs[1].num_sources, JobSpec::default().num_sources);
+        assert!(jobs[1].delta_epsilon.is_none());
+    }
+
+    #[test]
+    fn parses_delta_epsilon_override() {
+        let jobs = parse_batch("app=pagerank-delta delta-epsilon=1e-6\n").unwrap();
+        assert_eq!(jobs[0].delta_epsilon, Some(1e-6));
+        let jobs = parse_batch("app=pagerank-delta delta_epsilon=1e-5\n").unwrap();
+        assert_eq!(jobs[0].delta_epsilon, Some(1e-5));
+    }
+
+    #[test]
+    fn rejects_malformed_batches() {
+        assert!(parse_batch("").is_err(), "no jobs");
+        assert!(parse_batch("# only comments\n").is_err(), "no jobs");
+        assert!(parse_batch("variant=both\n").is_err(), "missing app");
+        assert!(parse_batch("app=nope\n").is_err(), "unknown app");
+        assert!(parse_batch("app=pagerank variant=nope\n").is_err(), "unknown variant");
+        assert!(parse_batch("app=pagerank iters\n").is_err(), "not key=value");
+        assert!(parse_batch("app=pagerank iters=abc\n").is_err(), "bad number");
+        assert!(parse_batch("app=pagerank color=red\n").is_err(), "unknown key");
+    }
+}

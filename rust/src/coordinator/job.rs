@@ -35,6 +35,10 @@ pub struct JobSpec {
     /// Attach simulated memory-system metrics (slower).
     pub analyze_memory: bool,
     pub scale: f64,
+    /// Per-job override of [`SystemConfig::delta_epsilon`] (PageRank-Delta
+    /// activeness threshold). `None` keeps the system-wide value — app
+    /// knobs default to config but individual jobs in a batch can diverge.
+    pub delta_epsilon: Option<f64>,
 }
 
 impl Default for JobSpec {
@@ -46,6 +50,7 @@ impl Default for JobSpec {
             num_sources: 12,
             analyze_memory: false,
             scale: 1.0,
+            delta_epsilon: None,
         }
     }
 }
@@ -60,8 +65,36 @@ pub struct JobResult {
     pub summary: f64,
 }
 
-/// Execute a job end-to-end through the app registry.
+/// Execute a job end-to-end through the app registry, opening (and
+/// closing) a private artifact store if the config enables one.
 pub fn run_job(spec: &JobSpec, cfg: &SystemConfig) -> Result<JobResult> {
+    run_job_with_store(spec, cfg, None)
+}
+
+/// [`run_job`] against an optional **shared** long-lived store (`cagra
+/// batch`, embedders serving many jobs from one process). The job's
+/// store writes are recorded under a per-job eviction-exemption scope
+/// ([`ArtifactStore::begin_scope`]) that is released when the job
+/// completes, so a store instance that outlives this job never
+/// accumulates unbounded exemptions on its behalf.
+pub fn run_job_with_store(
+    spec: &JobSpec,
+    cfg: &SystemConfig,
+    shared: Option<&ArtifactStore>,
+) -> Result<JobResult> {
+    // JobSpec-level app-knob overrides shadow SystemConfig for this job
+    // only (a batch can mix per-job values over one system config).
+    let cfg_override;
+    let cfg = match spec.delta_epsilon {
+        Some(e) => {
+            cfg_override = SystemConfig {
+                delta_epsilon: e,
+                ..cfg.clone()
+            };
+            &cfg_override
+        }
+        None => cfg,
+    };
     let mut metrics = Metrics::default();
     let (ds, load_s): (Dataset, f64) = {
         let (r, s) = time(|| datasets::load_scaled(&spec.dataset, spec.scale));
@@ -82,22 +115,28 @@ pub fn run_job(spec: &JobSpec, cfg: &SystemConfig) -> Result<JobResult> {
     // declares cacheable preprocessing go through the store; skip the
     // open + fingerprint entirely otherwise so --store adds no overhead
     // (and no misleading 0-hit stats) to the rest.
-    let store = if cfg.store_enabled && app.uses_store(spec.app) {
-        match ArtifactStore::open(&cfg.store_dir, cfg.store_cap_bytes) {
-            Ok(s) => Some(s),
-            Err(e) => {
-                crate::log_warn!("artifact store disabled for this job: {e:#}");
-                None
-            }
+    let mut opened: Option<ArtifactStore> = None;
+    let store: Option<&ArtifactStore> = if cfg.store_enabled && app.uses_store(spec.app) {
+        match shared {
+            Some(s) => Some(s),
+            None => match ArtifactStore::open(&cfg.store_dir, cfg.store_cap_bytes) {
+                Ok(s) => Some(opened.insert(s)),
+                Err(e) => {
+                    crate::log_warn!("artifact store disabled for this job: {e:#}");
+                    None
+                }
+            },
         }
     } else {
         None
     };
-    let ctx = match &store {
+    let scope = store.map(|s| s.begin_scope());
+    let ctx = match store {
         Some(s) => {
             let (fp, fp_s) = time(|| fingerprint::fingerprint_dataset(&spec.dataset, spec.scale, g));
             metrics.phases.add("fingerprint", fp_s);
-            Some(StoreCtx::new(s, fp))
+            let sid = scope.as_ref().expect("scope opened with store").id();
+            Some(StoreCtx::scoped(s, fp, sid))
         }
         None => None,
     };
@@ -125,7 +164,10 @@ pub fn run_job(spec: &JobSpec, cfg: &SystemConfig) -> Result<JobResult> {
         metrics.stalls = app.simulate(g, cfg, spec.app);
     }
     let summary = prep.summary();
-    metrics.store = store.as_ref().map(|s| s.stats());
+    metrics.store = store.map(|s| s.stats());
+    // Job complete: release this job's eviction exemptions (for a shared
+    // store, its artifacts become ordinary LRU candidates from here on).
+    drop(scope);
     Ok(JobResult { metrics, summary })
 }
 

@@ -20,6 +20,9 @@ pub struct Metrics {
     /// Edges processed per iteration.
     pub edges: u64,
     /// Artifact-store snapshot, when the job ran with the store enabled.
+    /// Counters are per store *instance*: under `cagra batch` (one shared
+    /// store) they accumulate across jobs, so a job's own traffic is the
+    /// delta from the previous job's snapshot.
     pub store: Option<StoreStats>,
 }
 

@@ -3,9 +3,11 @@
 //! drive everything through this module; the pipeline itself resolves
 //! workloads through [`crate::apps::registry`], so it stays app-agnostic.
 
+pub mod batch;
 pub mod config;
 pub mod job;
 pub mod metrics;
 
+pub use batch::{parse_batch, run_batch};
 pub use config::SystemConfig;
-pub use job::{run_job, AppKind, JobResult, JobSpec};
+pub use job::{run_job, run_job_with_store, AppKind, JobResult, JobSpec};

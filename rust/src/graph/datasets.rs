@@ -7,15 +7,29 @@
 //! at ~1/100 scale — with the effective cache scaled to match (see
 //! `coordinator::SystemConfig`). DESIGN.md §3 records the substitution.
 //!
-//! Stand-ins are cached on disk (binary edge lists under
-//! `target/dataset-cache/`) so repeated bench runs skip generation.
+//! Stand-ins are cached on disk under `target/dataset-cache/` (override
+//! with `CAGRA_DATASET_CACHE`), in two layers:
+//!
+//! - `<name>-s<scale>.csr.art` — the **finished CSR**, framed by the
+//!   artifact codec (`store/codec.rs`: magic, version, checksum). The
+//!   warm fast path: a load decodes this directly and performs zero
+//!   `Csr::from_edges` work.
+//! - `<name>-s<scale>.bin` — the binary edge list (also what `cagra gen`
+//!   emits). Fallback when the CSR artifact is absent: one
+//!   `Csr::from_edges` pass, after which the CSR artifact is written so
+//!   the next load is warm.
+//!
+//! Both layers are written atomically (unique temp file + rename) and
+//! validated on read — a torn, corrupt, or stale-spec file is deleted
+//! and the dataset regenerated, never silently served.
 
 use super::csr::{Csr, CsrBuilder};
 use super::generators::{self, RmatParams};
-use super::{edgelist, VertexId};
+use super::{edgelist, Edge, VertexId};
+use crate::store::codec;
 use anyhow::{bail, Result};
 use std::collections::VecDeque;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 /// All registered dataset names.
 pub const ALL: &[&str] = &[
@@ -64,8 +78,46 @@ pub fn load(name: &str) -> Result<Dataset> {
 }
 
 /// Load with a scale factor: `scale < 1` shrinks vertex counts (RMAT scale
-/// shrinks logarithmically) for smoke/CI runs.
+/// shrinks logarithmically) for smoke/CI runs. Uses the default cache
+/// directory (`CAGRA_DATASET_CACHE` or `target/dataset-cache`).
 pub fn load_scaled(name: &str, scale: f64) -> Result<Dataset> {
+    load_scaled_in(name, scale, &default_cache_dir())
+}
+
+/// [`load_scaled`] against an explicit cache directory (tests point this
+/// at throwaway dirs so cache-integrity behaviour is exercised without
+/// races on the process-global default).
+pub fn load_scaled_in(name: &str, scale: f64, cache_dir: &Path) -> Result<Dataset> {
+    let spec = spec_for(name, scale)?;
+    // `{scale}` (f64 Display) is the shortest round-trip representation,
+    // so distinct scales can never share a cache file. The old `{:.3}`
+    // rounding let nearby scales collide — fatally for Netflix, whose
+    // spec validation is scale-insensitive in vertex count and would
+    // silently serve the neighbor's graph.
+    let csr_cache = cache_dir.join(format!("{name}-s{scale}.csr.art"));
+    let edge_cache = cache_dir.join(format!("{name}-s{scale}.bin"));
+    // Warm fast path: decode the finished CSR — no edge scan, no
+    // Csr::from_edges.
+    if let Some(ds) = try_cached_csr(name, &spec, scale, &csr_cache) {
+        return Ok(ds);
+    }
+    // Edge-list fallback: one CSR build from cached edges, then persist
+    // the CSR so the *next* load takes the warm path.
+    if let Some(ds) = try_cached(name, &spec, scale, &edge_cache) {
+        persist_csr(&csr_cache, &ds.graph);
+        return Ok(ds);
+    }
+    let ds = build(name, &spec, scale)?;
+    // Best-effort cache writes (atomic: torn writes can never be read
+    // back as valid cache files).
+    let edges: Vec<_> = ds.graph.edges().collect();
+    write_edge_cache(&edge_cache, ds.graph.num_vertices(), &edges);
+    persist_csr(&csr_cache, &ds.graph);
+    Ok(ds)
+}
+
+/// Generator spec for a registered dataset name at `scale`.
+fn spec_for(name: &str, scale: f64) -> Result<Spec> {
     // Scale shifts RMAT log2-scale: 0.25 => -2 levels.
     let shift = if scale >= 1.0 {
         0
@@ -111,18 +163,7 @@ pub fn load_scaled(name: &str, scale: f64) -> Result<Dataset> {
         "netflix4x-sim" => Spec::Netflix { factor: 4 },
         _ => bail!("unknown dataset {name:?}; known: {ALL:?}"),
     };
-    let cache = cache_path(name, scale);
-    if let Some(ds) = try_cached(name, &spec, &cache) {
-        return Ok(ds);
-    }
-    let ds = build(name, &spec, scale)?;
-    // Best-effort cache write.
-    if let Some(parent) = cache.parent() {
-        std::fs::create_dir_all(parent).ok();
-    }
-    let edges: Vec<_> = ds.graph.edges().collect();
-    edgelist::write_binary(&cache, ds.graph.num_vertices(), &edges).ok();
-    Ok(ds)
+    Ok(spec)
 }
 
 enum Spec {
@@ -137,25 +178,143 @@ enum Spec {
     },
 }
 
-fn cache_path(name: &str, scale: f64) -> PathBuf {
-    let dir = std::env::var("CAGRA_DATASET_CACHE")
-        .map(PathBuf::from)
-        .unwrap_or_else(|_| PathBuf::from("target/dataset-cache"));
-    dir.join(format!("{name}-s{scale:.3}.bin"))
+impl Spec {
+    /// Exact vertex count every build of this spec produces (generators
+    /// allocate the full id range regardless of which ids get edges).
+    fn expected_vertices(&self) -> usize {
+        match *self {
+            Spec::Rmat { scale, .. } => 1usize << scale,
+            Spec::Netflix { factor } => netflix_users(factor) + (1usize << 12) * factor,
+        }
+    }
+
+    /// Upper bound on edge count (the generators emit at most this many
+    /// before dedup/self-loop cleanup).
+    fn max_edges(&self, load_scale: f64) -> usize {
+        match *self {
+            Spec::Rmat { scale, edge_factor, .. } => (1usize << scale) * edge_factor,
+            Spec::Netflix { factor } => {
+                let base_users = 1usize << 16;
+                let base_ratings = ((4e6 * load_scale.min(1.0)) as usize).max(base_users);
+                base_ratings * factor * factor
+            }
+        }
+    }
+
+    /// Bipartite metadata implied by the spec.
+    fn users(&self) -> Option<usize> {
+        match *self {
+            Spec::Netflix { factor } => Some(netflix_users(factor)),
+            _ => None,
+        }
+    }
+
+    /// Does a cached graph's shape match what this spec would generate?
+    /// The vertex count is fully determined; the edge count is bounded
+    /// (cleanup dedups, so only the raw emission count is exact). A file
+    /// failing this came from a different spec (e.g. generator parameters
+    /// changed between versions) and must be regenerated, not served.
+    fn matches(&self, n: usize, m: usize, load_scale: f64) -> std::result::Result<(), String> {
+        let want_n = self.expected_vertices();
+        if n != want_n {
+            return Err(format!("has {n} vertices, spec generates {want_n}"));
+        }
+        let max_m = self.max_edges(load_scale);
+        if m == 0 || m > max_m {
+            return Err(format!("has {m} edges, spec generates 1..={max_m}"));
+        }
+        Ok(())
+    }
 }
 
-fn try_cached(name: &str, spec: &Spec, cache: &PathBuf) -> Option<Dataset> {
-    let (n, edges) = edgelist::read_binary(cache).ok()?;
-    let users = match spec {
-        Spec::Netflix { factor } => Some(netflix_users(*factor)),
-        _ => None,
+fn default_cache_dir() -> PathBuf {
+    std::env::var("CAGRA_DATASET_CACHE")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("target/dataset-cache"))
+}
+
+/// Warm path: decode the cached finished CSR. Unreadable (torn/corrupt)
+/// or spec-mismatched (stale) files are deleted and treated as a miss.
+fn try_cached_csr(name: &str, spec: &Spec, scale: f64, path: &Path) -> Option<Dataset> {
+    if !path.is_file() {
+        return None;
+    }
+    let graph = match codec::read_file::<Csr>(path) {
+        Ok((g, _)) => g,
+        Err(e) => {
+            crate::log_warn!("dataset cache: dropping unreadable {}: {e:#}", path.display());
+            std::fs::remove_file(path).ok();
+            return None;
+        }
     };
+    if let Err(why) = spec.matches(graph.num_vertices(), graph.num_edges(), scale) {
+        crate::log_warn!("dataset cache: dropping stale {}: {why}", path.display());
+        std::fs::remove_file(path).ok();
+        return None;
+    }
+    Some(Dataset {
+        name: name.to_string(),
+        graph,
+        users: spec.users(),
+    })
+}
+
+/// Fallback path: rebuild the CSR from the cached edge list. The decoded
+/// counts are validated against the requested spec — a stale file from an
+/// old spec (or a torn/corrupt one) is deleted and regenerated instead of
+/// silently serving the wrong graph.
+fn try_cached(name: &str, spec: &Spec, scale: f64, cache: &Path) -> Option<Dataset> {
+    if !cache.is_file() {
+        return None;
+    }
+    let (n, edges) = match edgelist::read_binary(cache) {
+        Ok(v) => v,
+        Err(e) => {
+            crate::log_warn!("dataset cache: dropping unreadable {}: {e:#}", cache.display());
+            std::fs::remove_file(cache).ok();
+            return None;
+        }
+    };
+    if let Err(why) = spec.matches(n, edges.len(), scale) {
+        crate::log_warn!("dataset cache: dropping stale {}: {why}", cache.display());
+        std::fs::remove_file(cache).ok();
+        return None;
+    }
     // Cached files are already cleaned; rebuild CSR directly.
     Some(Dataset {
         name: name.to_string(),
         graph: Csr::from_edges(n, &edges),
-        users,
+        users: spec.users(),
     })
+}
+
+/// Best-effort atomic edge-list cache write ([`codec::write_atomic`]:
+/// unique temp file + rename), so a crash or full disk mid-write can
+/// never leave a torn file under the cache name for the next run to
+/// read.
+fn write_edge_cache(cache: &Path, num_vertices: usize, edges: &[Edge]) {
+    if let Some(parent) = cache.parent() {
+        if std::fs::create_dir_all(parent).is_err() {
+            return;
+        }
+    }
+    let wrote = codec::write_atomic(cache, |tmp| edgelist::write_binary(tmp, num_vertices, edges));
+    if let Err(e) = wrote {
+        crate::log_warn!("dataset cache: writing {} failed: {e:#}", cache.display());
+    }
+}
+
+/// Best-effort CSR artifact write (the codec's `write_file` is already
+/// atomic: unique temp + rename).
+fn persist_csr(path: &Path, g: &Csr) {
+    if let Some(parent) = path.parent() {
+        if std::fs::create_dir_all(parent).is_err() {
+            return;
+        }
+    }
+    if let Err(e) = codec::write_file(path, g) {
+        crate::log_warn!("dataset cache: writing {} failed: {e:#}", path.display());
+    }
 }
 
 fn netflix_users(factor: usize) -> usize {
@@ -285,5 +444,126 @@ mod tests {
         let a = load_scaled("livejournal-sim", 1.0 / 64.0).unwrap();
         let b = load_scaled("livejournal-sim", 1.0 / 64.0).unwrap();
         assert_eq!(a.graph.sorted(), b.graph.sorted());
+    }
+
+    const TEST_SCALE: f64 = 1.0 / 64.0;
+
+    fn temp_cache(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "cagra-dscache-{tag}-{}",
+            std::process::id()
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+        dir
+    }
+
+    fn cache_files(dir: &Path, name: &str) -> (std::path::PathBuf, std::path::PathBuf) {
+        (
+            dir.join(format!("{name}-s{TEST_SCALE}.csr.art")),
+            dir.join(format!("{name}-s{TEST_SCALE}.bin")),
+        )
+    }
+
+    #[test]
+    fn nearby_scales_get_distinct_cache_files() {
+        // f64 Display round-trips: scales that the old 3-decimal rounding
+        // collapsed (0.05 vs 0.0504 both -> "0.050") must not share a
+        // cache file, or one spec's graph gets served for the other.
+        let a = format!("x-s{}.bin", 0.0500f64);
+        let b = format!("x-s{}.bin", 0.0504f64);
+        assert_ne!(a, b);
+        assert_eq!(format!("{}", 1.0f64 / 64.0), "0.015625");
+    }
+
+    #[test]
+    fn warm_load_decodes_csr_without_edge_list() {
+        // The warm path must not need Csr::from_edges at all: delete the
+        // edge list after the cold load and the reload must still succeed
+        // (only the finished-CSR artifact can serve it), returning the
+        // byte-identical CSR.
+        let dir = temp_cache("warm");
+        let a = load_scaled_in("rmat25-sim", TEST_SCALE, &dir).unwrap();
+        let (art, bin) = cache_files(&dir, "rmat25-sim");
+        assert!(art.is_file(), "cold load must persist the CSR artifact");
+        assert!(bin.is_file(), "cold load must persist the edge list");
+        std::fs::remove_file(&bin).unwrap();
+        let b = load_scaled_in("rmat25-sim", TEST_SCALE, &dir).unwrap();
+        assert_eq!(a.graph, b.graph, "decoded CSR must be byte-identical");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn edge_list_fallback_rebuilds_and_persists_csr() {
+        // With only the edge list present (e.g. written by `cagra gen` or
+        // an older version), one load rebuilds the CSR and writes the
+        // artifact so the next load is warm.
+        let dir = temp_cache("fallback");
+        let a = load_scaled_in("rmat25-sim", TEST_SCALE, &dir).unwrap();
+        let (art, _bin) = cache_files(&dir, "rmat25-sim");
+        std::fs::remove_file(&art).unwrap();
+        let b = load_scaled_in("rmat25-sim", TEST_SCALE, &dir).unwrap();
+        assert!(art.is_file(), "fallback load must repopulate the CSR artifact");
+        assert_eq!(a.graph.sorted(), b.graph.sorted());
+        let c = load_scaled_in("rmat25-sim", TEST_SCALE, &dir).unwrap();
+        assert_eq!(b.graph, c.graph, "third load must decode what the second wrote");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn torn_cache_files_are_regenerated() {
+        // A crash mid-write used to be able to leave a torn edge list
+        // under the final name; both cache layers must now detect
+        // truncation, delete the file, and regenerate.
+        let dir = temp_cache("torn");
+        let a = load_scaled_in("rmat25-sim", TEST_SCALE, &dir).unwrap();
+        let (art, bin) = cache_files(&dir, "rmat25-sim");
+        for p in [&art, &bin] {
+            let bytes = std::fs::read(p).unwrap();
+            std::fs::write(p, &bytes[..bytes.len() / 2]).unwrap();
+        }
+        let b = load_scaled_in("rmat25-sim", TEST_SCALE, &dir).unwrap();
+        assert_eq!(a.graph.sorted(), b.graph.sorted(), "regeneration must reproduce");
+        // Both layers must be valid again after the regeneration.
+        let c = load_scaled_in("rmat25-sim", TEST_SCALE, &dir).unwrap();
+        assert_eq!(b.graph, c.graph);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn stale_spec_mismatch_is_dropped_not_served() {
+        // Structurally-valid cache files whose counts disagree with the
+        // requested spec (e.g. generator parameters changed between
+        // versions) must be deleted and regenerated, not silently served.
+        let dir = temp_cache("stale");
+        std::fs::create_dir_all(&dir).unwrap();
+        let (art, bin) = cache_files(&dir, "rmat25-sim");
+        edgelist::write_binary(&bin, 5, &[(0, 1), (1, 2)]).unwrap();
+        codec::write_file(&art, &Csr::from_edges(4, &[(0, 1)])).unwrap();
+        let ds = load_scaled_in("rmat25-sim", TEST_SCALE, &dir).unwrap();
+        // rmat25-sim at 1/64 scale is a 2^14-vertex graph.
+        assert_eq!(ds.graph.num_vertices(), 1 << 14);
+        // The stale files were replaced by the regenerated graph's.
+        let (n, edges) = edgelist::read_binary(&bin).unwrap();
+        assert_eq!(n, ds.graph.num_vertices());
+        assert_eq!(edges.len(), ds.graph.num_edges());
+        let (back, _) = codec::read_file::<Csr>(&art).unwrap();
+        assert_eq!(back, ds.graph);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn spec_shape_validation() {
+        let spec = spec_for("rmat25-sim", TEST_SCALE).unwrap();
+        let n = spec.expected_vertices();
+        assert!(spec.matches(n, 10, TEST_SCALE).is_ok());
+        assert!(spec.matches(n - 1, 10, TEST_SCALE).is_err(), "wrong n");
+        assert!(spec.matches(n, 0, TEST_SCALE).is_err(), "empty graph");
+        assert!(
+            spec.matches(n, spec.max_edges(TEST_SCALE) + 1, TEST_SCALE).is_err(),
+            "too many edges"
+        );
+        let nf = spec_for("netflix2x-sim", 0.05).unwrap();
+        assert_eq!(nf.expected_vertices(), 2 * ((1 << 16) + (1 << 12)));
+        assert_eq!(nf.users(), Some(2 << 16));
     }
 }

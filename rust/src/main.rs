@@ -4,6 +4,7 @@
 //! ```text
 //! cagra run     --app pagerank --variant both --graph twitter-sim --iters 20
 //! cagra run     --app pagerank --graph twitter-sim --store   # persist preprocessing
+//! cagra batch   jobs.txt --store   # many jobs, ONE shared artifact store
 //! cagra apps    # list registered applications + variants
 //! cagra gen     --graph rmat27-sim --out graph.bin
 //! cagra inspect --graph twitter-sim
@@ -29,14 +30,15 @@ use cagra::util::cli::Args;
 use cagra::util::{config::Config, fmt_bytes, fmt_count};
 
 const SUBCOMMANDS: &[&str] = &[
-    "run", "apps", "gen", "inspect", "simulate", "expansion", "cache", "bench", "artifacts",
-    "help",
+    "run", "batch", "apps", "gen", "inspect", "simulate", "expansion", "cache", "bench",
+    "artifacts", "help",
 ];
 
 fn main() {
     let args = Args::from_env(SUBCOMMANDS);
     let result = match args.subcommand.as_deref() {
         Some("run") => cmd_run(&args),
+        Some("batch") => cmd_batch(&args),
         Some("apps") => cmd_apps(),
         Some("gen") => cmd_gen(&args),
         Some("inspect") => cmd_inspect(&args),
@@ -64,7 +66,11 @@ fn usage() {
          subcommands:\n\
          \x20 run        run an application       --app <app> [--variant <variant>]  (see `cagra apps`)\n\
          \x20            --graph <dataset> --iters N [--sources N] [--analyze] [--scale F] [--config FILE]\n\
+         \x20            [--delta-epsilon F]   per-job app-knob override (PageRank-Delta threshold)\n\
          \x20            [--store] [--store-dir DIR] [--store-cap BYTES]   persist preprocessing artifacts\n\
+         \x20 batch      run a job list over ONE shared artifact store    <jobs.txt> [--store ...]\n\
+         \x20            file: one `app=<name> [variant=..] [graph=..] [iters=N] [scale=F]\n\
+         \x20            [sources=N] [analyze=true] [delta-epsilon=F]` line per job; # comments\n\
          \x20 apps       list registered applications and their variants\n\
          \x20 gen        generate + cache a dataset  --graph <dataset> [--out file.bin] [--scale F]\n\
          \x20 inspect    dataset statistics          --graph <dataset>\n\
@@ -156,6 +162,7 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
         num_sources: args.get_usize("sources", 12),
         analyze_memory: args.has_flag("analyze"),
         scale: args.get_f64("scale", 1.0),
+        delta_epsilon: parse_delta_epsilon(args)?,
     };
     println!(
         "running {}/{} on {} ({}), llc={}",
@@ -168,6 +175,75 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     let result = run_job(&spec, &cfg)?;
     print!("{}", result.metrics.render());
     println!("summary value: {:.6}", result.summary);
+    Ok(())
+}
+
+/// `--delta-epsilon F`: JobSpec-level override of the PageRank-Delta
+/// activeness threshold (shared by `cagra run` and `cagra batch`).
+fn parse_delta_epsilon(args: &Args) -> anyhow::Result<Option<f64>> {
+    args.get("delta-epsilon")
+        .map(|v| {
+            v.parse()
+                .map_err(|_| anyhow::anyhow!("--delta-epsilon expects a number, got {v:?}"))
+        })
+        .transpose()
+}
+
+/// `cagra batch <file>`: run a list of jobs over ONE long-lived artifact
+/// store, so later jobs warm-hit earlier jobs' preprocessing (per-job
+/// eviction-exemption scopes are released as each job completes).
+fn cmd_batch(args: &Args) -> anyhow::Result<()> {
+    let cfg = system_config(args)?;
+    let Some(file) = args.positional.first() else {
+        anyhow::bail!(
+            "usage: cagra batch <jobs.txt> [--store] [--store-dir DIR] [--delta-epsilon F]\n\
+             (one `app=<name> [variant=..] [graph=..] [iters=N] ...` line per job)"
+        );
+    };
+    let text = std::fs::read_to_string(file)
+        .map_err(|e| anyhow::anyhow!("reading batch file {file}: {e}"))?;
+    let mut specs = cagra::coordinator::parse_batch(&text)?;
+    // CLI-level default for jobs that don't carry their own override.
+    if let Some(eps) = parse_delta_epsilon(args)? {
+        for s in &mut specs {
+            s.delta_epsilon.get_or_insert(eps);
+        }
+    }
+    println!(
+        "batch: {} job(s) from {file}; artifact store {}",
+        specs.len(),
+        if cfg.store_enabled {
+            "shared across the batch"
+        } else {
+            "disabled (pass --store to share preprocessing)"
+        }
+    );
+    let results = cagra::coordinator::run_batch(&specs, &cfg)?;
+    for (i, (spec, r)) in specs.iter().zip(&results).enumerate() {
+        println!(
+            "\n[job {}/{}] {}/{} on {} (scale {})",
+            i + 1,
+            specs.len(),
+            spec.app.app_name(),
+            spec.app.variant_name(),
+            spec.dataset,
+            spec.scale
+        );
+        print!("{}", r.metrics.render());
+        println!("summary value: {:.6}", r.summary);
+    }
+    // The store counters are cumulative across the batch; the last
+    // store-using job's snapshot is the batch total.
+    if let Some(s) = results.iter().rev().find_map(|r| r.metrics.store) {
+        println!(
+            "\nbatch store totals: {} hits, {} misses, {} evictions; {} entries ({})",
+            s.hits,
+            s.misses,
+            s.evictions,
+            s.entries,
+            fmt_bytes(s.resident_bytes as usize)
+        );
+    }
     Ok(())
 }
 

@@ -17,11 +17,15 @@
 //!   error is an unusable store directory at [`ArtifactStore::open`].
 //! - **LRU by file mtime.** Hits re-touch the file; when the store grows
 //!   past `cap_bytes` after a write, oldest-mtime artifacts are removed
-//!   first. Artifacts written by *this* process are never evicted by it —
-//!   otherwise a cap smaller than one job's artifact set would make the
-//!   job's second write evict its first and thrash forever; instead the
-//!   store warns that the cap is below the working set. `cap_bytes == 0`
-//!   disables eviction.
+//!   first. Artifacts written under a **live exemption scope** (one scope
+//!   per running job, see [`ArtifactStore::begin_scope`]) are never
+//!   evicted — otherwise a cap smaller than one job's artifact set would
+//!   make the job's second write evict its first and thrash forever;
+//!   instead the store warns that the cap is below the working set.
+//!   Dropping a scope (job completion) releases its artifacts back to
+//!   normal LRU, so one long-lived instance can serve many jobs without
+//!   the exemption set growing unboundedly. `cap_bytes == 0` disables
+//!   eviction.
 //! - **Atomic writes.** Encode to a temp file, then rename, so a crashed
 //!   run can never leave a torn artifact under a valid name (a torn temp
 //!   file is ignored by the `.art` suffix filter; stale ones are swept at
@@ -29,7 +33,7 @@
 
 use super::codec::{self, Artifact, CODEC_VERSION};
 use anyhow::{Context, Result};
-use std::collections::HashSet;
+use std::collections::{HashMap, HashSet};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -128,18 +132,56 @@ struct Counters {
 /// (a concurrent writer's in-flight temp is younger than this).
 const TMP_SWEEP_AGE: Duration = Duration::from_secs(3600);
 
+/// Identifier of an eviction-exemption scope. [`ScopeId::INSTANCE`] is
+/// the always-live default used by callers that never begin a scope
+/// (direct `get_or_build`, tests, benches); every other id comes from
+/// [`ArtifactStore::begin_scope`] and dies with its [`ExemptionScope`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ScopeId(u64);
+
+impl ScopeId {
+    /// The instance-lifetime scope: exempt until the store is dropped.
+    pub const INSTANCE: ScopeId = ScopeId(0);
+}
+
+/// RAII handle for one job's eviction-exemption scope: artifacts written
+/// under it (via [`ArtifactStore::get_or_build_scoped`]) cannot be
+/// evicted by this store while the scope is alive. Dropping it releases
+/// them to normal mtime-LRU, which is what lets one long-lived store
+/// serve an unbounded stream of jobs without its exemption set growing
+/// unboundedly (each job's set is freed when the job completes).
+#[derive(Debug)]
+pub struct ExemptionScope<'a> {
+    store: &'a ArtifactStore,
+    id: ScopeId,
+}
+
+impl ExemptionScope<'_> {
+    pub fn id(&self) -> ScopeId {
+        self.id
+    }
+}
+
+impl Drop for ExemptionScope<'_> {
+    fn drop(&mut self) {
+        self.store.exempt.lock().unwrap().remove(&self.id.0);
+    }
+}
+
 /// A persistent, size-capped store of preprocessing artifacts.
 #[derive(Debug)]
 pub struct ArtifactStore {
     dir: PathBuf,
     cap_bytes: u64,
     counters: Counters,
-    /// Artifacts this instance wrote — exempt from its own eviction. The
-    /// set lives as long as the instance; `run_job` opens a fresh store
-    /// per job, which scopes the exemption to one job's working set. A
-    /// long-lived embedder sharing one instance across many jobs should
-    /// open per job too, or the exemption (and the set) grows unboundedly.
-    own_writes: Mutex<HashSet<PathBuf>>,
+    /// Eviction-exempt artifacts, keyed by live scope. Entry 0 is the
+    /// instance scope (never removed); every other entry is created by
+    /// [`ArtifactStore::begin_scope`] and removed when its
+    /// [`ExemptionScope`] drops — per-job scoping for a store shared
+    /// across many jobs in one process (`run_job` / `cagra batch`).
+    exempt: Mutex<HashMap<u64, HashSet<PathBuf>>>,
+    /// Next fresh scope id (0 is reserved for [`ScopeId::INSTANCE`]).
+    next_scope: AtomicU64,
 }
 
 impl ArtifactStore {
@@ -176,12 +218,7 @@ impl ArtifactStore {
                 }
             }
         }
-        Ok(ArtifactStore {
-            dir,
-            cap_bytes,
-            counters: Counters::default(),
-            own_writes: Mutex::new(HashSet::new()),
-        })
+        Ok(ArtifactStore::with_dir(dir, cap_bytes))
     }
 
     /// Open for inspection (`cache stats|clear`): errors if the directory
@@ -193,22 +230,50 @@ impl ArtifactStore {
         if !dir.is_dir() {
             anyhow::bail!("no artifact store at {}", dir.display());
         }
-        Ok(ArtifactStore {
+        Ok(ArtifactStore::with_dir(dir, cap_bytes))
+    }
+
+    fn with_dir(dir: PathBuf, cap_bytes: u64) -> ArtifactStore {
+        ArtifactStore {
             dir,
             cap_bytes,
             counters: Counters::default(),
-            own_writes: Mutex::new(HashSet::new()),
-        })
+            exempt: Mutex::new(HashMap::from([(ScopeId::INSTANCE.0, HashSet::new())])),
+            next_scope: AtomicU64::new(1),
+        }
     }
 
     pub fn dir(&self) -> &Path {
         &self.dir
     }
 
-    /// The core entry point: return the cached artifact for `key`, or run
-    /// `build`, persist the result, and return it. Storage problems only
-    /// ever cost a rebuild (see module docs), so this cannot fail.
+    /// Begin a per-job eviction-exemption scope. Writes made with the
+    /// returned scope's [`ScopeId`] are exempt from this store's eviction
+    /// until the [`ExemptionScope`] drops (job completion), at which point
+    /// they rejoin normal mtime-LRU.
+    pub fn begin_scope(&self) -> ExemptionScope<'_> {
+        let id = ScopeId(self.next_scope.fetch_add(1, Ordering::Relaxed));
+        self.exempt.lock().unwrap().insert(id.0, HashSet::new());
+        ExemptionScope { store: self, id }
+    }
+
+    /// [`ArtifactStore::get_or_build_scoped`] under the instance-lifetime
+    /// scope — for callers whose store lives exactly one job (tests,
+    /// benches, one-shot tools).
     pub fn get_or_build<T: Artifact>(&self, key: &StoreKey, build: impl FnOnce() -> T) -> T {
+        self.get_or_build_scoped(key, ScopeId::INSTANCE, build)
+    }
+
+    /// The core entry point: return the cached artifact for `key`, or run
+    /// `build`, persist the result, and return it. The write is recorded
+    /// under `scope` for eviction exemption. Storage problems only ever
+    /// cost a rebuild (see module docs), so this cannot fail.
+    pub fn get_or_build_scoped<T: Artifact>(
+        &self,
+        key: &StoreKey,
+        scope: ScopeId,
+        build: impl FnOnce() -> T,
+    ) -> T {
         let path = self.dir.join(key.filename::<T>());
         if path.is_file() {
             match codec::read_file::<T>(&path) {
@@ -234,7 +299,11 @@ impl ArtifactStore {
             Ok(len) => {
                 self.counters.bytes_written.fetch_add(len, Ordering::Relaxed);
                 crate::log_debug!("artifact store write: {} ({len} bytes)", path.display());
-                self.own_writes.lock().unwrap().insert(path);
+                // A scope that was already dropped (or a foreign id)
+                // degrades to no exemption, never to a lost write.
+                if let Some(set) = self.exempt.lock().unwrap().get_mut(&scope.0) {
+                    set.insert(path);
+                }
                 self.evict_to_cap();
             }
             Err(e) => {
@@ -309,10 +378,11 @@ impl ArtifactStore {
     }
 
     /// Evict oldest-mtime artifacts until the store fits `cap_bytes`.
-    /// Files this process wrote are exempt — evicting them would make a
-    /// job's second artifact evict its first and thrash forever when the
-    /// cap is under one job's working set; that misconfiguration is
-    /// warned about instead.
+    /// Files written under any live exemption scope are skipped —
+    /// evicting them would make a running job's second artifact evict its
+    /// first and thrash forever when the cap is under one job's working
+    /// set; that misconfiguration is warned about instead. Artifacts
+    /// whose scope has since been dropped are ordinary LRU candidates.
     fn evict_to_cap(&self) {
         if self.cap_bytes == 0 {
             return;
@@ -323,12 +393,12 @@ impl ArtifactStore {
             return;
         }
         files.sort_by_key(|f| f.mtime);
-        let own = self.own_writes.lock().unwrap();
+        let exempt = self.exempt.lock().unwrap();
         for f in files {
             if total <= self.cap_bytes {
                 break;
             }
-            if own.contains(&f.path) {
+            if exempt.values().any(|set| set.contains(&f.path)) {
                 continue;
             }
             if std::fs::remove_file(&f.path).is_ok() {
@@ -339,8 +409,8 @@ impl ArtifactStore {
         }
         if total > self.cap_bytes {
             crate::log_warn!(
-                "artifact store over cap ({total} > {} bytes) with only this \
-                 run's artifacts left — raise store_cap_bytes above one job's \
+                "artifact store over cap ({total} > {} bytes) with only live \
+                 jobs' artifacts left — raise store_cap_bytes above one job's \
                  artifact set or warm runs cannot amortize",
                 self.cap_bytes
             );
@@ -459,7 +529,7 @@ mod tests {
     fn eviction_removes_foreign_oldest_artifact() {
         // Cap below two artifacts: writing the second evicts a stale
         // artifact left by a *previous* process (planted directly on
-        // disk, so it is not in this store's own_writes set).
+        // disk, so it is in none of this store's exemption scopes).
         let one_size = codec::encode(&perm(64, 1)).len() as u64;
         let (dir, store) = temp_store("evict", one_size + one_size / 2);
         let k1 = StoreKey::ordering(1, "old");
@@ -482,12 +552,76 @@ mod tests {
     fn own_writes_never_evict_each_other() {
         // Cap below even one artifact: the store must keep everything this
         // process wrote (and warn) rather than thrash its own working set.
+        // (Instance-scope writes — the default for scope-less callers.)
         let (dir, store) = temp_store("own", 8);
         let _ = store.get_or_build(&StoreKey::ordering(1, "a"), || perm(64, 1));
         let _ = store.get_or_build(&StoreKey::ordering(2, "b"), || perm(64, 2));
         let s = store.stats();
         assert_eq!(s.entries, 2, "own writes must survive an undersized cap");
         assert_eq!(s.evictions, 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn live_scope_writes_survive_an_undersized_cap() {
+        // Same thrash protection as the instance scope, but per job: both
+        // writes land in one live scope, so neither may be evicted.
+        let (dir, store) = temp_store("scope-live", 8);
+        let scope = store.begin_scope();
+        let k1 = StoreKey::ordering(1, "a");
+        let k2 = StoreKey::ordering(2, "b");
+        let _ = store.get_or_build_scoped(&k1, scope.id(), || perm(64, 1));
+        let _ = store.get_or_build_scoped(&k2, scope.id(), || perm(64, 2));
+        let s = store.stats();
+        assert_eq!(s.entries, 2, "a live job's writes must not be evicted");
+        assert_eq!(s.evictions, 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn dropped_scope_releases_artifacts_to_eviction() {
+        // Job 1 writes under a scope, completes (scope drops); job 2's
+        // write then pushes the store over cap and must be able to evict
+        // job 1's now-unprotected artifact — exactly what the old
+        // instance-scoped own_writes exemption could never do.
+        let one_size = codec::encode(&perm(64, 1)).len() as u64;
+        let (dir, store) = temp_store("scope-drop", one_size + one_size / 2);
+        let k1 = StoreKey::ordering(1, "job1");
+        {
+            let job1 = store.begin_scope();
+            let _ = store.get_or_build_scoped(&k1, job1.id(), || perm(64, 1));
+        } // job 1 completes; its exemption is released
+        // Backdate job 1's artifact so LRU ordering is deterministic.
+        let old = dir.join(k1.filename::<Vec<u32>>());
+        if let Ok(f) = std::fs::OpenOptions::new().write(true).open(&old) {
+            f.set_modified(SystemTime::UNIX_EPOCH + Duration::from_secs(1)).ok();
+        }
+        let job2 = store.begin_scope();
+        let k2 = StoreKey::ordering(2, "job2");
+        let _ = store.get_or_build_scoped(&k2, job2.id(), || perm(64, 2));
+        let s = store.stats();
+        assert_eq!(s.entries, 1, "completed job's artifact should be evictable");
+        assert!(s.evictions >= 1);
+        assert!(!old.exists(), "job 1's artifact must be the one evicted");
+        assert!(dir.join(k2.filename::<Vec<u32>>()).exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn scope_ids_are_fresh_and_scope_maps_are_freed() {
+        let (dir, store) = temp_store("scope-ids", 0);
+        let a = store.begin_scope();
+        let b = store.begin_scope();
+        assert_ne!(a.id(), b.id());
+        assert_ne!(a.id(), ScopeId::INSTANCE);
+        drop(a);
+        drop(b);
+        // Only the instance scope remains registered.
+        assert_eq!(store.exempt.lock().unwrap().len(), 1);
+        // A write attributed to a dead scope still lands on disk.
+        let dead = ScopeId(9999);
+        let _ = store.get_or_build_scoped(&StoreKey::ordering(3, "c"), dead, || perm(8, 3));
+        assert_eq!(store.stats().entries, 1);
         std::fs::remove_dir_all(&dir).ok();
     }
 

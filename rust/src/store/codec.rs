@@ -193,21 +193,37 @@ pub fn decode<T: Artifact>(bytes: &[u8]) -> Result<T> {
     Ok(value)
 }
 
-/// Encode + write atomically (temp file, then rename). Returns file size.
-/// The temp name is unique per process *and* per call, so two threads
-/// racing to build the same key can never interleave into one file (the
-/// loser's rename just replaces the winner's identical bytes).
-pub fn write_file<T: Artifact>(path: &Path, value: &T) -> Result<u64> {
+/// Run `write` against a unique temp path next to `path`, then rename
+/// into place — the one implementation of the crash-safe write pattern
+/// (artifact files here, the dataset edge-list cache in
+/// `graph/datasets.rs`). The temp name (`.tmp<pid>-<seq>`, the shape the
+/// store's orphan sweep recognizes) is unique per process *and* per
+/// call, so two threads racing to produce the same file can never
+/// interleave into one temp (the loser's rename just replaces the
+/// winner's identical bytes). The temp file is removed on failure.
+pub fn write_atomic(path: &Path, write: impl FnOnce(&Path) -> Result<()>) -> Result<()> {
     static SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
-    let bytes = encode(value);
     let tmp = path.with_extension(format!(
         "tmp{}-{}",
         std::process::id(),
         SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
     ));
-    std::fs::write(&tmp, &bytes).with_context(|| format!("writing {}", tmp.display()))?;
-    std::fs::rename(&tmp, path)
-        .with_context(|| format!("renaming {} -> {}", tmp.display(), path.display()))?;
+    let result = write(&tmp).and_then(|()| {
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("renaming {} -> {}", tmp.display(), path.display()))
+    });
+    if result.is_err() {
+        std::fs::remove_file(&tmp).ok();
+    }
+    result
+}
+
+/// Encode + write atomically (temp file, then rename). Returns file size.
+pub fn write_file<T: Artifact>(path: &Path, value: &T) -> Result<u64> {
+    let bytes = encode(value);
+    write_atomic(path, |tmp| {
+        std::fs::write(tmp, &bytes).with_context(|| format!("writing {}", tmp.display()))
+    })?;
     Ok(bytes.len() as u64)
 }
 

@@ -26,35 +26,57 @@
 //! `SystemConfig::store_enabled` is set and the app's variant declares
 //! cacheable preprocessing ([`crate::apps::GraphApp::uses_store`]), then
 //! threads a [`StoreCtx`] through [`crate::apps::GraphApp::prepare`]
-//! into the apps' `Prepared::new_cached` constructors (PageRank, CF, and
-//! the BC/BFS reordering permutation); `cagra cache stats|clear` exposes
-//! it on the CLI.
+//! into the apps' `Prepared::new_cached` constructors (PageRank, CF, CC's
+//! symmetrized structures, and the PR/BC/BFS/SSSP reordering
+//! permutation); `cagra batch` shares ONE store instance across a whole
+//! job list, with per-job eviction-exemption scopes
+//! ([`ArtifactStore::begin_scope`]); dataset loading reuses the [`codec`]
+//! layer to persist finished CSRs (`graph/datasets.rs`), so warm loads
+//! decode instead of rebuilding; `cagra cache stats|clear` exposes the
+//! store on the CLI.
 
 pub mod artifact_store;
 pub mod codec;
 pub mod fingerprint;
 
-pub use artifact_store::{ArtifactStore, StoreKey, StoreStats};
+pub use artifact_store::{ArtifactStore, ExemptionScope, ScopeId, StoreKey, StoreStats};
 pub use codec::{Artifact, CODEC_VERSION};
 pub use fingerprint::{fingerprint_csr, fingerprint_dataset};
 
 /// A borrowed store plus the fingerprint of the job's dataset — what the
-/// preprocessing sites need to form keys. `Copy` so it threads through
-/// constructors as a plain optional argument.
+/// preprocessing sites need to form keys — and the job's
+/// eviction-exemption scope (writes made through this context cannot be
+/// evicted until the job's [`ExemptionScope`] is dropped). `Copy` so it
+/// threads through constructors as a plain optional argument.
 #[derive(Debug, Clone, Copy)]
 pub struct StoreCtx<'a> {
     pub store: &'a ArtifactStore,
     pub fingerprint: u64,
+    pub scope: ScopeId,
 }
 
 impl<'a> StoreCtx<'a> {
+    /// Context under the instance-lifetime scope (stores that live
+    /// exactly one job: tests, benches, one-shot tools).
     pub fn new(store: &'a ArtifactStore, fingerprint: u64) -> StoreCtx<'a> {
-        StoreCtx { store, fingerprint }
+        StoreCtx::scoped(store, fingerprint, ScopeId::INSTANCE)
     }
 
-    /// [`ArtifactStore::get_or_build`] with a by-value key, so call sites
-    /// that just built the key from `self.fingerprint` stay one-liners.
+    /// Context bound to a job's exemption scope
+    /// ([`ArtifactStore::begin_scope`]) — how `run_job` threads per-job
+    /// eviction scoping through shared, long-lived stores.
+    pub fn scoped(store: &'a ArtifactStore, fingerprint: u64, scope: ScopeId) -> StoreCtx<'a> {
+        StoreCtx {
+            store,
+            fingerprint,
+            scope,
+        }
+    }
+
+    /// [`ArtifactStore::get_or_build_scoped`] with a by-value key, so call
+    /// sites that just built the key from `self.fingerprint` stay
+    /// one-liners.
     pub fn get_or_build<T: Artifact>(&self, key: StoreKey, build: impl FnOnce() -> T) -> T {
-        self.store.get_or_build(&key, build)
+        self.store.get_or_build_scoped(&key, self.scope, build)
     }
 }

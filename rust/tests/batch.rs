@@ -1,0 +1,126 @@
+//! `cagra batch` acceptance: a job list runs over ONE long-lived
+//! artifact store — later jobs warm-hit earlier jobs' preprocessing —
+//! and each job's eviction-exemption scope is released when it
+//! completes, so a shared store can actually evict a finished job's
+//! artifacts instead of exempting them forever.
+
+use cagra::apps::pagerank;
+use cagra::coordinator::{parse_batch, run_batch, AppKind, JobSpec, SystemConfig};
+
+const SCALE: f64 = 1.0 / 64.0;
+
+fn temp_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("cagra-batchtest-{tag}-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+fn store_cfg(dir: &std::path::Path, cap: u64) -> SystemConfig {
+    SystemConfig {
+        llc_bytes: 32 * 1024, // scaled graphs still segment
+        store_enabled: true,
+        store_dir: dir.to_string_lossy().into_owned(),
+        store_cap_bytes: cap,
+        ..Default::default()
+    }
+}
+
+fn pr_job(dataset: &str) -> JobSpec {
+    JobSpec {
+        dataset: dataset.into(),
+        scale: SCALE,
+        iters: 3,
+        app: AppKind::PageRank(pagerank::Variant::ReorderedSegmented),
+        ..Default::default()
+    }
+}
+
+#[test]
+fn second_job_warm_hits_first_through_one_shared_store() {
+    let dir = temp_dir("warm");
+    let cfg = store_cfg(&dir, 0);
+    let jobs = [pr_job("livejournal-sim"), pr_job("livejournal-sim")];
+    let results = run_batch(&jobs, &cfg).unwrap();
+    let s1 = results[0].metrics.store.expect("job 1 store stats");
+    let s2 = results[1].metrics.store.expect("job 2 store stats");
+    assert_eq!(s1.hits, 0, "job 1 is cold");
+    assert!(s1.misses > 0, "job 1 builds artifacts");
+    // One shared instance: counters accumulate across jobs. Had each job
+    // opened its own store, job 2's snapshot would start from fresh
+    // counters (misses == 0 regardless); instead it must still carry
+    // job 1's misses and add exactly one hit per artifact job 1 built.
+    assert_eq!(s2.misses, s1.misses, "job 2 must not rebuild anything");
+    assert_eq!(s2.hits, s1.misses, "job 2 must warm-hit every artifact");
+    assert_eq!(
+        results[0].summary.to_bits(),
+        results[1].summary.to_bits(),
+        "warm summary must be bitwise identical"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn exemption_scopes_are_released_as_each_job_completes() {
+    // A 1-byte cap makes every artifact overshoot the cap. While a job
+    // runs, its writes are exempt (no self-thrash); once it completes its
+    // scope drops, so the NEXT job's writes must be able to evict them.
+    // Under the old instance-scoped own_writes exemption, a shared store
+    // could never evict anything this process wrote — the set only grew.
+    let dir = temp_dir("evict");
+    let cfg = store_cfg(&dir, 1);
+    let jobs = [pr_job("livejournal-sim"), pr_job("rmat25-sim")];
+    let results = run_batch(&jobs, &cfg).unwrap();
+    let s1 = results[0].metrics.store.unwrap();
+    let s2 = results[1].metrics.store.unwrap();
+    assert_eq!(s1.evictions, 0, "a job must never evict its own live writes");
+    assert!(
+        s2.evictions >= s1.misses,
+        "job 2 must evict completed job 1's artifacts ({} evictions, job 1 wrote {})",
+        s2.evictions,
+        s1.misses
+    );
+    // Only job 2's own (still-exempt at snapshot time... now released)
+    // artifacts remain resident.
+    assert_eq!(
+        s2.entries,
+        s2.misses - s1.misses,
+        "exactly job 2's artifacts should remain"
+    );
+    for r in &results {
+        assert!(r.summary.is_finite() && r.summary > 0.0);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn parsed_batch_runs_end_to_end_with_per_job_overrides() {
+    // The parse → run path the CLI uses, including a per-job
+    // delta-epsilon override: a tighter threshold must not converge
+    // earlier than a looser one (strictly more work per run).
+    let dir = temp_dir("parse");
+    let cfg = store_cfg(&dir, 0);
+    let text = format!(
+        "# batch file as `cagra batch` reads it\n\
+         app=pagerank-delta graph=livejournal-sim iters=40 scale={SCALE} delta-epsilon=1e-1\n\
+         app=pagerank-delta graph=livejournal-sim iters=40 scale={SCALE} delta-epsilon=1e-8\n"
+    );
+    let specs = parse_batch(&text).unwrap();
+    assert_eq!(specs[0].delta_epsilon, Some(1e-1));
+    assert_eq!(specs[1].delta_epsilon, Some(1e-8));
+    let results = run_batch(&specs, &cfg).unwrap();
+    // pagerank-delta does no cacheable preprocessing: no store stats, and
+    // the shared store must not even be planted on disk.
+    assert!(results.iter().all(|r| r.metrics.store.is_none()));
+    assert!(!dir.exists(), "no store dir for a batch with nothing to cache");
+    // The override must actually reach the app: the loose-epsilon job
+    // freezes its frontier almost immediately, the tight one keeps
+    // propagating rank mass, so their summaries must differ (and the
+    // tight run can only accumulate more).
+    assert!(
+        results[1].summary > results[0].summary,
+        "per-job delta-epsilon override had no effect: {} vs {}",
+        results[0].summary,
+        results[1].summary
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -93,8 +93,7 @@ fn unknown_dataset_job_fails_cleanly() {
         app: AppKind::PageRank(pagerank::Variant::Baseline),
         iters: 1,
         num_sources: 1,
-        analyze_memory: false,
-        scale: 1.0,
+        ..Default::default()
     };
     let err = run_job(&spec, &SystemConfig::default()).unwrap_err();
     assert!(format!("{err:#}").contains("unknown dataset"));

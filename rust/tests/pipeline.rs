@@ -13,8 +13,8 @@ fn spec(dataset: &str, app: AppKind, iters: usize) -> JobSpec {
         app,
         iters,
         num_sources: 2,
-        analyze_memory: false,
         scale: SCALE,
+        ..Default::default()
     }
 }
 

@@ -1,9 +1,9 @@
 //! Artifact-store acceptance tests: running the same dataset twice with
 //! the store enabled does the preprocessing work once — the second run
 //! hits the store — and warm runs produce bitwise-identical results to
-//! cold runs for PageRank and CF.
+//! cold runs for PageRank, CF, and CC.
 
-use cagra::apps::{cf, pagerank};
+use cagra::apps::{cc, cf, pagerank};
 use cagra::coordinator::{run_job, AppKind, JobSpec, SystemConfig};
 use cagra::graph::datasets;
 use cagra::store::{fingerprint, ArtifactStore, StoreCtx};
@@ -86,6 +86,43 @@ fn cf_warm_run_is_bitwise_identical_and_hits() {
 }
 
 #[test]
+fn cc_warm_run_is_bitwise_identical_and_hits() {
+    // CC's symmetrized working structure (segmented partition /
+    // transposed pull CSR) is the last O(|E|) preprocessing to join the
+    // store: a warm run must decode it — zero symmetrize work — and
+    // converge to bitwise-identical labels.
+    let ds = datasets::load_scaled("livejournal-sim", SCALE).unwrap();
+    let cfg = small_cfg();
+    for variant in [cc::Variant::Baseline, cc::Variant::Segmented] {
+        let dir = temp_dir(&format!("cc-{}", variant.name()));
+        let store = ArtifactStore::open(&dir, 0).unwrap();
+        let fp = fingerprint::fingerprint_dataset(&ds.name, SCALE, &ds.graph);
+        let ctx = Some(StoreCtx::new(&store, fp));
+
+        let mut cold = cc::Prepared::new_cached(&ds.graph, &cfg, variant, ctx);
+        while cold.sweep() {}
+        let s = store.stats();
+        assert_eq!(
+            (s.hits, s.misses),
+            (0, 1),
+            "{variant:?}: cold run builds exactly the symmetrized structure"
+        );
+
+        let mut warm = cc::Prepared::new_cached(&ds.graph, &cfg, variant, ctx);
+        while warm.sweep() {}
+        let s = store.stats();
+        assert_eq!((s.hits, s.misses), (1, 1), "{variant:?}: warm run must hit");
+        assert_eq!(
+            cold.labels(),
+            warm.labels(),
+            "{variant:?}: warm labels must be bitwise identical"
+        );
+        assert_eq!(cold.num_components(), warm.num_components());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+#[test]
 fn run_job_second_run_hits_store_with_identical_summary() {
     let dir = temp_dir("job");
     let mut cfg = small_cfg();
@@ -121,13 +158,20 @@ fn run_job_second_run_hits_store_with_identical_summary() {
 }
 
 #[test]
-fn bc_bfs_and_sssp_reordered_warm_runs_hit_store() {
+fn bc_bfs_sssp_and_cc_warm_runs_hit_store_through_run_job() {
     // The reordering permutation is the cacheable preprocessing for the
     // frontier apps (ROADMAP open item, closed by the GraphApp redesign;
-    // SSSP joined via reorder::cached_degree_sort_perm): cold runs
-    // persist the degree sort, warm runs decode it.
-    for (app, variant) in [("bc", "both"), ("bfs", "both"), ("sssp", "reordering")] {
-        let dir = temp_dir(&format!("frontier-{app}"));
+    // SSSP joined via reorder::cached_degree_sort_perm); CC persists its
+    // symmetrized working structure. All of them build exactly one
+    // artifact cold and decode it warm.
+    for (app, variant) in [
+        ("bc", "both"),
+        ("bfs", "both"),
+        ("sssp", "reordering"),
+        ("cc", "baseline"),
+        ("cc", "segmenting"),
+    ] {
+        let dir = temp_dir(&format!("frontier-{app}-{variant}"));
         let mut cfg = small_cfg();
         cfg.store_enabled = true;
         cfg.store_dir = dir.to_string_lossy().into_owned();
@@ -141,19 +185,20 @@ fn bc_bfs_and_sssp_reordered_warm_runs_hit_store() {
         };
         let r1 = run_job(&spec, &cfg).unwrap();
         let s1 = r1.metrics.store.unwrap_or_else(|| panic!("{app}: store stats attached"));
-        assert_eq!((s1.hits, s1.misses), (0, 1), "{app}: cold run builds the permutation");
+        assert_eq!((s1.hits, s1.misses), (0, 1), "{app}/{variant}: cold run builds one artifact");
         let r2 = run_job(&spec, &cfg).unwrap();
         let s2 = r2.metrics.store.unwrap();
         assert_eq!((s2.hits, s2.misses), (1, 0), "{app}: warm run must hit");
-        if app == "bfs" || app == "sssp" {
-            // BFS's reached count and SSSP's converged distance vector
-            // are deterministic regardless of the permutation.
-            assert_eq!(r1.summary, r2.summary, "{app} summary");
-        } else {
+        if app == "bc" {
             // BC accumulates through relaxed atomics; scores are equal up
             // to float reassociation, not bitwise.
             let rel = (r1.summary - r2.summary).abs() / r1.summary.abs().max(1e-12);
             assert!(rel < 1e-6, "{app} summary {} vs {}", r1.summary, r2.summary);
+        } else {
+            // BFS's reached count, SSSP's converged distance vector, and
+            // CC's component count are deterministic regardless of the
+            // decoded artifact.
+            assert_eq!(r1.summary, r2.summary, "{app} summary");
         }
         std::fs::remove_dir_all(&dir).ok();
     }
