@@ -44,11 +44,11 @@ fn main() {
 
         // BC (ours vs Ligra-shaped baseline), 2 sources for time.
         let sources = bc::default_sources(g, 2);
-        let bc_opt_p = bc::Prepared::new(g, bc::Variant::ReorderedBitvector);
+        let mut bc_opt_p = bc::Prepared::new(g, bc::Variant::ReorderedBitvector);
         let bc_opt = s.bench("bc-opt", || {
             let _ = bc_opt_p.run(&sources);
         });
-        let bc_li_p = bc::Prepared::new(g, bc::Variant::Baseline);
+        let mut bc_li_p = bc::Prepared::new(g, bc::Variant::Baseline);
         let bc_li = s.bench("bc-ligra", || {
             let _ = bc_li_p.run(&sources);
         });

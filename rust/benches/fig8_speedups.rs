@@ -58,7 +58,7 @@ fn main() {
             // BC grid (BC's own variant enum since the AppKind redesign).
             let mut bc_times = Vec::new();
             for v in bc::Variant::all() {
-                let p = bc::Prepared::new(g, *v);
+                let mut p = bc::Prepared::new(g, *v);
                 bc_times.push(
                     s.bench(&format!("bc-{}", v.name()), || {
                         let _ = p.run(&sources);
@@ -76,7 +76,7 @@ fn main() {
             // BFS grid.
             let mut bfs_times = Vec::new();
             for v in bfs::Variant::all() {
-                let p = bfs::Prepared::new(g, *v);
+                let mut p = bfs::Prepared::new(g, *v);
                 bfs_times.push(
                     s.bench(&format!("bfs-{}", v.name()), || {
                         for &src in &sources {

@@ -1,0 +1,87 @@
+//! Frontier churn: deep, narrow-frontier traversals where per-level
+//! engine overhead — historically an O(n) scratch allocation + zero-fill
+//! and an O(n) output-flag rescan per `edge_map` level — dominates the
+//! actual edge work. The zero-allocation scratch engine turns these from
+//! O(depth · n) into O(n + edges); this suite makes that win a gated
+//! number in `BENCH_frontier_churn.json` rather than an anecdote.
+//!
+//! Graphs are synthetic (no dataset stand-in has a deliberately deep,
+//! skinny diameter): a long chain with sparse shortcuts (frontier ≈ 1-2
+//! vertices for thousands of levels) and a narrow lattice (frontier = a
+//! fixed small band, many levels) for the wide-ish push path.
+
+mod common;
+
+use cagra::bench::table::fmt_secs;
+use cagra::bench::Table;
+use cagra::graph::Csr;
+
+fn main() {
+    common::run_suite("frontier_churn", |s| {
+        let scale = cagra::bench::scale();
+        // Depth scales with CAGRA_BENCH_SCALE like dataset sizes do, so
+        // runs at different scales are never silently compared (the diff
+        // gate refuses cross-scale comparisons).
+        let depth = ((400_000.0 * scale) as usize).max(2_000);
+        // Chain 0→1→…→depth-1 plus a shortcut every 97 vertices: ~1-2
+        // active vertices per level, `depth` levels.
+        let mut edges: Vec<(u32, u32)> = Vec::with_capacity(depth + depth / 97 + 8);
+        for i in 0..depth as u32 - 1 {
+            edges.push((i, i + 1));
+        }
+        let mut i = 0u32;
+        while (i as usize) + 3 < depth {
+            edges.push((i, i + 2));
+            i += 97;
+        }
+        let chain = Csr::from_edges(depth, &edges);
+        // Narrow lattice: `width` parallel chains with rungs — frontier
+        // stays at `width` vertices for depth/width levels, exercising
+        // the cost-balanced push with a multi-vertex frontier.
+        let width = 64usize;
+        let levels = (depth / width).max(32);
+        let n2 = width * levels;
+        let mut lat: Vec<(u32, u32)> = Vec::with_capacity(2 * n2);
+        for l in 0..levels as u32 - 1 {
+            for w in 0..width as u32 {
+                let v = l * width as u32 + w;
+                lat.push((v, v + width as u32));
+                if w + 1 < width as u32 {
+                    lat.push((v, v + 1));
+                }
+            }
+        }
+        let lattice = Csr::from_edges(n2, &lat);
+        let cfg = common::config();
+        s.cap_reps(3);
+        let mut table = Table::new(&["Case", "Levels", "Time"]);
+        let bfs_deep =
+            common::time_app_sources(s, "bfs-deep", &chain, &cfg, "bfs", "baseline", &[0]);
+        table.row(&["bfs-deep".into(), depth.to_string(), fmt_secs(bfs_deep)]);
+        let bfs_bits = {
+            let label = "bfs-deep-bitvector";
+            common::time_app_sources(s, label, &chain, &cfg, "bfs", "bitvector", &[0])
+        };
+        table.row(&[
+            "bfs-deep-bitvector".into(),
+            depth.to_string(),
+            fmt_secs(bfs_bits),
+        ]);
+        let sssp_deep =
+            common::time_app_sources(s, "sssp-deep", &chain, &cfg, "sssp", "baseline", &[0]);
+        table.row(&["sssp-deep".into(), depth.to_string(), fmt_secs(sssp_deep)]);
+        let bfs_wide =
+            common::time_app_sources(s, "bfs-wide-levels", &lattice, &cfg, "bfs", "baseline", &[0]);
+        table.row(&[
+            "bfs-wide-levels".into(),
+            levels.to_string(),
+            fmt_secs(bfs_wide),
+        ]);
+        table.print();
+        println!(
+            "\n{depth} chain levels / {levels} lattice levels; steady-state edge_map performs \
+             zero heap allocation (see tests/zero_alloc.rs), so per-level cost is bounded by \
+             touched state, not O(n) scratch churn"
+        );
+    });
+}

@@ -140,6 +140,18 @@ pub trait PreparedApp {
     /// nonzero on any non-degenerate run; used for smoke checks and the
     /// warm-vs-cold bitwise store invariants.
     fn summary(&self) -> f64;
+
+    /// Bytes of reusable execution scratch this instance holds so its
+    /// steady state allocates nothing — engine [`EngineScratch`] pools,
+    /// per-source atomic arrays, per-segment buffers. Excludes the graph
+    /// structures themselves. Surfaced in `Metrics` so the memory cost of
+    /// preallocation is visible, not guessed; 0 means the app has no
+    /// reusable scratch (one-shot apps).
+    ///
+    /// [`EngineScratch`]: crate::engine::EngineScratch
+    fn scratch_bytes(&self) -> usize {
+        0
+    }
 }
 
 /// A registered application. Implementations are zero-sized adapter

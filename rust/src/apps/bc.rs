@@ -6,10 +6,16 @@
 //!
 //! The paper evaluates 12 starting points (Table 4) and the
 //! reordering/bitvector optimization grid (Table 7).
+//!
+//! All per-source working memory — σ/level/δ arrays, the per-level
+//! frontier stack, and the engine's [`EngineScratch`] — lives in the
+//! `Prepared` state and is reset (never re-allocated) per source; the
+//! per-level frontiers draw their storage from the scratch pools and are
+//! recycled after the backward sweep.
 
 use super::app::{AppKind, ExecutionShape, GraphApp, PreparedApp, VariantInfo};
 use crate::coordinator::SystemConfig;
-use crate::engine::{edge_map, EdgeMapOpts, VertexSubset};
+use crate::engine::{edge_map, EdgeMapOpts, EngineScratch, VertexSubset};
 use crate::graph::{Csr, VertexId};
 use crate::parallel::atomics::AtomicF64;
 use crate::reorder;
@@ -56,12 +62,22 @@ impl Variant {
     }
 }
 
-/// Preprocessed BC state.
+/// Preprocessed BC state plus the reusable per-source traversal buffers.
 pub struct Prepared {
     variant: Variant,
     g: Csr,
     g_in: Csr,
     perm: Option<Vec<VertexId>>,
+    /// σ = number of shortest paths (reset per source).
+    sigma: Vec<AtomicU64>,
+    /// BFS depth (reset per source).
+    level: Vec<AtomicU32>,
+    /// Dependency scores δ (reset per source).
+    delta: Vec<AtomicF64>,
+    /// Per-level frontier stack; drained (and its frontiers recycled)
+    /// after every backward sweep, so only the Vec's capacity persists.
+    frontiers: Vec<VertexSubset>,
+    scratch: EngineScratch,
 }
 
 impl Prepared {
@@ -90,24 +106,27 @@ impl Prepared {
             (g.clone(), None)
         };
         let g_in = work.transpose();
+        let n = work.num_vertices();
         Prepared {
             variant,
             g: work,
             g_in,
             perm,
+            sigma: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            level: (0..n).map(|_| AtomicU32::new(u32::MAX)).collect(),
+            delta: (0..n).map(|_| AtomicF64::new(0.0)).collect(),
+            frontiers: Vec::new(),
+            scratch: EngineScratch::new(n),
         }
     }
 
     /// Accumulate BC scores from the given source vertices (original
     /// ids). Returns per-vertex centrality in original id space.
-    pub fn run(&self, sources: &[VertexId]) -> Vec<f64> {
+    pub fn run(&mut self, sources: &[VertexId]) -> Vec<f64> {
         let n = self.g.num_vertices();
         let mut bc = vec![0.0f64; n];
         for &s0 in sources {
-            let s = match &self.perm {
-                Some(p) => p[s0 as usize],
-                None => s0,
-            };
+            let s = self.working_id(s0);
             self.accumulate_from(s, &mut bc);
         }
         match &self.perm {
@@ -116,31 +135,56 @@ impl Prepared {
         }
     }
 
-    fn accumulate_from(&self, s: VertexId, bc: &mut [f64]) {
+    /// Map an original-space vertex id into the working (possibly
+    /// reordered) id space.
+    fn working_id(&self, v: VertexId) -> VertexId {
+        match &self.perm {
+            Some(p) => p[v as usize],
+            None => v,
+        }
+    }
+
+    fn accumulate_from(&mut self, s: VertexId, bc: &mut [f64]) {
         let n = self.g.num_vertices();
         let bitvector = matches!(self.variant, Variant::Bitvector | Variant::ReorderedBitvector);
         let opts = EdgeMapOpts {
             bitvector_frontier: bitvector,
             ..Default::default()
         };
-        // σ = number of shortest paths; level = BFS depth.
-        let sigma: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
-        let level: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(u32::MAX)).collect();
+        let g = &self.g;
+        let g_in = &self.g_in;
+        let sigma = &self.sigma;
+        let level = &self.level;
+        let delta = &self.delta;
+        let frontiers = &mut self.frontiers;
+        let scratch = &mut self.scratch;
+        // Reset per-source state (fills, no allocation).
+        crate::parallel::parallel_for(n, |v| {
+            sigma[v].store(0, Ordering::Relaxed);
+            level[v].store(u32::MAX, Ordering::Relaxed);
+            delta[v].store(0.0, Ordering::Relaxed);
+        });
         sigma[s as usize].store(1, Ordering::Relaxed);
         level[s as usize].store(0, Ordering::Relaxed);
-        let mut frontiers: Vec<VertexSubset> = vec![VertexSubset::single(n, s)];
+        debug_assert!(frontiers.is_empty());
+        frontiers.push({
+            let mut ids = scratch.take_ids();
+            ids.push(s);
+            VertexSubset::from_ids(n, ids)
+        });
         let mut depth = 0u32;
         loop {
             let cur = frontiers.last().unwrap();
             if cur.is_empty() {
-                frontiers.pop();
+                let f = frontiers.pop().unwrap();
+                scratch.recycle(f);
                 break;
             }
             depth += 1;
             let next = edge_map(
-                &self.g,
-                &self.g_in,
-                cur,
+                g,
+                g_in,
+                frontiers.last().unwrap(),
                 |u, v| {
                     // u is at depth-1; v unvisited or at depth.
                     let lv = &level[v as usize];
@@ -167,42 +211,72 @@ impl Prepared {
                     l == u32::MAX || l == depth
                 },
                 opts,
+                scratch,
             );
             if next.is_empty() {
+                scratch.recycle(next);
                 break;
             }
             frontiers.push(next);
         }
         // Backward sweep: δ(v) = Σ_{w ∈ succ(v)} σ(v)/σ(w) · (1 + δ(w)).
-        let delta: Vec<AtomicF64> = (0..n).map(|_| AtomicF64::new(0.0)).collect();
+        // For each v at depth d-1, sum over out-neighbors w at depth d;
+        // the frontier's id slice is borrowed or pool-materialized by the
+        // scratch helper (no per-level allocation).
         for d in (1..frontiers.len()).rev() {
             let frontier = &frontiers[d - 1];
-            // For each v at depth d-1, sum over out-neighbors w at depth d.
-            let ids = frontier.ids();
-            crate::parallel::parallel_for(ids.len(), |i| {
-                let v = ids[i];
-                let lv = level[v as usize].load(Ordering::Relaxed);
-                let mut acc = 0.0;
-                for &w in self.g.neighbors(v) {
-                    if level[w as usize].load(Ordering::Relaxed) == lv + 1 {
-                        let sw = sigma[w as usize].load(Ordering::Relaxed);
-                        if sw > 0 {
-                            let ratio = sigma[v as usize].load(Ordering::Relaxed) as f64
-                                / sw as f64;
-                            acc += ratio * (1.0 + delta[w as usize].load(Ordering::Relaxed));
+            scratch.with_frontier_ids(frontier, |ids| {
+                crate::parallel::parallel_for(ids.len(), |i| {
+                    let v = ids[i];
+                    let lv = level[v as usize].load(Ordering::Relaxed);
+                    let mut acc = 0.0;
+                    for &w in g.neighbors(v) {
+                        if level[w as usize].load(Ordering::Relaxed) == lv + 1 {
+                            let sw = sigma[w as usize].load(Ordering::Relaxed);
+                            if sw > 0 {
+                                let ratio = sigma[v as usize].load(Ordering::Relaxed) as f64
+                                    / sw as f64;
+                                acc += ratio * (1.0 + delta[w as usize].load(Ordering::Relaxed));
+                            }
                         }
                     }
-                }
-                if acc != 0.0 {
-                    delta[v as usize].fetch_add(acc, Ordering::Relaxed);
-                }
+                    if acc != 0.0 {
+                        delta[v as usize].fetch_add(acc, Ordering::Relaxed);
+                    }
+                });
             });
+        }
+        // Recycle every level's frontier storage for the next source.
+        for f in frontiers.drain(..) {
+            scratch.recycle(f);
         }
         for v in 0..n {
             if v as VertexId != s {
                 bc[v] += delta[v].load(Ordering::Relaxed);
             }
         }
+    }
+
+    /// Test hook: garbage every dead buffer (σ/level/δ are reset at the
+    /// start of each source).
+    pub fn poison_scratch(&mut self, seed: u64) {
+        self.scratch.poison(seed);
+        for (i, x) in self.sigma.iter().enumerate() {
+            x.store(seed.wrapping_add(i as u64), Ordering::Relaxed);
+        }
+        for x in &self.level {
+            x.store(seed as u32 | 1, Ordering::Relaxed);
+        }
+        for x in &self.delta {
+            x.store(-1.25 - seed as f64, Ordering::Relaxed);
+        }
+    }
+
+    fn reusable_bytes(&self) -> usize {
+        self.scratch.peak_bytes()
+            + self.sigma.len() * 8
+            + self.level.len() * 4
+            + self.delta.len() * 8
     }
 }
 
@@ -266,10 +340,7 @@ impl PreparedApp for PreparedBc {
     }
 
     fn run_source(&mut self, source: VertexId) {
-        let s = match &self.prep.perm {
-            Some(p) => p[source as usize],
-            None => source,
-        };
+        let s = self.prep.working_id(source);
         self.prep.accumulate_from(s, &mut self.scores);
     }
 
@@ -277,6 +348,10 @@ impl PreparedApp for PreparedBc {
     /// it is taken in the working id space without unpermuting.
     fn summary(&self) -> f64 {
         self.scores.iter().cloned().fold(0.0, f64::max)
+    }
+
+    fn scratch_bytes(&self) -> usize {
+        self.prep.reusable_bytes() + self.scores.len() * 8
     }
 }
 
@@ -370,7 +445,7 @@ mod tests {
         let sources = default_sources(&g, 1);
         let want = reference(&g, &sources);
         for &v in Variant::all() {
-            let p = Prepared::new(&g, v);
+            let mut p = Prepared::new(&g, v);
             let got = p.run(&sources);
             assert_close(&got, &want);
         }
@@ -381,8 +456,31 @@ mod tests {
         let g = graph();
         let sources = default_sources(&g, 4);
         let want = reference(&g, &sources);
-        let p = Prepared::new(&g, Variant::ReorderedBitvector);
+        let mut p = Prepared::new(&g, Variant::ReorderedBitvector);
         let got = p.run(&sources);
+        assert_close(&got, &want);
+    }
+
+    #[test]
+    fn scratch_reuse_across_sources_matches_reference() {
+        // The multi-source run above already reuses σ/level/δ and the
+        // engine scratch across sources; poison between sources to prove
+        // nothing leaks through the reused buffers.
+        let g = graph();
+        let sources = default_sources(&g, 4);
+        let want = reference(&g, &sources);
+        let mut p = Prepared::new(&g, Variant::ReorderedBitvector);
+        let n = g.num_vertices();
+        let mut bc = vec![0.0f64; n];
+        for (k, &s0) in sources.iter().enumerate() {
+            p.poison_scratch(0xF00D + k as u64);
+            let s = p.perm.as_ref().map_or(s0, |pm| pm[s0 as usize]);
+            p.accumulate_from(s, &mut bc);
+        }
+        let got = match &p.perm {
+            Some(pm) => reorder::unpermute(&bc, pm),
+            None => bc,
+        };
         assert_close(&got, &want);
     }
 
@@ -391,7 +489,7 @@ mod tests {
         // 0→1→2→3: BC(1)=2 (paths 0-2,0-3... from source 0 only: pairs
         // (0,2),(0,3) pass through 1 → δ=2; vertex 2 gets δ=1).
         let g = Csr::from_edges(4, &[(0, 1), (1, 2), (2, 3)]);
-        let p = Prepared::new(&g, Variant::Baseline);
+        let mut p = Prepared::new(&g, Variant::Baseline);
         let got = p.run(&[0]);
         assert_close(&got, &[0.0, 2.0, 1.0, 0.0]);
     }

@@ -1,10 +1,16 @@
 //! Breadth-First Search (Table 5): direction-optimizing over the engine's
 //! push/pull EdgeMap, with the optional bitvector frontier and vertex
 //! reordering variants measured in §6.3 / Table 8.
+//!
+//! The `Prepared` state owns all per-traversal working memory — the
+//! parent array and the engine's [`EngineScratch`] — so repeated
+//! `run_source` calls perform zero heap allocation once the first
+//! traversal has sized the scratch pools (asserted by
+//! `tests/zero_alloc.rs`).
 
 use super::app::{AppKind, ExecutionShape, GraphApp, PreparedApp, VariantInfo};
 use crate::coordinator::SystemConfig;
-use crate::engine::{edge_map, EdgeMapOpts, VertexSubset};
+use crate::engine::{edge_map, EdgeMapOpts, EngineScratch, VertexSubset};
 use crate::graph::{Csr, VertexId};
 use crate::reorder;
 use crate::store::StoreCtx;
@@ -53,7 +59,9 @@ impl Variant {
     }
 }
 
-/// Preprocessed BFS state (reordering happens once; Table 9).
+/// Preprocessed BFS state (reordering happens once; Table 9), plus the
+/// reusable traversal buffers (allocated once; every buffer is reset —
+/// not re-allocated — at the start of each traversal).
 pub struct Prepared {
     variant: Variant,
     g: Csr,
@@ -61,6 +69,9 @@ pub struct Prepared {
     /// old→new when reordered.
     perm: Option<Vec<VertexId>>,
     inv: Option<Vec<VertexId>>,
+    /// Working-id-space parent array, reset (fill, no alloc) per source.
+    parent: Vec<AtomicU32>,
+    scratch: EngineScratch,
 }
 
 impl Prepared {
@@ -88,32 +99,46 @@ impl Prepared {
         };
         let g_in = work.transpose();
         let inv = perm.as_ref().map(|p| reorder::invert(p));
+        let n = work.num_vertices();
         Prepared {
             variant,
             g: work,
             g_in,
             perm,
             inv,
+            parent: (0..n).map(|_| AtomicU32::new(u32::MAX)).collect(),
+            scratch: EngineScratch::new(n),
         }
     }
 
-    /// BFS from `source` (original id). Returns parents in original id
-    /// space (`u32::MAX` = unreached; source's parent is itself).
-    pub fn run(&self, source: VertexId) -> Vec<VertexId> {
+    /// Map an original-space vertex id into the working (possibly
+    /// reordered) id space.
+    fn working_id(&self, v: VertexId) -> VertexId {
+        match &self.perm {
+            Some(p) => p[v as usize],
+            None => v,
+        }
+    }
+
+    /// BFS from `src` (working id space) into the owned parent array.
+    /// Allocation-free after the first traversal.
+    fn run_inner(&mut self, src: VertexId) {
         let n = self.g.num_vertices();
-        let src = match &self.perm {
-            Some(p) => p[source as usize],
-            None => source,
-        };
-        let parent: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(u32::MAX)).collect();
+        let parent = &self.parent;
+        crate::parallel::parallel_for(n, |v| parent[v].store(u32::MAX, Ordering::Relaxed));
         parent[src as usize].store(src, Ordering::Relaxed);
-        let mut frontier = VertexSubset::single(n, src);
+        let scratch = &mut self.scratch;
+        let mut frontier = {
+            let mut ids = scratch.take_ids();
+            ids.push(src);
+            VertexSubset::from_ids(n, ids)
+        };
         let opts = EdgeMapOpts {
             bitvector_frontier: self.variant.bitvector(),
             ..Default::default()
         };
         while !frontier.is_empty() {
-            frontier = edge_map(
+            let next = edge_map(
                 &self.g,
                 &self.g_in,
                 &frontier,
@@ -124,9 +149,28 @@ impl Prepared {
                 },
                 |d| parent[d as usize].load(Ordering::Relaxed) == u32::MAX,
                 opts,
+                scratch,
             );
+            scratch.recycle(std::mem::replace(&mut frontier, next));
         }
-        let raw: Vec<VertexId> = parent.into_iter().map(|a| a.into_inner()).collect();
+        scratch.recycle(frontier);
+    }
+
+    /// BFS from `source` (original id). Returns parents in original id
+    /// space (`u32::MAX` = unreached; source's parent is itself).
+    ///
+    /// This convenience API materializes a result vector; the
+    /// steady-state pipeline path ([`PreparedBfs::run_source`]) stays on
+    /// the allocation-free internal buffers instead.
+    pub fn run(&mut self, source: VertexId) -> Vec<VertexId> {
+        let src = self.working_id(source);
+        self.run_inner(src);
+        let n = self.g.num_vertices();
+        let raw: Vec<VertexId> = self
+            .parent
+            .iter()
+            .map(|a| a.load(Ordering::Relaxed))
+            .collect();
         // Map back to original ids.
         match (&self.perm, &self.inv) {
             (Some(_p), Some(inv)) => {
@@ -140,6 +184,20 @@ impl Prepared {
             }
             _ => raw,
         }
+    }
+
+    /// Test hook: garbage every dead buffer (see
+    /// [`EngineScratch::poison`]; the parent array is reset at the start
+    /// of each traversal, so it is dead between sources too).
+    pub fn poison_scratch(&mut self, seed: u64) {
+        self.scratch.poison(seed);
+        for (i, p) in self.parent.iter().enumerate() {
+            p.store((seed as u32).wrapping_add(i as u32), Ordering::Relaxed);
+        }
+    }
+
+    fn reusable_bytes(&self) -> usize {
+        self.scratch.peak_bytes() + self.parent.len() * 4
     }
 }
 
@@ -156,13 +214,24 @@ impl PreparedApp for PreparedBfs {
     }
 
     fn run_source(&mut self, source: VertexId) {
-        let parents = self.prep.run(source);
-        self.reached += parents.iter().filter(|&&p| p != u32::MAX).count() as u64;
+        let src = self.prep.working_id(source);
+        self.prep.run_inner(src);
+        // Reached count is permutation-invariant: count in working space.
+        self.reached += self
+            .prep
+            .parent
+            .iter()
+            .filter(|p| p.load(Ordering::Relaxed) != u32::MAX)
+            .count() as u64;
     }
 
     /// Total vertices reached over all sources run so far.
     fn summary(&self) -> f64 {
         self.reached as f64
+    }
+
+    fn scratch_bytes(&self) -> usize {
+        self.prep.reusable_bytes()
     }
 }
 
@@ -286,7 +355,7 @@ mod tests {
             .unwrap() as VertexId;
         let want = reference_levels(&g, source);
         for &v in Variant::all() {
-            let p = Prepared::new(&g, v);
+            let mut p = Prepared::new(&g, v);
             let parents = p.run(source);
             let got = levels_from_parents(&g, source, &parents);
             assert_eq!(got, want, "{}", v.name());
@@ -294,10 +363,29 @@ mod tests {
     }
 
     #[test]
+    fn repeated_runs_reuse_scratch_identically() {
+        let g = graph();
+        let source = (0..g.num_vertices())
+            .max_by_key(|&v| g.degree(v as u32))
+            .unwrap() as VertexId;
+        let want = reference_levels(&g, source);
+        let mut p = Prepared::new(&g, Variant::ReorderedBitvector);
+        for round in 0..3 {
+            p.poison_scratch(0xB5 + round);
+            let parents = p.run(source);
+            assert_eq!(
+                levels_from_parents(&g, source, &parents),
+                want,
+                "round {round}"
+            );
+        }
+    }
+
+    #[test]
     fn unreachable_marked() {
         // 0 -> 1; 2 isolated.
         let g = Csr::from_edges(3, &[(0, 1)]);
-        let p = Prepared::new(&g, Variant::Baseline);
+        let mut p = Prepared::new(&g, Variant::Baseline);
         let parents = p.run(0);
         assert_eq!(parents[0], 0);
         assert_eq!(parents[1], 0);
@@ -307,7 +395,7 @@ mod tests {
     #[test]
     fn parent_edges_exist() {
         let g = graph();
-        let p = Prepared::new(&g, Variant::ReorderedBitvector);
+        let mut p = Prepared::new(&g, Variant::ReorderedBitvector);
         let parents = p.run(3);
         for v in 0..g.num_vertices() {
             let pv = parents[v];

@@ -11,7 +11,7 @@ use super::app::{AppKind, ExecutionShape, GraphApp, PreparedApp, VariantInfo};
 use crate::coordinator::SystemConfig;
 use crate::engine::segmented_edge_map;
 use crate::graph::{Csr, CsrBuilder, VertexId};
-use crate::segment::SegmentedCsr;
+use crate::segment::{SegmentBuffers, SegmentedCsr};
 use crate::store::{StoreCtx, StoreKey};
 use anyhow::{bail, Result};
 
@@ -68,6 +68,10 @@ pub fn symmetrize(g: &Csr) -> Csr {
 pub struct Prepared {
     variant: Variant,
     seg: Option<SegmentedCsr>,
+    /// Per-segment intermediate label buffers, built once and reused by
+    /// every [`Prepared::sweep`] (the sweep fully rewrites them — their
+    /// contents between sweeps are dead).
+    seg_bufs: Option<SegmentBuffers<VertexId>>,
     pull: Option<Csr>,
     labels: Vec<VertexId>,
     next: Vec<VertexId>,
@@ -132,9 +136,12 @@ impl Prepared {
             }
             Variant::Segmented => None,
         };
+        let seg_bufs: Option<SegmentBuffers<VertexId>> =
+            seg.as_ref().map(|sg| SegmentBuffers::with_fill(sg, 0));
         Prepared {
             variant,
             seg,
+            seg_bufs,
             pull,
             labels: (0..n as VertexId).collect(),
             next: vec![0 as VertexId; n],
@@ -150,12 +157,14 @@ impl Prepared {
         match self.variant {
             Variant::Segmented => {
                 let sg = self.seg.as_ref().unwrap();
+                let bufs = self.seg_bufs.as_mut().unwrap();
                 let l = &self.labels;
                 segmented_edge_map(
                     sg,
                     |u| l[u as usize],
                     |a, b| a.min(b),
                     VertexId::MAX,
+                    bufs,
                     &mut self.next,
                 );
             }
@@ -202,6 +211,22 @@ impl Prepared {
             .filter(|&(v, &l)| l as usize == v)
             .count()
     }
+
+    /// Test hook: garbage every dead buffer — `next` and the per-segment
+    /// buffers are fully rewritten by each sweep (`labels` is live state
+    /// and stays untouched).
+    pub fn poison_scratch(&mut self, seed: u64) {
+        for (i, x) in self.next.iter_mut().enumerate() {
+            *x = (seed as u32).wrapping_add(i as u32).wrapping_mul(2654435761);
+        }
+        if let Some(bufs) = &mut self.seg_bufs {
+            for buf in &mut bufs.per_segment {
+                for (i, x) in buf.iter_mut().enumerate() {
+                    *x = (seed as u32) ^ (i as u32).wrapping_mul(0x9E3779B9);
+                }
+            }
+        }
+    }
 }
 
 impl PreparedApp for Prepared {
@@ -219,6 +244,10 @@ impl PreparedApp for Prepared {
     /// nonempty graph).
     fn summary(&self) -> f64 {
         self.num_components() as f64
+    }
+
+    fn scratch_bytes(&self) -> usize {
+        self.next.len() * 4 + self.seg_bufs.as_ref().map_or(0, |b| b.bytes())
     }
 }
 

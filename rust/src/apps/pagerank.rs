@@ -358,6 +358,11 @@ impl PreparedApp for Prepared {
     fn summary(&self) -> f64 {
         self.values().iter().sum()
     }
+
+    fn scratch_bytes(&self) -> usize {
+        (self.rank.len() + self.next.len() + self.contrib.len()) * 8
+            + self.seg_bufs.as_ref().map_or(0, |b| b.bytes())
+    }
 }
 
 /// Registry adapter: PageRank as a [`GraphApp`].

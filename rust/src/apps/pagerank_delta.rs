@@ -48,9 +48,19 @@ pub struct Prepared {
     /// Change in each vertex's rank last iteration (still to propagate).
     delta: Vec<f64>,
     active: Vec<bool>,
+    /// Per-iteration accumulation buffer, allocated once and fully
+    /// rewritten every [`Prepared::step`] (contents dead between steps).
+    new_delta: Vec<AtomicF64>,
     iterations: usize,
     active_history: Vec<usize>,
 }
+
+/// `active_history` capacity reserved up front; recording **saturates**
+/// at this many entries so steady-state `step()` can never reallocate,
+/// no matter how many iterations a run takes (PageRank-Delta converges
+/// in tens of iterations — a thousand entries more than tells the
+/// frontier-decay story; `iterations` keeps exact count regardless).
+const HISTORY_RESERVE: usize = 1024;
 
 impl Prepared {
     pub fn new(g: &Csr, cfg: &SystemConfig, epsilon: f64) -> Prepared {
@@ -77,8 +87,9 @@ impl Prepared {
             rank,
             delta,
             active: vec![true; n],
+            new_delta: (0..n).map(|_| AtomicF64::new(0.0)).collect(),
             iterations: 0,
-            active_history: Vec::new(),
+            active_history: Vec::with_capacity(HISTORY_RESERVE),
         }
     }
 
@@ -92,6 +103,8 @@ impl Prepared {
         self.iterations
     }
 
+    /// Active-vertex count per iteration (saturates at `HISTORY_RESERVE`
+    /// entries; [`Prepared::iterations`] stays exact).
     pub fn active_history(&self) -> &[usize] {
         &self.active_history
     }
@@ -110,16 +123,20 @@ impl Prepared {
         }
         let n = self.rank.len();
         self.iterations += 1;
-        self.active_history
-            .push(self.active.iter().filter(|&&a| a).count());
+        if self.active_history.len() < HISTORY_RESERVE {
+            self.active_history
+                .push(self.active.iter().filter(|&&a| a).count());
+        }
         let d = self.damping;
-        let new_delta: Vec<AtomicF64> = (0..n).map(|_| AtomicF64::new(0.0)).collect();
         {
             let active = &self.active;
             let delta = &self.delta;
             let inv_deg = &self.inv_deg;
             let pull = &self.pull;
-            let nd = &new_delta;
+            let nd = &self.new_delta;
+            // Unconditional store: every slot is rewritten each step, so
+            // the reused buffer never needs clearing (and can never leak
+            // the previous iteration's values).
             parallel_for(n, |v| {
                 let mut acc = 0.0;
                 for &u in pull.neighbors(v as VertexId) {
@@ -127,16 +144,23 @@ impl Prepared {
                         acc += delta[u as usize] * inv_deg[u as usize];
                     }
                 }
-                if acc != 0.0 {
-                    nd[v].store(d * acc, Ordering::Relaxed);
-                }
+                nd[v].store(d * acc, Ordering::Relaxed);
             });
         }
         for v in 0..n {
-            let nd = new_delta[v].load(Ordering::Relaxed);
+            let nd = self.new_delta[v].load(Ordering::Relaxed);
             self.rank[v] += nd;
             self.delta[v] = nd;
             self.active[v] = nd.abs() > self.epsilon * self.rank[v].abs().max(1e-300);
+        }
+    }
+
+    /// Test hook: garbage the dead per-iteration buffer (`new_delta` is
+    /// fully rewritten by each step; rank/delta/active are live state).
+    pub fn poison_scratch(&mut self, seed: u64) {
+        for (i, x) in self.new_delta.iter().enumerate() {
+            let junk = f64::from_bits(seed ^ (i as u64).wrapping_mul(0x9E3779B97F4A7C15));
+            x.store(junk, Ordering::Relaxed);
         }
     }
 }
@@ -153,6 +177,10 @@ impl PreparedApp for Prepared {
     /// Accumulated rank mass.
     fn summary(&self) -> f64 {
         self.rank.iter().sum()
+    }
+
+    fn scratch_bytes(&self) -> usize {
+        self.new_delta.len() * 8 + self.active_history.capacity() * 8
     }
 }
 

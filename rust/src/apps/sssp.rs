@@ -2,10 +2,14 @@
 //! "applications that involve vertices' activeness checking" class that
 //! Betweenness Centrality represents. Edge weights are synthesized
 //! deterministically (1..=16) from the endpoints.
+//!
+//! The `Prepared` state owns the distance array and the engine's
+//! [`EngineScratch`], so repeated `run_source` calls allocate nothing
+//! once the first traversal has sized the scratch pools.
 
 use super::app::{AppKind, ExecutionShape, GraphApp, PreparedApp, VariantInfo};
 use crate::coordinator::SystemConfig;
-use crate::engine::{edge_map, EdgeMapOpts, VertexSubset};
+use crate::engine::{edge_map, EdgeMapOpts, EngineScratch, VertexSubset};
 use crate::graph::{Csr, VertexId};
 use crate::parallel::atomics::AtomicF64;
 use crate::reorder;
@@ -43,12 +47,16 @@ impl Variant {
     }
 }
 
-/// Preprocessed SSSP state.
+/// Preprocessed SSSP state plus reusable traversal buffers (reset, never
+/// re-allocated, per source).
 pub struct Prepared {
     g: Csr,
     g_in: Csr,
     perm: Option<Vec<VertexId>>,
     inv: Option<Vec<VertexId>>,
+    /// Working-id-space distances, reset per source.
+    dist: Vec<AtomicF64>,
+    scratch: EngineScratch,
 }
 
 impl Prepared {
@@ -77,38 +85,51 @@ impl Prepared {
         };
         let g_in = work.transpose();
         let inv = perm.as_ref().map(|p| reorder::invert(p));
+        let n = work.num_vertices();
         Prepared {
             g: work,
             g_in,
             perm,
             inv,
+            dist: (0..n).map(|_| AtomicF64::new(f64::INFINITY)).collect(),
+            scratch: EngineScratch::new(n),
         }
     }
 
-    /// Distances from `source` (original ids); unreachable = +inf.
-    ///
-    /// Weights are defined on **original** endpoint ids so reordering does
-    /// not change the metric.
-    pub fn run(&self, source: VertexId) -> Vec<f64> {
+    /// Map an original-space vertex id into the working (possibly
+    /// reordered) id space.
+    fn working_id(&self, v: VertexId) -> VertexId {
+        match &self.perm {
+            Some(p) => p[v as usize],
+            None => v,
+        }
+    }
+
+    /// Bellman–Ford from `src` (working id space) into the owned distance
+    /// array. Allocation-free after the first traversal.
+    fn run_inner(&mut self, src: VertexId) {
         let n = self.g.num_vertices();
-        let src = match &self.perm {
-            Some(p) => p[source as usize],
-            None => source,
-        };
+        let dist = &self.dist;
+        crate::parallel::parallel_for(n, |v| dist[v].store(f64::INFINITY, Ordering::Relaxed));
+        dist[src as usize].store(0.0, Ordering::Relaxed);
         // Weight of working-space edge (s,d) = weight of original edge.
+        let inv = &self.inv;
         let orig = |v: VertexId| -> VertexId {
-            match &self.inv {
+            match inv {
                 Some(inv) => inv[v as usize],
                 None => v,
             }
         };
-        let dist: Vec<AtomicF64> = (0..n).map(|_| AtomicF64::new(f64::INFINITY)).collect();
-        dist[src as usize].store(0.0, Ordering::Relaxed);
-        let mut frontier = VertexSubset::single(n, src);
+        let scratch = &mut self.scratch;
+        let mut frontier = {
+            let mut ids = scratch.take_ids();
+            ids.push(src);
+            VertexSubset::from_ids(n, ids)
+        };
         let mut rounds = 0usize;
         while !frontier.is_empty() && rounds <= n {
             rounds += 1;
-            frontier = edge_map(
+            let next = edge_map(
                 &self.g,
                 &self.g_in,
                 &frontier,
@@ -119,13 +140,40 @@ impl Prepared {
                 },
                 |_| true,
                 EdgeMapOpts::default(),
+                scratch,
             );
+            scratch.recycle(std::mem::replace(&mut frontier, next));
         }
-        let raw: Vec<f64> = dist.iter().map(|d| d.load(Ordering::Relaxed)).collect();
+        scratch.recycle(frontier);
+    }
+
+    /// Distances from `source` (original ids); unreachable = +inf.
+    ///
+    /// Weights are defined on **original** endpoint ids so reordering does
+    /// not change the metric. This convenience API materializes a result
+    /// vector; the pipeline path ([`PreparedSssp::run_source`]) stays on
+    /// the allocation-free internal buffers.
+    pub fn run(&mut self, source: VertexId) -> Vec<f64> {
+        let src = self.working_id(source);
+        self.run_inner(src);
+        let raw: Vec<f64> = self.dist.iter().map(|d| d.load(Ordering::Relaxed)).collect();
         match &self.perm {
             Some(p) => reorder::unpermute(&raw, p),
             None => raw,
         }
+    }
+
+    /// Test hook: garbage every dead buffer (distances are reset at the
+    /// start of each traversal).
+    pub fn poison_scratch(&mut self, seed: u64) {
+        self.scratch.poison(seed);
+        for (i, d) in self.dist.iter().enumerate() {
+            d.store(-(seed as f64) - i as f64, Ordering::Relaxed);
+        }
+    }
+
+    fn reusable_bytes(&self) -> usize {
+        self.scratch.peak_bytes() + self.dist.len() * 8
     }
 }
 
@@ -142,8 +190,17 @@ impl PreparedApp for PreparedSssp {
     }
 
     fn run_source(&mut self, source: VertexId) {
-        let dist = self.prep.run(source);
-        self.total += dist.iter().filter(|d| d.is_finite()).sum::<f64>();
+        let src = self.prep.working_id(source);
+        self.prep.run_inner(src);
+        // The finite-distance sum is permutation-invariant: read it from
+        // the working-space buffer without materializing/unpermuting.
+        self.total += self
+            .prep
+            .dist
+            .iter()
+            .map(|d| d.load(Ordering::Relaxed))
+            .filter(|d| d.is_finite())
+            .sum::<f64>();
     }
 
     /// Sum of all finite shortest-path distances over all sources run so
@@ -151,6 +208,10 @@ impl PreparedApp for PreparedSssp {
     /// is deterministic despite the relaxed atomics).
     fn summary(&self) -> f64 {
         self.total
+    }
+
+    fn scratch_bytes(&self) -> usize {
+        self.prep.reusable_bytes()
     }
 }
 
@@ -245,11 +306,24 @@ mod tests {
         let src = super::super::bc::default_sources(&g, 1)[0];
         let want = reference(&g, src);
         for v in [Variant::Baseline, Variant::Reordered] {
-            let p = Prepared::new(&g, v);
+            let mut p = Prepared::new(&g, v);
             let got = p.run(src);
             for i in 0..n {
                 assert_eq!(got[i], want[i], "variant {v:?} vertex {i}");
             }
+        }
+    }
+
+    #[test]
+    fn repeated_runs_reuse_scratch_identically() {
+        let (n, e) = generators::rmat(9, 8, generators::RmatParams::graph500(), 66);
+        let g = Csr::from_edges(n, &e);
+        let src = super::super::bc::default_sources(&g, 1)[0];
+        let want = reference(&g, src);
+        let mut p = Prepared::new(&g, Variant::Reordered);
+        for round in 0..3u64 {
+            p.poison_scratch(round.wrapping_mul(0x9E3779B97F4A7C15));
+            assert_eq!(p.run(src), want, "round {round}");
         }
     }
 
@@ -267,7 +341,7 @@ mod tests {
     #[test]
     fn disconnected_vertices_infinite() {
         let g = Csr::from_edges(4, &[(0, 1), (1, 2)]);
-        let p = Prepared::new(&g, Variant::Baseline);
+        let mut p = Prepared::new(&g, Variant::Baseline);
         let d = p.run(0);
         assert_eq!(d[0], 0.0);
         assert!(d[3].is_infinite());

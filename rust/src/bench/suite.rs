@@ -192,6 +192,13 @@ pub const SUITES: &[SuiteInfo] = &[
         cases: &["<value>"],
         scopes: "knobs (coarsen, merge-block, segment-fill)",
     },
+    SuiteInfo {
+        name: "frontier_churn",
+        title: "Frontier churn: deep narrow-frontier traversals (engine scratch reuse)",
+        paper_ref: "engine zero-allocation steady state (no paper analogue)",
+        cases: &["bfs-deep", "bfs-deep-bitvector", "sssp-deep", "bfs-wide-levels"],
+        scopes: "unscoped (synthetic deep-chain / lattice graphs)",
+    },
 ];
 
 /// Look up a suite by target name.
@@ -331,7 +338,7 @@ mod tests {
             assert!(!s.title.is_empty() && !s.paper_ref.is_empty());
             assert!(!s.cases.is_empty());
         }
-        assert_eq!(SUITES.len(), 20, "one entry per benches/*.rs target");
+        assert_eq!(SUITES.len(), 21, "one entry per benches/*.rs target");
         assert!(find("no_such_suite").is_none());
     }
 

@@ -163,6 +163,11 @@ pub fn run_job_with_store(
     if spec.analyze_memory {
         metrics.stalls = app.simulate(g, cfg, spec.app);
     }
+    // Reusable-scratch footprint (peak): the memory the app holds so its
+    // steady state allocates nothing. Read after execution so engine
+    // pools have reached their high-water mark.
+    let scratch = prep.scratch_bytes();
+    metrics.scratch_bytes = (scratch > 0).then_some(scratch as u64);
     let summary = prep.summary();
     metrics.store = store.map(|s| s.stats());
     // Job complete: release this job's eviction exemptions (for a shared

@@ -24,6 +24,11 @@ pub struct Metrics {
     /// store) they accumulate across jobs, so a job's own traffic is the
     /// delta from the previous job's snapshot.
     pub store: Option<StoreStats>,
+    /// Peak bytes of reusable execution scratch the prepared app held
+    /// (engine scratch pools, per-source atomic arrays, per-segment
+    /// buffers) — the memory cost of the zero-allocation steady state.
+    /// `None` when the app has no reusable scratch.
+    pub scratch_bytes: Option<u64>,
 }
 
 impl Metrics {
@@ -74,6 +79,12 @@ impl Metrics {
                 crate::util::fmt_bytes(s.resident_bytes as usize)
             ));
         }
+        if let Some(b) = self.scratch_bytes {
+            out.push_str(&format!(
+                "engine scratch: {} reusable (peak; buys the zero-allocation steady state)\n",
+                crate::util::fmt_bytes(b as usize)
+            ));
+        }
         for (name, secs, share) in self.phases.report() {
             out.push_str(&format!("  {name:<24} {secs:>9.4}s  {:>5.1}%\n", share * 100.0));
         }
@@ -106,6 +117,7 @@ mod tests {
         assert!(r.contains("preprocess"));
         assert!(!r.contains("artifact store"));
         assert!(!r.contains("app:"));
+        assert!(!r.contains("engine scratch"));
         m.app = Some("bfs/both".to_string());
         assert!(m.render().contains("app: bfs/both"));
         m.store = Some(crate::store::StoreStats {
@@ -114,5 +126,7 @@ mod tests {
             ..Default::default()
         });
         assert!(m.render().contains("3 hits, 1 misses"));
+        m.scratch_bytes = Some(2 * 1024 * 1024);
+        assert!(m.render().contains("engine scratch: 2.0 MiB"));
     }
 }

@@ -7,18 +7,28 @@
 //! for which some update returned true).
 //!
 //! - **Push (sparse)**: iterate frontier vertices' out-edges; updates may
-//!   race, so `update` must be CAS-style idempotent.
+//!   race, so `update` must be CAS-style idempotent. Work is distributed
+//!   with the §3.2 cost-based scheduler keyed on out-degree — a
+//!   statically-chunked split starves threads whenever degree skew piles
+//!   the frontier's heavy vertices into one chunk.
 //! - **Pull (dense)**: iterate *all* destinations with `cond(dst)`,
 //!   scanning in-edges for frontier members — no write races, and early
 //!   exit once `cond` is satisfied.
 //!
 //! The switch uses Ligra's heuristic: pull when
-//! `|frontier| + outEdges(frontier) > |E| / threshold_den`.
+//! `|frontier| + outEdges(frontier) > |E| / threshold_den`. Both the
+//! switch and the two modes are **allocation-free in the steady state**:
+//! every buffer (output flags, membership probes, id lists, the degree
+//! prefix) comes from the caller's [`EngineScratch`], and the switch
+//! estimates frontier work by visiting members in place instead of
+//! materializing an id vector. See [`super::scratch`] for the ownership
+//! and reset contract.
 
 use super::frontier::VertexSubset;
+use super::scratch::EngineScratch;
 use crate::graph::{Csr, VertexId};
-use crate::parallel::{parallel_for, UnsafeSlice};
-use std::sync::atomic::{AtomicBool, Ordering};
+use crate::parallel::{parallel_for, parallel_for_cost, UnsafeSlice};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 
 /// EdgeMap tuning knobs.
 #[derive(Debug, Clone, Copy)]
@@ -39,9 +49,30 @@ impl Default for EdgeMapOpts {
     }
 }
 
+/// Membership probe over the frontier for pull mode: either the dense
+/// byte form or the packed bitvector (§6.3), borrowed from the input
+/// frontier when representations already match, else populated
+/// touched-only into the scratch.
+enum Probe<'a> {
+    Flags(&'a [bool]),
+    Words(&'a [u64]),
+}
+
+impl Probe<'_> {
+    #[inline]
+    fn contains(&self, v: VertexId) -> bool {
+        match self {
+            Probe::Flags(f) => f[v as usize],
+            Probe::Words(w) => (w[v as usize / 64] >> (v as usize % 64)) & 1 == 1,
+        }
+    }
+}
+
 /// Apply `update` over edges out of `frontier`; `g` is the out-edge CSR
 /// and `g_in` its transpose (used for pull mode). Returns the new
-/// frontier.
+/// frontier, whose storage is drawn from `scratch` — hand exhausted
+/// frontiers back via [`EngineScratch::recycle`] so the steady state
+/// allocates nothing.
 pub fn edge_map<U, C>(
     g: &Csr,
     g_in: &Csr,
@@ -49,91 +80,251 @@ pub fn edge_map<U, C>(
     update: U,
     cond: C,
     opts: EdgeMapOpts,
+    scratch: &mut EngineScratch,
 ) -> VertexSubset
 where
     U: Fn(VertexId, VertexId) -> bool + Sync,
     C: Fn(VertexId) -> bool + Sync,
 {
+    assert_eq!(
+        scratch.n(),
+        g.num_vertices(),
+        "EngineScratch sized for a different graph"
+    );
     let m = g.num_edges() as u64;
-    let frontier_ids = frontier.ids();
-    let out_work: u64 = frontier_ids.iter().map(|&v| g.degree(v) as u64).sum();
-    let dense = out_work + frontier_ids.len() as u64 > m / opts.threshold_den.max(1);
+    // Direction heuristic: count and degree-sum the members. Sparse
+    // frontiers are read in place; dense forms are materialized into a
+    // pooled id vector during this same pass, so a dense→push transition
+    // traverses the frontier exactly once (push takes ownership of the
+    // list; pull returns it to the pool unused).
+    let (count, out_work, owned): (usize, u64, Option<Vec<VertexId>>) =
+        match frontier.as_sparse_ids() {
+            Some(ids) => (
+                ids.len(),
+                ids.iter().map(|&v| g.degree(v) as u64).sum::<u64>(),
+                None,
+            ),
+            None => {
+                let mut ids = scratch.take_ids();
+                let mut w = 0u64;
+                frontier.for_each(|v| {
+                    w += g.degree(v) as u64;
+                    ids.push(v);
+                });
+                (ids.len(), w, Some(ids))
+            }
+        };
+    let dense = out_work + count as u64 > m / opts.threshold_den.max(1);
     if dense {
-        edge_map_pull(g_in, frontier, update, cond, opts)
+        if let Some(ids) = owned {
+            scratch.put_ids(ids);
+        }
+        edge_map_pull(g_in, frontier, update, cond, opts, scratch)
     } else {
-        edge_map_push(g, &frontier_ids, update, cond)
+        edge_map_push(g, frontier, owned, out_work, update, cond, scratch)
     }
 }
 
-/// Push mode: parallel over frontier vertices, scattering updates.
-fn edge_map_push<U, C>(g: &Csr, frontier_ids: &[VertexId], update: U, cond: C) -> VertexSubset
+/// Push mode: cost-balanced parallel loop over frontier vertices,
+/// scattering updates. The new frontier is collected at an atomic cursor
+/// (no O(n) flag rescan), and the shared `out_flags` are reset
+/// touched-only from the collected ids.
+fn edge_map_push<U, C>(
+    g: &Csr,
+    frontier: &VertexSubset,
+    owned: Option<Vec<VertexId>>,
+    out_work: u64,
+    update: U,
+    cond: C,
+    scratch: &mut EngineScratch,
+) -> VertexSubset
 where
     U: Fn(VertexId, VertexId) -> bool + Sync,
     C: Fn(VertexId) -> bool + Sync,
 {
     let n = g.num_vertices();
-    let out_flags: Vec<AtomicBool> = (0..n).map(|_| AtomicBool::new(false)).collect();
-    parallel_for(frontier_ids.len(), |i| {
-        let s = frontier_ids[i];
-        for &d in g.neighbors(s) {
-            if cond(d) && update(s, d) {
-                out_flags[d as usize].store(true, Ordering::Relaxed);
-            }
+    // `owned` is the pooled materialization the direction switch already
+    // built for non-sparse frontiers; sparse storage is borrowed.
+    // Winner ids land in the persistent slots buffer at an atomic cursor.
+    // Every winner accounts for at least one scanned edge, so `out_work`
+    // (capped at n) bounds the cursor; the buffer grows to its high-water
+    // length once and is never zero-filled — only `new_len` slots are
+    // written and read per call.
+    let cap = (out_work as usize).min(n);
+    if scratch.push_slots.len() < cap {
+        scratch.push_slots.resize(cap, 0);
+    }
+    let new_len = {
+        let ids: &[VertexId] = owned
+            .as_deref()
+            .unwrap_or_else(|| frontier.as_sparse_ids().unwrap());
+        // Out-degree prefix for the §3.2 cost-based split (+1 per vertex
+        // so zero-degree stretches still subdivide). Rebuilt in the
+        // reusable buffer every call.
+        let prefix = &mut scratch.cost_prefix;
+        prefix.clear();
+        prefix.reserve(ids.len() + 1);
+        prefix.push(0);
+        let mut acc = 0u64;
+        for &v in ids {
+            acc += g.degree(v) as u64 + 1;
+            prefix.push(acc);
         }
-    });
-    let ids: Vec<VertexId> = out_flags
-        .iter()
-        .enumerate()
-        .filter_map(|(v, f)| f.load(Ordering::Relaxed).then_some(v as VertexId))
-        .collect();
-    VertexSubset::from_ids(n, ids)
+        let prefix: &[u64] = prefix;
+        let threshold = (acc / (4 * crate::parallel::num_threads() as u64).max(1)).max(256);
+        let cursor = AtomicUsize::new(0);
+        let slots = UnsafeSlice::new(&mut scratch.push_slots);
+        let out_flags: &[AtomicBool] = &scratch.out_flags;
+        parallel_for_cost(
+            ids.len(),
+            threshold,
+            |lo, hi| prefix[hi] - prefix[lo],
+            |lo, hi| {
+                for &s in &ids[lo..hi] {
+                    for &d in g.neighbors(s) {
+                        if cond(d)
+                            && update(s, d)
+                            && !out_flags[d as usize].swap(true, Ordering::Relaxed)
+                        {
+                            let k = cursor.fetch_add(1, Ordering::Relaxed);
+                            // Safety: each k handed to exactly one task;
+                            // k < cap because winners are distinct and
+                            // each consumes one of `out_work` edges.
+                            unsafe { slots.write(k, d) };
+                        }
+                    }
+                }
+            },
+        );
+        let new_len = cursor.into_inner();
+        debug_assert!(new_len <= cap);
+        new_len
+    };
+    // Copy the winners into a pooled id vector (O(new frontier), not
+    // O(cap)) and reset exactly their flags — touched-only.
+    let mut out_ids = scratch.take_ids();
+    out_ids.extend_from_slice(&scratch.push_slots[..new_len]);
+    for &d in &out_ids {
+        scratch.out_flags[d as usize].store(false, Ordering::Relaxed);
+    }
+    if let Some(ids) = owned {
+        scratch.put_ids(ids);
+    }
+    VertexSubset::from_ids(n, out_ids)
 }
 
 /// Pull mode: parallel over all destinations satisfying `cond`, scanning
-/// in-neighbors for frontier membership.
+/// in-neighbors for frontier membership. The membership probe borrows the
+/// input frontier's storage when its representation already matches the
+/// requested one, else it is populated (and afterwards cleared,
+/// touched-only for sparse inputs) in the scratch; the output flags come
+/// from the scratch's buffer pool.
 fn edge_map_pull<U, C>(
     g_in: &Csr,
     frontier: &VertexSubset,
     update: U,
     cond: C,
     opts: EdgeMapOpts,
+    scratch: &mut EngineScratch,
 ) -> VertexSubset
 where
     U: Fn(VertexId, VertexId) -> bool + Sync,
     C: Fn(VertexId) -> bool + Sync,
 {
     let n = g_in.num_vertices();
-    // Membership structure: bitvector (compact, the §6.3 optimization) or
-    // dense bools.
-    let member = if opts.bitvector_frontier {
-        frontier.to_bits()
-    } else {
-        frontier.to_dense()
-    };
-    let mut out = vec![false; n];
-    let out_slice = UnsafeSlice::new(&mut out);
-    parallel_for(n, |d| {
-        let d = d as VertexId;
-        if !cond(d) {
-            return;
-        }
-        for &s in g_in.neighbors(d) {
-            if member.contains(s) && update(s, d) {
-                // Safety: each d written by exactly one task.
-                unsafe { out_slice.write(d as usize, true) };
-                // Ligra's early exit: once the destination is updated and
-                // cond would flip, stop scanning. We conservatively
-                // re-check cond.
-                if !cond(d) {
-                    break;
+    let want_words = opts.bitvector_frontier;
+    let mut out = scratch.take_flags();
+    // 1. Populate the probe when the input representation does not match
+    //    the requested one (touched-only writes).
+    match frontier {
+        VertexSubset::Sparse { ids, .. } => {
+            if want_words {
+                for &v in ids {
+                    scratch.member_words[v as usize / 64] |= 1u64 << (v as usize % 64);
+                }
+            } else {
+                for &v in ids {
+                    scratch.member_flags[v as usize] = true;
                 }
             }
         }
-    });
-    if opts.bitvector_frontier {
-        VertexSubset::from_flags(out).to_bits()
+        VertexSubset::Dense { flags, .. } if want_words => {
+            for (v, &b) in flags.iter().enumerate() {
+                if b {
+                    scratch.member_words[v / 64] |= 1u64 << (v % 64);
+                }
+            }
+        }
+        VertexSubset::Bits { .. } if !want_words => {
+            frontier.for_each(|v| scratch.member_flags[v as usize] = true);
+        }
+        _ => {} // representation matches: borrow directly below
+    }
+    // 2. The parallel pull sweep.
+    {
+        let probe = match (frontier, want_words) {
+            (VertexSubset::Dense { flags, .. }, false) => Probe::Flags(flags),
+            (VertexSubset::Bits { words, .. }, true) => Probe::Words(words),
+            (_, false) => Probe::Flags(&scratch.member_flags),
+            (_, true) => Probe::Words(&scratch.member_words),
+        };
+        let out_slice = UnsafeSlice::new(&mut out);
+        parallel_for(n, |d| {
+            let d = d as VertexId;
+            if !cond(d) {
+                return;
+            }
+            for &s in g_in.neighbors(d) {
+                if probe.contains(s) && update(s, d) {
+                    // Safety: each d written by exactly one task.
+                    unsafe { out_slice.write(d as usize, true) };
+                    // Ligra's early exit: once the destination is updated
+                    // and cond would flip, stop scanning. We
+                    // conservatively re-check cond.
+                    if !cond(d) {
+                        break;
+                    }
+                }
+            }
+        });
+    }
+    // 3. Restore the probe invariant (touched-only where the positions
+    //    are known from the sparse id list).
+    match frontier {
+        VertexSubset::Sparse { ids, .. } => {
+            if want_words {
+                for &v in ids {
+                    scratch.member_words[v as usize / 64] = 0;
+                }
+            } else {
+                for &v in ids {
+                    scratch.member_flags[v as usize] = false;
+                }
+            }
+        }
+        VertexSubset::Dense { .. } if want_words => scratch.member_words.fill(0),
+        VertexSubset::Bits { .. } if !want_words => {
+            frontier.for_each(|v| scratch.member_flags[v as usize] = false);
+        }
+        _ => {}
+    }
+    // 4. Package the result, counting members along the way so the next
+    //    level's emptiness/size checks are O(1).
+    if want_words {
+        let mut words = scratch.take_words();
+        let mut count = 0usize;
+        for (v, b) in out.iter_mut().enumerate() {
+            if *b {
+                words[v / 64] |= 1u64 << (v % 64);
+                count += 1;
+                *b = false;
+            }
+        }
+        scratch.put_flags_cleared(out);
+        VertexSubset::from_words_counted(n, words, count)
     } else {
-        VertexSubset::from_flags(out)
+        let count = out.iter().filter(|&&b| b).count();
+        VertexSubset::from_flags_counted(out, count)
     }
 }
 
@@ -176,10 +367,11 @@ mod tests {
         let (g, t) = line_graph(50);
         let parent: Vec<AtomicU32> = (0..50).map(|_| AtomicU32::new(u32::MAX)).collect();
         parent[0].store(0, Ordering::Relaxed);
+        let mut scratch = EngineScratch::new(50);
         let mut frontier = VertexSubset::single(50, 0);
         let mut depth = 0;
         while !frontier.is_empty() {
-            frontier = edge_map(
+            let next = edge_map(
                 &g,
                 &t,
                 &frontier,
@@ -190,7 +382,9 @@ mod tests {
                 },
                 |d| parent[d as usize].load(Ordering::Relaxed) == u32::MAX,
                 EdgeMapOpts::default(),
+                &mut scratch,
             );
+            scratch.recycle(std::mem::replace(&mut frontier, next));
             depth += 1;
             assert!(depth <= 50);
         }
@@ -210,25 +404,28 @@ mod tests {
         let frontier = VertexSubset::from_ids(n, seed);
         let run = |den: u64| {
             let visited: Vec<AtomicBool> = (0..n).map(|_| AtomicBool::new(false)).collect();
+            let mut scratch = EngineScratch::new(n);
             let next = edge_map(
                 &g,
                 &t,
                 &frontier,
-                |_s, d| {
-                    !visited[d as usize].swap(true, Ordering::Relaxed)
-                },
+                |_s, d| !visited[d as usize].swap(true, Ordering::Relaxed),
                 |_| true,
                 EdgeMapOpts {
                     threshold_den: den,
                     bitvector_frontier: false,
                 },
+                &mut scratch,
             );
             let mut ids = next.ids();
+            scratch.recycle(next);
             ids.sort_unstable();
             ids
         };
-        let push = run(u64::MAX); // threshold huge => push
-        let pull = run(1); // => pull
+        // dense iff work > |E|/den: den=u64::MAX collapses the threshold
+        // to 0 (always pull); den=1 raises it to |E| (always push).
+        let pull = run(u64::MAX);
+        let push = run(1);
         assert_eq!(push, pull);
     }
 
@@ -239,6 +436,7 @@ mod tests {
         let t = g.transpose();
         let frontier = VertexSubset::full(n);
         for bitvec in [false, true] {
+            let mut scratch = EngineScratch::new(n);
             let next = edge_map(
                 &g,
                 &t,
@@ -249,6 +447,7 @@ mod tests {
                     threshold_den: 1,
                     bitvector_frontier: bitvec,
                 },
+                &mut scratch,
             );
             // Every vertex with an in-edge is in the next frontier.
             let indeg = g.in_degrees();
@@ -256,9 +455,101 @@ mod tests {
                 .filter(|&v| indeg[v] > 0)
                 .map(|v| v as VertexId)
                 .collect();
+            assert_eq!(next.count(), expect.len(), "cached count, bitvec={bitvec}");
             let mut got = next.ids();
             got.sort_unstable();
             assert_eq!(got, expect, "bitvec={bitvec}");
+        }
+    }
+
+    /// All four (input representation × mode) corners produce the same
+    /// frontier, exercising the borrow-vs-populate probe paths and the
+    /// dense-input push materialization.
+    #[test]
+    fn representation_mode_corners_agree() {
+        let (n, edges) = generators::rmat(9, 8, generators::RmatParams::graph500(), 21);
+        let g = Csr::from_edges(n, &edges);
+        let t = g.transpose();
+        let seed: Vec<VertexId> = (0..48).map(|i| (i * 11) as VertexId % n as VertexId).collect();
+        let mut dedup = seed.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        let sparse = VertexSubset::from_ids(n, dedup);
+        let run = |f: &VertexSubset, den: u64, bitvec: bool| {
+            let visited: Vec<AtomicBool> = (0..n).map(|_| AtomicBool::new(false)).collect();
+            let mut scratch = EngineScratch::new(n);
+            let next = edge_map(
+                &g,
+                &t,
+                f,
+                |_s, d| !visited[d as usize].swap(true, Ordering::Relaxed),
+                |_| true,
+                EdgeMapOpts {
+                    threshold_den: den,
+                    bitvector_frontier: bitvec,
+                },
+                &mut scratch,
+            );
+            let mut ids = next.ids();
+            // Recycling must leave the scratch clean (poison asserts it).
+            scratch.recycle(next);
+            scratch.poison(7);
+            ids.sort_unstable();
+            ids
+        };
+        let want = run(&sparse, u64::MAX, false); // sparse input, pull mode
+        for f in [sparse.clone(), sparse.to_dense(), sparse.to_bits()] {
+            for den in [u64::MAX, 1] {
+                for bitvec in [false, true] {
+                    assert_eq!(
+                        run(&f, den, bitvec),
+                        want,
+                        "repr mismatch den={den} bitvec={bitvec}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Reusing one scratch across many calls — with garbage poured into
+    /// the dead regions between calls — changes nothing.
+    #[test]
+    fn scratch_reuse_with_poisoning_is_identical() {
+        let (g, t) = line_graph(64);
+        let run_bfs = |scratch: &mut EngineScratch, poison: bool| {
+            let parent: Vec<AtomicU32> = (0..64).map(|_| AtomicU32::new(u32::MAX)).collect();
+            parent[0].store(0, Ordering::Relaxed);
+            let mut frontier = VertexSubset::single(64, 0);
+            while !frontier.is_empty() {
+                if poison {
+                    scratch.poison(0x5EED);
+                }
+                let next = edge_map(
+                    &g,
+                    &t,
+                    &frontier,
+                    |s, d| {
+                        parent[d as usize]
+                            .compare_exchange(u32::MAX, s, Ordering::Relaxed, Ordering::Relaxed)
+                            .is_ok()
+                    },
+                    |d| parent[d as usize].load(Ordering::Relaxed) == u32::MAX,
+                    EdgeMapOpts::default(),
+                    scratch,
+                );
+                scratch.recycle(std::mem::replace(&mut frontier, next));
+            }
+            scratch.recycle(frontier);
+            parent
+                .into_iter()
+                .map(|a| a.into_inner())
+                .collect::<Vec<_>>()
+        };
+        let mut fresh = EngineScratch::new(64);
+        let want = run_bfs(&mut fresh, false);
+        let mut reused = EngineScratch::new(64);
+        for _ in 0..3 {
+            assert_eq!(run_bfs(&mut reused, true), want);
         }
     }
 

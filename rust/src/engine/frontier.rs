@@ -2,6 +2,12 @@
 //! sparse id list, dense boolean vector, and packed **bitvector** — the
 //! cache optimization "many frameworks adopt" that §6.3 compares against
 //! vertex reordering (Tables 7/8 "Bitvector" rows).
+//!
+//! Dense forms carry an optional **cached member count**: the engine
+//! always knows the count when it builds a frontier (push mode counts
+//! winners at the cursor, pull mode counts during the bit-pack scan), so
+//! `count()`/`is_empty()` on engine-produced frontiers are O(1) instead
+//! of an O(n) rescan per level.
 
 use crate::graph::VertexId;
 
@@ -11,10 +17,18 @@ use crate::graph::VertexId;
 pub enum VertexSubset {
     /// Unsorted list of member ids.
     Sparse { n: usize, ids: Vec<VertexId> },
-    /// One bool per vertex.
-    Dense { flags: Vec<bool> },
+    /// One bool per vertex, plus the member count when the producer
+    /// already knew it.
+    Dense {
+        flags: Vec<bool>,
+        count: Option<usize>,
+    },
     /// One bit per vertex (64 per word) — the cache-compact form.
-    Bits { n: usize, words: Vec<u64> },
+    Bits {
+        n: usize,
+        words: Vec<u64>,
+        count: Option<usize>,
+    },
 }
 
 impl VertexSubset {
@@ -32,6 +46,7 @@ impl VertexSubset {
     pub fn full(n: usize) -> VertexSubset {
         VertexSubset::Dense {
             flags: vec![true; n],
+            count: Some(n),
         }
     }
 
@@ -41,32 +56,69 @@ impl VertexSubset {
     }
 
     pub fn from_flags(flags: Vec<bool>) -> VertexSubset {
-        VertexSubset::Dense { flags }
+        VertexSubset::Dense { flags, count: None }
+    }
+
+    /// Dense subset whose member count the caller already knows (the
+    /// engine's O(1) `count`/`is_empty` fast path).
+    pub fn from_flags_counted(flags: Vec<bool>, count: usize) -> VertexSubset {
+        debug_assert_eq!(count, flags.iter().filter(|&&b| b).count());
+        VertexSubset::Dense {
+            flags,
+            count: Some(count),
+        }
+    }
+
+    /// Bitvector subset with a known member count.
+    pub fn from_words_counted(n: usize, words: Vec<u64>, count: usize) -> VertexSubset {
+        debug_assert_eq!(words.len(), n.div_ceil(64));
+        debug_assert_eq!(
+            count,
+            words.iter().map(|w| w.count_ones() as usize).sum::<usize>()
+        );
+        VertexSubset::Bits {
+            n,
+            words,
+            count: Some(count),
+        }
     }
 
     /// Universe size.
     pub fn n(&self) -> usize {
         match self {
             VertexSubset::Sparse { n, .. } | VertexSubset::Bits { n, .. } => *n,
-            VertexSubset::Dense { flags } => flags.len(),
+            VertexSubset::Dense { flags, .. } => flags.len(),
         }
     }
 
-    /// Number of members.
+    /// Number of members (O(1) for sparse and counted-dense forms).
     pub fn count(&self) -> usize {
         match self {
             VertexSubset::Sparse { ids, .. } => ids.len(),
-            VertexSubset::Dense { flags } => flags.iter().filter(|&&b| b).count(),
-            VertexSubset::Bits { words, .. } => {
-                words.iter().map(|w| w.count_ones() as usize).sum()
+            VertexSubset::Dense { flags, count } => {
+                count.unwrap_or_else(|| flags.iter().filter(|&&b| b).count())
+            }
+            VertexSubset::Bits { words, count, .. } => {
+                count.unwrap_or_else(|| words.iter().map(|w| w.count_ones() as usize).sum())
             }
         }
     }
 
+    /// Emptiness check: O(1) with a cached count, otherwise it
+    /// short-circuits on the first set flag/word instead of counting the
+    /// whole array (the common case — a nonempty frontier — answers
+    /// after a handful of elements).
     pub fn is_empty(&self) -> bool {
         match self {
             VertexSubset::Sparse { ids, .. } => ids.is_empty(),
-            _ => self.count() == 0,
+            VertexSubset::Dense { flags, count } => match count {
+                Some(c) => *c == 0,
+                None => !flags.contains(&true),
+            },
+            VertexSubset::Bits { words, count, .. } => match count {
+                Some(c) => *c == 0,
+                None => words.iter().all(|&w| w == 0),
+            },
         }
     }
 
@@ -75,9 +127,49 @@ impl VertexSubset {
     pub fn contains(&self, v: VertexId) -> bool {
         match self {
             VertexSubset::Sparse { ids, .. } => ids.contains(&v),
-            VertexSubset::Dense { flags } => flags[v as usize],
+            VertexSubset::Dense { flags, .. } => flags[v as usize],
             VertexSubset::Bits { words, .. } => {
                 (words[v as usize / 64] >> (v as usize % 64)) & 1 == 1
+            }
+        }
+    }
+
+    /// Borrow the id list when the subset is already sparse (the engine's
+    /// allocation-free push path).
+    pub fn as_sparse_ids(&self) -> Option<&[VertexId]> {
+        match self {
+            VertexSubset::Sparse { ids, .. } => Some(ids),
+            _ => None,
+        }
+    }
+
+    /// Visit every member without materializing an id list.
+    pub fn for_each(&self, mut f: impl FnMut(VertexId)) {
+        match self {
+            VertexSubset::Sparse { ids, .. } => {
+                for &v in ids {
+                    f(v);
+                }
+            }
+            VertexSubset::Dense { flags, .. } => {
+                for (v, &b) in flags.iter().enumerate() {
+                    if b {
+                        f(v as VertexId);
+                    }
+                }
+            }
+            VertexSubset::Bits { n, words, .. } => {
+                for (wi, &w) in words.iter().enumerate() {
+                    let mut bits = w;
+                    while bits != 0 {
+                        let b = bits.trailing_zeros() as usize;
+                        let v = wi * 64 + b;
+                        if v < *n {
+                            f(v as VertexId);
+                        }
+                        bits &= bits - 1;
+                    }
+                }
             }
         }
     }
@@ -86,24 +178,9 @@ impl VertexSubset {
     pub fn ids(&self) -> Vec<VertexId> {
         match self {
             VertexSubset::Sparse { ids, .. } => ids.clone(),
-            VertexSubset::Dense { flags } => flags
-                .iter()
-                .enumerate()
-                .filter_map(|(i, &b)| b.then_some(i as VertexId))
-                .collect(),
-            VertexSubset::Bits { n, words } => {
-                let mut out = Vec::new();
-                for (wi, &w) in words.iter().enumerate() {
-                    let mut bits = w;
-                    while bits != 0 {
-                        let b = bits.trailing_zeros() as usize;
-                        let v = wi * 64 + b;
-                        if v < *n {
-                            out.push(v as VertexId);
-                        }
-                        bits &= bits - 1;
-                    }
-                }
+            _ => {
+                let mut out = Vec::with_capacity(self.count());
+                self.for_each(|v| out.push(v));
                 out
             }
         }
@@ -115,10 +192,15 @@ impl VertexSubset {
             VertexSubset::Dense { .. } => self.clone(),
             _ => {
                 let mut flags = vec![false; self.n()];
-                for v in self.ids() {
+                let mut count = 0;
+                self.for_each(|v| {
                     flags[v as usize] = true;
+                    count += 1;
+                });
+                VertexSubset::Dense {
+                    flags,
+                    count: Some(count),
                 }
-                VertexSubset::Dense { flags }
             }
         }
     }
@@ -130,10 +212,16 @@ impl VertexSubset {
             _ => {
                 let n = self.n();
                 let mut words = vec![0u64; n.div_ceil(64)];
-                for v in self.ids() {
+                let mut count = 0;
+                self.for_each(|v| {
                     words[v as usize / 64] |= 1u64 << (v as usize % 64);
+                    count += 1;
+                });
+                VertexSubset::Bits {
+                    n,
+                    words,
+                    count: Some(count),
                 }
-                VertexSubset::Bits { n, words }
             }
         }
     }
@@ -153,7 +241,7 @@ impl VertexSubset {
     pub fn bytes(&self) -> usize {
         match self {
             VertexSubset::Sparse { ids, .. } => ids.len() * 4,
-            VertexSubset::Dense { flags } => flags.len(),
+            VertexSubset::Dense { flags, .. } => flags.len(),
             VertexSubset::Bits { words, .. } => words.len() * 8,
         }
     }
@@ -197,6 +285,48 @@ mod tests {
         let f = VertexSubset::full(1 << 16).to_bits();
         assert_eq!(f.bytes(), (1 << 16) / 8);
         assert_eq!(f.count(), 1 << 16);
+    }
+
+    #[test]
+    fn uncounted_dense_short_circuits_and_counts() {
+        let mut flags = vec![false; 1000];
+        flags[1] = true;
+        let d = VertexSubset::from_flags(flags);
+        assert!(!d.is_empty());
+        assert_eq!(d.count(), 1);
+        let e = VertexSubset::from_flags(vec![false; 1000]);
+        assert!(e.is_empty());
+        let w = VertexSubset::from_flags(vec![false; 1000]).to_bits();
+        assert!(w.is_empty());
+    }
+
+    #[test]
+    fn counted_constructors_report_o1() {
+        let mut flags = vec![false; 130];
+        flags[0] = true;
+        flags[129] = true;
+        let d = VertexSubset::from_flags_counted(flags, 2);
+        assert_eq!(d.count(), 2);
+        assert!(!d.is_empty());
+        let mut words = vec![0u64; 3];
+        words[0] = 0b101;
+        let b = VertexSubset::from_words_counted(130, words, 2);
+        assert_eq!(b.count(), 2);
+        assert!(!b.is_empty());
+        assert!(b.contains(0) && b.contains(2) && !b.contains(1));
+    }
+
+    #[test]
+    fn for_each_matches_ids() {
+        let s = VertexSubset::from_ids(200, vec![0, 63, 64, 127, 199]);
+        for form in [s.clone(), s.to_dense(), s.to_bits()] {
+            let mut seen = Vec::new();
+            form.for_each(|v| seen.push(v));
+            seen.sort_unstable();
+            assert_eq!(seen, vec![0, 63, 64, 127, 199]);
+        }
+        assert_eq!(s.as_sparse_ids().unwrap(), &[0, 63, 64, 127, 199]);
+        assert!(s.to_dense().as_sparse_ids().is_none());
     }
 
     #[test]

@@ -6,11 +6,19 @@
 //! "a new SegmentedEdgeMap operation that requires two functions: one for
 //! computing partial results over a segment, and one for merging two
 //! partial results".
+//!
+//! Every iterative entry point is allocation-free in the steady state:
+//! `edge_map` draws all working memory from a caller-owned
+//! [`EngineScratch`], and `segmented_edge_map` reuses caller-owned
+//! per-segment buffers ([`crate::segment::SegmentBuffers`]) across
+//! iterations.
 
 pub mod frontier;
 pub mod edgemap;
+pub mod scratch;
 pub mod segmented_edgemap;
 
 pub use edgemap::{edge_map, vertex_map, EdgeMapOpts};
 pub use frontier::VertexSubset;
+pub use scratch::EngineScratch;
 pub use segmented_edgemap::segmented_edge_map;

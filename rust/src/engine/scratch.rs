@@ -1,0 +1,296 @@
+//! Reusable execution scratch for the frontier engine.
+//!
+//! The paper's whole argument is that iteration state should stay
+//! cache-resident while the edge structure streams from DRAM — yet a
+//! naive `edge_map` re-allocates and zero-fills O(n) output flags on
+//! *every* level, churning pages and evicting exactly the state §4 works
+//! to keep hot. [`EngineScratch`] makes the steady state allocation-free:
+//! each frontier app's `Prepared` state owns one instance and threads it
+//! through every [`super::edge_map`] call.
+//!
+//! Two disciplines keep reuse cheap **and** safe:
+//!
+//! - **Invariant buffers** (`out_flags`, `member_flags`, `member_words`,
+//!   and everything sitting in the flag/word pools) are all-clear between
+//!   calls. `edge_map` restores the invariant with **touched-only
+//!   clearing**: after push mode it resets exactly the flags named by the
+//!   new frontier's id list; after pull mode with a sparse input it
+//!   resets exactly the membership slots that input's ids set. The
+//!   invariant is asserted (not silently re-established) by
+//!   [`EngineScratch::poison`], so a missed clear fails loudly in tests.
+//! - **Dead buffers** (pooled id vectors' spare capacity, the cost
+//!   prefix) carry no information between calls; every use fully rewrites
+//!   what it reads. [`EngineScratch::poison`] fills them with garbage so
+//!   the scratch-parity tests prove nothing leaks through them.
+//!
+//! Ownership contract (see also rust/README.md "Engine scratch & memory
+//! discipline"): the **app** owns the scratch; `edge_map` borrows it per
+//! call; frontiers returned by `edge_map` draw their storage from the
+//! scratch's pools and must eventually be handed back via
+//! [`EngineScratch::recycle`] to close the loop (dropping one instead
+//! merely costs a fresh allocation later — never correctness).
+
+use super::frontier::VertexSubset;
+use crate::graph::VertexId;
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// Reusable buffers for [`super::edge_map`]: double-buffered frontier
+/// flag arrays with touched-only clearing, pooled sparse-id vectors, and
+/// the out-degree prefix used by cost-balanced push mode.
+#[derive(Debug)]
+pub struct EngineScratch {
+    n: usize,
+    /// Push-mode "already in the next frontier" flags. Invariant: all
+    /// `false` between `edge_map` calls (touched-only cleared via the new
+    /// frontier's id list).
+    pub(super) out_flags: Vec<AtomicBool>,
+    /// Pull-mode membership probe, dense-byte form. Invariant: all
+    /// `false` between calls.
+    pub(super) member_flags: Vec<bool>,
+    /// Pull-mode membership probe, packed-bit form (the §6.3 bitvector
+    /// optimization). Invariant: all zero between calls.
+    pub(super) member_words: Vec<u64>,
+    /// Out-degree prefix over the current frontier for cost-balanced push
+    /// (rebuilt from scratch every push; contents dead between calls).
+    pub(super) cost_prefix: Vec<u64>,
+    /// Push-mode winner slots, kept at high-water length so no per-call
+    /// zero-fill is ever needed: only `cursor` slots are written and read
+    /// each call, everything beyond is dead garbage.
+    pub(super) push_slots: Vec<VertexId>,
+    /// Recycled sparse-id vectors (len 0; capacity retained).
+    id_pool: Vec<Vec<VertexId>>,
+    /// Recycled dense flag vectors (len n, all false).
+    flag_pool: Vec<Vec<bool>>,
+    /// Recycled bit-word vectors (len ⌈n/64⌉, all zero).
+    word_pool: Vec<Vec<u64>>,
+    /// High-water mark of bytes held across the run (for `Metrics`).
+    peak_bytes: usize,
+}
+
+impl EngineScratch {
+    /// Scratch for graphs of `n` vertices. The fixed O(n) probe/flag
+    /// arrays are allocated eagerly; pooled buffers grow on demand during
+    /// the first traversal and are reused from then on.
+    pub fn new(n: usize) -> EngineScratch {
+        let words = n.div_ceil(64);
+        let mut s = EngineScratch {
+            n,
+            out_flags: (0..n).map(|_| AtomicBool::new(false)).collect(),
+            member_flags: vec![false; n],
+            member_words: vec![0; words],
+            cost_prefix: Vec::new(),
+            push_slots: Vec::new(),
+            id_pool: Vec::new(),
+            flag_pool: Vec::new(),
+            word_pool: Vec::new(),
+            peak_bytes: 0,
+        };
+        s.update_peak();
+        s
+    }
+
+    /// Universe size this scratch was built for.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Take a cleared id vector from the pool (or a fresh empty one).
+    pub fn take_ids(&mut self) -> Vec<VertexId> {
+        self.id_pool.pop().unwrap_or_default()
+    }
+
+    /// Return an id vector to the pool (its contents are dead).
+    pub fn put_ids(&mut self, mut v: Vec<VertexId>) {
+        v.clear();
+        self.id_pool.push(v);
+        self.update_peak();
+    }
+
+    /// Take an all-false flag vector of len `n` from the pool.
+    pub(super) fn take_flags(&mut self) -> Vec<bool> {
+        self.flag_pool.pop().unwrap_or_else(|| vec![false; self.n])
+    }
+
+    /// Return a flag vector the caller has already restored to all-false
+    /// (touched-only). Debug builds verify the contract.
+    pub(super) fn put_flags_cleared(&mut self, v: Vec<bool>) {
+        debug_assert!(v.iter().all(|&b| !b), "flag buffer returned dirty");
+        debug_assert_eq!(v.len(), self.n);
+        self.flag_pool.push(v);
+        self.update_peak();
+    }
+
+    /// Take an all-zero word vector of len ⌈n/64⌉ from the pool.
+    pub(super) fn take_words(&mut self) -> Vec<u64> {
+        self.word_pool
+            .pop()
+            .unwrap_or_else(|| vec![0; self.n.div_ceil(64)])
+    }
+
+    /// Run `f` over the frontier's members as a contiguous id slice
+    /// without allocating: borrows sparse storage directly, otherwise
+    /// materializes into a pooled vector that returns to the pool
+    /// afterwards. The one place the borrow-or-materialize pool
+    /// discipline lives (BC's backward sweep and friends).
+    pub fn with_frontier_ids<R>(
+        &mut self,
+        frontier: &VertexSubset,
+        f: impl FnOnce(&[VertexId]) -> R,
+    ) -> R {
+        match frontier.as_sparse_ids() {
+            Some(ids) => f(ids),
+            None => {
+                let mut ids = self.take_ids();
+                frontier.for_each(|v| ids.push(v));
+                let r = f(&ids);
+                self.put_ids(ids);
+                r
+            }
+        }
+    }
+
+    /// Recycle a frontier, returning its storage to the pools. Sparse
+    /// storage is reused as-is (contents dead beyond len 0); dense/bit
+    /// storage is restored to the all-clear pool invariant first.
+    pub fn recycle(&mut self, f: VertexSubset) {
+        match f {
+            VertexSubset::Sparse { ids, .. } => self.put_ids(ids),
+            VertexSubset::Dense { mut flags, count } => {
+                // No id list to clear by, so this one is a memset — but
+                // only of a buffer a pull pass (itself O(n)) produced.
+                if count != Some(0) {
+                    flags.fill(false);
+                }
+                if flags.len() == self.n {
+                    self.flag_pool.push(flags);
+                }
+            }
+            VertexSubset::Bits { mut words, count, .. } => {
+                if count != Some(0) {
+                    words.fill(0);
+                }
+                if words.len() == self.n.div_ceil(64) {
+                    self.word_pool.push(words);
+                }
+            }
+        }
+        self.update_peak();
+    }
+
+    /// Bytes currently held by the scratch (checked-out frontiers are
+    /// counted when they come back through [`EngineScratch::recycle`]).
+    pub fn bytes(&self) -> usize {
+        self.out_flags.len()
+            + self.member_flags.len()
+            + self.member_words.len() * 8
+            + self.cost_prefix.capacity() * 8
+            + self.push_slots.capacity() * 4
+            + self.id_pool.iter().map(|v| v.capacity() * 4).sum::<usize>()
+            + self.flag_pool.iter().map(|v| v.len()).sum::<usize>()
+            + self.word_pool.iter().map(|v| v.len() * 8).sum::<usize>()
+    }
+
+    /// High-water mark of [`EngineScratch::bytes`] over the scratch's
+    /// lifetime — what `Metrics` reports as the preallocation cost.
+    pub fn peak_bytes(&self) -> usize {
+        self.peak_bytes
+    }
+
+    fn update_peak(&mut self) {
+        self.peak_bytes = self.peak_bytes.max(self.bytes());
+    }
+
+    /// Test hook: assert the all-clear invariants hold, then fill every
+    /// *dead* region (pooled id storage, the cost prefix) with garbage
+    /// derived from `seed`. Reused-scratch results must be bitwise
+    /// identical to fresh-allocation results no matter what this writes —
+    /// and a missed touched-only clear trips the assertions here instead
+    /// of silently corrupting a later traversal.
+    pub fn poison(&mut self, seed: u64) {
+        assert!(
+            self.out_flags.iter().all(|f| !f.load(Ordering::Relaxed)),
+            "scratch invariant violated: out_flags not cleared"
+        );
+        assert!(
+            self.member_flags.iter().all(|&b| !b),
+            "scratch invariant violated: member_flags not cleared"
+        );
+        assert!(
+            self.member_words.iter().all(|&w| w == 0),
+            "scratch invariant violated: member_words not cleared"
+        );
+        for v in &self.flag_pool {
+            assert!(v.iter().all(|&b| !b), "pooled flag buffer dirty");
+        }
+        for v in &self.word_pool {
+            assert!(v.iter().all(|&w| w == 0), "pooled word buffer dirty");
+        }
+        // Garbage the dead regions without changing capacities: resize up
+        // to capacity writing junk, then truncate back to empty.
+        let junk_id = (seed as u32) | 1;
+        for v in &mut self.id_pool {
+            let cap = v.capacity();
+            v.resize(cap, junk_id);
+            v.clear();
+        }
+        self.push_slots.fill(junk_id);
+        let cap = self.cost_prefix.capacity();
+        self.cost_prefix.clear();
+        self.cost_prefix.resize(cap, seed | 1);
+        self.cost_prefix.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pools_recycle_storage() {
+        let mut s = EngineScratch::new(100);
+        let mut ids = s.take_ids();
+        ids.extend([1u32, 2, 3]);
+        let cap = ids.capacity();
+        s.put_ids(ids);
+        let back = s.take_ids();
+        assert!(back.is_empty());
+        assert!(back.capacity() >= cap.min(3));
+    }
+
+    #[test]
+    fn recycle_restores_invariants() {
+        let mut s = EngineScratch::new(128);
+        s.recycle(VertexSubset::from_flags({
+            let mut f = vec![false; 128];
+            f[3] = true;
+            f
+        }));
+        s.recycle(VertexSubset::from_ids(128, vec![5, 9]).to_bits());
+        // Poison asserts the pools are clean.
+        s.poison(0xDEAD_BEEF);
+        let f = s.take_flags();
+        assert!(f.iter().all(|&b| !b));
+        let w = s.take_words();
+        assert!(w.iter().all(|&x| x == 0));
+    }
+
+    #[test]
+    fn peak_bytes_grows_monotonically() {
+        let mut s = EngineScratch::new(64);
+        let base = s.peak_bytes();
+        assert!(base > 0);
+        let mut ids = s.take_ids();
+        ids.extend(0..64u32);
+        s.put_ids(ids);
+        assert!(s.peak_bytes() >= base);
+        assert!(s.peak_bytes() >= s.bytes());
+    }
+
+    #[test]
+    #[should_panic(expected = "out_flags not cleared")]
+    fn poison_catches_dirty_flags() {
+        let mut s = EngineScratch::new(16);
+        s.out_flags[4].store(true, Ordering::Relaxed);
+        s.poison(1);
+    }
+}

@@ -9,6 +9,12 @@
 //! operation. `contrib(src)` produces the per-edge partial; `merge_op`
 //! folds partials (both within a segment and across segments in the
 //! cache-aware merge).
+//!
+//! The per-segment intermediate vectors are **caller-owned**
+//! ([`SegmentBuffers`], built once per prepared app) and reused across
+//! iterations — CC used to re-allocate O(Σ num_dsts) of them every
+//! sweep. Their contents on entry are irrelevant: the segment pass fully
+//! rewrites every entry the merge reads.
 
 use crate::graph::VertexId;
 use crate::parallel::{parallel_for_cost, UnsafeSlice};
@@ -20,11 +26,15 @@ use crate::segment::{SegmentBuffers, SegmentedCsr};
 /// in-neighbors u)`. Generic in the merge operation, so `+`, `min`, `max`
 /// all work. The float fast path in [`SegmentedCsr::aggregate`] is the
 /// specialization used by PageRank.
+///
+/// `bufs` must be sized for `sg` (see [`SegmentBuffers::with_fill`]);
+/// its contents on entry never influence the result.
 pub fn segmented_edge_map<T, FC, FM>(
     sg: &SegmentedCsr,
     contrib: FC,
     merge_op: FM,
     init: T,
+    bufs: &mut SegmentBuffers<T>,
     out: &mut [T],
 ) where
     T: Copy + Send + Sync,
@@ -32,14 +42,14 @@ pub fn segmented_edge_map<T, FC, FM>(
     FM: Fn(T, T) -> T + Sync,
 {
     assert_eq!(out.len(), sg.num_vertices);
-    // Per-segment generic buffers (not reusing the f64 SegmentBuffers).
-    let mut seg_bufs: Vec<Vec<T>> = sg
-        .segments
-        .iter()
-        .map(|s| vec![init; s.num_dsts()])
-        .collect();
-    for (seg, buf) in sg.segments.iter().zip(seg_bufs.iter_mut()) {
+    assert_eq!(
+        bufs.per_segment.len(),
+        sg.segments.len(),
+        "SegmentBuffers built for a different partition"
+    );
+    for (seg, buf) in sg.segments.iter().zip(bufs.per_segment.iter_mut()) {
         let nd = seg.num_dsts();
+        assert_eq!(buf.len(), nd, "SegmentBuffers built for a different partition");
         let buf_slice = UnsafeSlice::new(buf);
         let total = seg.num_edges() as u64;
         let threshold = (total / (4 * crate::parallel::num_threads() as u64).max(1)).max(256);
@@ -61,6 +71,7 @@ pub fn segmented_edge_map<T, FC, FM>(
         );
     }
     // Cache-aware merge over blocks (generic variant of segment::merge).
+    let seg_bufs: &[Vec<T>] = &bufs.per_segment;
     let plan = &sg.merge_plan;
     out.iter_mut().for_each(|x| *x = init);
     let out_slice = UnsafeSlice::new(out);
@@ -73,7 +84,7 @@ pub fn segmented_edge_map<T, FC, FM>(
         |lo, hi| (lo..hi).map(|b| plan.block_entries(b)).sum(),
         |blo, bhi| {
             for b in blo..bhi {
-                for (si, (seg, vals)) in sg.segments.iter().zip(&seg_bufs).enumerate() {
+                for (si, (seg, vals)) in sg.segments.iter().zip(seg_bufs).enumerate() {
                     let starts = &plan.starts[si];
                     #[allow(clippy::needless_range_loop)] // parallel dst_ids/vals
                     for i in starts[b] as usize..starts[b + 1] as usize {
@@ -122,7 +133,8 @@ mod tests {
         let n = g.num_vertices();
         let vals: Vec<f64> = (0..n).map(|i| (i % 13) as f64).collect();
         let mut generic = vec![0.0; n];
-        segmented_edge_map(&sg, |u| vals[u as usize], |a, b| a + b, 0.0, &mut generic);
+        let mut gbufs = SegmentBuffers::with_fill(&sg, 0.0);
+        segmented_edge_map(&sg, |u| vals[u as usize], |a, b| a + b, 0.0, &mut gbufs, &mut generic);
         let mut bufs = SegmentBuffers::for_graph(&sg);
         let mut fast = vec![0.0; n];
         sg.aggregate(|u| vals[u as usize], &mut bufs, 0.0, &mut fast);
@@ -135,7 +147,8 @@ mod tests {
         let n = g.num_vertices();
         // out[v] = min in-neighbor id (or MAX when none).
         let mut got = vec![u32::MAX; n];
-        segmented_edge_map(&sg, |u| u, |a, b| a.min(b), u32::MAX, &mut got);
+        let mut bufs = SegmentBuffers::with_fill(&sg, 0u32);
+        segmented_edge_map(&sg, |u| u, |a, b| a.min(b), u32::MAX, &mut bufs, &mut got);
         let t = g.transpose();
         for v in 0..n {
             let expect = t.neighbors(v as u32).iter().copied().min().unwrap_or(u32::MAX);
@@ -148,10 +161,37 @@ mod tests {
         let (g, sg) = setup();
         let n = g.num_vertices();
         let mut got = vec![0u64; n];
-        segmented_edge_map(&sg, |_| 1u64, |a, b| a + b, 0, &mut got);
+        let mut bufs = SegmentBuffers::with_fill(&sg, 0u64);
+        segmented_edge_map(&sg, |_| 1u64, |a, b| a + b, 0, &mut bufs, &mut got);
         let indeg = g.in_degrees();
         for v in 0..n {
             assert_eq!(got[v], indeg[v] as u64);
+        }
+    }
+
+    /// Buffer reuse across calls — including buffers pre-filled with
+    /// garbage — never leaks stale state into the result.
+    #[test]
+    fn reused_buffers_match_fresh_even_when_poisoned() {
+        let (g, sg) = setup();
+        let n = g.num_vertices();
+        let vals: Vec<u32> = (0..n as u32).map(|i| i.wrapping_mul(2654435761) % 97).collect();
+        let mut want = vec![u32::MAX; n];
+        let mut fresh = SegmentBuffers::with_fill(&sg, 0u32);
+        let min = |a: u32, b: u32| a.min(b);
+        segmented_edge_map(&sg, |u| vals[u as usize], min, u32::MAX, &mut fresh, &mut want);
+        let mut reused = SegmentBuffers::with_fill(&sg, 0u32);
+        let mut got = vec![0u32; n];
+        for round in 0..3u32 {
+            // Poison: garbage everywhere the previous call wrote.
+            for buf in &mut reused.per_segment {
+                for (i, x) in buf.iter_mut().enumerate() {
+                    *x = (i as u32).wrapping_mul(round.wrapping_add(0x9E37));
+                }
+            }
+            got.fill(round);
+            segmented_edge_map(&sg, |u| vals[u as usize], min, u32::MAX, &mut reused, &mut got);
+            assert_eq!(got, want, "round {round}");
         }
     }
 }

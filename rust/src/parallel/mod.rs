@@ -122,15 +122,26 @@ pub fn parallel_for_cost(
     }
     if num_threads() == 1 {
         // Serial fast path: still honor the threshold so behaviour (and
-        // cache footprint per call) matches the parallel schedule.
-        let mut stack = vec![(0usize, n)];
-        while let Some((lo, hi)) = stack.pop() {
-            if hi - lo <= 1 || cost(lo, hi) <= threshold {
+        // cache footprint per call) matches the parallel schedule. The
+        // stack is a fixed array — splits halve the range, so depth is
+        // bounded by ⌈log2 n⌉ + 1 ≤ 65 and the path stays allocation-free
+        // (required by the engine's zero-allocation steady state, which
+        // tests assert under CAGRA_THREADS=1).
+        let mut stack = [(0usize, 0usize); 128];
+        stack[0] = (0, n);
+        let mut sp = 1usize;
+        while sp > 0 {
+            sp -= 1;
+            let (lo, hi) = stack[sp];
+            // `sp + 2 > len` cannot happen given the depth bound; process
+            // directly rather than overflow if it ever did.
+            if hi - lo <= 1 || cost(lo, hi) <= threshold || sp + 2 > stack.len() {
                 process(lo, hi);
             } else {
                 let mid = lo + (hi - lo) / 2;
-                stack.push((mid, hi));
-                stack.push((lo, mid));
+                stack[sp] = (mid, hi);
+                stack[sp + 1] = (lo, mid);
+                sp += 2;
             }
         }
         return;

@@ -281,17 +281,41 @@ fn build_segment(g: &Csr, seg: &mut Segment, edge_count_hint: usize) {
 
 /// Reusable per-segment intermediate vectors ("Create an array to hold the
 /// intermediate result for each adjacent vertex", §4.1 step 2). Allocated
-/// once, reused every iteration.
+/// once, reused every iteration — generic so the same reuse discipline
+/// covers every [`crate::engine::segmented_edge_map`] element type (CC's
+/// `u32` labels, counts, ...), not just the f64 PageRank/CF path.
+/// Contents are dead between calls: every aggregation pass fully rewrites
+/// each entry before the merge reads it, so no clearing is ever needed.
 #[derive(Debug, Clone)]
-pub struct SegmentBuffers {
-    pub per_segment: Vec<Vec<f64>>,
+pub struct SegmentBuffers<T = f64> {
+    pub per_segment: Vec<Vec<T>>,
 }
 
-impl SegmentBuffers {
-    pub fn for_graph(sg: &SegmentedCsr) -> SegmentBuffers {
+impl<T: Copy> SegmentBuffers<T> {
+    /// Buffers sized for `sg`, seeded with `fill` (the seed value is
+    /// irrelevant to correctness — see the type docs).
+    pub fn with_fill(sg: &SegmentedCsr, fill: T) -> SegmentBuffers<T> {
         SegmentBuffers {
-            per_segment: sg.segments.iter().map(|s| vec![0.0; s.num_dsts()]).collect(),
+            per_segment: sg
+                .segments
+                .iter()
+                .map(|s| vec![fill; s.num_dsts()])
+                .collect(),
         }
+    }
+
+    /// Bytes held (for scratch-footprint metrics).
+    pub fn bytes(&self) -> usize {
+        self.per_segment
+            .iter()
+            .map(|v| v.len() * std::mem::size_of::<T>())
+            .sum()
+    }
+}
+
+impl SegmentBuffers<f64> {
+    pub fn for_graph(sg: &SegmentedCsr) -> SegmentBuffers<f64> {
+        SegmentBuffers::with_fill(sg, 0.0)
     }
 }
 

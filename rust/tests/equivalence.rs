@@ -119,7 +119,7 @@ fn bfs_and_bc_and_sssp_agree_with_references() {
     // BFS levels.
     let want_levels = bfs::reference_levels(&g, src);
     for &v in bfs::Variant::all() {
-        let p = bfs::Prepared::new(&g, v);
+        let mut p = bfs::Prepared::new(&g, v);
         let parents = p.run(src);
         let got = bfs::levels_from_parents(&g, src, &parents);
         assert_eq!(got, want_levels, "bfs {}", v.name());
@@ -183,7 +183,7 @@ fn registry_pipeline_matches_typed_paths() {
     let sources = bc::default_sources(&g, 3);
     for &v in bfs::Variant::all() {
         let mut dyn_prep = registry_prepare("bfs", v.name(), &g, &cfg);
-        let prep = bfs::Prepared::new(&g, v);
+        let mut prep = bfs::Prepared::new(&g, v);
         let mut reached = 0usize;
         for &s in &sources {
             dyn_prep.run_source(s);
@@ -213,7 +213,7 @@ fn registry_pipeline_matches_typed_paths() {
     // SSSP: finite-distance mass (Bellman-Ford distances are unique).
     for &v in sssp::Variant::all() {
         let mut dyn_prep = registry_prepare("sssp", v.name(), &g, &cfg);
-        let prep = sssp::Prepared::new(&g, v);
+        let mut prep = sssp::Prepared::new(&g, v);
         let mut total = 0.0;
         for &s in &sources {
             dyn_prep.run_source(s);
