@@ -78,39 +78,6 @@ pub fn time_app_sources(
     m.secs()
 }
 
-/// Simulated stall estimate for one frontier-app pull sweep (BC/BFS,
-/// Tables 7/8): per destination, read each in-neighbor's frontier flag
-/// (dense byte, or packed bit when `bitvector`) plus `vertex_elem` bytes
-/// of per-vertex data (σ for BC; 0 for BFS's activeness-only sweep).
-pub fn frontier_stall_estimate(
-    g_pull: &cagra::graph::Csr,
-    vertex_elem: u64,
-    bitvector: bool,
-    llc_bytes: usize,
-    sample_every: usize,
-) -> cagra::cache::StallEstimate {
-    use cagra::cache::trace::{Access, EDGE_BASE, OUT_BASE, VERTEX_BASE};
-    let step = sample_every.max(1);
-    let frontier_base: u64 = 1 << 43;
-    let mut trace = Vec::new();
-    for v in (0..g_pull.num_vertices()).step_by(step) {
-        let lo = g_pull.offsets[v];
-        for (k, &u) in g_pull.neighbors(v as u32).iter().enumerate() {
-            trace.push(Access::EdgeRead(EDGE_BASE + (lo + k as u64) * 4));
-            // Frontier membership probe (the bitvector optimization
-            // shrinks this footprint 8x).
-            let faddr = if bitvector { u as u64 / 8 } else { u as u64 };
-            trace.push(Access::VertexRead(frontier_base + faddr));
-            if vertex_elem > 0 {
-                trace.push(Access::VertexRead(VERTEX_BASE + u as u64 * vertex_elem));
-            }
-        }
-        trace.push(Access::OutWrite(OUT_BASE + v as u64 * 8));
-    }
-    let mut hier = cagra::cache::Hierarchy::scaled_default(llc_bytes);
-    cagra::cache::stall::estimate(&trace, &mut hier, cagra::cache::StallModel::default())
-}
-
 /// Format "0.141s (1.75x)" like the paper's tables.
 pub fn cell(secs: f64, baseline: f64) -> String {
     format!(

@@ -1,15 +1,17 @@
 //! Table 7: total cycles stalled on memory for BC under the optimization
 //! grid {baseline, reordering, bitvector, reordering+bitvector} × four
-//! graphs. Stalls are **simulated** (no PMU in this environment —
-//! DESIGN.md §3); the paper's shape to reproduce: every optimization
-//! reduces stalls on the big graphs, the combination is best, and
-//! LiveJournal (cache-resident) barely moves.
+//! graphs. Stalls are **simulated** through the registry's per-app
+//! `GraphApp::simulate` (the same estimate `cagra run --analyze`
+//! reports; `--pmu` reads the hardware counters this model is validated
+//! against — DESIGN.md §3). The paper's shape to reproduce: every
+//! optimization reduces stalls on the big graphs, the combination is
+//! best, and LiveJournal (cache-resident) barely moves.
 
 mod common;
 
+use cagra::apps::{registry, AppKind};
 use cagra::bench::Table;
 use cagra::graph::datasets::GRAPH_DATASETS;
-use cagra::reorder::{self, Ordering as VOrdering};
 
 const VARIANTS: [&str; 4] = ["baseline", "reordering", "bitvector", "reordering+bitvector"];
 
@@ -26,20 +28,18 @@ fn main() {
         for name in GRAPH_DATASETS {
             let ds = common::load(name);
             let g = &ds.graph;
-            let sample = (g.num_edges() / 4_000_000).max(1);
-            let pull = g.transpose();
-            let (reord, _) = reorder::reorder(g, VOrdering::CoarseDegreeSort);
-            let reord_pull = reord.transpose();
-            // BC reads σ (8B) + frontier per edge.
-            let cells: Vec<f64> = [
-                common::frontier_stall_estimate(&pull, 8, false, cfg.llc_bytes, sample),
-                common::frontier_stall_estimate(&reord_pull, 8, false, cfg.llc_bytes, sample),
-                common::frontier_stall_estimate(&pull, 8, true, cfg.llc_bytes, sample),
-                common::frontier_stall_estimate(&reord_pull, 8, true, cfg.llc_bytes, sample),
-            ]
-            .iter()
-            .map(|e| e.stall_cycles * sample as f64 / 1e9)
-            .collect();
+            // BC reads σ (8B) + frontier per edge; see apps::bc::App::simulate.
+            let cells: Vec<f64> = VARIANTS
+                .iter()
+                .map(|variant| {
+                    let kind = AppKind::parse("bc", variant)
+                        .unwrap_or_else(|e| panic!("parsing bc/{variant}: {e:#}"));
+                    let est = registry::app_for(kind)
+                        .simulate(g, &cfg, kind)
+                        .expect("bc registers a simulation");
+                    est.stall_cycles / 1e9
+                })
+                .collect();
             s.set_scope(name);
             for (variant, cell) in VARIANTS.iter().zip(&cells) {
                 s.record(variant, "GCycles", *cell);

@@ -1,13 +1,15 @@
-//! Table 8: simulated stall cycles for BFS under the optimization grid.
-//! BFS is activeness-only (no per-vertex payload beyond the parent
-//! check, modeled as 4B), so the absolute stalls are smaller than BC's
-//! (Table 7) and the bitvector optimization matters relatively more.
+//! Table 8: simulated stall cycles for BFS under the optimization grid,
+//! routed through the registry's per-app `GraphApp::simulate` (the same
+//! estimate `cagra run --analyze` reports). BFS is activeness-only (no
+//! per-vertex payload beyond the 4B parent check), so the absolute
+//! stalls are smaller than BC's (Table 7) and the bitvector
+//! optimization matters relatively more.
 
 mod common;
 
+use cagra::apps::{registry, AppKind};
 use cagra::bench::Table;
 use cagra::graph::datasets::GRAPH_DATASETS;
-use cagra::reorder::{self, Ordering as VOrdering};
 
 const VARIANTS: [&str; 4] = ["baseline", "reordering", "bitvector", "reordering+bitvector"];
 
@@ -24,20 +26,18 @@ fn main() {
         for name in GRAPH_DATASETS {
             let ds = common::load(name);
             let g = &ds.graph;
-            let sample = (g.num_edges() / 4_000_000).max(1);
-            let pull = g.transpose();
-            let (reord, _) = reorder::reorder(g, VOrdering::CoarseDegreeSort);
-            let reord_pull = reord.transpose();
-            // BFS: parent probe (4B) + frontier per edge.
-            let cells: Vec<f64> = [
-                common::frontier_stall_estimate(&pull, 4, false, cfg.llc_bytes, sample),
-                common::frontier_stall_estimate(&reord_pull, 4, false, cfg.llc_bytes, sample),
-                common::frontier_stall_estimate(&pull, 4, true, cfg.llc_bytes, sample),
-                common::frontier_stall_estimate(&reord_pull, 4, true, cfg.llc_bytes, sample),
-            ]
-            .iter()
-            .map(|e| e.stall_cycles * sample as f64 / 1e9)
-            .collect();
+            // BFS: parent probe (4B) + frontier per edge; see apps::bfs::App::simulate.
+            let cells: Vec<f64> = VARIANTS
+                .iter()
+                .map(|variant| {
+                    let kind = AppKind::parse("bfs", variant)
+                        .unwrap_or_else(|e| panic!("parsing bfs/{variant}: {e:#}"));
+                    let est = registry::app_for(kind)
+                        .simulate(g, &cfg, kind)
+                        .expect("bfs registers a simulation");
+                    est.stall_cycles / 1e9
+                })
+                .collect();
             s.set_scope(name);
             for (variant, cell) in VARIANTS.iter().zip(&cells) {
                 s.record(variant, "GCycles", *cell);

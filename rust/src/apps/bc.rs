@@ -14,6 +14,7 @@
 //! recycled after the backward sweep.
 
 use super::app::{AppKind, ExecutionShape, GraphApp, PreparedApp, VariantInfo};
+use crate::cache::StallEstimate;
 use crate::coordinator::SystemConfig;
 use crate::engine::{edge_map, EdgeMapOpts, EngineScratch, VertexSubset};
 use crate::graph::{Csr, VertexId};
@@ -417,6 +418,20 @@ impl GraphApp for App {
             prep: Prepared::new_cached(g, cfg, v, store),
             scores: vec![0.0; n],
         }))
+    }
+
+    /// One pull sweep reading frontier membership plus each neighbor's
+    /// 8-byte σ path count (Table 7's access mix).
+    fn simulate(&self, g: &Csr, cfg: &SystemConfig, kind: AppKind) -> Option<StallEstimate> {
+        let AppKind::Bc(v) = kind else { return None };
+        let bitvector = matches!(v, Variant::Bitvector | Variant::ReorderedBitvector);
+        Some(crate::cache::stall::simulate_frontier_app(
+            g,
+            cfg.llc_bytes,
+            8,
+            v.reordered(),
+            bitvector,
+        ))
     }
 }
 

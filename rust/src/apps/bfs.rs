@@ -9,6 +9,7 @@
 //! `tests/zero_alloc.rs`).
 
 use super::app::{AppKind, ExecutionShape, GraphApp, PreparedApp, VariantInfo};
+use crate::cache::StallEstimate;
 use crate::coordinator::SystemConfig;
 use crate::engine::{edge_map, EdgeMapOpts, EngineScratch, VertexSubset};
 use crate::graph::{Csr, VertexId};
@@ -296,6 +297,19 @@ impl GraphApp for App {
             prep: Prepared::new_cached(g, cfg, v, store),
             reached: 0,
         }))
+    }
+
+    /// One pull sweep: frontier membership plus the 4-byte parent probe —
+    /// the smallest per-vertex payload of the frontier apps (Table 8).
+    fn simulate(&self, g: &Csr, cfg: &SystemConfig, kind: AppKind) -> Option<StallEstimate> {
+        let AppKind::Bfs(v) = kind else { return None };
+        Some(crate::cache::stall::simulate_frontier_app(
+            g,
+            cfg.llc_bytes,
+            4,
+            v.reordered(),
+            v.bitvector(),
+        ))
     }
 }
 

@@ -274,7 +274,7 @@ mod tests {
         // Ranking of the top vertices must agree.
         let top = |xs: &[f64]| {
             let mut idx: Vec<usize> = (0..n).collect();
-            idx.sort_by(|&a, &b| xs[b].partial_cmp(&xs[a]).unwrap());
+            idx.sort_by(|&a, &b| xs[b].total_cmp(&xs[a]));
             idx.truncate(10);
             idx
         };

@@ -8,6 +8,7 @@
 //! once the first traversal has sized the scratch pools.
 
 use super::app::{AppKind, ExecutionShape, GraphApp, PreparedApp, VariantInfo};
+use crate::cache::StallEstimate;
 use crate::coordinator::SystemConfig;
 use crate::engine::{edge_map, EdgeMapOpts, EngineScratch, VertexSubset};
 use crate::graph::{Csr, VertexId};
@@ -266,6 +267,19 @@ impl GraphApp for App {
             prep: Prepared::new_cached(g, cfg, v, store),
             total: 0.0,
         }))
+    }
+
+    /// One pull relaxation sweep: frontier membership plus each
+    /// neighbor's 8-byte tentative distance (no bitvector variant).
+    fn simulate(&self, g: &Csr, cfg: &SystemConfig, kind: AppKind) -> Option<StallEstimate> {
+        let AppKind::Sssp(v) = kind else { return None };
+        Some(crate::cache::stall::simulate_frontier_app(
+            g,
+            cfg.llc_bytes,
+            8,
+            matches!(v, Variant::Reordered),
+            false,
+        ))
     }
 }
 

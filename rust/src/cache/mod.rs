@@ -2,8 +2,10 @@
 //! ([`sim`]), the paper's §5 analytical miss-rate model ([`model`]),
 //! memory-trace generation for the graph apps ([`trace`]), and the
 //! stall-cycle estimator ([`stall`]) that substitutes for the paper's
-//! `perf`-measured "cycles stalled on memory" (no PMU access in this
-//! environment — DESIGN.md §3).
+//! `perf`-measured "cycles stalled on memory". When the hardware PMU is
+//! reachable, [`crate::obs::pmu`] reads the real counters alongside this
+//! simulation so the model can be validated against measurement
+//! (DESIGN.md §3).
 
 pub mod sim;
 pub mod model;

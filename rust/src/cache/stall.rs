@@ -38,7 +38,7 @@ impl Default for StallModel {
 }
 
 /// Result of a stall estimation run.
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct StallEstimate {
     pub accesses: u64,
     pub stall_cycles: f64,
@@ -112,6 +112,50 @@ pub fn estimate_pull_iteration(
     let trace = super::trace::full_trace(g_pull, elem_bytes, sample_every);
     let mut hier = Hierarchy::scaled_default(llc_bytes);
     estimate(&trace, &mut hier, StallModel::default())
+}
+
+/// Estimate one frontier-app pull sweep (BFS/BC/SSSP, Tables 7/8) with
+/// the default scaled hierarchy. See [`super::trace::frontier_trace`]
+/// for the access-stream shape.
+pub fn estimate_frontier_iteration(
+    g_pull: &crate::graph::Csr,
+    vertex_elem: u64,
+    bitvector: bool,
+    llc_bytes: usize,
+    sample_every: usize,
+) -> StallEstimate {
+    let trace = super::trace::frontier_trace(g_pull, vertex_elem, bitvector, sample_every);
+    let mut hier = Hierarchy::scaled_default(llc_bytes);
+    estimate(&trace, &mut hier, StallModel::default())
+}
+
+/// Whole-iteration frontier-app estimate, registry-ready: samples the
+/// trace on big graphs (one destination in every `m/4M`) and scales the
+/// totals back up by the sample factor, so `stall_cycles`, `accesses`
+/// and `llc_misses` are comparable across graph sizes while the miss
+/// *rate* stays the sampled measurement. `reordered` applies the §3.3
+/// coarse degree sort first, mirroring the reordering variants.
+pub fn simulate_frontier_app(
+    g: &crate::graph::Csr,
+    llc_bytes: usize,
+    vertex_elem: u64,
+    reordered: bool,
+    bitvector: bool,
+) -> StallEstimate {
+    let sample = (g.num_edges() / 4_000_000).max(1);
+    let pull = if reordered {
+        let (h, _) = crate::reorder::reorder(g, crate::reorder::Ordering::CoarseDegreeSort);
+        h.transpose()
+    } else {
+        g.transpose()
+    };
+    let est = estimate_frontier_iteration(&pull, vertex_elem, bitvector, llc_bytes, sample);
+    StallEstimate {
+        accesses: est.accesses * sample as u64,
+        stall_cycles: est.stall_cycles * sample as f64,
+        llc_misses: est.llc_misses * sample as u64,
+        llc_miss_rate: est.llc_miss_rate,
+    }
 }
 
 /// Estimate a segmented iteration's stalls (for the Fig 2/9 comparisons).

@@ -35,6 +35,8 @@ impl Access {
 pub const VERTEX_BASE: u64 = 0;
 pub const EDGE_BASE: u64 = 1 << 40;
 pub const OUT_BASE: u64 = 1 << 41;
+/// Frontier membership flags (the frontier apps' extra random stream).
+pub const FRONTIER_BASE: u64 = 1 << 43;
 
 /// The random vertex-data access stream of a pull-mode sweep over `g`
 /// (destinations in id order, reading each in-neighbor's data).
@@ -68,6 +70,35 @@ pub fn full_trace(g_pull: &Csr, elem_bytes: u64, sample_every: usize) -> Vec<Acc
         }
         let _ = hi;
         out.push(Access::OutWrite(OUT_BASE + v as u64 * elem_bytes));
+    }
+    out
+}
+
+/// One frontier-app pull sweep (BFS/BC/SSSP — Tables 7/8): per
+/// destination, a sequential edge read plus a random *frontier
+/// membership* probe per in-neighbor (dense byte, or packed bit when
+/// `bitvector` — an 8x footprint shrink), plus `vertex_elem` bytes of
+/// per-vertex payload when `vertex_elem > 0` (8B σ for BC, 8B distances
+/// for SSSP, the 4B parent probe for BFS), then one output write.
+pub fn frontier_trace(
+    g_pull: &Csr,
+    vertex_elem: u64,
+    bitvector: bool,
+    sample_every: usize,
+) -> Vec<Access> {
+    let step = sample_every.max(1);
+    let mut out = Vec::new();
+    for v in (0..g_pull.num_vertices()).step_by(step) {
+        let lo = g_pull.offsets[v];
+        for (k, &u) in g_pull.neighbors(v as VertexId).iter().enumerate() {
+            out.push(Access::EdgeRead(EDGE_BASE + (lo + k as u64) * 4));
+            let faddr = if bitvector { u as u64 / 8 } else { u as u64 };
+            out.push(Access::VertexRead(FRONTIER_BASE + faddr));
+            if vertex_elem > 0 {
+                out.push(Access::VertexRead(VERTEX_BASE + u as u64 * vertex_elem));
+            }
+        }
+        out.push(Access::OutWrite(OUT_BASE + v as u64 * 8));
     }
     out
 }

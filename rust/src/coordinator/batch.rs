@@ -91,6 +91,19 @@ fn parse_job(line: &str) -> Result<JobSpec> {
 /// most once, and only if the config enables the store and some job can
 /// use it). Jobs run in order; the first failure aborts the batch.
 pub fn run_batch(specs: &[JobSpec], cfg: &SystemConfig) -> Result<Vec<JobResult>> {
+    run_batch_with(specs, cfg, |_, _, _| Ok(()))
+}
+
+/// [`run_batch`] with a per-job observer called after each job completes
+/// (and before the next one starts), while the job's recorder events are
+/// still drainable. `cagra batch --report-dir` uses it to emit one run
+/// report per job; the first callback error aborts the batch like a job
+/// failure would.
+pub fn run_batch_with(
+    specs: &[JobSpec],
+    cfg: &SystemConfig,
+    mut after_job: impl FnMut(usize, &JobSpec, &JobResult) -> Result<()>,
+) -> Result<Vec<JobResult>> {
     let store = if cfg.store_enabled
         && specs
             .iter()
@@ -110,7 +123,7 @@ pub fn run_batch(specs: &[JobSpec], cfg: &SystemConfig) -> Result<Vec<JobResult>
         .iter()
         .enumerate()
         .map(|(i, spec)| {
-            run_job_with_store(spec, cfg, store.as_ref()).with_context(|| {
+            let result = run_job_with_store(spec, cfg, store.as_ref()).with_context(|| {
                 format!(
                     "batch job {} ({}/{} on {})",
                     i + 1,
@@ -118,7 +131,9 @@ pub fn run_batch(specs: &[JobSpec], cfg: &SystemConfig) -> Result<Vec<JobResult>
                     spec.app.variant_name(),
                     spec.dataset
                 )
-            })
+            })?;
+            after_job(i, spec, &result)?;
+            Ok(result)
         })
         .collect()
 }

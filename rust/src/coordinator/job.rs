@@ -34,6 +34,10 @@ pub struct JobSpec {
     pub num_sources: usize,
     /// Attach simulated memory-system metrics (slower).
     pub analyze_memory: bool,
+    /// Read hardware PMU counters (perf_event_open) around each phase and
+    /// execution unit. Runtime-probed: degrades to a warning where the
+    /// syscall is blocked (containers, CI) or the `pmu` feature is off.
+    pub collect_pmu: bool,
     pub scale: f64,
     /// Per-job override of [`SystemConfig::delta_epsilon`] (PageRank-Delta
     /// activeness threshold). `None` keeps the system-wide value — app
@@ -49,6 +53,7 @@ impl Default for JobSpec {
             iters: 10,
             num_sources: 12,
             analyze_memory: false,
+            collect_pmu: false,
             scale: 1.0,
             delta_epsilon: None,
         }
@@ -96,10 +101,33 @@ pub fn run_job_with_store(
         None => cfg,
     };
     let mut metrics = Metrics::default();
+    // Hardware counters are opt-in and probed once per job; every
+    // measurement below degrades to recorder-only when the group is None.
+    let mut pmu_group = if spec.collect_pmu {
+        let group = crate::obs::pmu::PmuGroup::open();
+        if group.is_none() {
+            crate::log_warn!(
+                "PMU counters unavailable (perf_event_open failed or unsupported \
+                 platform/feature); continuing without hardware counters"
+            );
+        }
+        group
+    } else {
+        None
+    };
+    let mut pmu = crate::obs::PmuMetrics::default();
+    let t_load = crate::obs::recorder::timestamp();
+    if let Some(pg) = &mut pmu_group {
+        pg.start();
+    }
     let (ds, load_s): (Dataset, f64) = {
         let (r, s) = time(|| datasets::load_scaled(&spec.dataset, spec.scale));
         (r?, s)
     };
+    if let Some(pg) = &mut pmu_group {
+        pmu.phases.push(("load".to_string(), pg.stop_and_read()));
+    }
+    crate::obs::recorder::record_phase("load", t_load);
     metrics.phases.add("load", load_s);
     metrics.edges = ds.graph.num_edges() as u64;
     let g = &ds.graph;
@@ -133,26 +161,52 @@ pub fn run_job_with_store(
     let scope = store.map(|s| s.begin_scope());
     let ctx = match store {
         Some(s) => {
+            let t_fp = crate::obs::recorder::timestamp();
             let (fp, fp_s) = time(|| fingerprint::fingerprint_dataset(&spec.dataset, spec.scale, g));
+            crate::obs::recorder::record_phase("fingerprint", t_fp);
             metrics.phases.add("fingerprint", fp_s);
             let sid = scope.as_ref().expect("scope opened with store").id();
             Some(StoreCtx::scoped(s, fp, sid))
         }
         None => None,
     };
+    let t_prep = crate::obs::recorder::timestamp();
+    if let Some(pg) = &mut pmu_group {
+        pg.start();
+    }
     let (prep, prep_s) = time(|| app.prepare(g, cfg, spec.app, ctx));
     let mut prep = prep?;
+    if let Some(pg) = &mut pmu_group {
+        pmu.phases.push(("preprocess".to_string(), pg.stop_and_read()));
+    }
+    crate::obs::recorder::record_phase("preprocess", t_prep);
     metrics.phases.add("preprocess", prep_s);
     match prep.shape() {
         ExecutionShape::Iterative => {
-            for _ in 0..spec.iters {
+            for i in 0..spec.iters {
+                let t0 = crate::obs::recorder::timestamp();
+                if let Some(pg) = &mut pmu_group {
+                    pg.start();
+                }
                 let (_, s) = time(|| prep.step());
+                if let Some(pg) = &mut pmu_group {
+                    pmu.iters.push(pg.stop_and_read());
+                }
+                crate::obs::recorder::record_iter(t0, i as u64, 0);
                 metrics.iter_seconds.push(s);
             }
         }
         ExecutionShape::PerSource => {
-            for &src in &default_sources(g, spec.num_sources) {
+            for (i, &src) in default_sources(g, spec.num_sources).iter().enumerate() {
+                let t0 = crate::obs::recorder::timestamp();
+                if let Some(pg) = &mut pmu_group {
+                    pg.start();
+                }
                 let (_, s) = time(|| prep.run_source(src));
+                if let Some(pg) = &mut pmu_group {
+                    pmu.iters.push(pg.stop_and_read());
+                }
+                crate::obs::recorder::record_iter(t0, i as u64, src as u64);
                 metrics.iter_seconds.push(s);
             }
         }
@@ -161,7 +215,14 @@ pub fn run_job_with_store(
         ExecutionShape::OneShot => {}
     }
     if spec.analyze_memory {
-        metrics.stalls = app.simulate(g, cfg, spec.app);
+        let t_sim = crate::obs::recorder::timestamp();
+        let (est, sim_s) = time(|| app.simulate(g, cfg, spec.app));
+        crate::obs::recorder::record_phase("simulate", t_sim);
+        metrics.phases.add("simulate", sim_s);
+        metrics.stalls = est;
+    }
+    if pmu_group.is_some() {
+        metrics.pmu = Some(pmu);
     }
     // Reusable-scratch footprint (peak): the memory the app holds so its
     // steady state allocates nothing. Read after execution so engine

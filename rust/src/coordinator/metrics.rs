@@ -1,7 +1,9 @@
-//! Run metrics: timing phases plus the simulated memory-system statistics
-//! that substitute for the paper's PMU counters (DESIGN.md §3).
+//! Run metrics: timing phases plus memory-system statistics — the
+//! simulated stall estimate and, when requested and reachable, the real
+//! PMU counters it is validated against (DESIGN.md §3).
 
 use crate::cache::{StallEstimate};
+use crate::obs::PmuMetrics;
 use crate::store::StoreStats;
 use crate::util::timer::PhaseTimer;
 
@@ -17,6 +19,10 @@ pub struct Metrics {
     /// Simulated stall estimate for one representative iteration, if the
     /// job asked for memory-system analysis.
     pub stalls: Option<StallEstimate>,
+    /// Hardware PMU counters (perf_event_open), when the job asked for
+    /// them and the platform exposes them. Complements `stalls`: the
+    /// measured side of the sim-vs-hardware validation (DESIGN.md §3).
+    pub pmu: Option<PmuMetrics>,
     /// Edges processed per iteration.
     pub edges: u64,
     /// Artifact-store snapshot, when the job ran with the store enabled.
@@ -37,7 +43,7 @@ impl Metrics {
             return 0.0;
         }
         let mut s = self.iter_seconds.clone();
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        s.sort_by(f64::total_cmp);
         s[s.len() / 2]
     }
 
@@ -68,6 +74,22 @@ impl Metrics {
                 s.stalls_per_access(),
                 s.llc_miss_rate * 100.0
             ));
+        }
+        if let Some(p) = &self.pmu {
+            let t = p.total();
+            match t.llc_miss_rate() {
+                Some(rate) => out.push_str(&format!(
+                    "pmu: {} cycles, {} instructions, LLC miss rate {:.1}% ({} refs)\n",
+                    t.cycles,
+                    t.instructions,
+                    rate * 100.0,
+                    t.cache_references
+                )),
+                None => out.push_str(&format!(
+                    "pmu: {} cycles, {} instructions (LLC counters unavailable)\n",
+                    t.cycles, t.instructions
+                )),
+            }
         }
         if let Some(s) = &self.store {
             out.push_str(&format!(
@@ -128,5 +150,19 @@ mod tests {
         assert!(m.render().contains("3 hits, 1 misses"));
         m.scratch_bytes = Some(2 * 1024 * 1024);
         assert!(m.render().contains("engine scratch: 2.0 MiB"));
+        m.pmu = Some(crate::obs::PmuMetrics {
+            phases: vec![(
+                "load".to_string(),
+                crate::obs::PmuCounters {
+                    cycles: 100,
+                    instructions: 200,
+                    cache_references: 50,
+                    cache_misses: 10,
+                },
+            )],
+            iters: Vec::new(),
+        });
+        assert!(m.render().contains("pmu: 100 cycles, 200 instructions"));
+        assert!(m.render().contains("LLC miss rate 20.0% (50 refs)"));
     }
 }

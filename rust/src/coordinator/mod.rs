@@ -8,6 +8,6 @@ pub mod config;
 pub mod job;
 pub mod metrics;
 
-pub use batch::{parse_batch, run_batch};
+pub use batch::{parse_batch, run_batch, run_batch_with};
 pub use config::SystemConfig;
 pub use job::{run_job, run_job_with_store, AppKind, JobResult, JobSpec};

@@ -91,6 +91,7 @@ where
         g.num_vertices(),
         "EngineScratch sized for a different graph"
     );
+    let t0 = crate::obs::recorder::timestamp();
     let m = g.num_edges() as u64;
     // Direction heuristic: count and degree-sum the members. Sparse
     // frontiers are read in place; dense forms are materialized into a
@@ -115,14 +116,18 @@ where
             }
         };
     let dense = out_work + count as u64 > m / opts.threshold_den.max(1);
-    if dense {
+    let out = if dense {
         if let Some(ids) = owned {
             scratch.put_ids(ids);
         }
         edge_map_pull(g_in, frontier, update, cond, opts, scratch)
     } else {
         edge_map_push(g, frontier, owned, out_work, update, cond, scratch)
-    }
+    };
+    // O(1): the new frontier's count is cached at construction.
+    let next = out.count() as u64;
+    crate::obs::recorder::record_edge_map_level(t0, count as u64, out_work, next, dense);
+    out
 }
 
 /// Push mode: cost-balanced parallel loop over frontier vertices,

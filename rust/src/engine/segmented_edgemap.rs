@@ -47,7 +47,8 @@ pub fn segmented_edge_map<T, FC, FM>(
         sg.segments.len(),
         "SegmentBuffers built for a different partition"
     );
-    for (seg, buf) in sg.segments.iter().zip(bufs.per_segment.iter_mut()) {
+    for (si, (seg, buf)) in sg.segments.iter().zip(bufs.per_segment.iter_mut()).enumerate() {
+        let t0 = crate::obs::recorder::timestamp();
         let nd = seg.num_dsts();
         assert_eq!(buf.len(), nd, "SegmentBuffers built for a different partition");
         let buf_slice = UnsafeSlice::new(buf);
@@ -69,8 +70,11 @@ pub fn segmented_edge_map<T, FC, FM>(
                 }
             },
         );
+        let buf_bytes = (nd * std::mem::size_of::<T>()) as u64;
+        crate::obs::recorder::record_segment(t0, si as u64, total, buf_bytes);
     }
     // Cache-aware merge over blocks (generic variant of segment::merge).
+    let t_merge = crate::obs::recorder::timestamp();
     let seg_bufs: &[Vec<T>] = &bufs.per_segment;
     let plan = &sg.merge_plan;
     out.iter_mut().for_each(|x| *x = init);
@@ -99,6 +103,7 @@ pub fn segmented_edge_map<T, FC, FM>(
             }
         },
     );
+    crate::obs::recorder::record_merge(t_merge);
 }
 
 /// Reusable f64 entry point mirroring the Ligra-extension signature, on

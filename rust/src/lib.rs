@@ -45,3 +45,4 @@ pub mod baselines;
 pub mod runtime;
 pub mod coordinator;
 pub mod bench;
+pub mod obs;

@@ -23,6 +23,7 @@ use cagra::bench::report::BenchFile;
 use cagra::bench::suite::SUITES;
 use cagra::coordinator::{run_job, JobSpec, SystemConfig};
 use cagra::graph::datasets;
+use cagra::obs::RunReport;
 use cagra::reorder;
 use cagra::segment;
 use cagra::store::ArtifactStore;
@@ -31,7 +32,7 @@ use cagra::util::{config::Config, fmt_bytes, fmt_count};
 
 const SUBCOMMANDS: &[&str] = &[
     "run", "batch", "apps", "gen", "inspect", "simulate", "expansion", "cache", "bench",
-    "artifacts", "help",
+    "trace", "artifacts", "help",
 ];
 
 fn main() {
@@ -46,6 +47,7 @@ fn main() {
         Some("expansion") => cmd_expansion(&args),
         Some("cache") => cmd_cache(&args),
         Some("bench") => cmd_bench(&args),
+        Some("trace") => cmd_trace(&args),
         Some("artifacts") => cmd_artifacts(),
         _ => {
             usage();
@@ -68,9 +70,11 @@ fn usage() {
          \x20            --graph <dataset> --iters N [--sources N] [--analyze] [--scale F] [--config FILE]\n\
          \x20            [--delta-epsilon F]   per-job app-knob override (PageRank-Delta threshold)\n\
          \x20            [--store] [--store-dir DIR] [--store-cap BYTES]   persist preprocessing artifacts\n\
+         \x20            [--report FILE] [--pmu]   versioned run report (or CAGRA_RUN_REPORT env)\n\
          \x20 batch      run a job list over ONE shared artifact store    <jobs.txt> [--store ...]\n\
          \x20            file: one `app=<name> [variant=..] [graph=..] [iters=N] [scale=F]\n\
          \x20            [sources=N] [analyze=true] [delta-epsilon=F]` line per job; # comments\n\
+         \x20            [--report-dir DIR] [--pmu]   one run report per job + a rollup\n\
          \x20 apps       list registered applications and their variants\n\
          \x20 gen        generate + cache a dataset  --graph <dataset> [--out file.bin] [--scale F]\n\
          \x20 inspect    dataset statistics          --graph <dataset>\n\
@@ -79,6 +83,7 @@ fn usage() {
          \x20 cache      artifact store tools        stats (default) | clear  [--store-dir DIR]\n\
          \x20 bench      bench-result tools          ls [--names] | diff <baseline> <new> [--tolerance F]\n\
          \x20            [--sigma F] [--allow-missing] | merge <file-or-dir>... --out FILE\n\
+         \x20 trace      inspect a run report        <report.json> [--chrome out.json]\n\
          \x20 artifacts  list PJRT artifacts and check they compile\n\
          \n\
          apps:     {}\n\
@@ -155,12 +160,19 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
         Some(v) => app.parse_variant(v)?,
         None => app.default_variant(),
     };
+    // Run-report destination: flag wins, env var (CI, wrappers) backs it.
+    let report_path = args
+        .get("report")
+        .map(str::to_string)
+        .or_else(|| std::env::var("CAGRA_RUN_REPORT").ok())
+        .filter(|p| !p.is_empty());
     let spec = JobSpec {
         dataset: args.get_or("graph", "livejournal-sim").to_string(),
         app: kind,
         iters: args.get_usize("iters", 10),
         num_sources: args.get_usize("sources", 12),
         analyze_memory: args.has_flag("analyze"),
+        collect_pmu: args.has_flag("pmu"),
         scale: args.get_f64("scale", 1.0),
         delta_epsilon: parse_delta_epsilon(args)?,
     };
@@ -172,9 +184,23 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
         datasets::paper_name(&spec.dataset),
         fmt_bytes(cfg.llc_bytes)
     );
+    if report_path.is_some() {
+        cagra::obs::recorder::enable();
+    }
     let result = run_job(&spec, &cfg)?;
     print!("{}", result.metrics.render());
     println!("summary value: {:.6}", result.summary);
+    if let Some(path) = report_path {
+        let report = RunReport::from_job(&spec, &result);
+        cagra::obs::recorder::disable();
+        report.write(std::path::Path::new(&path))?;
+        println!(
+            "wrote run report {path} ({} events, {} dropped, stall source: {})",
+            report.events.len(),
+            report.events_dropped,
+            report.stall_source()
+        );
+    }
     Ok(())
 }
 
@@ -209,6 +235,11 @@ fn cmd_batch(args: &Args) -> anyhow::Result<()> {
             s.delta_epsilon.get_or_insert(eps);
         }
     }
+    if args.has_flag("pmu") {
+        for s in &mut specs {
+            s.collect_pmu = true;
+        }
+    }
     println!(
         "batch: {} job(s) from {file}; artifact store {}",
         specs.len(),
@@ -218,7 +249,39 @@ fn cmd_batch(args: &Args) -> anyhow::Result<()> {
             "disabled (pass --store to share preprocessing)"
         }
     );
-    let results = cagra::coordinator::run_batch(&specs, &cfg)?;
+    let report_dir = args.get("report-dir").map(std::path::PathBuf::from);
+    let results = match &report_dir {
+        Some(dir) => {
+            std::fs::create_dir_all(dir)
+                .map_err(|e| anyhow::anyhow!("creating {}: {e}", dir.display()))?;
+            cagra::obs::recorder::enable();
+            // Per-job reports must be built inside the callback: the
+            // recorder ring only holds one job's events at a time.
+            let mut rollup = Vec::new();
+            let results = cagra::coordinator::run_batch_with(&specs, &cfg, |i, spec, r| {
+                let name = format!(
+                    "RUN_{:03}_{}-{}.json",
+                    i + 1,
+                    spec.app.app_name(),
+                    spec.app.variant_name().replace('+', "-")
+                );
+                let report = RunReport::from_job(spec, r);
+                report.write(&dir.join(&name))?;
+                rollup.push((name, report));
+                Ok(())
+            });
+            cagra::obs::recorder::disable();
+            let results = results?;
+            write_batch_rollup(dir, &rollup)?;
+            println!(
+                "wrote {} run report(s) + ROLLUP.json to {}",
+                rollup.len(),
+                dir.display()
+            );
+            results
+        }
+        None => cagra::coordinator::run_batch(&specs, &cfg)?,
+    };
     for (i, (spec, r)) in specs.iter().zip(&results).enumerate() {
         println!(
             "\n[job {}/{}] {}/{} on {} (scale {})",
@@ -243,6 +306,66 @@ fn cmd_batch(args: &Args) -> anyhow::Result<()> {
             s.entries,
             fmt_bytes(s.resident_bytes as usize)
         );
+    }
+    Ok(())
+}
+
+/// One `ROLLUP.json` per batch: which per-job reports were written and
+/// each job's headline numbers, so dashboards can index a report
+/// directory without parsing every file.
+fn write_batch_rollup(dir: &std::path::Path, jobs: &[(String, RunReport)]) -> anyhow::Result<()> {
+    use cagra::util::json::Value;
+    let rows = jobs
+        .iter()
+        .map(|(file, r)| {
+            Value::Obj(vec![
+                ("file".to_string(), Value::Str(file.clone())),
+                ("app".to_string(), Value::Str(r.app.clone())),
+                ("dataset".to_string(), Value::Str(r.dataset.clone())),
+                ("summary".to_string(), Value::Num(r.summary)),
+                ("events".to_string(), Value::Num(r.events.len() as f64)),
+                (
+                    "stall_source".to_string(),
+                    Value::Str(r.stall_source().to_string()),
+                ),
+            ])
+        })
+        .collect();
+    let rollup = Value::Obj(vec![
+        ("format".to_string(), Value::Str("cagra-run-rollup".to_string())),
+        ("version".to_string(), Value::Num(1.0)),
+        ("jobs".to_string(), Value::Arr(rows)),
+    ]);
+    let path = dir.join("ROLLUP.json");
+    std::fs::write(&path, rollup.render() + "\n")
+        .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))
+}
+
+/// `cagra trace <report.json>`: summarize a run report; `--chrome FILE`
+/// additionally exports the event timeline in Chrome `trace_event`
+/// format (chrome://tracing, Perfetto).
+fn cmd_trace(args: &Args) -> anyhow::Result<()> {
+    let Some(path) = args.positional.first() else {
+        anyhow::bail!("usage: cagra trace <run-report.json> [--chrome out.json]");
+    };
+    let report = RunReport::load(std::path::Path::new(path))?;
+    println!("run report {path}");
+    println!("  app: {}  dataset: {} (scale {})", report.app, report.dataset, report.scale);
+    println!(
+        "  threads: {}  edges: {}  summary: {:.6}",
+        report.threads,
+        fmt_count(report.edges),
+        report.summary
+    );
+    println!("  stall source: {}", report.stall_source());
+    println!("  events: {} ({} dropped)", report.events.len(), report.events_dropped);
+    for p in &report.phases {
+        println!("    {:<24} {:>9.4}s  x{}", p.name, p.seconds, p.count);
+    }
+    if let Some(out) = args.get("chrome") {
+        std::fs::write(out, cagra::obs::chrome::chrome_trace(&report))
+            .map_err(|e| anyhow::anyhow!("writing {out}: {e}"))?;
+        println!("wrote Chrome trace {out} (load in chrome://tracing or Perfetto)");
     }
     Ok(())
 }

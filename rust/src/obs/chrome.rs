@@ -1,0 +1,110 @@
+//! Chrome `trace_event` export for run-report timelines.
+//!
+//! Converts a [`RunReport`]'s event timeline into the JSON format that
+//! `chrome://tracing` and Perfetto render as a flamegraph: one complete
+//! (`"ph": "X"`) event per recorder span, timestamps and durations in
+//! microseconds, kind-specific counters under `args` with readable names
+//! instead of the schema's generic `a..d`.
+
+use crate::obs::report::{RunReport, TimelineEvent};
+use crate::util::json::Value;
+
+/// Render a report's timeline as a Chrome `trace_event` JSON document
+/// (trailing newline included).
+pub fn chrome_trace(report: &RunReport) -> String {
+    let events: Vec<Value> = report.events.iter().map(event_to_value).collect();
+    let doc = Value::Obj(vec![
+        ("traceEvents".to_string(), Value::Arr(events)),
+        ("displayTimeUnit".to_string(), Value::Str("ms".to_string())),
+        (
+            "otherData".to_string(),
+            Value::Obj(vec![
+                ("app".to_string(), Value::Str(report.app.clone())),
+                ("dataset".to_string(), Value::Str(report.dataset.clone())),
+                ("git_sha".to_string(), Value::Str(report.git_sha.clone())),
+                (
+                    "stall_source".to_string(),
+                    Value::Str(report.stall_source().to_string()),
+                ),
+            ]),
+        ),
+    ]);
+    let mut out = doc.render();
+    out.push('\n');
+    out
+}
+
+fn event_to_value(ev: &TimelineEvent) -> Value {
+    Value::Obj(vec![
+        ("name".to_string(), Value::Str(ev.name.clone())),
+        ("cat".to_string(), Value::Str(ev.kind.clone())),
+        ("ph".to_string(), Value::Str("X".to_string())),
+        ("ts".to_string(), Value::Num(ev.t_us as f64)),
+        ("dur".to_string(), Value::Num(ev.dur_us as f64)),
+        ("pid".to_string(), Value::Num(1.0)),
+        ("tid".to_string(), Value::Num(1.0)),
+        ("args".to_string(), Value::Obj(event_args(ev))),
+    ])
+}
+
+/// Kind-specific counter names (mirrors `recorder::EventKind` docs).
+fn event_args(ev: &TimelineEvent) -> Vec<(String, Value)> {
+    let num = |n: u64| Value::Num(n as f64);
+    match ev.kind.as_str() {
+        "edge_map" => vec![
+            ("frontier".to_string(), num(ev.a)),
+            ("out_work".to_string(), num(ev.b)),
+            ("next_frontier".to_string(), num(ev.c)),
+            (
+                "direction".to_string(),
+                Value::Str(if ev.d == 1 { "dense/pull" } else { "sparse/push" }.to_string()),
+            ),
+        ],
+        "segment" => vec![
+            ("segment".to_string(), num(ev.a)),
+            ("edges".to_string(), num(ev.b)),
+            ("buffer_bytes".to_string(), num(ev.c)),
+        ],
+        "iter" => vec![
+            ("index".to_string(), num(ev.a)),
+            ("source".to_string(), num(ev.b)),
+        ],
+        "artifact" => vec![(
+            "outcome".to_string(),
+            Value::Str(if ev.a == 1 { "hit" } else { "build" }.to_string()),
+        )],
+        _ => Vec::new(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    #[test]
+    fn export_is_well_formed_trace_event_json() {
+        let report = crate::obs::report::sample_report();
+        let text = chrome_trace(&report);
+        let doc = json::parse(&text).expect("chrome trace must be valid JSON");
+        let events = doc
+            .get("traceEvents")
+            .and_then(Value::as_arr)
+            .expect("traceEvents array");
+        assert_eq!(events.len(), report.events.len());
+        for ev in events {
+            assert_eq!(ev.get("ph").and_then(Value::as_str), Some("X"));
+            assert!(ev.get("ts").and_then(Value::as_f64).is_some());
+            assert!(ev.get("dur").and_then(Value::as_f64).is_some());
+            assert!(ev.get("name").and_then(Value::as_str).is_some());
+        }
+        // The edge_map span carries readable direction args.
+        let em = &events[1];
+        let args = em.get("args").expect("args");
+        assert_eq!(
+            args.get("direction").and_then(Value::as_str),
+            Some("dense/pull")
+        );
+        assert_eq!(args.get("frontier").and_then(Value::as_f64), Some(10.0));
+    }
+}

@@ -1,0 +1,27 @@
+//! Structured observability: engine trace spans, versioned run reports,
+//! and hardware PMU counters.
+//!
+//! Three pieces, one goal — make what a run learns about itself
+//! machine-readable instead of discarded or flattened into a log line:
+//!
+//! - [`recorder`]: per-thread, lock-free ring-buffer span recorder.
+//!   Instrumentation points live in the `edge_map` direction switch, the
+//!   segmented aggregation loop, the job pipeline, and the artifact
+//!   store; all compile down to one relaxed atomic load when recording
+//!   is off, preserving the zero-allocation steady state.
+//! - [`report`]: the `cagra-run` v1 JSON schema — phase timings,
+//!   per-iteration engine counters, store activity, and the
+//!   memory-system evidence with its provenance (`stall_source`).
+//!   [`chrome`] exports the same timeline as Chrome `trace_event` JSON
+//!   for flamegraph-style inspection.
+//! - [`pmu`]: real cycles / instructions / LLC counters via a
+//!   dependency-free `perf_event_open` reader, so the simulated stall
+//!   model can be validated against hardware (DESIGN.md §3).
+
+pub mod chrome;
+pub mod pmu;
+pub mod recorder;
+pub mod report;
+
+pub use pmu::{PmuCounters, PmuGroup, PmuMetrics};
+pub use report::RunReport;

@@ -1,0 +1,694 @@
+//! Versioned machine-readable run reports (`cagra-run` v1).
+//!
+//! Where `bench/report.rs` records *how fast* a suite ran, this format
+//! records *what one job did*: phase timings, the per-iteration engine
+//! counter timeline from [`crate::obs::recorder`], per-artifact store
+//! activity, and the memory-system evidence — simulated
+//! [`StallEstimate`] and/or hardware [`PmuMetrics`] — with a
+//! `stall_source` tag saying which one backs the numbers.
+//!
+//! Same contract as the bench format: hand-rolled over
+//! [`crate::util::json`] (no serde), versioned so a newer writer can
+//! never be silently misread, strict on parse, and byte-stable across
+//! encode→parse→encode.
+//!
+//! File layout (`FORMAT_NAME` / `FORMAT_VERSION`):
+//!
+//! ```json
+//! {
+//!   "format": "cagra-run",
+//!   "version": 1,
+//!   "git_sha": "f41d867…",
+//!   "app": "bfs/reordering+bitvector",
+//!   "dataset": "twitter-sim",
+//!   "scale": 0.25,
+//!   "threads": 4,
+//!   "edges": 47283456,
+//!   "summary": 12.0,
+//!   "stall_source": "simulated",
+//!   "iter_seconds": [0.014, 0.009],
+//!   "phases": [{"name": "load", "seconds": 0.21, "count": 1}],
+//!   "scratch_bytes": 1048576,
+//!   "simulated": {"accesses": 1000, "stall_cycles": 52000.0,
+//!                 "llc_misses": 210, "llc_miss_rate": 0.21},
+//!   "pmu": {"phases": [...], "iters": [...]},
+//!   "store": {"hits": 2, "misses": 1, ...},
+//!   "events": [{"kind": "edge_map", "name": "edge_map", "t_us": 1200,
+//!               "dur_us": 340, "a": 10, "b": 80, "c": 7, "d": 1}],
+//!   "events_dropped": 0
+//! }
+//! ```
+//!
+//! Optional sections (`scratch_bytes`, `simulated`, `pmu`, `store`) are
+//! omitted entirely when absent, never encoded as `null`.
+
+use crate::cache::StallEstimate;
+use crate::coordinator::{JobResult, JobSpec};
+use crate::obs::pmu::{PmuCounters, PmuMetrics};
+use crate::obs::recorder;
+use crate::store::StoreStats;
+use crate::util::json::{self, Value};
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Format discriminator in every run report.
+pub const FORMAT_NAME: &str = "cagra-run";
+/// Schema version this build writes and the newest it can read.
+pub const FORMAT_VERSION: u64 = 1;
+
+/// `kind` tags a report may carry (the recorder's event kinds).
+pub const EVENT_KINDS: [&str; 6] = ["phase", "edge_map", "segment", "merge", "artifact", "iter"];
+
+/// One pipeline phase: accumulated seconds and invocation count.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PhaseEntry {
+    pub name: String,
+    pub seconds: f64,
+    pub count: u64,
+}
+
+/// One recorder span, schema-side: `kind` is one of [`EVENT_KINDS`] and
+/// `a..d` are the kind-specific counters documented on
+/// [`recorder::EventKind`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct TimelineEvent {
+    pub kind: String,
+    pub name: String,
+    pub t_us: u64,
+    pub dur_us: u64,
+    pub a: u64,
+    pub b: u64,
+    pub c: u64,
+    pub d: u64,
+}
+
+impl TimelineEvent {
+    /// Convert a recorder event; artifact events take their file name as
+    /// the span name.
+    pub fn from_recorded(ev: recorder::Event) -> TimelineEvent {
+        let name = if ev.detail.is_empty() {
+            ev.name.to_string()
+        } else {
+            ev.detail
+        };
+        TimelineEvent {
+            kind: ev.kind.as_str().to_string(),
+            name,
+            t_us: ev.start_us,
+            dur_us: ev.dur_us,
+            a: ev.a,
+            b: ev.b,
+            c: ev.c,
+            d: ev.d,
+        }
+    }
+
+    fn to_value(&self) -> Value {
+        Value::Obj(vec![
+            ("kind".to_string(), Value::Str(self.kind.clone())),
+            ("name".to_string(), Value::Str(self.name.clone())),
+            ("t_us".to_string(), Value::Num(self.t_us as f64)),
+            ("dur_us".to_string(), Value::Num(self.dur_us as f64)),
+            ("a".to_string(), Value::Num(self.a as f64)),
+            ("b".to_string(), Value::Num(self.b as f64)),
+            ("c".to_string(), Value::Num(self.c as f64)),
+            ("d".to_string(), Value::Num(self.d as f64)),
+        ])
+    }
+
+    fn from_value(v: &Value) -> Result<TimelineEvent> {
+        let kind = require_str(v, "kind")?;
+        if !EVENT_KINDS.contains(&kind.as_str()) {
+            bail!("unknown event kind {kind:?}");
+        }
+        Ok(TimelineEvent {
+            name: require_str(v, "name")?,
+            t_us: require_u64(v, &kind, "t_us")?,
+            dur_us: require_u64(v, &kind, "dur_us")?,
+            a: require_u64(v, &kind, "a")?,
+            b: require_u64(v, &kind, "b")?,
+            c: require_u64(v, &kind, "c")?,
+            d: require_u64(v, &kind, "d")?,
+            kind,
+        })
+    }
+}
+
+/// Everything one `run_job` learned about itself, in the order the
+/// schema encodes it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunReport {
+    pub git_sha: String,
+    /// `app/variant` as reported by `Metrics`.
+    pub app: String,
+    pub dataset: String,
+    pub scale: f64,
+    pub threads: usize,
+    pub edges: u64,
+    /// The job's app-defined summary value (ranks sum, reached count, …).
+    pub summary: f64,
+    pub iter_seconds: Vec<f64>,
+    pub phases: Vec<PhaseEntry>,
+    pub scratch_bytes: Option<u64>,
+    /// Cache-simulator stall estimate (when the job ran `--analyze`).
+    pub simulated: Option<StallEstimate>,
+    /// Hardware counters (when `--pmu` was requested and available).
+    pub pmu: Option<PmuMetrics>,
+    pub store: Option<StoreStats>,
+    pub events: Vec<TimelineEvent>,
+    /// Events the recorder ring overwrote (0 = complete timeline).
+    pub events_dropped: u64,
+}
+
+impl RunReport {
+    /// Build a report for a finished job, draining the recorder's ring
+    /// on the calling thread (which must be the thread that ran the job).
+    pub fn from_job(spec: &JobSpec, result: &JobResult) -> RunReport {
+        let (events, dropped) = recorder::drain();
+        let m = &result.metrics;
+        RunReport {
+            git_sha: crate::bench::report::git_sha(),
+            app: m.app.clone().unwrap_or_else(|| "unknown".to_string()),
+            dataset: spec.dataset.clone(),
+            scale: spec.scale,
+            threads: crate::parallel::num_threads(),
+            edges: m.edges,
+            summary: result.summary,
+            iter_seconds: m.iter_seconds.clone(),
+            phases: m
+                .phases
+                .report()
+                .into_iter()
+                .map(|(name, seconds, _)| {
+                    let count = m.phases.count(&name);
+                    PhaseEntry { name, seconds, count }
+                })
+                .collect(),
+            scratch_bytes: m.scratch_bytes,
+            simulated: m.stalls,
+            pmu: m.pmu.clone(),
+            store: m.store,
+            events: events.into_iter().map(TimelineEvent::from_recorded).collect(),
+            events_dropped: dropped,
+        }
+    }
+
+    /// Which measurement backs the memory-system numbers: `"pmu"`
+    /// (hardware beats simulation when both are present), `"simulated"`,
+    /// or `"none"`.
+    pub fn stall_source(&self) -> &'static str {
+        if self.pmu.is_some() {
+            "pmu"
+        } else if self.simulated.is_some() {
+            "simulated"
+        } else {
+            "none"
+        }
+    }
+
+    /// Encode to the versioned JSON format. Errors on non-finite floats
+    /// (which would otherwise lossily encode as `null`).
+    pub fn to_json(&self) -> Result<String> {
+        for (field, v) in [("scale", self.scale), ("summary", self.summary)] {
+            if !v.is_finite() {
+                bail!("run report: non-finite {field}");
+            }
+        }
+        if self.iter_seconds.iter().any(|s| !s.is_finite()) {
+            bail!("run report: non-finite iteration time");
+        }
+        for p in &self.phases {
+            if !p.seconds.is_finite() {
+                bail!("run report: non-finite seconds for phase {:?}", p.name);
+            }
+        }
+        if let Some(s) = &self.simulated {
+            if !s.stall_cycles.is_finite() || !s.llc_miss_rate.is_finite() {
+                bail!("run report: non-finite simulated stall estimate");
+            }
+        }
+        let mut fields = vec![
+            ("format".to_string(), Value::Str(FORMAT_NAME.to_string())),
+            ("version".to_string(), Value::Num(FORMAT_VERSION as f64)),
+            ("git_sha".to_string(), Value::Str(self.git_sha.clone())),
+            ("app".to_string(), Value::Str(self.app.clone())),
+            ("dataset".to_string(), Value::Str(self.dataset.clone())),
+            ("scale".to_string(), Value::Num(self.scale)),
+            ("threads".to_string(), Value::Num(self.threads as f64)),
+            ("edges".to_string(), Value::Num(self.edges as f64)),
+            ("summary".to_string(), Value::Num(self.summary)),
+            (
+                "stall_source".to_string(),
+                Value::Str(self.stall_source().to_string()),
+            ),
+            (
+                "iter_seconds".to_string(),
+                Value::Arr(self.iter_seconds.iter().map(|s| Value::Num(*s)).collect()),
+            ),
+            (
+                "phases".to_string(),
+                Value::Arr(
+                    self.phases
+                        .iter()
+                        .map(|p| {
+                            Value::Obj(vec![
+                                ("name".to_string(), Value::Str(p.name.clone())),
+                                ("seconds".to_string(), Value::Num(p.seconds)),
+                                ("count".to_string(), Value::Num(p.count as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ];
+        if let Some(b) = self.scratch_bytes {
+            fields.push(("scratch_bytes".to_string(), Value::Num(b as f64)));
+        }
+        if let Some(s) = &self.simulated {
+            fields.push(("simulated".to_string(), stall_to_value(s)));
+        }
+        if let Some(p) = &self.pmu {
+            fields.push(("pmu".to_string(), pmu_to_value(p)));
+        }
+        if let Some(s) = &self.store {
+            fields.push(("store".to_string(), store_to_value(s)));
+        }
+        fields.push((
+            "events".to_string(),
+            Value::Arr(self.events.iter().map(TimelineEvent::to_value).collect()),
+        ));
+        fields.push((
+            "events_dropped".to_string(),
+            Value::Num(self.events_dropped as f64),
+        ));
+        let mut out = Value::Obj(fields).render();
+        out.push('\n');
+        Ok(out)
+    }
+
+    /// Strict parse: wrong format tag, unsupported version, missing
+    /// fields, unknown event kinds, or an inconsistent `stall_source`
+    /// all error.
+    pub fn parse(input: &str) -> Result<RunReport> {
+        let v = json::parse(input).context("run report is not valid JSON")?;
+        let format = v
+            .get("format")
+            .and_then(Value::as_str)
+            .context("missing format tag")?;
+        if format != FORMAT_NAME {
+            bail!("not a run report (format {format:?}, expected {FORMAT_NAME:?})");
+        }
+        let version = v
+            .get("version")
+            .and_then(Value::as_u64)
+            .context("missing format version")?;
+        if version > FORMAT_VERSION {
+            bail!("run report version {version} is newer than this build (max {FORMAT_VERSION})");
+        }
+        let app = require_str(&v, "app")?;
+        let phases = v
+            .get("phases")
+            .and_then(Value::as_arr)
+            .context("missing phases array")?
+            .iter()
+            .map(|p| {
+                Ok(PhaseEntry {
+                    name: require_str(p, "name")?,
+                    seconds: require_num(p, &app, "seconds")?,
+                    count: require_u64(p, &app, "count")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let iter_seconds = v
+            .get("iter_seconds")
+            .and_then(Value::as_arr)
+            .context("missing iter_seconds array")?
+            .iter()
+            .map(|s| s.as_f64().context("iter_seconds entries must be numbers"))
+            .collect::<Result<Vec<_>>>()?;
+        let events = v
+            .get("events")
+            .and_then(Value::as_arr)
+            .context("missing events array")?
+            .iter()
+            .map(TimelineEvent::from_value)
+            .collect::<Result<Vec<_>>>()?;
+        let report = RunReport {
+            git_sha: require_str(&v, "git_sha")?,
+            dataset: require_str(&v, "dataset")?,
+            scale: require_num(&v, &app, "scale")?,
+            threads: require_u64(&v, &app, "threads")? as usize,
+            edges: require_u64(&v, &app, "edges")?,
+            summary: require_num(&v, &app, "summary")?,
+            iter_seconds,
+            phases,
+            scratch_bytes: match v.get("scratch_bytes") {
+                None => None,
+                Some(b) => Some(b.as_u64().context("scratch_bytes must be a u64")?),
+            },
+            simulated: match v.get("simulated") {
+                None => None,
+                Some(s) => Some(stall_from_value(s)?),
+            },
+            pmu: match v.get("pmu") {
+                None => None,
+                Some(p) => Some(pmu_from_value(p)?),
+            },
+            store: match v.get("store") {
+                None => None,
+                Some(s) => Some(store_from_value(s)?),
+            },
+            events,
+            events_dropped: require_u64(&v, &app, "events_dropped")?,
+            app,
+        };
+        let declared = require_str(&v, "stall_source")?;
+        if declared != report.stall_source() {
+            bail!(
+                "stall_source {declared:?} inconsistent with report contents (expected {:?})",
+                report.stall_source()
+            );
+        }
+        Ok(report)
+    }
+
+    /// Load and parse one report file.
+    pub fn load(path: &Path) -> Result<RunReport> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    /// Encode and write to `path`.
+    pub fn write(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("creating {}", dir.display()))?;
+            }
+        }
+        std::fs::write(path, self.to_json()?)
+            .with_context(|| format!("writing {}", path.display()))
+    }
+}
+
+fn stall_to_value(s: &StallEstimate) -> Value {
+    Value::Obj(vec![
+        ("accesses".to_string(), Value::Num(s.accesses as f64)),
+        ("stall_cycles".to_string(), Value::Num(s.stall_cycles)),
+        ("llc_misses".to_string(), Value::Num(s.llc_misses as f64)),
+        ("llc_miss_rate".to_string(), Value::Num(s.llc_miss_rate)),
+    ])
+}
+
+fn stall_from_value(v: &Value) -> Result<StallEstimate> {
+    Ok(StallEstimate {
+        accesses: require_u64(v, "simulated", "accesses")?,
+        stall_cycles: require_num(v, "simulated", "stall_cycles")?,
+        llc_misses: require_u64(v, "simulated", "llc_misses")?,
+        llc_miss_rate: require_num(v, "simulated", "llc_miss_rate")?,
+    })
+}
+
+fn counters_to_value(c: &PmuCounters) -> Vec<(String, Value)> {
+    vec![
+        ("cycles".to_string(), Value::Num(c.cycles as f64)),
+        ("instructions".to_string(), Value::Num(c.instructions as f64)),
+        (
+            "cache_references".to_string(),
+            Value::Num(c.cache_references as f64),
+        ),
+        ("cache_misses".to_string(), Value::Num(c.cache_misses as f64)),
+    ]
+}
+
+fn counters_from_value(v: &Value, ctx: &str) -> Result<PmuCounters> {
+    Ok(PmuCounters {
+        cycles: require_u64(v, ctx, "cycles")?,
+        instructions: require_u64(v, ctx, "instructions")?,
+        cache_references: require_u64(v, ctx, "cache_references")?,
+        cache_misses: require_u64(v, ctx, "cache_misses")?,
+    })
+}
+
+fn pmu_to_value(p: &PmuMetrics) -> Value {
+    Value::Obj(vec![
+        (
+            "phases".to_string(),
+            Value::Arr(
+                p.phases
+                    .iter()
+                    .map(|(name, c)| {
+                        let mut fields = vec![("name".to_string(), Value::Str(name.clone()))];
+                        fields.extend(counters_to_value(c));
+                        Value::Obj(fields)
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "iters".to_string(),
+            Value::Arr(
+                p.iters
+                    .iter()
+                    .map(|c| Value::Obj(counters_to_value(c)))
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+fn pmu_from_value(v: &Value) -> Result<PmuMetrics> {
+    let phases = v
+        .get("phases")
+        .and_then(Value::as_arr)
+        .context("pmu: missing phases array")?
+        .iter()
+        .map(|p| {
+            let name = require_str(p, "name")?;
+            let c = counters_from_value(p, &name)?;
+            Ok((name, c))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let iters = v
+        .get("iters")
+        .and_then(Value::as_arr)
+        .context("pmu: missing iters array")?
+        .iter()
+        .map(|c| counters_from_value(c, "pmu iter"))
+        .collect::<Result<Vec<_>>>()?;
+    Ok(PmuMetrics { phases, iters })
+}
+
+fn store_to_value(s: &StoreStats) -> Value {
+    Value::Obj(vec![
+        ("hits".to_string(), Value::Num(s.hits as f64)),
+        ("misses".to_string(), Value::Num(s.misses as f64)),
+        ("evictions".to_string(), Value::Num(s.evictions as f64)),
+        ("bytes_read".to_string(), Value::Num(s.bytes_read as f64)),
+        ("bytes_written".to_string(), Value::Num(s.bytes_written as f64)),
+        ("entries".to_string(), Value::Num(s.entries as f64)),
+        (
+            "resident_bytes".to_string(),
+            Value::Num(s.resident_bytes as f64),
+        ),
+        ("cap_bytes".to_string(), Value::Num(s.cap_bytes as f64)),
+    ])
+}
+
+fn store_from_value(v: &Value) -> Result<StoreStats> {
+    Ok(StoreStats {
+        hits: require_u64(v, "store", "hits")?,
+        misses: require_u64(v, "store", "misses")?,
+        evictions: require_u64(v, "store", "evictions")?,
+        bytes_read: require_u64(v, "store", "bytes_read")?,
+        bytes_written: require_u64(v, "store", "bytes_written")?,
+        entries: require_u64(v, "store", "entries")?,
+        resident_bytes: require_u64(v, "store", "resident_bytes")?,
+        cap_bytes: require_u64(v, "store", "cap_bytes")?,
+    })
+}
+
+fn require_str(v: &Value, key: &str) -> Result<String> {
+    v.get(key)
+        .and_then(Value::as_str)
+        .map(str::to_string)
+        .with_context(|| format!("missing string field {key:?}"))
+}
+
+fn require_num(v: &Value, ctx: &str, key: &str) -> Result<f64> {
+    v.get(key)
+        .and_then(Value::as_f64)
+        .with_context(|| format!("{ctx}: missing numeric field {key:?}"))
+}
+
+fn require_u64(v: &Value, ctx: &str, key: &str) -> Result<u64> {
+    v.get(key)
+        .and_then(Value::as_u64)
+        .with_context(|| format!("{ctx}: missing integer field {key:?}"))
+}
+
+#[cfg(test)]
+pub(crate) fn sample_report() -> RunReport {
+    RunReport {
+        git_sha: "deadbeef".into(),
+        app: "bfs/reordering+bitvector".into(),
+        dataset: "twitter-sim".into(),
+        scale: 0.25,
+        threads: 4,
+        edges: 47_283_456,
+        summary: 1024.0,
+        iter_seconds: vec![0.014, 0.009],
+        phases: vec![
+            PhaseEntry {
+                name: "load".into(),
+                seconds: 0.21,
+                count: 1,
+            },
+            PhaseEntry {
+                name: "preprocess".into(),
+                seconds: 0.02,
+                count: 1,
+            },
+        ],
+        scratch_bytes: Some(1 << 20),
+        simulated: Some(StallEstimate {
+            accesses: 1000,
+            stall_cycles: 52_000.0,
+            llc_misses: 210,
+            llc_miss_rate: 0.21,
+        }),
+        pmu: Some(PmuMetrics {
+            phases: vec![(
+                "load".into(),
+                PmuCounters {
+                    cycles: 1_000_000,
+                    instructions: 2_000_000,
+                    cache_references: 5_000,
+                    cache_misses: 800,
+                },
+            )],
+            iters: vec![PmuCounters {
+                cycles: 400_000,
+                instructions: 900_000,
+                cache_references: 2_200,
+                cache_misses: 300,
+            }],
+        }),
+        store: Some(StoreStats {
+            hits: 2,
+            misses: 1,
+            evictions: 0,
+            bytes_read: 4096,
+            bytes_written: 2048,
+            entries: 3,
+            resident_bytes: 6144,
+            cap_bytes: 1 << 30,
+        }),
+        events: vec![
+            TimelineEvent {
+                kind: "phase".into(),
+                name: "load".into(),
+                t_us: 0,
+                dur_us: 210_000,
+                a: 0,
+                b: 0,
+                c: 0,
+                d: 0,
+            },
+            TimelineEvent {
+                kind: "edge_map".into(),
+                name: "edge_map".into(),
+                t_us: 230_000,
+                dur_us: 340,
+                a: 10,
+                b: 80,
+                c: 7,
+                d: 1,
+            },
+            TimelineEvent {
+                kind: "artifact".into(),
+                name: "degree-perm.v1.art".into(),
+                t_us: 231_000,
+                dur_us: 1_500,
+                a: 1,
+                b: 0,
+                c: 0,
+                d: 0,
+            },
+        ],
+        events_dropped: 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_parse_encode_is_byte_stable() {
+        let r = sample_report();
+        let once = r.to_json().unwrap();
+        let back = RunReport::parse(&once).unwrap();
+        assert_eq!(back, r);
+        assert_eq!(back.to_json().unwrap(), once);
+    }
+
+    #[test]
+    fn stall_source_tracks_contents() {
+        let mut r = sample_report();
+        assert_eq!(r.stall_source(), "pmu");
+        r.pmu = None;
+        assert_eq!(r.stall_source(), "simulated");
+        r.simulated = None;
+        assert_eq!(r.stall_source(), "none");
+        // And each variant still round-trips byte-stably.
+        let once = r.to_json().unwrap();
+        assert_eq!(RunReport::parse(&once).unwrap().to_json().unwrap(), once);
+    }
+
+    #[test]
+    fn version_and_format_are_enforced() {
+        let good = sample_report().to_json().unwrap();
+        let newer = good.replace("\"version\": 1", "\"version\": 99");
+        assert!(RunReport::parse(&newer).is_err(), "future version accepted");
+        let alien = good.replace("cagra-run", "other-tool");
+        assert!(RunReport::parse(&alien).is_err(), "foreign format accepted");
+    }
+
+    #[test]
+    fn inconsistent_stall_source_is_rejected() {
+        let mut r = sample_report();
+        r.pmu = None;
+        r.simulated = None;
+        let lying = r
+            .to_json()
+            .unwrap()
+            .replace("\"stall_source\": \"none\"", "\"stall_source\": \"pmu\"");
+        assert!(RunReport::parse(&lying).is_err(), "accepted a stall_source lie");
+    }
+
+    #[test]
+    fn unknown_event_kind_is_rejected() {
+        let bad = sample_report()
+            .to_json()
+            .unwrap()
+            .replace("\"kind\": \"edge_map\"", "\"kind\": \"mystery\"");
+        assert!(RunReport::parse(&bad).is_err(), "accepted unknown event kind");
+    }
+
+    #[test]
+    fn non_finite_floats_refuse_to_encode() {
+        let mut r = sample_report();
+        r.iter_seconds[0] = f64::NAN;
+        assert!(r.to_json().is_err());
+        let mut r = sample_report();
+        r.simulated = Some(StallEstimate {
+            accesses: 1,
+            stall_cycles: f64::INFINITY,
+            llc_misses: 1,
+            llc_miss_rate: 0.5,
+        });
+        assert!(r.to_json().is_err());
+    }
+}

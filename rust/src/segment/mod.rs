@@ -233,10 +233,19 @@ impl SegmentedCsr {
     {
         assert_eq!(out.len(), self.num_vertices);
         for s in 0..self.num_segments() {
+            let t0 = crate::obs::recorder::timestamp();
             self.process_segment(s, &contrib, &mut buffers.per_segment[s]);
+            crate::obs::recorder::record_segment(
+                t0,
+                s as u64,
+                self.segments[s].num_edges() as u64,
+                (buffers.per_segment[s].len() * 8) as u64,
+            );
         }
+        let t_merge = crate::obs::recorder::timestamp();
         out.fill(init);
         merge(self, buffers, out);
+        crate::obs::recorder::record_merge(t_merge);
     }
 
     /// Bytes of auxiliary structure (for preprocessing-cost reports).

@@ -275,6 +275,7 @@ impl ArtifactStore {
         build: impl FnOnce() -> T,
     ) -> T {
         let path = self.dir.join(key.filename::<T>());
+        let t0 = crate::obs::recorder::timestamp();
         if path.is_file() {
             match codec::read_file::<T>(&path) {
                 Ok((value, len)) => {
@@ -282,6 +283,7 @@ impl ArtifactStore {
                     self.counters.bytes_read.fetch_add(len, Ordering::Relaxed);
                     touch(&path);
                     crate::log_debug!("artifact store hit: {}", path.display());
+                    crate::obs::recorder::record_artifact(t0, &path, true);
                     return value;
                 }
                 Err(e) => {
@@ -295,6 +297,7 @@ impl ArtifactStore {
         }
         self.counters.misses.fetch_add(1, Ordering::Relaxed);
         let value = build();
+        crate::obs::recorder::record_artifact(t0, &path, false);
         match codec::write_file(&path, &value) {
             Ok(len) => {
                 self.counters.bytes_written.fetch_add(len, Ordering::Relaxed);

@@ -19,7 +19,7 @@ impl Summary {
         assert!(!samples.is_empty(), "Summary::of on empty sample set");
         let n = samples.len();
         let mut sorted = samples.to_vec();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.sort_by(f64::total_cmp);
         let mean = sorted.iter().sum::<f64>() / n as f64;
         let var = if n > 1 {
             sorted.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64

@@ -59,7 +59,7 @@ impl PhaseTimer {
             .iter()
             .map(|(k, d)| (k.clone(), d.as_secs_f64(), d.as_secs_f64() / total))
             .collect();
-        rows.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        rows.sort_by(|a, b| b.1.total_cmp(&a.1));
         rows
     }
 }

@@ -1,0 +1,78 @@
+//! End-to-end `cagra-run` report check: a real (small) job, recorder
+//! enabled, must produce a schema-valid report whose timeline contains
+//! the engine's instrumentation — and the parser must reject truncated
+//! or corrupted inputs rather than misread them.
+//!
+//! Lives in its own integration binary because the recorder's enable
+//! flag is process-global: lib unit tests must never observe it
+//! toggling underneath them.
+
+use cagra::coordinator::{run_job, JobSpec, SystemConfig};
+use cagra::obs::{recorder, RunReport};
+
+fn small_job() -> (JobSpec, SystemConfig) {
+    let spec = JobSpec {
+        dataset: "livejournal-sim".into(),
+        scale: 1.0 / 64.0,
+        iters: 2,
+        analyze_memory: true,
+        ..Default::default()
+    };
+    (spec, SystemConfig::default())
+}
+
+#[test]
+fn traced_job_round_trips_and_rejects_corruption() {
+    let (spec, cfg) = small_job();
+    recorder::enable();
+    let result = run_job(&spec, &cfg).unwrap();
+    let report = RunReport::from_job(&spec, &result);
+    recorder::disable();
+
+    // The default PageRank variant runs the segmented engine, so the
+    // timeline must show the whole pipeline, not just phase markers.
+    assert_eq!(report.events_dropped, 0, "tiny job overflowed the ring?");
+    for kind in ["phase", "iter", "segment", "merge"] {
+        assert!(
+            report.events.iter().any(|e| e.kind == kind),
+            "no {kind:?} event in {} recorded",
+            report.events.len()
+        );
+    }
+    assert_eq!(
+        report.events.iter().filter(|e| e.kind == "iter").count(),
+        spec.iters,
+        "one iter span per execution unit"
+    );
+    assert_eq!(report.stall_source(), "simulated");
+    assert!(report.simulated.is_some() && report.pmu.is_none());
+    assert!(report.phases.iter().any(|p| p.name == "preprocess"));
+
+    // Byte-stable round trip, like the bench report format.
+    let json = report.to_json().unwrap();
+    let back = RunReport::parse(&json).unwrap();
+    assert_eq!(back, report);
+    assert_eq!(back.to_json().unwrap(), json);
+
+    // Truncations anywhere must error, never silently misparse. Strides
+    // keep the loop bounded; the tail bytes are checked exhaustively.
+    // (Stopping before the closing `}`: the encoding ends "}\n", so the
+    // only valid prefixes are the full text and the text minus its
+    // trailing newline.)
+    let end = json.len() - 1;
+    for cut in (1..end).step_by(101).chain(end - 8..end) {
+        assert!(
+            RunReport::parse(&json[..cut]).is_err(),
+            "truncation at byte {cut}/{} parsed",
+            json.len()
+        );
+    }
+
+    // Corruptions: wrong format tag, future version, and a stall-source
+    // tag that contradicts the report's contents.
+    assert!(RunReport::parse(&json.replace("cagra-run", "bogus-run")).is_err());
+    assert!(RunReport::parse(&json.replace("\"version\": 1", "\"version\": 99")).is_err());
+    let lied = json.replace("\"stall_source\": \"simulated\"", "\"stall_source\": \"pmu\"");
+    assert_ne!(lied, json, "corruption target missing from encoding");
+    assert!(RunReport::parse(&lied).is_err(), "inconsistent stall source parsed");
+}

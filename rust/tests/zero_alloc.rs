@@ -108,4 +108,16 @@ fn steady_state_performs_zero_heap_allocation() {
             "{app}/{variant}: scratch_bytes should report the reusable footprint"
         );
     }
+    // The engine hot paths above are instrumented with recorder spans;
+    // with the recorder disabled (this process never enables it) they
+    // must cost one relaxed load each — in particular, record *nothing*.
+    // Combined with the zero-allocation assertions over the same loops,
+    // this pins the disabled recorder's cost at effectively zero.
+    assert!(!cagra::obs::recorder::enabled());
+    let (events, dropped) = cagra::obs::recorder::drain();
+    assert!(
+        events.is_empty() && dropped == 0,
+        "disabled recorder captured {} events ({dropped} dropped)",
+        events.len()
+    );
 }
