@@ -1,0 +1,104 @@
+//! Serving throughput: the `cagra serve` worker pool driven closed-loop,
+//! cold (fresh pool, empty artifact layer — every request pays dataset
+//! load + CSR decode + preprocessing) vs resident (warm shared layer —
+//! requests reuse pinned artifacts and the engines' zero-allocation
+//! steady state). Records jobs/sec and p50/p99 request latency per
+//! scope; the resident/cold gap is the whole point of the daemon.
+//!
+//! Runs in-process against [`WorkerPool`] directly (no TCP), so the
+//! numbers isolate the execution pipeline from socket noise; `cagra
+//! loadgen` measures the same loop end-to-end over the wire.
+
+mod common;
+
+use cagra::bench::suite::Suite;
+use cagra::coordinator::JobSpec;
+use cagra::serve::loadgen::percentile;
+use cagra::serve::{Outcome, WorkerPool};
+use std::time::Instant;
+
+fn request_spec() -> JobSpec {
+    JobSpec {
+        dataset: "livejournal-sim".into(),
+        scale: cagra::bench::scale(),
+        iters: 2,
+        ..Default::default()
+    }
+}
+
+/// Closed loop: `clients` threads each issue `per_client` requests
+/// back-to-back. Returns (elapsed seconds, per-request latencies).
+fn closed_loop(pool: &WorkerPool, clients: usize, per_client: usize) -> (f64, Vec<f64>) {
+    let t0 = Instant::now();
+    let latencies = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..clients)
+            .map(|_| {
+                scope.spawn(|| {
+                    let mut lat = Vec::with_capacity(per_client);
+                    for _ in 0..per_client {
+                        let t = Instant::now();
+                        match pool.run_sync(request_spec(), None).expect("admission") {
+                            Outcome::Done { result, .. } => {
+                                result.expect("job failed");
+                            }
+                            other => panic!("unexpected outcome {other:?}"),
+                        }
+                        lat.push(t.elapsed().as_secs_f64());
+                    }
+                    lat
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().expect("client thread"))
+            .collect::<Vec<f64>>()
+    });
+    (t0.elapsed().as_secs_f64(), latencies)
+}
+
+fn record_round(s: &mut Suite, elapsed: f64, mut latencies: Vec<f64>) {
+    latencies.sort_by(f64::total_cmp);
+    s.record(
+        "jobs-per-sec",
+        "jobs/s",
+        latencies.len() as f64 / elapsed.max(1e-9),
+    );
+    s.record("p50-ms", "ms", percentile(&latencies, 50.0) * 1e3);
+    s.record("p99-ms", "ms", percentile(&latencies, 99.0) * 1e3);
+}
+
+fn main() {
+    common::run_suite("serve_throughput", |s| {
+        let cfg = common::config();
+
+        // Cold: each request is the *first* one a fresh pool (empty
+        // artifact layer) ever sees, so it pays the full load + decode +
+        // preprocess path.
+        s.set_scope("cold");
+        let rounds = 3;
+        let mut cold_lat = Vec::with_capacity(rounds);
+        let cold_t0 = Instant::now();
+        for _ in 0..rounds {
+            let pool = WorkerPool::start(cfg.clone(), 2, 16, 0).expect("starting pool");
+            let (_, lat) = closed_loop(&pool, 1, 1);
+            cold_lat.extend(lat);
+            pool.shutdown();
+        }
+        record_round(s, cold_t0.elapsed().as_secs_f64(), cold_lat);
+
+        // Resident: one long-lived pool, warmed, then measured under
+        // concurrent closed-loop clients.
+        s.set_scope("resident");
+        let pool = WorkerPool::start(cfg, 2, 16, 0).expect("starting pool");
+        closed_loop(&pool, 1, 2); // warm the shared layer (unmeasured)
+        let (elapsed, lat) = closed_loop(&pool, 2, 4);
+        let mem = pool.mem_stats();
+        assert!(
+            mem.hits > 0,
+            "resident rounds must hit the in-memory layer: {mem:?}"
+        );
+        pool.shutdown();
+        record_round(s, elapsed, lat);
+    });
+}

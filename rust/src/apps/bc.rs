@@ -23,6 +23,7 @@ use crate::reorder;
 use crate::store::StoreCtx;
 use anyhow::{bail, Result};
 use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::Arc;
 
 /// BC optimization mix — the same grid as BFS (Tables 7/8), but BC's own
 /// enum: the two apps are tuned independently and must not share a type
@@ -68,7 +69,9 @@ pub struct Prepared {
     variant: Variant,
     g: Csr,
     g_in: Csr,
-    perm: Option<Vec<VertexId>>,
+    /// Permutation old→new when reordered, `Arc`-pinned (shared
+    /// read-only across concurrent resident jobs).
+    perm: Option<Arc<Vec<VertexId>>>,
     /// σ = number of shortest paths (reset per source).
     sigma: Vec<AtomicU64>,
     /// BFS depth (reset per source).

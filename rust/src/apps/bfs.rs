@@ -17,6 +17,7 @@ use crate::reorder;
 use crate::store::StoreCtx;
 use anyhow::{bail, Result};
 use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::Arc;
 
 /// BFS optimization mix.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -68,7 +69,9 @@ pub struct Prepared {
     g: Csr,
     g_in: Csr,
     /// old→new when reordered.
-    perm: Option<Vec<VertexId>>,
+    /// Permutation old→new when reordered, `Arc`-pinned (shared
+    /// read-only across concurrent resident jobs).
+    perm: Option<Arc<Vec<VertexId>>>,
     inv: Option<Vec<VertexId>>,
     /// Working-id-space parent array, reset (fill, no alloc) per source.
     parent: Vec<AtomicU32>,

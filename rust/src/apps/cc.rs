@@ -14,6 +14,7 @@ use crate::graph::{Csr, CsrBuilder, VertexId};
 use crate::segment::{SegmentBuffers, SegmentedCsr};
 use crate::store::{StoreCtx, StoreKey};
 use anyhow::{bail, Result};
+use std::sync::Arc;
 
 /// Store label for CC's symmetrized working structures. Both variants key
 /// off this: the segmented partition as a segmented artifact, the
@@ -67,12 +68,14 @@ pub fn symmetrize(g: &Csr) -> Csr {
 /// propagation pass.
 pub struct Prepared {
     variant: Variant,
-    seg: Option<SegmentedCsr>,
+    /// Symmetrized segmented partition, `Arc`-pinned: shared read-only
+    /// across concurrent resident jobs (`cagra serve`).
+    seg: Option<Arc<SegmentedCsr>>,
     /// Per-segment intermediate label buffers, built once and reused by
     /// every [`Prepared::sweep`] (the sweep fully rewrites them — their
-    /// contents between sweeps are dead).
+    /// contents between sweeps are dead). Owned per job, never shared.
     seg_bufs: Option<SegmentBuffers<VertexId>>,
-    pull: Option<Csr>,
+    pull: Option<Arc<Csr>>,
     labels: Vec<VertexId>,
     next: Vec<VertexId>,
     iterations: usize,
@@ -108,11 +111,11 @@ impl Prepared {
                 let block = cfg.merge_block(4);
                 let build = || SegmentedCsr::build_with_block(&symmetrize(g), seg_size, block);
                 let sg = match store {
-                    Some(c) => c.get_or_build(
+                    Some(c) => c.get_or_build_arc(
                         StoreKey::segmented(c.fingerprint, SYM_LABEL, seg_size, block),
                         build,
                     ),
-                    None => build(),
+                    None => Arc::new(build()),
                 };
                 // Decoded artifacts are structurally validated by the
                 // codec but not against the live graph.
@@ -127,9 +130,9 @@ impl Prepared {
                 let pull_label = format!("{SYM_LABEL}-pull");
                 let p = match store {
                     Some(c) => {
-                        c.get_or_build(StoreKey::ordering(c.fingerprint, &pull_label), build)
+                        c.get_or_build_arc(StoreKey::ordering(c.fingerprint, &pull_label), build)
                     }
-                    None => build(),
+                    None => Arc::new(build()),
                 };
                 assert_eq!(p.num_vertices(), n, "cc pull artifact dimension mismatch");
                 Some(p)

@@ -25,6 +25,7 @@ use crate::segment::SegmentedCsr;
 use crate::store::{StoreCtx, StoreKey};
 use crate::util::rng::Rng;
 use anyhow::{bail, Result};
+use std::sync::Arc;
 
 /// Deterministic synthetic rating for edge (u, i) in 1..=5.
 #[inline]
@@ -83,9 +84,10 @@ pub struct Prepared {
     user_pull: Csr,
     item_pull: Csr,
     /// Segmented forms of the two pulls (source-segmented by the *read*
-    /// side), when variant == Segmented.
-    seg_user: Option<SegmentedCsr>,
-    seg_item: Option<SegmentedCsr>,
+    /// side), when variant == Segmented. `Arc`-pinned: shared read-only
+    /// across concurrent resident jobs.
+    seg_user: Option<Arc<SegmentedCsr>>,
+    seg_item: Option<Arc<SegmentedCsr>>,
     pub factors: Factors,
     grad: Vec<f64>,
 }
@@ -117,14 +119,14 @@ impl Prepared {
             let elem = 8 * k;
             let seg_size = cfg.segment_size(elem);
             let block = cfg.merge_block(elem);
-            let seg_for = |pull: &Csr, label: &str| -> SegmentedCsr {
+            let seg_for = |pull: &Csr, label: &str| -> Arc<SegmentedCsr> {
                 let build = || SegmentedCsr::build_with_block(&pull.transpose(), seg_size, block);
                 match store {
-                    Some(c) => c.get_or_build(
+                    Some(c) => c.get_or_build_arc(
                         StoreKey::segmented(c.fingerprint, label, seg_size, block),
                         build,
                     ),
-                    None => build(),
+                    None => Arc::new(build()),
                 }
             };
             (

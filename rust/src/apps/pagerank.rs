@@ -17,6 +17,7 @@ use crate::reorder;
 use crate::segment::{SegmentBuffers, SegmentedCsr};
 use crate::store::{StoreCtx, StoreKey};
 use anyhow::{bail, Result};
+use std::sync::Arc;
 
 /// Which optimization mix to run (Figure 2 / Figure 8's bar groups).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -104,15 +105,17 @@ pub struct Prepared {
     damping: f64,
     /// Out-degrees in the working id space (reciprocal-multiplied).
     inv_deg: Vec<f64>,
-    /// Pull CSR (transpose) for unsegmented variants.
-    pull: Option<Csr>,
+    /// Pull CSR (transpose) for unsegmented variants. `Arc`-pinned so a
+    /// resident process (`cagra serve`) shares one decoded copy across
+    /// concurrent jobs; per-job mutable state stays owned below.
+    pull: Option<Arc<Csr>>,
     /// Degree prefix over `pull` for cost-based balancing.
     pull_cost: Option<Vec<u64>>,
-    /// Segmented structure for segmented variants.
-    seg: Option<SegmentedCsr>,
+    /// Segmented structure for segmented variants (shared, read-only).
+    seg: Option<Arc<SegmentedCsr>>,
     seg_bufs: Option<SegmentBuffers>,
     /// Permutation old→new when reordered (to map results back).
-    perm: Option<Vec<VertexId>>,
+    perm: Option<Arc<Vec<VertexId>>>,
     /// Scratch rank vectors.
     rank: Vec<f64>,
     next: Vec<f64>,
@@ -165,11 +168,11 @@ impl Prepared {
                     None => SegmentedCsr::build_with_block(g, seg_size, block),
                 };
                 let sg = match store {
-                    Some(c) => c.get_or_build(
+                    Some(c) => c.get_or_build_arc(
                         StoreKey::segmented(c.fingerprint, seg_label, seg_size, block),
                         build_seg,
                     ),
-                    None => build_seg(),
+                    None => Arc::new(build_seg()),
                 };
                 assert_eq!(sg.num_vertices, n, "segmented artifact dimension mismatch");
                 let bufs = SegmentBuffers::for_graph(&sg);
@@ -188,14 +191,16 @@ impl Prepared {
                 let (inv_deg, pull) = match (&perm, store) {
                     (Some(p), Some(c)) => {
                         let pull_label = format!("{ord_label}-pull");
-                        let pull = c.get_or_build(
+                        let pull = c.get_or_build_arc(
                             StoreKey::ordering(c.fingerprint, &pull_label),
                             || g.relabel(p).transpose(),
                         );
                         (permuted_inv_degrees(g, p), pull)
                     }
-                    (Some(p), None) => (permuted_inv_degrees(g, p), g.relabel(p).transpose()),
-                    (None, _) => (inv_out_degrees(g), g.transpose()),
+                    (Some(p), None) => {
+                        (permuted_inv_degrees(g, p), Arc::new(g.relabel(p).transpose()))
+                    }
+                    (None, _) => (inv_out_degrees(g), Arc::new(g.transpose())),
                 };
                 let cost = degree_prefix(&pull);
                 (inv_deg, Some(pull), Some(cost), None, None)

@@ -17,6 +17,7 @@ use crate::reorder;
 use crate::store::StoreCtx;
 use anyhow::{bail, Result};
 use std::sync::atomic::Ordering;
+use std::sync::Arc;
 
 /// Deterministic edge weight in 1..=16.
 #[inline]
@@ -53,7 +54,9 @@ impl Variant {
 pub struct Prepared {
     g: Csr,
     g_in: Csr,
-    perm: Option<Vec<VertexId>>,
+    /// Permutation old→new when reordered, `Arc`-pinned (shared
+    /// read-only across concurrent resident jobs).
+    perm: Option<Arc<Vec<VertexId>>>,
     inv: Option<Vec<VertexId>>,
     /// Working-id-space distances, reset per source.
     dist: Vec<AtomicF64>,

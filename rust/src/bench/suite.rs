@@ -199,6 +199,13 @@ pub const SUITES: &[SuiteInfo] = &[
         cases: &["bfs-deep", "bfs-deep-bitvector", "sssp-deep", "bfs-wide-levels"],
         scopes: "unscoped (synthetic deep-chain / lattice graphs)",
     },
+    SuiteInfo {
+        name: "serve_throughput",
+        title: "Serving: worker-pool throughput, cold vs resident artifact layer",
+        paper_ref: "ROADMAP serving north star (no paper analogue)",
+        cases: &["jobs-per-sec", "p50-ms", "p99-ms"],
+        scopes: "cold (fresh pool per round) / resident (warm shared layer)",
+    },
 ];
 
 /// Look up a suite by target name.
@@ -338,7 +345,7 @@ mod tests {
             assert!(!s.title.is_empty() && !s.paper_ref.is_empty());
             assert!(!s.cases.is_empty());
         }
-        assert_eq!(SUITES.len(), 21, "one entry per benches/*.rs target");
+        assert_eq!(SUITES.len(), 22, "one entry per benches/*.rs target");
         assert!(find("no_such_suite").is_none());
     }
 

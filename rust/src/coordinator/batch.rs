@@ -18,6 +18,9 @@
 //! graph=<dataset>       default: livejournal-sim
 //! iters=N  sources=N  scale=F  analyze=true|false
 //! delta-epsilon=F       per-job SystemConfig::delta_epsilon override
+//! cf-k=N                per-job SystemConfig::cf_k override (1..=64)
+//! damping=F             per-job SystemConfig::damping override
+//! bfs-source=N          pin per-source apps to one original-space source
 //! ```
 
 use super::config::SystemConfig;
@@ -69,9 +72,19 @@ fn parse_job(line: &str) -> Result<JobSpec> {
                 spec.delta_epsilon =
                     Some(v.parse().with_context(|| format!("delta-epsilon={v:?}"))?)
             }
+            "cf-k" | "cf_k" => {
+                spec.cf_k = Some(v.parse().with_context(|| format!("cf-k={v:?}"))?)
+            }
+            "damping" => {
+                spec.damping = Some(v.parse().with_context(|| format!("damping={v:?}"))?)
+            }
+            "bfs-source" | "bfs_source" => {
+                spec.bfs_source = Some(v.parse().with_context(|| format!("bfs-source={v:?}"))?)
+            }
             _ => bail!(
                 "unknown batch key {k:?} (expected \
-                 app|variant|graph|iters|sources|scale|analyze|delta-epsilon)"
+                 app|variant|graph|iters|sources|scale|analyze|delta-epsilon|\
+                 cf-k|damping|bfs-source)"
             ),
         }
     }
@@ -172,6 +185,21 @@ app=cc graph=rmat25-sim iters=2 scale=0.015625  # default variant
         assert_eq!(jobs[0].delta_epsilon, Some(1e-6));
         let jobs = parse_batch("app=pagerank-delta delta_epsilon=1e-5\n").unwrap();
         assert_eq!(jobs[0].delta_epsilon, Some(1e-5));
+    }
+
+    #[test]
+    fn parses_knob_overrides() {
+        let jobs =
+            parse_batch("app=cf cf-k=16\napp=pagerank damping=0.9\napp=bfs bfs-source=42\n")
+                .unwrap();
+        assert_eq!(jobs[0].cf_k, Some(16));
+        assert_eq!(jobs[1].damping, Some(0.9));
+        assert_eq!(jobs[2].bfs_source, Some(42));
+        // Underscore aliases, like delta_epsilon's.
+        let jobs = parse_batch("app=cf cf_k=4 bfs_source=1\n").unwrap();
+        assert_eq!(jobs[0].cf_k, Some(4));
+        assert_eq!(jobs[0].bfs_source, Some(1));
+        assert!(parse_batch("app=cf cf-k=abc\n").is_err());
     }
 
     #[test]

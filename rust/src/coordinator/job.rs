@@ -16,9 +16,11 @@ use crate::apps::app::{default_sources, ExecutionShape};
 use crate::apps::registry;
 use crate::cache;
 use crate::graph::datasets::{self, Dataset};
-use crate::store::{fingerprint, ArtifactStore, StoreCtx};
+use crate::graph::VertexId;
+use crate::store::{fingerprint, Artifact, ArtifactStore, MemStore, StoreCtx};
 use crate::util::timer::time;
-use anyhow::Result;
+use anyhow::{bail, Result};
+use std::sync::Arc;
 
 pub use crate::apps::app::AppKind;
 
@@ -43,6 +45,16 @@ pub struct JobSpec {
     /// activeness threshold). `None` keeps the system-wide value — app
     /// knobs default to config but individual jobs in a batch can diverge.
     pub delta_epsilon: Option<f64>,
+    /// Per-job override of [`SystemConfig::cf_k`] (CF latent dimension).
+    /// Validated to 1..=64 before preprocessing (the segment-local CF
+    /// kernel's stack buffer bound) so a bad request errors instead of
+    /// panicking a worker.
+    pub cf_k: Option<usize>,
+    /// Per-job override of [`SystemConfig::damping`] (PageRank).
+    pub damping: Option<f64>,
+    /// Pin per-source apps (BC/BFS/SSSP) to this single **original-space**
+    /// source vertex instead of the `num_sources` highest-degree defaults.
+    pub bfs_source: Option<VertexId>,
 }
 
 impl Default for JobSpec {
@@ -56,6 +68,9 @@ impl Default for JobSpec {
             collect_pmu: false,
             scale: 1.0,
             delta_epsilon: None,
+            cf_k: None,
+            damping: None,
+            bfs_source: None,
         }
     }
 }
@@ -70,35 +85,80 @@ pub struct JobResult {
     pub summary: f64,
 }
 
+/// The shared long-lived resources a job runs against: a cross-job disk
+/// store (`cagra batch`) and, in a resident process (`cagra serve`), the
+/// in-memory artifact layer. Both optional — `Default` is a fully
+/// private, cold job.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct JobEnv<'a> {
+    /// Shared artifact store; `None` opens a private one per job when the
+    /// config enables stores at all.
+    pub shared_store: Option<&'a ArtifactStore>,
+    /// In-memory artifact layer: datasets and decoded artifacts are
+    /// pinned behind `Arc` so warm jobs perform zero CSR decode.
+    pub mem: Option<&'a MemStore>,
+}
+
 /// Execute a job end-to-end through the app registry, opening (and
 /// closing) a private artifact store if the config enables one.
 pub fn run_job(spec: &JobSpec, cfg: &SystemConfig) -> Result<JobResult> {
-    run_job_with_store(spec, cfg, None)
+    run_job_env(spec, cfg, JobEnv::default())
 }
 
 /// [`run_job`] against an optional **shared** long-lived store (`cagra
-/// batch`, embedders serving many jobs from one process). The job's
-/// store writes are recorded under a per-job eviction-exemption scope
-/// ([`ArtifactStore::begin_scope`]) that is released when the job
-/// completes, so a store instance that outlives this job never
-/// accumulates unbounded exemptions on its behalf.
+/// batch`, embedders serving many jobs from one process).
 pub fn run_job_with_store(
     spec: &JobSpec,
     cfg: &SystemConfig,
     shared: Option<&ArtifactStore>,
 ) -> Result<JobResult> {
+    run_job_env(
+        spec,
+        cfg,
+        JobEnv {
+            shared_store: shared,
+            ..JobEnv::default()
+        },
+    )
+}
+
+/// Memory-layer key for a pinned dataset (not a disk artifact, so it gets
+/// its own namespace rather than a store filename).
+pub fn dataset_mem_key(name: &str, scale: f64) -> String {
+    format!("dataset:{name}-s{scale}")
+}
+
+/// [`run_job`] against shared long-lived resources ([`JobEnv`]). The
+/// job's store writes are recorded under a per-job eviction-exemption
+/// scope ([`ArtifactStore::begin_scope`]) that is released when the job
+/// completes, so a store instance that outlives this job never
+/// accumulates unbounded exemptions on its behalf.
+pub fn run_job_env(spec: &JobSpec, cfg: &SystemConfig, env: JobEnv<'_>) -> Result<JobResult> {
     // JobSpec-level app-knob overrides shadow SystemConfig for this job
-    // only (a batch can mix per-job values over one system config).
-    let cfg_override;
-    let cfg = match spec.delta_epsilon {
-        Some(e) => {
-            cfg_override = SystemConfig {
-                delta_epsilon: e,
-                ..cfg.clone()
-            };
-            &cfg_override
+    // only (a batch or request stream can mix per-job values over one
+    // system config). Bounds are checked here — a worker must reject a
+    // bad request as an error, not die on an app-level assert.
+    if let Some(k) = spec.cf_k {
+        if k == 0 || k > 64 {
+            bail!("cf_k must be in 1..=64 (segment-local kernel bound), got {k}");
         }
-        None => cfg,
+    }
+    if let Some(d) = spec.damping {
+        if !(0.0..=1.0).contains(&d) {
+            bail!("damping must be in [0, 1], got {d}");
+        }
+    }
+    let cfg_override;
+    let cfg = if spec.delta_epsilon.is_some() || spec.cf_k.is_some() || spec.damping.is_some() {
+        cfg_override = SystemConfig {
+            delta_epsilon: spec.delta_epsilon.unwrap_or(cfg.delta_epsilon),
+            cf_k: spec.cf_k.unwrap_or(cfg.cf_k),
+            damping: spec.damping.unwrap_or(cfg.damping),
+            ..cfg.clone()
+        };
+        &cfg_override
+    } else {
+        cfg
     };
     let mut metrics = Metrics::default();
     // Hardware counters are opt-in and probed once per job; every
@@ -120,8 +180,18 @@ pub fn run_job_with_store(
     if let Some(pg) = &mut pmu_group {
         pg.start();
     }
-    let (ds, load_s): (Dataset, f64) = {
-        let (r, s) = time(|| datasets::load_scaled(&spec.dataset, spec.scale));
+    // Dataset resolution: with the in-memory layer, the decoded CSR is
+    // pinned behind an Arc and shared across concurrent jobs — a warm
+    // request performs zero disk reads and zero CSR decode here.
+    let (ds, load_s): (Arc<Dataset>, f64) = {
+        let (r, s) = time(|| match env.mem {
+            Some(m) => m.try_get_or_insert(&dataset_mem_key(&spec.dataset, spec.scale), || {
+                let d = datasets::load_scaled(&spec.dataset, spec.scale)?;
+                let bytes = d.graph.mem_bytes() + d.name.len() as u64;
+                Ok((d, bytes))
+            }),
+            None => datasets::load_scaled(&spec.dataset, spec.scale).map(Arc::new),
+        });
         (r?, s)
     };
     if let Some(pg) = &mut pmu_group {
@@ -131,6 +201,14 @@ pub fn run_job_with_store(
     metrics.phases.add("load", load_s);
     metrics.edges = ds.graph.num_edges() as u64;
     let g = &ds.graph;
+    if let Some(src) = spec.bfs_source {
+        if (src as usize) >= g.num_vertices() {
+            bail!(
+                "bfs_source {src} out of range (dataset has {} vertices)",
+                g.num_vertices()
+            );
+        }
+    }
     let app = registry::app_for(spec.app);
     metrics.app = Some(format!(
         "{}/{}",
@@ -145,7 +223,7 @@ pub fn run_job_with_store(
     // (and no misleading 0-hit stats) to the rest.
     let mut opened: Option<ArtifactStore> = None;
     let store: Option<&ArtifactStore> = if cfg.store_enabled && app.uses_store(spec.app) {
-        match shared {
+        match env.shared_store {
             Some(s) => Some(s),
             None => match ArtifactStore::open(&cfg.store_dir, cfg.store_cap_bytes) {
                 Ok(s) => Some(opened.insert(s)),
@@ -162,11 +240,25 @@ pub fn run_job_with_store(
     let ctx = match store {
         Some(s) => {
             let t_fp = crate::obs::recorder::timestamp();
-            let (fp, fp_s) = time(|| fingerprint::fingerprint_dataset(&spec.dataset, spec.scale, g));
+            // The fingerprint is itself cached in the memory layer (it
+            // samples the whole CSR, which is pure overhead on a warm
+            // resident request).
+            let fp_of = || fingerprint::fingerprint_dataset(&spec.dataset, spec.scale, g);
+            let (fp, fp_s) = time(|| match env.mem {
+                Some(m) => *m.get_or_insert(
+                    &format!("fp:{}-s{}", spec.dataset, spec.scale),
+                    || (fp_of(), 8),
+                ),
+                None => fp_of(),
+            });
             crate::obs::recorder::record_phase("fingerprint", t_fp);
             metrics.phases.add("fingerprint", fp_s);
             let sid = scope.as_ref().expect("scope opened with store").id();
-            Some(StoreCtx::scoped(s, fp, sid))
+            let ctx = StoreCtx::scoped(s, fp, sid);
+            Some(match env.mem {
+                Some(m) => ctx.with_mem(m),
+                None => ctx,
+            })
         }
         None => None,
     };
@@ -197,7 +289,11 @@ pub fn run_job_with_store(
             }
         }
         ExecutionShape::PerSource => {
-            for (i, &src) in default_sources(g, spec.num_sources).iter().enumerate() {
+            let sources = match spec.bfs_source {
+                Some(src) => vec![src],
+                None => default_sources(g, spec.num_sources),
+            };
+            for (i, &src) in sources.iter().enumerate() {
                 let t0 = crate::obs::recorder::timestamp();
                 if let Some(pg) = &mut pmu_group {
                     pg.start();
@@ -231,6 +327,7 @@ pub fn run_job_with_store(
     metrics.scratch_bytes = (scratch > 0).then_some(scratch as u64);
     let summary = prep.summary();
     metrics.store = store.map(|s| s.stats());
+    metrics.mem = env.mem.map(|m| m.stats());
     // Job complete: release this job's eviction exemptions (for a shared
     // store, its artifacts become ordinary LRU candidates from here on).
     drop(scope);
@@ -332,6 +429,59 @@ mod tests {
         assert!(r.summary > 0.0); // reached something
         // Per-source shape: one timing entry per source.
         assert_eq!(r.metrics.iter_seconds.len(), 3);
+    }
+
+    #[test]
+    fn knob_overrides_validated_and_applied() {
+        let cfg = SystemConfig::default();
+        // Out-of-range knobs must error before any preprocessing runs.
+        let bad_k = JobSpec {
+            scale: 1.0 / 64.0,
+            cf_k: Some(65),
+            ..Default::default()
+        };
+        assert!(run_job(&bad_k, &cfg).is_err());
+        let bad_d = JobSpec {
+            scale: 1.0 / 64.0,
+            damping: Some(1.5),
+            ..Default::default()
+        };
+        assert!(run_job(&bad_d, &cfg).is_err());
+        let bad_src = JobSpec {
+            dataset: "livejournal-sim".into(),
+            scale: 1.0 / 64.0,
+            app: AppKind::Bfs(bfs::Variant::Baseline),
+            bfs_source: Some(u32::MAX - 1),
+            ..Default::default()
+        };
+        assert!(run_job(&bad_src, &cfg).is_err());
+        // A damping override must change the PageRank fixpoint.
+        let base = JobSpec {
+            scale: 1.0 / 64.0,
+            iters: 3,
+            ..Default::default()
+        };
+        let tweaked = JobSpec {
+            damping: Some(0.5),
+            ..base.clone()
+        };
+        let a = run_job(&base, &cfg).unwrap().summary;
+        let b = run_job(&tweaked, &cfg).unwrap().summary;
+        assert!((a - b).abs() > 1e-9, "damping override had no effect");
+    }
+
+    #[test]
+    fn pinned_source_runs_exactly_once() {
+        let spec = JobSpec {
+            dataset: "livejournal-sim".into(),
+            scale: 1.0 / 64.0,
+            app: AppKind::Bfs(bfs::Variant::Baseline),
+            num_sources: 5,
+            bfs_source: Some(0),
+            ..Default::default()
+        };
+        let r = run_job(&spec, &SystemConfig::default()).unwrap();
+        assert_eq!(r.metrics.iter_seconds.len(), 1, "pinned source overrides num_sources");
     }
 
     #[test]

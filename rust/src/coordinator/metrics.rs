@@ -4,7 +4,7 @@
 
 use crate::cache::{StallEstimate};
 use crate::obs::PmuMetrics;
-use crate::store::StoreStats;
+use crate::store::{MemStats, StoreStats};
 use crate::util::timer::PhaseTimer;
 
 /// Everything a job run reports.
@@ -30,6 +30,10 @@ pub struct Metrics {
     /// store) they accumulate across jobs, so a job's own traffic is the
     /// delta from the previous job's snapshot.
     pub store: Option<StoreStats>,
+    /// In-memory artifact-layer snapshot (`cagra serve`). Like `store`,
+    /// counters are per layer instance and accumulate across the jobs
+    /// that share it.
+    pub mem: Option<MemStats>,
     /// Peak bytes of reusable execution scratch the prepared app held
     /// (engine scratch pools, per-source atomic arrays, per-segment
     /// buffers) — the memory cost of the zero-allocation steady state.
@@ -101,6 +105,17 @@ impl Metrics {
                 crate::util::fmt_bytes(s.resident_bytes as usize)
             ));
         }
+        if let Some(m) = &self.mem {
+            out.push_str(&format!(
+                "resident mem: {} hits, {} misses, {} evictions; {} entries ({} of {} budget)\n",
+                m.hits,
+                m.misses,
+                m.evictions,
+                m.entries,
+                crate::util::fmt_bytes(m.resident_bytes as usize),
+                crate::util::fmt_bytes(m.budget_bytes as usize)
+            ));
+        }
         if let Some(b) = self.scratch_bytes {
             out.push_str(&format!(
                 "engine scratch: {} reusable (peak; buys the zero-allocation steady state)\n",
@@ -138,6 +153,7 @@ mod tests {
         let r = m.render();
         assert!(r.contains("preprocess"));
         assert!(!r.contains("artifact store"));
+        assert!(!r.contains("resident mem"));
         assert!(!r.contains("app:"));
         assert!(!r.contains("engine scratch"));
         m.app = Some("bfs/both".to_string());
@@ -148,6 +164,15 @@ mod tests {
             ..Default::default()
         });
         assert!(m.render().contains("3 hits, 1 misses"));
+        m.mem = Some(crate::store::MemStats {
+            hits: 2,
+            misses: 1,
+            entries: 1,
+            resident_bytes: 1024,
+            budget_bytes: 2048,
+            ..Default::default()
+        });
+        assert!(m.render().contains("resident mem: 2 hits, 1 misses"));
         m.scratch_bytes = Some(2 * 1024 * 1024);
         assert!(m.render().contains("engine scratch: 2.0 MiB"));
         m.pmu = Some(crate::obs::PmuMetrics {

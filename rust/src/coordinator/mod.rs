@@ -10,4 +10,6 @@ pub mod metrics;
 
 pub use batch::{parse_batch, run_batch, run_batch_with};
 pub use config::SystemConfig;
-pub use job::{run_job, run_job_with_store, AppKind, JobResult, JobSpec};
+pub use job::{
+    dataset_mem_key, run_job, run_job_env, run_job_with_store, AppKind, JobEnv, JobResult, JobSpec,
+};

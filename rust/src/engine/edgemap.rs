@@ -334,24 +334,45 @@ where
 }
 
 /// Apply `f(v)` to every member of `frontier`; keep vertices where `f`
-/// returns true.
-pub fn vertex_map<F>(frontier: &VertexSubset, f: F) -> VertexSubset
+/// returns true. Allocation-free at steady state, like `edge_map`: the
+/// id materialization and the parallel keep/drop votes both come from
+/// pooled `scratch` buffers (`vertex_map` sits on the per-level hot path
+/// once concurrent jobs share a process, so a per-call `Vec<AtomicBool>`
+/// would reintroduce exactly the churn the scratch engine removed).
+pub fn vertex_map<F>(frontier: &VertexSubset, scratch: &mut EngineScratch, f: F) -> VertexSubset
 where
     F: Fn(VertexId) -> bool + Sync,
 {
-    let ids = frontier.ids();
-    let keep: Vec<AtomicBool> = (0..ids.len()).map(|_| AtomicBool::new(false)).collect();
-    parallel_for(ids.len(), |i| {
-        if f(ids[i]) {
-            keep[i].store(true, Ordering::Relaxed);
+    let n = frontier.n();
+    // Materialize the frontier into a pooled id buffer by hand —
+    // `with_frontier_ids` holds `&mut scratch`, which would lock out the
+    // vote-slot access below.
+    let mut ids = scratch.take_ids();
+    match frontier.as_sparse_ids() {
+        Some(s) => ids.extend_from_slice(s),
+        None => frontier.for_each(|v| ids.push(v)),
+    }
+    // Vote in parallel into push_slots (contents are dead between engine
+    // calls by contract; high-water length, so this is allocation-free
+    // once warm). Disjoint indices — the standard UnsafeSlice pattern.
+    if scratch.push_slots.len() < ids.len() {
+        scratch.push_slots.resize(ids.len(), 0);
+    }
+    {
+        let slots = crate::parallel::UnsafeSlice::new(&mut scratch.push_slots);
+        let ids = &ids;
+        parallel_for(ids.len(), |i| unsafe {
+            slots.write(i, f(ids[i]) as u32);
+        });
+    }
+    let mut kept = scratch.take_ids();
+    for (i, &v) in ids.iter().enumerate() {
+        if scratch.push_slots[i] != 0 {
+            kept.push(v);
         }
-    });
-    let new_ids = ids
-        .iter()
-        .zip(&keep)
-        .filter_map(|(&v, k)| k.load(Ordering::Relaxed).then_some(v))
-        .collect();
-    VertexSubset::from_ids(frontier.n(), new_ids)
+    }
+    scratch.put_ids(ids);
+    VertexSubset::from_ids(n, kept)
 }
 
 #[cfg(test)]
@@ -561,9 +582,27 @@ mod tests {
     #[test]
     fn vertex_map_filters() {
         let f = VertexSubset::from_ids(10, vec![1, 2, 3, 4]);
-        let out = vertex_map(&f, |v| v % 2 == 0);
+        let mut scratch = EngineScratch::new(10);
+        let out = vertex_map(&f, &mut scratch, |v| v % 2 == 0);
         let mut ids = out.ids();
         ids.sort_unstable();
         assert_eq!(ids, vec![2, 4]);
+    }
+
+    #[test]
+    fn vertex_map_reuses_scratch_without_allocating_ids() {
+        // Dense input exercises the for_each materialization; repeated
+        // calls must recycle the pooled buffers (returned subsets go back
+        // via recycle, votes live in push_slots at high-water length).
+        let mut scratch = EngineScratch::new(128);
+        scratch.poison(1);
+        for round in 0..4u32 {
+            let f = VertexSubset::full(128).to_dense();
+            let out = vertex_map(&f, &mut scratch, |v| v % 3 == round % 3);
+            let want = (0..128u32).filter(|v| v % 3 == round % 3).count();
+            assert_eq!(out.count(), want);
+            scratch.recycle(out);
+            scratch.poison(round as u64 + 2);
+        }
     }
 }

@@ -44,5 +44,6 @@ pub mod apps;
 pub mod baselines;
 pub mod runtime;
 pub mod coordinator;
+pub mod serve;
 pub mod bench;
 pub mod obs;

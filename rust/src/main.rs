@@ -31,8 +31,8 @@ use cagra::util::cli::Args;
 use cagra::util::{config::Config, fmt_bytes, fmt_count};
 
 const SUBCOMMANDS: &[&str] = &[
-    "run", "batch", "apps", "gen", "inspect", "simulate", "expansion", "cache", "bench",
-    "trace", "artifacts", "help",
+    "run", "batch", "serve", "loadgen", "apps", "gen", "inspect", "simulate", "expansion",
+    "cache", "bench", "trace", "artifacts", "help",
 ];
 
 fn main() {
@@ -40,6 +40,8 @@ fn main() {
     let result = match args.subcommand.as_deref() {
         Some("run") => cmd_run(&args),
         Some("batch") => cmd_batch(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("loadgen") => cmd_loadgen(&args),
         Some("apps") => cmd_apps(),
         Some("gen") => cmd_gen(&args),
         Some("inspect") => cmd_inspect(&args),
@@ -68,13 +70,19 @@ fn usage() {
          subcommands:\n\
          \x20 run        run an application       --app <app> [--variant <variant>]  (see `cagra apps`)\n\
          \x20            --graph <dataset> --iters N [--sources N] [--analyze] [--scale F] [--config FILE]\n\
-         \x20            [--delta-epsilon F]   per-job app-knob override (PageRank-Delta threshold)\n\
+         \x20            [--delta-epsilon F] [--cf-k N] [--damping F] [--bfs-source V]   app-knob overrides\n\
          \x20            [--store] [--store-dir DIR] [--store-cap BYTES]   persist preprocessing artifacts\n\
          \x20            [--report FILE] [--pmu]   versioned run report (or CAGRA_RUN_REPORT env)\n\
          \x20 batch      run a job list over ONE shared artifact store    <jobs.txt> [--store ...]\n\
          \x20            file: one `app=<name> [variant=..] [graph=..] [iters=N] [scale=F]\n\
-         \x20            [sources=N] [analyze=true] [delta-epsilon=F]` line per job; # comments\n\
+         \x20            [sources=N] [analyze=true] [delta-epsilon=F] [cf-k=N] [damping=F]\n\
+         \x20            [bfs-source=V]` line per job; # comments\n\
          \x20            [--report-dir DIR] [--pmu]   one run report per job + a rollup\n\
+         \x20 serve      resident daemon: NDJSON requests over TCP or stdio (see rust/README.md)\n\
+         \x20            [--addr HOST:PORT] [--workers N] [--queue-cap N] [--mem-cap BYTES]\n\
+         \x20            [--port-file FILE] [--stdio] [--store ...]\n\
+         \x20 loadgen    closed-loop serve client   --addr HOST:PORT [--clients N] [--requests N]\n\
+         \x20            [--app <app>] [--variant V] [--graph D] [--iters N] [--scale F] [--shutdown]\n\
          \x20 apps       list registered applications and their variants\n\
          \x20 gen        generate + cache a dataset  --graph <dataset> [--out file.bin] [--scale F]\n\
          \x20 inspect    dataset statistics          --graph <dataset>\n\
@@ -166,6 +174,7 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
         .map(str::to_string)
         .or_else(|| std::env::var("CAGRA_RUN_REPORT").ok())
         .filter(|p| !p.is_empty());
+    let knobs = parse_knobs(args)?;
     let spec = JobSpec {
         dataset: args.get_or("graph", "livejournal-sim").to_string(),
         app: kind,
@@ -174,7 +183,10 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
         analyze_memory: args.has_flag("analyze"),
         collect_pmu: args.has_flag("pmu"),
         scale: args.get_f64("scale", 1.0),
-        delta_epsilon: parse_delta_epsilon(args)?,
+        delta_epsilon: knobs.delta_epsilon,
+        cf_k: knobs.cf_k,
+        damping: knobs.damping,
+        bfs_source: knobs.bfs_source,
     };
     println!(
         "running {}/{} on {} ({}), llc={}",
@@ -204,15 +216,32 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// `--delta-epsilon F`: JobSpec-level override of the PageRank-Delta
-/// activeness threshold (shared by `cagra run` and `cagra batch`).
-fn parse_delta_epsilon(args: &Args) -> anyhow::Result<Option<f64>> {
-    args.get("delta-epsilon")
+/// The JobSpec-level app-knob overrides shared by `cagra run` (direct)
+/// and `cagra batch` (as defaults for jobs without their own override).
+#[derive(Default)]
+struct KnobOverrides {
+    delta_epsilon: Option<f64>,
+    cf_k: Option<usize>,
+    damping: Option<f64>,
+    bfs_source: Option<u32>,
+}
+
+fn parse_knob<T: std::str::FromStr>(args: &Args, key: &str) -> anyhow::Result<Option<T>> {
+    args.get(key)
         .map(|v| {
             v.parse()
-                .map_err(|_| anyhow::anyhow!("--delta-epsilon expects a number, got {v:?}"))
+                .map_err(|_| anyhow::anyhow!("--{key} expects a number, got {v:?}"))
         })
         .transpose()
+}
+
+fn parse_knobs(args: &Args) -> anyhow::Result<KnobOverrides> {
+    Ok(KnobOverrides {
+        delta_epsilon: parse_knob(args, "delta-epsilon")?,
+        cf_k: parse_knob(args, "cf-k")?,
+        damping: parse_knob(args, "damping")?,
+        bfs_source: parse_knob(args, "bfs-source")?,
+    })
 }
 
 /// `cagra batch <file>`: run a list of jobs over ONE long-lived artifact
@@ -229,10 +258,20 @@ fn cmd_batch(args: &Args) -> anyhow::Result<()> {
     let text = std::fs::read_to_string(file)
         .map_err(|e| anyhow::anyhow!("reading batch file {file}: {e}"))?;
     let mut specs = cagra::coordinator::parse_batch(&text)?;
-    // CLI-level default for jobs that don't carry their own override.
-    if let Some(eps) = parse_delta_epsilon(args)? {
-        for s in &mut specs {
+    // CLI-level defaults for jobs that don't carry their own override.
+    let knobs = parse_knobs(args)?;
+    for s in &mut specs {
+        if let Some(eps) = knobs.delta_epsilon {
             s.delta_epsilon.get_or_insert(eps);
+        }
+        if let Some(k) = knobs.cf_k {
+            s.cf_k.get_or_insert(k);
+        }
+        if let Some(d) = knobs.damping {
+            s.damping.get_or_insert(d);
+        }
+        if let Some(src) = knobs.bfs_source {
+            s.bfs_source.get_or_insert(src);
         }
     }
     if args.has_flag("pmu") {
@@ -307,6 +346,66 @@ fn cmd_batch(args: &Args) -> anyhow::Result<()> {
             fmt_bytes(s.resident_bytes as usize)
         );
     }
+    Ok(())
+}
+
+/// `cagra serve`: the resident daemon — newline-delimited JSON requests
+/// over TCP (or stdio with `--stdio`) executed by a worker pool that
+/// shares one disk store and one in-memory artifact layer, so repeated
+/// requests skip dataset loading and CSR decoding entirely.
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let cfg = system_config(args)?;
+    let opts = cagra::serve::ServeOpts {
+        addr: args.get_or("addr", "127.0.0.1:7421").to_string(),
+        workers: args.get_usize("workers", 4),
+        queue_cap: args.get_usize("queue-cap", 64),
+        mem_budget: args.get_u64("mem-cap", 0),
+        port_file: args.get("port-file").map(str::to_string),
+        stdio: args.has_flag("stdio"),
+    };
+    cagra::serve::serve(cfg, &opts)
+}
+
+/// `cagra loadgen`: closed-loop client for a running daemon — N
+/// connections each issuing M validated requests back-to-back, reporting
+/// jobs/sec and latency percentiles.
+fn cmd_loadgen(args: &Args) -> anyhow::Result<()> {
+    use cagra::util::json::Value;
+    let Some(addr) = args.get("addr") else {
+        anyhow::bail!(
+            "usage: cagra loadgen --addr HOST:PORT [--clients N] [--requests N] \
+             [--app <app>] [--variant V] [--graph D] [--iters N] [--scale F] \
+             [--deadline-ms N] [--shutdown]"
+        );
+    };
+    let mut fields = vec![
+        ("op".to_string(), Value::Str("run".to_string())),
+        (
+            "app".to_string(),
+            Value::Str(args.get_or("app", "pagerank").to_string()),
+        ),
+    ];
+    if let Some(v) = args.get("variant") {
+        fields.push(("variant".to_string(), Value::Str(v.to_string())));
+    }
+    fields.push((
+        "graph".to_string(),
+        Value::Str(args.get_or("graph", "livejournal-sim").to_string()),
+    ));
+    fields.push(("iters".to_string(), Value::Num(args.get_usize("iters", 3) as f64)));
+    fields.push(("scale".to_string(), Value::Num(args.get_f64("scale", 1.0))));
+    if let Some(ms) = parse_knob::<u64>(args, "deadline-ms")? {
+        fields.push(("deadline_ms".to_string(), Value::Num(ms as f64)));
+    }
+    let opts = cagra::serve::LoadgenOpts {
+        addr: addr.to_string(),
+        clients: args.get_usize("clients", 4),
+        requests: args.get_usize("requests", 8),
+        request: Value::Obj(fields),
+        shutdown_after: args.has_flag("shutdown"),
+    };
+    let report = cagra::serve::loadgen::run(&opts)?;
+    print!("{}", report.render());
     Ok(())
 }
 

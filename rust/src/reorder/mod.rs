@@ -152,15 +152,15 @@ pub fn cached_degree_sort_perm(
     g: &Csr,
     coarsen: u32,
     store: Option<crate::store::StoreCtx<'_>>,
-) -> Vec<VertexId> {
+) -> std::sync::Arc<Vec<VertexId>> {
     let coarsen = coarsen.max(1);
     let build = || degree_sort_perm(g, coarsen);
     let perm = match store {
-        Some(c) => c.get_or_build(
+        Some(c) => c.get_or_build_arc(
             crate::store::StoreKey::ordering(c.fingerprint, &degree_sort_label(coarsen)),
             build,
         ),
-        None => build(),
+        None => std::sync::Arc::new(build()),
     };
     assert_eq!(perm.len(), g.num_vertices(), "permutation length != graph vertex count");
     perm

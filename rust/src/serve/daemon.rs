@@ -1,0 +1,288 @@
+//! The resident daemon: accepts newline-delimited JSON requests over TCP
+//! (one handler thread per connection, responses in request order per
+//! connection) or stdio (`--stdio`: one request per stdin line, replies
+//! on stdout — the embedding/pipe mode), and executes them on a shared
+//! [`WorkerPool`].
+//!
+//! Shutdown is graceful end-to-end: an `{"op":"shutdown"}` request (or
+//! stdin EOF in stdio mode) is acknowledged, the listener stops
+//! accepting, open connections finish their in-flight request streams,
+//! and the pool drains every admitted job before the process returns.
+
+use super::protocol::{self, ErrorKind, Request};
+use super::worker::{Outcome, SubmitError, WorkerPool};
+use crate::coordinator::SystemConfig;
+use anyhow::{Context, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Daemon configuration (the `cagra serve` flag surface).
+#[derive(Debug, Clone)]
+pub struct ServeOpts {
+    /// TCP bind address; port 0 picks a free port (see `port_file`).
+    pub addr: String,
+    pub workers: usize,
+    /// Admission-queue bound (jobs waiting beyond the busy workers).
+    pub queue_cap: usize,
+    /// In-memory artifact-layer budget in bytes (0 = unbounded).
+    pub mem_budget: u64,
+    /// Write the actual bound address (`host:port\n`) here once
+    /// listening — how CI and scripts discover a port-0 daemon.
+    pub port_file: Option<String>,
+    /// Serve stdin→stdout instead of TCP.
+    pub stdio: bool,
+}
+
+impl Default for ServeOpts {
+    fn default() -> Self {
+        ServeOpts {
+            addr: "127.0.0.1:7421".to_string(),
+            workers: 4,
+            queue_cap: 64,
+            mem_budget: 0,
+            port_file: None,
+            stdio: false,
+        }
+    }
+}
+
+/// Run the daemon until a shutdown request (or stdio EOF). Blocks.
+pub fn serve(cfg: SystemConfig, opts: &ServeOpts) -> Result<()> {
+    let pool = Arc::new(WorkerPool::start(
+        cfg,
+        opts.workers,
+        opts.queue_cap,
+        opts.mem_budget,
+    )?);
+    if opts.stdio {
+        serve_stdio(&pool)
+    } else {
+        serve_tcp(&pool, opts)
+    }
+}
+
+fn serve_stdio(pool: &Arc<WorkerPool>) -> Result<()> {
+    let stdin = std::io::stdin();
+    let mut stdout = std::io::stdout();
+    for line in stdin.lock().lines() {
+        let line = line.context("reading stdin")?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let (reply, is_shutdown) = handle_line(&line, pool);
+        stdout
+            .write_all(format!("{reply}\n").as_bytes())
+            .and_then(|()| stdout.flush())
+            .context("writing stdout")?;
+        if is_shutdown {
+            break;
+        }
+    }
+    // EOF without an explicit shutdown still drains admitted work.
+    pool.shutdown();
+    Ok(())
+}
+
+fn serve_tcp(pool: &Arc<WorkerPool>, opts: &ServeOpts) -> Result<()> {
+    let listener =
+        TcpListener::bind(&opts.addr).with_context(|| format!("binding {}", opts.addr))?;
+    let local = listener.local_addr().context("reading bound address")?;
+    if let Some(path) = &opts.port_file {
+        std::fs::write(path, format!("{local}\n"))
+            .with_context(|| format!("writing port file {path}"))?;
+    }
+    println!(
+        "cagra serve: listening on {local} ({} workers, queue cap {}, mem budget {})",
+        pool.worker_count(),
+        opts.queue_cap,
+        if opts.mem_budget == 0 {
+            "unbounded".to_string()
+        } else {
+            crate::util::fmt_bytes(opts.mem_budget as usize)
+        }
+    );
+    let shutting_down = Arc::new(AtomicBool::new(false));
+    let conn_handles: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>> =
+        Arc::new(Mutex::new(Vec::new()));
+    for stream in listener.incoming() {
+        if shutting_down.load(Ordering::SeqCst) {
+            break;
+        }
+        let stream = match stream {
+            Ok(s) => s,
+            Err(e) => {
+                crate::log_warn!("accept failed: {e}");
+                continue;
+            }
+        };
+        let pool = pool.clone();
+        let flag = shutting_down.clone();
+        let handle = std::thread::spawn(move || {
+            if let Err(e) = handle_conn(stream, &pool, &flag, local) {
+                crate::log_warn!("connection error: {e:#}");
+            }
+        });
+        conn_handles
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .push(handle);
+        // Reap finished handlers so a long-lived daemon doesn't
+        // accumulate join handles.
+        conn_handles
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .retain(|h| !h.is_finished());
+    }
+    let handles: Vec<_> = {
+        let mut h = conn_handles.lock().unwrap_or_else(|p| p.into_inner());
+        h.drain(..).collect()
+    };
+    for h in handles {
+        let _ = h.join();
+    }
+    pool.shutdown();
+    println!(
+        "cagra serve: drained ({} jobs served, {} resident hits)",
+        pool.jobs_done(),
+        pool.mem_stats().hits
+    );
+    Ok(())
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    pool: &Arc<WorkerPool>,
+    shutting_down: &AtomicBool,
+    local: std::net::SocketAddr,
+) -> Result<()> {
+    let mut writer = stream.try_clone().context("cloning stream")?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line.context("reading request line")?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let (reply, is_shutdown) = handle_line(&line, pool);
+        writer
+            .write_all(format!("{reply}\n").as_bytes())
+            .and_then(|()| writer.flush())
+            .context("writing response")?;
+        if is_shutdown {
+            shutting_down.store(true, Ordering::SeqCst);
+            // The accept loop is blocked in `incoming()`; poke it with a
+            // throwaway connection so it observes the flag and exits.
+            let _ = TcpStream::connect_timeout(&local, Duration::from_secs(1));
+            break;
+        }
+    }
+    Ok(())
+}
+
+/// Handle one request line against the pool. Returns the response line
+/// (no trailing newline) and whether this was a shutdown request.
+pub fn handle_line(line: &str, pool: &WorkerPool) -> (String, bool) {
+    let req = match protocol::parse_request(line) {
+        Ok(r) => r,
+        Err(e) => {
+            return (
+                protocol::render_error(None, ErrorKind::BadRequest, &format!("{e:#}")),
+                false,
+            )
+        }
+    };
+    match req {
+        Request::Ping { id } => (protocol::render_pong(id.as_ref()), false),
+        Request::Stats { id } => (
+            protocol::render_stats(
+                id.as_ref(),
+                pool.mem_stats(),
+                pool.worker_count(),
+                pool.queue_depth(),
+                pool.jobs_done(),
+            ),
+            false,
+        ),
+        Request::Shutdown { id } => (protocol::render_shutdown_ack(id.as_ref()), true),
+        Request::Run(run) => {
+            let deadline = run.deadline_ms.map(Duration::from_millis);
+            let id = run.id.clone();
+            match pool.run_sync(run.spec, deadline) {
+                Ok(Outcome::Done {
+                    result: Ok(r),
+                    queue_s,
+                    run_s,
+                }) => (
+                    protocol::render_run_result(id.as_ref(), &r, queue_s, run_s),
+                    false,
+                ),
+                Ok(Outcome::Done {
+                    result: Err(e), ..
+                }) => (
+                    protocol::render_error(id.as_ref(), ErrorKind::Failed, &format!("{e:#}")),
+                    false,
+                ),
+                Ok(Outcome::DeadlineExpired { queue_s }) => (
+                    protocol::render_error(
+                        id.as_ref(),
+                        ErrorKind::Deadline,
+                        &format!("deadline elapsed after {:.1}ms in queue", queue_s * 1e3),
+                    ),
+                    false,
+                ),
+                Err(SubmitError::Overloaded) => (
+                    protocol::render_error(
+                        id.as_ref(),
+                        ErrorKind::Overloaded,
+                        "admission queue full",
+                    ),
+                    false,
+                ),
+                Err(SubmitError::ShuttingDown) => (
+                    protocol::render_error(
+                        id.as_ref(),
+                        ErrorKind::ShuttingDown,
+                        "server is draining",
+                    ),
+                    false,
+                ),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::{parse, Value};
+
+    #[test]
+    fn handle_line_covers_control_plane() {
+        let pool = WorkerPool::start(SystemConfig::default(), 1, 4, 0).unwrap();
+        let (pong, stop) = handle_line(r#"{"op":"ping","id":1}"#, &pool);
+        assert!(!stop);
+        let v = parse(&pong).unwrap();
+        assert_eq!(v.get("ok"), Some(&Value::Bool(true)));
+        assert_eq!(v.get("id").and_then(Value::as_u64), Some(1));
+
+        let (stats, stop) = handle_line(r#"{"op":"stats"}"#, &pool);
+        assert!(!stop);
+        let v = parse(&stats).unwrap();
+        assert_eq!(v.get("workers").and_then(Value::as_u64), Some(1));
+
+        let (bad, stop) = handle_line("not json", &pool);
+        assert!(!stop);
+        let v = parse(&bad).unwrap();
+        assert_eq!(v.get("ok"), Some(&Value::Bool(false)));
+        assert_eq!(v.get("error").and_then(Value::as_str), Some("bad_request"));
+
+        let (ack, stop) = handle_line(r#"{"op":"shutdown","id":"bye"}"#, &pool);
+        assert!(stop);
+        let v = parse(&ack).unwrap();
+        assert_eq!(v.get("ok"), Some(&Value::Bool(true)));
+        assert_eq!(v.get("id").and_then(Value::as_str), Some("bye"));
+        pool.shutdown();
+    }
+}

@@ -1,0 +1,216 @@
+//! Closed-loop load generator for `cagra serve` (`cagra loadgen`): N
+//! client threads each hold one TCP connection and issue M requests
+//! back-to-back (a new request the moment the previous response lands —
+//! the closed-loop model, so offered load tracks service capacity).
+//!
+//! Every response is strictly validated (parses, `ok:true`, echoed id
+//! matches, finite summary); the report aggregates throughput and
+//! latency percentiles — the jobs/sec and p50/p99 numbers the
+//! `serve_throughput` bench records for cold vs resident stores.
+
+use crate::util::json::{parse, Value};
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::Instant;
+
+/// Load-generation parameters (the `cagra loadgen` flag surface).
+#[derive(Debug, Clone)]
+pub struct LoadgenOpts {
+    /// Daemon address (`host:port`).
+    pub addr: String,
+    /// Concurrent client connections.
+    pub clients: usize,
+    /// Requests per client.
+    pub requests: usize,
+    /// The `op:"run"` request body sent by every client; `id` is
+    /// injected per request (`c<client>-r<request>`).
+    pub request: Value,
+    /// Send `{"op":"shutdown"}` after the measurement (one extra
+    /// connection), so a scripted run tears the daemon down.
+    pub shutdown_after: bool,
+}
+
+/// Aggregated closed-loop results.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LoadgenReport {
+    pub clients: usize,
+    pub completed: usize,
+    pub elapsed_s: f64,
+    pub jobs_per_sec: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+}
+
+impl LoadgenReport {
+    pub fn render(&self) -> String {
+        format!(
+            "loadgen: {} request(s) over {} client(s) in {:.3}s\n\
+             \x20 throughput: {:.2} jobs/s\n\
+             \x20 latency:    p50 {:.2}ms  p99 {:.2}ms\n",
+            self.completed, self.clients, self.elapsed_s, self.jobs_per_sec, self.p50_ms, self.p99_ms
+        )
+    }
+}
+
+/// Run the closed loop. Any protocol violation or error response fails
+/// the whole run — a load test that silently drops errors measures a
+/// different server than the one you have.
+pub fn run(opts: &LoadgenOpts) -> Result<LoadgenReport> {
+    if opts.clients == 0 || opts.requests == 0 {
+        bail!("loadgen needs at least one client and one request");
+    }
+    let started = Instant::now();
+    let latencies = std::thread::scope(|scope| -> Result<Vec<f64>> {
+        let handles: Vec<_> = (0..opts.clients)
+            .map(|c| scope.spawn(move || client_loop(c, opts)))
+            .collect();
+        let mut all = Vec::with_capacity(opts.clients * opts.requests);
+        for h in handles {
+            all.extend(h.join().expect("client thread panicked")?);
+        }
+        Ok(all)
+    })?;
+    let elapsed_s = started.elapsed().as_secs_f64();
+    if opts.shutdown_after {
+        shutdown(&opts.addr)?;
+    }
+    let mut sorted = latencies.clone();
+    sorted.sort_by(f64::total_cmp);
+    Ok(LoadgenReport {
+        clients: opts.clients,
+        completed: latencies.len(),
+        elapsed_s,
+        jobs_per_sec: latencies.len() as f64 / elapsed_s.max(1e-9),
+        p50_ms: percentile(&sorted, 50.0) * 1e3,
+        p99_ms: percentile(&sorted, 99.0) * 1e3,
+    })
+}
+
+/// Nearest-rank percentile of an ascending slice (seconds in, seconds
+/// out). Empty input yields 0.
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = ((p / 100.0) * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
+fn client_loop(client: usize, opts: &LoadgenOpts) -> Result<Vec<f64>> {
+    let stream = TcpStream::connect(&opts.addr)
+        .with_context(|| format!("client {client}: connecting {}", opts.addr))?;
+    let mut writer = stream.try_clone().context("cloning stream")?;
+    let mut reader = BufReader::new(stream);
+    let mut latencies = Vec::with_capacity(opts.requests);
+    for i in 0..opts.requests {
+        let id = format!("c{client}-r{i}");
+        let line = with_id(&opts.request, &id).render_compact();
+        let t0 = Instant::now();
+        writer
+            .write_all(format!("{line}\n").as_bytes())
+            .and_then(|()| writer.flush())
+            .with_context(|| format!("client {client}: sending request {i}"))?;
+        let mut reply = String::new();
+        let n = reader
+            .read_line(&mut reply)
+            .with_context(|| format!("client {client}: reading response {i}"))?;
+        if n == 0 {
+            bail!("client {client}: server closed the connection at request {i}");
+        }
+        latencies.push(t0.elapsed().as_secs_f64());
+        validate(&reply, &id).with_context(|| format!("client {client} request {i}"))?;
+    }
+    Ok(latencies)
+}
+
+/// Copy the request template with `id` set (replacing any existing id).
+fn with_id(template: &Value, id: &str) -> Value {
+    let mut fields = match template {
+        Value::Obj(f) => f.clone(),
+        other => vec![("op".to_string(), other.clone())],
+    };
+    fields.retain(|(k, _)| k != "id");
+    fields.push(("id".to_string(), Value::Str(id.to_string())));
+    Value::Obj(fields)
+}
+
+/// Strict response validation: parses, `ok:true`, id echoed, summary
+/// finite.
+fn validate(reply: &str, id: &str) -> Result<()> {
+    let v = parse(reply.trim()).context("response is not valid JSON")?;
+    if v.get("ok") != Some(&Value::Bool(true)) {
+        bail!(
+            "error response: {} — {}",
+            v.get("error").and_then(Value::as_str).unwrap_or("?"),
+            v.get("message").and_then(Value::as_str).unwrap_or("?")
+        );
+    }
+    match v.get("id").and_then(Value::as_str) {
+        Some(got) if got == id => {}
+        other => bail!("response id {other:?} does not echo request id {id:?}"),
+    }
+    match v.get("summary").and_then(Value::as_f64) {
+        Some(s) if s.is_finite() => Ok(()),
+        other => bail!("response summary {other:?} is missing or non-finite"),
+    }
+}
+
+/// Send one shutdown request and wait for the ack.
+pub fn shutdown(addr: &str) -> Result<()> {
+    let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+    let mut writer = stream.try_clone().context("cloning stream")?;
+    let mut reader = BufReader::new(stream);
+    writer
+        .write_all(b"{\"op\":\"shutdown\"}\n")
+        .and_then(|()| writer.flush())
+        .context("sending shutdown")?;
+    let mut reply = String::new();
+    reader.read_line(&mut reply).context("reading shutdown ack")?;
+    let v = parse(reply.trim()).context("shutdown ack is not valid JSON")?;
+    if v.get("ok") != Some(&Value::Bool(true)) {
+        bail!("shutdown rejected: {reply}");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_is_nearest_rank() {
+        let s = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&s, 50.0), 2.0);
+        assert_eq!(percentile(&s, 99.0), 4.0);
+        assert_eq!(percentile(&s, 0.0), 1.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        assert_eq!(percentile(&[7.0], 99.0), 7.0);
+    }
+
+    #[test]
+    fn with_id_replaces_existing() {
+        let t = Value::Obj(vec![
+            ("op".to_string(), Value::Str("run".to_string())),
+            ("id".to_string(), Value::Num(1.0)),
+        ]);
+        let v = with_id(&t, "c0-r0");
+        assert_eq!(v.get("id").and_then(Value::as_str), Some("c0-r0"));
+        let Value::Obj(fields) = &v else { panic!() };
+        assert_eq!(fields.iter().filter(|(k, _)| k == "id").count(), 1);
+    }
+
+    #[test]
+    fn validation_is_strict() {
+        assert!(validate(r#"{"ok":true,"id":"a","summary":1.5}"#, "a").is_ok());
+        for (reply, id) in [
+            ("not json", "a"),
+            (r#"{"ok":false,"id":"a","error":"failed","message":"x"}"#, "a"),
+            (r#"{"ok":true,"id":"b","summary":1.5}"#, "a"),
+            (r#"{"ok":true,"id":"a"}"#, "a"),
+            (r#"{"ok":true,"id":"a","summary":null}"#, "a"),
+        ] {
+            assert!(validate(reply, id).is_err(), "accepted {reply:?}");
+        }
+    }
+}

@@ -1,0 +1,26 @@
+//! `cagra serve` — the resident graph-analytics daemon.
+//!
+//! The batch driver already shares one disk [`crate::store::ArtifactStore`]
+//! across jobs; this subsystem makes the process itself long-lived so the
+//! *decoded* artifacts stay resident too (ROADMAP serving north star):
+//!
+//! - [`worker`]: a pool of N job-execution threads over one shared
+//!   [`crate::coordinator::JobEnv`] — disk store + in-memory artifact
+//!   layer ([`crate::store::MemStore`]) — with bounded admission, per-
+//!   request deadlines, and graceful drain. A warm resident request does
+//!   zero CSR decode and the engines' steady state allocates nothing.
+//! - [`protocol`]: newline-delimited JSON requests/responses (the
+//!   `cagra batch` JobSpec surface plus `id` and `deadline_ms`).
+//! - [`daemon`]: the TCP/stdio transport (`cagra serve`).
+//! - [`loadgen`]: the closed-loop measurement client (`cagra loadgen`),
+//!   also driven by the `serve_throughput` bench suite.
+
+pub mod daemon;
+pub mod loadgen;
+pub mod protocol;
+pub mod worker;
+
+pub use daemon::{serve, ServeOpts};
+pub use loadgen::{LoadgenOpts, LoadgenReport};
+pub use protocol::{parse_request, ErrorKind, Request};
+pub use worker::{Outcome, SubmitError, WorkerPool};

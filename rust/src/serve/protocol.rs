@@ -1,0 +1,422 @@
+//! Wire protocol for `cagra serve`: newline-delimited JSON over TCP or
+//! stdio, built on [`crate::util::json`] (one request per line, one
+//! response line per request, in order per connection).
+//!
+//! Requests are objects with an `op` field:
+//!
+//! ```text
+//! {"op":"ping"}
+//! {"op":"stats"}
+//! {"op":"shutdown"}
+//! {"op":"run","app":"pagerank","variant":"both","graph":"livejournal-sim",
+//!  "iters":3,"scale":0.015625,"damping":0.9,"deadline_ms":5000,"id":17}
+//! ```
+//!
+//! `run` accepts exactly the `cagra batch` JobSpec surface (app, variant,
+//! graph, iters, sources, scale, analyze, delta_epsilon, cf_k, damping,
+//! bfs_source) plus `deadline_ms` (admission deadline) and `id` (any JSON
+//! value, echoed verbatim in the response so clients can pipeline).
+//! Unknown keys are rejected — a typo'd knob must fail loudly, not run a
+//! silently-different job.
+//!
+//! Responses always carry `ok` and the echoed `id`; failures carry a
+//! machine-matchable `error` kind from [`ErrorKind`] plus a human
+//! `message`.
+
+use crate::coordinator::{JobResult, JobSpec};
+use crate::util::json::{parse, Value};
+use anyhow::{bail, Result};
+
+/// One parsed client request.
+#[derive(Debug, Clone)]
+pub enum Request {
+    Ping { id: Option<Value> },
+    Stats { id: Option<Value> },
+    Shutdown { id: Option<Value> },
+    Run(Box<RunRequest>),
+}
+
+/// The `op:"run"` payload: a full job plus serving controls.
+#[derive(Debug, Clone)]
+pub struct RunRequest {
+    pub id: Option<Value>,
+    pub spec: JobSpec,
+    /// Admission deadline: if the job cannot *start* within this many
+    /// milliseconds of submission, the server rejects it with
+    /// [`ErrorKind::Deadline`] instead of running late.
+    pub deadline_ms: Option<u64>,
+}
+
+impl Request {
+    /// The request id, for echoing into the response.
+    pub fn id(&self) -> Option<&Value> {
+        match self {
+            Request::Ping { id } | Request::Stats { id } | Request::Shutdown { id } => id.as_ref(),
+            Request::Run(r) => r.id.as_ref(),
+        }
+    }
+}
+
+/// Machine-matchable failure kinds (the `error` response field).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorKind {
+    /// Malformed JSON, unknown op/key, bad field type, unknown app.
+    BadRequest,
+    /// Admission queue full.
+    Overloaded,
+    /// Deadline elapsed before a worker could start the job.
+    Deadline,
+    /// The job itself errored (bad knob value, unknown dataset, ...).
+    Failed,
+    /// Server is draining; no new work accepted.
+    ShuttingDown,
+}
+
+impl ErrorKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ErrorKind::BadRequest => "bad_request",
+            ErrorKind::Overloaded => "overloaded",
+            ErrorKind::Deadline => "deadline",
+            ErrorKind::Failed => "failed",
+            ErrorKind::ShuttingDown => "shutting_down",
+        }
+    }
+}
+
+/// Parse one request line. Every failure is a [`ErrorKind::BadRequest`]
+/// candidate — the caller renders the error back to the client.
+pub fn parse_request(line: &str) -> Result<Request> {
+    let v = parse(line)?;
+    let Value::Obj(fields) = &v else {
+        bail!("request must be a JSON object");
+    };
+    let op = match v.get("op") {
+        Some(Value::Str(s)) => s.as_str(),
+        Some(_) => bail!("\"op\" must be a string"),
+        None => bail!("missing \"op\" field"),
+    };
+    let id = v.get("id").cloned();
+    match op {
+        "ping" => {
+            reject_unknown(fields, &["op", "id"])?;
+            Ok(Request::Ping { id })
+        }
+        "stats" => {
+            reject_unknown(fields, &["op", "id"])?;
+            Ok(Request::Stats { id })
+        }
+        "shutdown" => {
+            reject_unknown(fields, &["op", "id"])?;
+            Ok(Request::Shutdown { id })
+        }
+        "run" => parse_run(fields, id),
+        other => bail!("unknown op {other:?} (expected run|ping|stats|shutdown)"),
+    }
+}
+
+fn reject_unknown(fields: &[(String, Value)], allowed: &[&str]) -> Result<()> {
+    for (k, _) in fields {
+        if !allowed.contains(&k.as_str()) {
+            bail!("unknown request key {k:?} (allowed: {})", allowed.join("|"));
+        }
+    }
+    Ok(())
+}
+
+fn parse_run(fields: &[(String, Value)], id: Option<Value>) -> Result<Request> {
+    let mut spec = JobSpec::default();
+    let mut app: Option<&str> = None;
+    let mut variant: Option<&str> = None;
+    let mut deadline_ms: Option<u64> = None;
+    for (k, v) in fields {
+        match k.as_str() {
+            "op" | "id" => {}
+            "app" => app = Some(str_field(k, v)?),
+            "variant" => variant = Some(str_field(k, v)?),
+            "graph" => spec.dataset = str_field(k, v)?.to_string(),
+            "iters" => spec.iters = usize_field(k, v)?,
+            "sources" => spec.num_sources = usize_field(k, v)?,
+            "scale" => spec.scale = num_field(k, v)?,
+            "analyze" => spec.analyze_memory = bool_field(k, v)?,
+            "delta_epsilon" => spec.delta_epsilon = Some(num_field(k, v)?),
+            "cf_k" => spec.cf_k = Some(usize_field(k, v)?),
+            "damping" => spec.damping = Some(num_field(k, v)?),
+            "bfs_source" => {
+                let n = usize_field(k, v)?;
+                spec.bfs_source = Some(u32::try_from(n).map_err(|_| {
+                    anyhow::anyhow!("\"bfs_source\" {n} exceeds the vertex-id range")
+                })?);
+            }
+            "deadline_ms" => deadline_ms = Some(usize_field(k, v)? as u64),
+            other => bail!(
+                "unknown run key {other:?} (allowed: op|id|app|variant|graph|iters|sources|\
+                 scale|analyze|delta_epsilon|cf_k|damping|bfs_source|deadline_ms)"
+            ),
+        }
+    }
+    let Some(app) = app else {
+        bail!("run request missing \"app\"");
+    };
+    let a = crate::apps::registry::find(app)
+        .ok_or_else(|| anyhow::anyhow!("unknown app {app:?} (see `cagra apps`)"))?;
+    spec.app = match variant {
+        Some(v) => a.parse_variant(v)?,
+        None => a.default_variant(),
+    };
+    Ok(Request::Run(Box::new(RunRequest {
+        id,
+        spec,
+        deadline_ms,
+    })))
+}
+
+fn str_field<'a>(k: &str, v: &'a Value) -> Result<&'a str> {
+    v.as_str()
+        .ok_or_else(|| anyhow::anyhow!("{k:?} must be a string"))
+}
+
+fn num_field(k: &str, v: &Value) -> Result<f64> {
+    v.as_f64()
+        .ok_or_else(|| anyhow::anyhow!("{k:?} must be a number"))
+}
+
+fn usize_field(k: &str, v: &Value) -> Result<usize> {
+    v.as_u64()
+        .map(|n| n as usize)
+        .ok_or_else(|| anyhow::anyhow!("{k:?} must be a non-negative integer"))
+}
+
+fn bool_field(k: &str, v: &Value) -> Result<bool> {
+    match v {
+        Value::Bool(b) => Ok(*b),
+        _ => bail!("{k:?} must be a boolean"),
+    }
+}
+
+fn base_response(id: Option<&Value>, op: &str, ok: bool) -> Vec<(String, Value)> {
+    vec![
+        ("id".to_string(), id.cloned().unwrap_or(Value::Null)),
+        ("ok".to_string(), Value::Bool(ok)),
+        ("op".to_string(), Value::Str(op.to_string())),
+    ]
+}
+
+/// One compact response line (no trailing newline — the writer appends
+/// the frame delimiter).
+pub fn render_error(id: Option<&Value>, kind: ErrorKind, message: &str) -> String {
+    let mut fields = base_response(id, "error", false);
+    fields.push((
+        "error".to_string(),
+        Value::Str(kind.as_str().to_string()),
+    ));
+    fields.push(("message".to_string(), Value::Str(message.to_string())));
+    Value::Obj(fields).render_compact()
+}
+
+pub fn render_pong(id: Option<&Value>) -> String {
+    Value::Obj(base_response(id, "ping", true)).render_compact()
+}
+
+/// `stats` response: the resident-layer and pool counters a load
+/// balancer or test harness polls.
+pub fn render_stats(
+    id: Option<&Value>,
+    mem: crate::store::MemStats,
+    workers: usize,
+    queue_depth: usize,
+    jobs_done: u64,
+) -> String {
+    let mut fields = base_response(id, "stats", true);
+    fields.push(("workers".to_string(), Value::Num(workers as f64)));
+    fields.push(("queue_depth".to_string(), Value::Num(queue_depth as f64)));
+    fields.push(("jobs_done".to_string(), Value::Num(jobs_done as f64)));
+    fields.push(("mem".to_string(), mem_value(&mem)));
+    Value::Obj(fields).render_compact()
+}
+
+pub fn render_shutdown_ack(id: Option<&Value>) -> String {
+    Value::Obj(base_response(id, "shutdown", true)).render_compact()
+}
+
+fn mem_value(m: &crate::store::MemStats) -> Value {
+    Value::Obj(vec![
+        ("hits".to_string(), Value::Num(m.hits as f64)),
+        ("misses".to_string(), Value::Num(m.misses as f64)),
+        ("evictions".to_string(), Value::Num(m.evictions as f64)),
+        ("entries".to_string(), Value::Num(m.entries as f64)),
+        (
+            "resident_bytes".to_string(),
+            Value::Num(m.resident_bytes as f64),
+        ),
+        ("budget_bytes".to_string(), Value::Num(m.budget_bytes as f64)),
+    ])
+}
+
+/// Successful `run` response: the job's scalar summary plus the metrics a
+/// closed-loop client needs to validate and aggregate.
+pub fn render_run_result(
+    id: Option<&Value>,
+    r: &JobResult,
+    queue_s: f64,
+    run_s: f64,
+) -> String {
+    let mut fields = base_response(id, "run", true);
+    if let Some(app) = &r.metrics.app {
+        fields.push(("app".to_string(), Value::Str(app.clone())));
+    }
+    fields.push(("summary".to_string(), Value::Num(r.summary)));
+    fields.push((
+        "iters".to_string(),
+        Value::Num(r.metrics.iter_seconds.len() as f64),
+    ));
+    fields.push((
+        "median_s".to_string(),
+        Value::Num(r.metrics.median_iter_seconds()),
+    ));
+    fields.push(("edges".to_string(), Value::Num(r.metrics.edges as f64)));
+    fields.push(("queue_ms".to_string(), Value::Num(queue_s * 1e3)));
+    fields.push(("run_ms".to_string(), Value::Num(run_s * 1e3)));
+    if let Some(m) = &r.metrics.mem {
+        fields.push(("mem".to_string(), mem_value(m)));
+    }
+    if let Some(s) = &r.metrics.store {
+        fields.push((
+            "store".to_string(),
+            Value::Obj(vec![
+                ("hits".to_string(), Value::Num(s.hits as f64)),
+                ("misses".to_string(), Value::Num(s.misses as f64)),
+            ]),
+        ));
+    }
+    Value::Obj(fields).render_compact()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::pagerank;
+    use crate::coordinator::AppKind;
+
+    #[test]
+    fn parses_full_run_request() {
+        let line = r#"{"op":"run","id":7,"app":"pagerank","variant":"both",
+            "graph":"twitter-sim","iters":4,"sources":2,"scale":0.25,
+            "analyze":true,"delta_epsilon":1e-6,"cf_k":8,"damping":0.9,
+            "bfs_source":3,"deadline_ms":250}"#
+            .replace('\n', " ");
+        let Request::Run(r) = parse_request(&line).unwrap() else {
+            panic!("not a run request");
+        };
+        assert_eq!(r.id, Some(Value::Num(7.0)));
+        assert!(matches!(
+            r.spec.app,
+            AppKind::PageRank(pagerank::Variant::ReorderedSegmented)
+        ));
+        assert_eq!(r.spec.dataset, "twitter-sim");
+        assert_eq!(r.spec.iters, 4);
+        assert_eq!(r.spec.num_sources, 2);
+        assert_eq!(r.spec.scale, 0.25);
+        assert!(r.spec.analyze_memory);
+        assert_eq!(r.spec.delta_epsilon, Some(1e-6));
+        assert_eq!(r.spec.cf_k, Some(8));
+        assert_eq!(r.spec.damping, Some(0.9));
+        assert_eq!(r.spec.bfs_source, Some(3));
+        assert_eq!(r.deadline_ms, Some(250));
+    }
+
+    #[test]
+    fn run_defaults_match_jobspec_defaults() {
+        let Request::Run(r) = parse_request(r#"{"op":"run","app":"pagerank"}"#).unwrap() else {
+            panic!("not a run request");
+        };
+        let d = JobSpec::default();
+        assert_eq!(r.spec.dataset, d.dataset);
+        assert_eq!(r.spec.iters, d.iters);
+        assert_eq!(r.spec.scale, d.scale);
+        assert!(r.id.is_none() && r.deadline_ms.is_none());
+    }
+
+    #[test]
+    fn control_ops_parse() {
+        assert!(matches!(
+            parse_request(r#"{"op":"ping"}"#).unwrap(),
+            Request::Ping { id: None }
+        ));
+        assert!(matches!(
+            parse_request(r#"{"op":"stats","id":"s1"}"#).unwrap(),
+            Request::Stats { id: Some(_) }
+        ));
+        assert!(matches!(
+            parse_request(r#"{"op":"shutdown"}"#).unwrap(),
+            Request::Shutdown { id: None }
+        ));
+    }
+
+    #[test]
+    fn malformed_requests_rejected() {
+        for bad in [
+            "",                                          // not JSON
+            "[1,2]",                                     // not an object
+            r#"{"app":"pagerank"}"#,                     // missing op
+            r#"{"op":"fly"}"#,                           // unknown op
+            r#"{"op":"ping","extra":1}"#,                // unknown control key
+            r#"{"op":"run"}"#,                           // missing app
+            r#"{"op":"run","app":"nope"}"#,              // unknown app
+            r#"{"op":"run","app":"pagerank","variant":"nope"}"#,
+            r#"{"op":"run","app":"pagerank","color":"red"}"#, // unknown run key
+            r#"{"op":"run","app":"pagerank","iters":-1}"#,    // bad type
+            r#"{"op":"run","app":"pagerank","iters":1.5}"#,
+            r#"{"op":"run","app":"pagerank","analyze":"yes"}"#,
+            r#"{"op":"run","app":"pagerank","graph":7}"#,
+            r#"{"op":"run","app":"pagerank","bfs_source":4294967296}"#,
+        ] {
+            assert!(parse_request(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn responses_are_single_line_and_parse_back() {
+        let id = Value::Str("req-1".into());
+        let err = render_error(Some(&id), ErrorKind::Overloaded, "queue full");
+        assert!(!err.contains('\n'));
+        let v = parse(&err).unwrap();
+        assert_eq!(v.get("ok"), Some(&Value::Bool(false)));
+        assert_eq!(v.get("error").and_then(Value::as_str), Some("overloaded"));
+        assert_eq!(v.get("id").and_then(Value::as_str), Some("req-1"));
+
+        let pong = render_pong(None);
+        let v = parse(&pong).unwrap();
+        assert_eq!(v.get("ok"), Some(&Value::Bool(true)));
+        assert_eq!(v.get("id"), Some(&Value::Null));
+
+        let stats = render_stats(None, crate::store::MemStats::default(), 4, 0, 9);
+        let v = parse(&stats).unwrap();
+        assert_eq!(v.get("workers").and_then(Value::as_u64), Some(4));
+        assert_eq!(v.get("jobs_done").and_then(Value::as_u64), Some(9));
+        assert!(v.get("mem").is_some());
+    }
+
+    #[test]
+    fn run_response_carries_summary_and_latency() {
+        let r = JobResult {
+            metrics: crate::coordinator::metrics::Metrics {
+                app: Some("pagerank/both".to_string()),
+                iter_seconds: vec![0.01, 0.02],
+                edges: 100,
+                mem: Some(crate::store::MemStats::default()),
+                ..Default::default()
+            },
+            summary: 1.25,
+        };
+        let line = render_run_result(Some(&Value::Num(3.0)), &r, 0.001, 0.05);
+        assert!(!line.contains('\n'));
+        let v = parse(&line).unwrap();
+        assert_eq!(v.get("ok"), Some(&Value::Bool(true)));
+        assert_eq!(v.get("summary").and_then(Value::as_f64), Some(1.25));
+        assert_eq!(v.get("iters").and_then(Value::as_u64), Some(2));
+        assert_eq!(v.get("id").and_then(Value::as_u64), Some(3));
+        assert!(v.get("run_ms").and_then(Value::as_f64).unwrap() > 0.0);
+        assert!(v.get("mem").is_some());
+    }
+}

@@ -1,0 +1,374 @@
+//! Worker pool for the resident daemon: N OS threads executing jobs
+//! against one shared [`JobEnv`] (disk store + in-memory artifact layer).
+//!
+//! Ownership contract (DESIGN.md §5): the shared layers hold only
+//! **immutable** decoded artifacts behind `Arc` (CSRs, segmented CSRs,
+//! permutations, datasets). All mutable execution state — engine scratch
+//! pools, per-source atomic arrays, segment buffers — lives inside the
+//! `PreparedApp` each job constructs and drops on its own worker thread,
+//! so concurrent jobs never alias scratch even when they share every
+//! artifact.
+//!
+//! Admission control: the queue is bounded ([`SubmitError::Overloaded`]
+//! beyond `queue_cap`), a job carrying a deadline is rejected with
+//! [`SubmitError` → deadline outcome] if no worker can *start* it in
+//! time, and [`WorkerPool::shutdown`] drains: already-admitted jobs run
+//! to completion, new submissions fail with
+//! [`SubmitError::ShuttingDown`].
+
+use crate::coordinator::{run_job_env, JobEnv, JobResult, JobSpec, SystemConfig};
+use crate::store::{ArtifactStore, MemStats, MemStore};
+use anyhow::Result;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+/// Why a submission was refused at the door.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitError {
+    /// Queue already holds `queue_cap` jobs.
+    Overloaded,
+    /// [`WorkerPool::shutdown`] has begun; the pool only drains.
+    ShuttingDown,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Overloaded => write!(f, "admission queue full"),
+            SubmitError::ShuttingDown => write!(f, "server is shutting down"),
+        }
+    }
+}
+
+/// Terminal state of an admitted job.
+#[derive(Debug)]
+pub enum Outcome {
+    /// The job ran; `queue_s` is time spent waiting for a worker.
+    Done {
+        result: Result<JobResult>,
+        queue_s: f64,
+        run_s: f64,
+    },
+    /// The deadline elapsed before any worker could start the job.
+    DeadlineExpired { queue_s: f64 },
+}
+
+struct Job {
+    spec: JobSpec,
+    deadline: Option<Instant>,
+    enqueued: Instant,
+    reply: Sender<Outcome>,
+}
+
+struct State {
+    queue: VecDeque<Job>,
+    shutting_down: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    available: Condvar,
+    cfg: SystemConfig,
+    store: Option<ArtifactStore>,
+    mem: MemStore,
+    queue_cap: usize,
+    jobs_done: AtomicU64,
+}
+
+impl Shared {
+    fn lock(&self) -> MutexGuard<'_, State> {
+        // A worker that panics mid-job (registry bug) poisons nothing the
+        // queue depends on; keep serving.
+        self.state.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    fn env(&self) -> JobEnv<'_> {
+        JobEnv {
+            shared_store: self.store.as_ref(),
+            mem: Some(&self.mem),
+        }
+    }
+}
+
+/// The resident execution pool: shared artifact layers + worker threads.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    workers: usize,
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl WorkerPool {
+    /// Spawn `workers` threads over a fresh in-memory layer with
+    /// `mem_budget` bytes (0 = unbounded) and, when the config enables
+    /// it, one shared disk store. `queue_cap` bounds waiting jobs, with
+    /// an effective floor of one slot per worker so a just-started pool
+    /// can always be filled.
+    pub fn start(
+        cfg: SystemConfig,
+        workers: usize,
+        queue_cap: usize,
+        mem_budget: u64,
+    ) -> Result<WorkerPool> {
+        let workers = workers.max(1);
+        let store = if cfg.store_enabled {
+            Some(ArtifactStore::open(&cfg.store_dir, cfg.store_cap_bytes)?)
+        } else {
+            None
+        };
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                queue: VecDeque::new(),
+                shutting_down: false,
+            }),
+            available: Condvar::new(),
+            cfg,
+            store,
+            mem: MemStore::new(mem_budget),
+            queue_cap,
+            jobs_done: AtomicU64::new(0),
+        });
+        let handles = (0..workers)
+            .map(|i| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("cagra-worker-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawning worker thread")
+            })
+            .collect();
+        Ok(WorkerPool {
+            shared,
+            workers,
+            handles: Mutex::new(handles),
+        })
+    }
+
+    /// Admit a job. On `Ok` the receiver yields exactly one [`Outcome`];
+    /// on `Err` nothing was enqueued and the caller reports the refusal.
+    pub fn submit(
+        &self,
+        spec: JobSpec,
+        deadline: Option<Duration>,
+    ) -> Result<Receiver<Outcome>, SubmitError> {
+        let (tx, rx) = channel();
+        {
+            let mut st = self.shared.lock();
+            if st.shutting_down {
+                return Err(SubmitError::ShuttingDown);
+            }
+            if st.queue.len() >= self.shared.queue_cap.max(self.workers) {
+                return Err(SubmitError::Overloaded);
+            }
+            let now = Instant::now();
+            st.queue.push_back(Job {
+                spec,
+                deadline: deadline.map(|d| now + d),
+                enqueued: now,
+                reply: tx,
+            });
+        }
+        self.shared.available.notify_one();
+        Ok(rx)
+    }
+
+    /// [`WorkerPool::submit`] + block for the outcome (per-connection
+    /// handler threads and the bench harness use this).
+    pub fn run_sync(
+        &self,
+        spec: JobSpec,
+        deadline: Option<Duration>,
+    ) -> Result<Outcome, SubmitError> {
+        let rx = self.submit(spec, deadline)?;
+        // A dropped sender (worker died mid-job) must not hang the
+        // connection; surface it as a job failure.
+        Ok(rx.recv().unwrap_or_else(|_| Outcome::Done {
+            result: Err(anyhow::anyhow!("worker abandoned the job (internal error)")),
+            queue_s: 0.0,
+            run_s: 0.0,
+        }))
+    }
+
+    pub fn mem_stats(&self) -> MemStats {
+        self.shared.mem.stats()
+    }
+
+    pub fn worker_count(&self) -> usize {
+        self.workers
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.shared.lock().queue.len()
+    }
+
+    pub fn jobs_done(&self) -> u64 {
+        self.shared.jobs_done.load(Ordering::Relaxed)
+    }
+
+    /// Graceful drain: stop admitting, let workers finish every
+    /// already-queued job, then join them. Idempotent.
+    pub fn shutdown(&self) {
+        {
+            let mut st = self.shared.lock();
+            st.shutting_down = true;
+        }
+        self.shared.available.notify_all();
+        let handles: Vec<_> = {
+            let mut h = self.handles.lock().unwrap_or_else(|p| p.into_inner());
+            h.drain(..).collect()
+        };
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    loop {
+        let job = {
+            let mut st = shared.lock();
+            loop {
+                if let Some(job) = st.queue.pop_front() {
+                    break job;
+                }
+                if st.shutting_down {
+                    return;
+                }
+                st = shared
+                    .available
+                    .wait(st)
+                    .unwrap_or_else(|p| p.into_inner());
+            }
+        };
+        let started = Instant::now();
+        let queue_s = started.duration_since(job.enqueued).as_secs_f64();
+        if job.deadline.is_some_and(|d| started > d) {
+            // Too late to start: the client gave up at its deadline, so
+            // running now would burn a worker on an unwanted answer.
+            let _ = job.reply.send(Outcome::DeadlineExpired { queue_s });
+            continue;
+        }
+        let result = run_job_env(&job.spec, &shared.cfg, shared.env());
+        let run_s = started.elapsed().as_secs_f64();
+        shared.jobs_done.fetch_add(1, Ordering::Relaxed);
+        // A receiver that hung up (connection dropped) is not an error.
+        let _ = job.reply.send(Outcome::Done {
+            result,
+            queue_s,
+            run_s,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_spec() -> JobSpec {
+        JobSpec {
+            dataset: "livejournal-sim".into(),
+            scale: 1.0 / 64.0,
+            iters: 2,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn pool_runs_jobs_and_counts_them() {
+        let pool = WorkerPool::start(SystemConfig::default(), 2, 8, 0).unwrap();
+        let outcome = pool.run_sync(small_spec(), None).unwrap();
+        let Outcome::Done { result, run_s, .. } = outcome else {
+            panic!("expected completion");
+        };
+        let r = result.unwrap();
+        assert_eq!(r.metrics.iter_seconds.len(), 2);
+        assert!(run_s > 0.0);
+        assert_eq!(pool.jobs_done(), 1);
+        // The pool always threads the memory layer through the job.
+        assert!(r.metrics.mem.is_some());
+    }
+
+    #[test]
+    fn bad_spec_is_an_error_outcome_not_a_dead_worker() {
+        let pool = WorkerPool::start(SystemConfig::default(), 1, 8, 0).unwrap();
+        let bad = JobSpec {
+            cf_k: Some(65),
+            ..small_spec()
+        };
+        let Outcome::Done { result, .. } = pool.run_sync(bad, None).unwrap() else {
+            panic!("expected completion");
+        };
+        assert!(result.is_err());
+        // The worker survived the bad request and still serves.
+        let Outcome::Done { result, .. } = pool.run_sync(small_spec(), None).unwrap() else {
+            panic!("expected completion");
+        };
+        assert!(result.is_ok());
+    }
+
+    #[test]
+    fn expired_deadline_skips_execution() {
+        let pool = WorkerPool::start(SystemConfig::default(), 1, 8, 0).unwrap();
+        // Occupy the single worker so the deadline job waits in queue.
+        let blocker = pool.submit(small_spec(), None).unwrap();
+        let doomed = pool
+            .submit(small_spec(), Some(Duration::from_nanos(1)))
+            .unwrap();
+        let outcome = doomed.recv().unwrap();
+        assert!(
+            matches!(outcome, Outcome::DeadlineExpired { .. }),
+            "a 1ns deadline cannot be met from behind a running job"
+        );
+        assert!(matches!(blocker.recv().unwrap(), Outcome::Done { .. }));
+    }
+
+    #[test]
+    fn overload_rejects_at_the_door() {
+        let pool = WorkerPool::start(SystemConfig::default(), 1, 1, 0).unwrap();
+        let mut admitted = Vec::new();
+        let mut rejected = 0;
+        // Far more submissions than workers+queue_cap: the excess must be
+        // refused (never silently dropped or unboundedly queued).
+        for _ in 0..32 {
+            match pool.submit(small_spec(), None) {
+                Ok(rx) => admitted.push(rx),
+                Err(SubmitError::Overloaded) => rejected += 1,
+                Err(e) => panic!("unexpected {e:?}"),
+            }
+        }
+        assert!(rejected > 0, "cap 1 must refuse some of 32 submissions");
+        for rx in admitted {
+            assert!(matches!(rx.recv().unwrap(), Outcome::Done { .. }));
+        }
+    }
+
+    #[test]
+    fn shutdown_drains_admitted_jobs() {
+        let pool = WorkerPool::start(SystemConfig::default(), 1, 8, 0).unwrap();
+        let receivers: Vec<_> = (0..4)
+            .map(|_| pool.submit(small_spec(), None).unwrap())
+            .collect();
+        pool.shutdown();
+        // Every admitted job completed during the drain...
+        for rx in receivers {
+            let Outcome::Done { result, .. } = rx.recv().unwrap() else {
+                panic!("drain must complete admitted jobs");
+            };
+            assert!(result.is_ok());
+        }
+        assert_eq!(pool.jobs_done(), 4);
+        // ...and nothing is admitted afterwards.
+        assert_eq!(
+            pool.submit(small_spec(), None).unwrap_err(),
+            SubmitError::ShuttingDown
+        );
+    }
+}

@@ -36,7 +36,7 @@ use anyhow::{Context, Result};
 use std::collections::{HashMap, HashSet};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, SystemTime};
 
 /// Extension of committed artifact files.
@@ -182,6 +182,14 @@ pub struct ArtifactStore {
     exempt: Mutex<HashMap<u64, HashSet<PathBuf>>>,
     /// Next fresh scope id (0 is reserved for [`ScopeId::INSTANCE`]).
     next_scope: AtomicU64,
+    /// Per-key locks serializing probe→build→write within this process
+    /// (`cagra serve` workers share one instance): two threads missing on
+    /// the same key build once — the loser blocks, then hits. Distinct
+    /// keys build concurrently. Entries are swept once no thread holds
+    /// them, so the map stays bounded by in-flight keys. Cross-*process*
+    /// races were already safe (atomic temp+rename writes; the loser
+    /// rewrites identical bytes) — this removes the duplicated build.
+    key_locks: Mutex<HashMap<String, Arc<Mutex<()>>>>,
 }
 
 impl ArtifactStore {
@@ -240,7 +248,17 @@ impl ArtifactStore {
             counters: Counters::default(),
             exempt: Mutex::new(HashMap::from([(ScopeId::INSTANCE.0, HashSet::new())])),
             next_scope: AtomicU64::new(1),
+            key_locks: Mutex::new(HashMap::new()),
         }
+    }
+
+    /// The in-process lock for one artifact filename. A poisoned lock is
+    /// re-entered: the `()` payload has no invariants, and a panicking
+    /// builder must not wedge every later request for that key.
+    fn key_lock(&self, file: &str) -> Arc<Mutex<()>> {
+        let mut locks = self.key_locks.lock().unwrap_or_else(|p| p.into_inner());
+        locks.retain(|_, l| Arc::strong_count(l) > 1);
+        locks.entry(file.to_string()).or_default().clone()
     }
 
     pub fn dir(&self) -> &Path {
@@ -274,7 +292,13 @@ impl ArtifactStore {
         scope: ScopeId,
         build: impl FnOnce() -> T,
     ) -> T {
-        let path = self.dir.join(key.filename::<T>());
+        let file = key.filename::<T>();
+        let path = self.dir.join(&file);
+        // Serialize same-key probe→build→write across this process's
+        // threads (concurrent serve workers): losers block here, then
+        // take the hit path below instead of re-running `build`.
+        let key_lock = self.key_lock(&file);
+        let _building = key_lock.lock().unwrap_or_else(|p| p.into_inner());
         let t0 = crate::obs::recorder::timestamp();
         if path.is_file() {
             match codec::read_file::<T>(&path) {
@@ -318,7 +342,10 @@ impl ArtifactStore {
 
     /// Read an artifact without building on miss (tests, tooling).
     pub fn try_get<T: Artifact>(&self, key: &StoreKey) -> Result<T> {
-        let path = self.dir.join(key.filename::<T>());
+        let file = key.filename::<T>();
+        let path = self.dir.join(&file);
+        let key_lock = self.key_lock(&file);
+        let _reading = key_lock.lock().unwrap_or_else(|p| p.into_inner());
         let (value, len) = codec::read_file::<T>(&path)?;
         self.counters.hits.fetch_add(1, Ordering::Relaxed);
         self.counters.bytes_read.fetch_add(len, Ordering::Relaxed);
@@ -397,6 +424,14 @@ impl ArtifactStore {
         }
         files.sort_by_key(|f| f.mtime);
         let exempt = self.exempt.lock().unwrap();
+        // Snapshot the in-flight key locks so eviction can skip files a
+        // concurrent thread is mid-build/read on (including the caller's
+        // own key — `evict_to_cap` runs with that lock held, and a fresh
+        // write is exempt via its scope anyway).
+        let in_flight: HashMap<String, Arc<Mutex<()>>> = {
+            let locks = self.key_locks.lock().unwrap_or_else(|p| p.into_inner());
+            locks.clone()
+        };
         for f in files {
             if total <= self.cap_bytes {
                 break;
@@ -404,6 +439,17 @@ impl ArtifactStore {
             if exempt.values().any(|set| set.contains(&f.path)) {
                 continue;
             }
+            // Hold the file's key lock (if registered) across the unlink,
+            // so no thread is between probe and read when it disappears.
+            let name = f.path.file_name().and_then(|n| n.to_str());
+            let _guard = match name.and_then(|n| in_flight.get(n)) {
+                Some(l) => match l.try_lock() {
+                    Ok(g) => Some(g),
+                    Err(std::sync::TryLockError::Poisoned(p)) => Some(p.into_inner()),
+                    Err(std::sync::TryLockError::WouldBlock) => continue, // in use
+                },
+                None => None,
+            };
             if std::fs::remove_file(&f.path).is_ok() {
                 total -= f.size;
                 self.counters.evictions.fetch_add(1, Ordering::Relaxed);

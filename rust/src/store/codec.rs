@@ -48,6 +48,10 @@ pub trait Artifact: Sized {
     const NAME: &'static str;
     fn encode_payload(&self, out: &mut Vec<u8>);
     fn decode_payload(r: &mut Reader) -> Result<Self>;
+    /// Approximate decoded in-memory footprint (heap payload, not the
+    /// encoded file size) — what the in-memory layer ([`super::MemStore`])
+    /// charges against its byte budget.
+    fn mem_bytes(&self) -> u64;
 }
 
 /// Bounds-checked little-endian reader over a byte slice.
@@ -279,6 +283,10 @@ impl Artifact for Csr {
         }
         Ok(Csr { offsets, targets })
     }
+
+    fn mem_bytes(&self) -> u64 {
+        (self.offsets.len() * 8 + self.targets.len() * 4) as u64
+    }
 }
 
 impl Artifact for Vec<VertexId> {
@@ -306,6 +314,10 @@ impl Artifact for Vec<VertexId> {
             seen[i] = true;
         }
         Ok(perm)
+    }
+
+    fn mem_bytes(&self) -> u64 {
+        (self.len() * 4) as u64
     }
 }
 
@@ -394,6 +406,15 @@ impl Artifact for SegmentedCsr {
             segments,
             merge_plan,
         })
+    }
+
+    fn mem_bytes(&self) -> u64 {
+        let segs: u64 = self
+            .segments
+            .iter()
+            .map(|s| (s.dst_ids.len() * 4 + s.offsets.len() * 8 + s.sources.len() * 4 + 8) as u64)
+            .sum();
+        segs + (self.merge_plan.starts.len() * 8) as u64
     }
 }
 

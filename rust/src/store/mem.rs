@@ -1,0 +1,373 @@
+//! In-memory artifact layer: decoded artifacts pinned behind [`Arc`].
+//!
+//! The disk [`super::ArtifactStore`] amortizes preprocessing across
+//! *processes*; this layer amortizes the remaining warm-path cost — CSR
+//! decode — across *requests* inside one resident process (`cagra
+//! serve`). Entries are type-erased `Arc`s keyed by the same string the
+//! disk store uses for filenames (fingerprint + artifact kind + prep
+//! label + codec version), so versioned invalidation falls out of the
+//! key: bumping `CODEC_VERSION` changes every key, and
+//! [`MemStore::invalidate_prefix`] drops one fingerprint's entries when
+//! a dataset is regenerated.
+//!
+//! Policy:
+//! - **byte-budget LRU** — each entry carries its decoded size; inserts
+//!   evict least-recently-used entries until the cache fits the budget.
+//!   Eviction only drops the cache's `Arc`: jobs that already hold a
+//!   clone keep working on the pinned value, memory is reclaimed when
+//!   the last job finishes. The newest entry is never evicted by its own
+//!   insert, so a single over-budget artifact still serves warm hits.
+//! - **TTL** — optional; an entry older than the TTL is treated as a
+//!   miss and rebuilt (counted under `expirations`, not `evictions`).
+//! - **per-key build locks** — two requests missing on the same key
+//!   build once; the loser blocks and then hits. Distinct keys build
+//!   concurrently.
+//!
+//! Every lookup is recorded as an obs artifact span with a `mem:` path
+//! prefix, so `cagra trace` interleaves memory-layer hits with disk
+//! store activity.
+
+use crate::obs::recorder;
+use std::any::Any;
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+/// Hit/miss/eviction counters plus occupancy, mirroring
+/// [`super::StoreStats`] for the in-memory layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct MemStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    /// TTL expirations (counted separately from budget evictions).
+    pub expirations: u64,
+    pub entries: u64,
+    pub resident_bytes: u64,
+    pub budget_bytes: u64,
+}
+
+struct Entry {
+    value: Arc<dyn Any + Send + Sync>,
+    bytes: u64,
+    /// Monotonic access tick for LRU ordering.
+    last_used: u64,
+    inserted: Instant,
+}
+
+#[derive(Default)]
+struct Inner {
+    map: HashMap<String, Entry>,
+    tick: u64,
+    resident_bytes: u64,
+}
+
+/// Byte-budget LRU cache of decoded artifacts (see module docs).
+pub struct MemStore {
+    inner: Mutex<Inner>,
+    /// Per-key in-flight build locks (same shape as the disk store's):
+    /// entries are swept once no builder holds them.
+    build_locks: Mutex<HashMap<String, Arc<Mutex<()>>>>,
+    budget_bytes: u64,
+    ttl: Option<Duration>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+    expirations: AtomicU64,
+}
+
+impl std::fmt::Debug for MemStore {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("MemStore")
+            .field("budget_bytes", &self.budget_bytes)
+            .field("ttl", &self.ttl)
+            .finish_non_exhaustive()
+    }
+}
+
+fn relock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    // The `()`/map payloads carry no invariants a panicking builder could
+    // tear, so a poisoned lock is safe to re-enter.
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+impl MemStore {
+    /// Cache with a byte budget (0 = unlimited) and no TTL.
+    pub fn new(budget_bytes: u64) -> MemStore {
+        MemStore {
+            inner: Mutex::new(Inner::default()),
+            build_locks: Mutex::new(HashMap::new()),
+            budget_bytes,
+            ttl: None,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            expirations: AtomicU64::new(0),
+        }
+    }
+
+    /// Same cache with entries expiring `ttl` after insertion.
+    pub fn with_ttl(mut self, ttl: Duration) -> MemStore {
+        self.ttl = Some(ttl);
+        self
+    }
+
+    /// Probe for `key`; counts and records nothing (test/introspection
+    /// helper — the serving path goes through [`MemStore::get_or_insert`]).
+    pub fn peek<T: Send + Sync + 'static>(&self, key: &str) -> Option<Arc<T>> {
+        let mut inner = relock(&self.inner);
+        self.lookup::<T>(&mut inner, key)
+    }
+
+    /// Return the pinned value for `key`, building (and inserting) it on
+    /// a miss. `build` returns the value plus its decoded size in bytes.
+    /// Concurrent misses on one key build once.
+    pub fn get_or_insert<T, F>(&self, key: &str, build: F) -> Arc<T>
+    where
+        T: Send + Sync + 'static,
+        F: FnOnce() -> (T, u64),
+    {
+        match self.try_get_or_insert(key, || Ok(build())) {
+            Ok(v) => v,
+            Err(e) => unreachable!("infallible build failed: {e}"),
+        }
+    }
+
+    /// Fallible variant of [`MemStore::get_or_insert`] for builders that
+    /// can fail (dataset loads). Nothing is cached on error.
+    pub fn try_get_or_insert<T, F>(&self, key: &str, build: F) -> anyhow::Result<Arc<T>>
+    where
+        T: Send + Sync + 'static,
+        F: FnOnce() -> anyhow::Result<(T, u64)>,
+    {
+        let t0 = recorder::timestamp();
+        if let Some(v) = self.lookup::<T>(&mut relock(&self.inner), key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            self.record(t0, key, true);
+            return Ok(v);
+        }
+        let key_lock = self.build_lock(key);
+        let _building = relock(&key_lock);
+        // Second probe under the key lock: a concurrent builder may have
+        // filled the entry while we waited.
+        if let Some(v) = self.lookup::<T>(&mut relock(&self.inner), key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            self.record(t0, key, true);
+            return Ok(v);
+        }
+        // Build OUTSIDE the cache lock (only the key lock is held):
+        // distinct keys decode/build concurrently.
+        let (value, bytes) = build()?;
+        let value: Arc<T> = Arc::new(value);
+        let mut inner = relock(&self.inner);
+        inner.tick += 1;
+        let tick = inner.tick;
+        if let Some(old) = inner.map.insert(
+            key.to_string(),
+            Entry { value: value.clone(), bytes, last_used: tick, inserted: Instant::now() },
+        ) {
+            inner.resident_bytes -= old.bytes;
+        }
+        inner.resident_bytes += bytes;
+        self.evict_to_budget(&mut inner, key);
+        drop(inner);
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        self.record(t0, key, false);
+        Ok(value)
+    }
+
+    /// Drop every entry whose key starts with `prefix` (e.g. one graph's
+    /// fingerprint, or `dataset:` on regeneration). Returns the count.
+    pub fn invalidate_prefix(&self, prefix: &str) -> usize {
+        let mut inner = relock(&self.inner);
+        let doomed: Vec<String> =
+            inner.map.keys().filter(|k| k.starts_with(prefix)).cloned().collect();
+        for k in &doomed {
+            if let Some(e) = inner.map.remove(k) {
+                inner.resident_bytes -= e.bytes;
+            }
+        }
+        doomed.len()
+    }
+
+    pub fn stats(&self) -> MemStats {
+        let inner = relock(&self.inner);
+        MemStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            expirations: self.expirations.load(Ordering::Relaxed),
+            entries: inner.map.len() as u64,
+            resident_bytes: inner.resident_bytes,
+            budget_bytes: self.budget_bytes,
+        }
+    }
+
+    /// TTL- and type-checked probe; bumps LRU position on hit. Expired or
+    /// type-mismatched entries are removed (the latter happens only if a
+    /// caller reuses a key at a different type — treated as staleness).
+    fn lookup<T: Send + Sync + 'static>(&self, inner: &mut Inner, key: &str) -> Option<Arc<T>> {
+        let expired = match inner.map.get(key) {
+            Some(e) => self.ttl.is_some_and(|ttl| e.inserted.elapsed() > ttl),
+            None => return None,
+        };
+        if expired {
+            let e = inner.map.remove(key).unwrap();
+            inner.resident_bytes -= e.bytes;
+            self.expirations.fetch_add(1, Ordering::Relaxed);
+            return None;
+        }
+        inner.tick += 1;
+        let tick = inner.tick;
+        let e = inner.map.get_mut(key).unwrap();
+        match e.value.clone().downcast::<T>() {
+            Ok(v) => {
+                e.last_used = tick;
+                Some(v)
+            }
+            Err(_) => {
+                let e = inner.map.remove(key).unwrap();
+                inner.resident_bytes -= e.bytes;
+                None
+            }
+        }
+    }
+
+    /// Evict LRU entries until the cache fits the budget, never evicting
+    /// `keep` (the entry just inserted).
+    fn evict_to_budget(&self, inner: &mut Inner, keep: &str) {
+        if self.budget_bytes == 0 {
+            return;
+        }
+        while inner.resident_bytes > self.budget_bytes {
+            let victim = inner
+                .map
+                .iter()
+                .filter(|(k, _)| k.as_str() != keep)
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k.clone());
+            match victim {
+                Some(k) => {
+                    let e = inner.map.remove(&k).unwrap();
+                    inner.resident_bytes -= e.bytes;
+                    self.evictions.fetch_add(1, Ordering::Relaxed);
+                }
+                None => break, // only `keep` remains; let it stay resident
+            }
+        }
+    }
+
+    fn build_lock(&self, key: &str) -> Arc<Mutex<()>> {
+        let mut locks = relock(&self.build_locks);
+        locks.retain(|_, l| Arc::strong_count(l) > 1);
+        locks.entry(key.to_string()).or_default().clone()
+    }
+
+    fn record(&self, t0: u64, key: &str, hit: bool) {
+        recorder::record_artifact(t0, Path::new(&format!("mem:{key}")), hit);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hit_returns_same_pinned_value() {
+        let m = MemStore::new(0);
+        let a = m.get_or_insert("k", || (vec![1u32, 2, 3], 12));
+        let b = m.get_or_insert("k", || panic!("must not rebuild on hit"));
+        assert!(Arc::ptr_eq(&a, &b));
+        let s = m.stats();
+        assert_eq!((s.hits, s.misses, s.entries, s.resident_bytes), (1, 1, 1, 12));
+    }
+
+    #[test]
+    fn lru_eviction_respects_budget_and_recency() {
+        let m = MemStore::new(100);
+        m.get_or_insert("a", || (vec![0u8; 40], 40));
+        m.get_or_insert("b", || (vec![0u8; 40], 40));
+        // Touch `a` so `b` is the LRU entry when `c` overflows the budget.
+        m.get_or_insert("a", || -> (Vec<u8>, u64) { panic!("hit expected") });
+        m.get_or_insert("c", || (vec![0u8; 40], 40));
+        let s = m.stats();
+        assert_eq!(s.evictions, 1);
+        assert_eq!(s.resident_bytes, 80);
+        assert!(m.peek::<Vec<u8>>("b").is_none(), "LRU entry must be evicted");
+        assert!(m.peek::<Vec<u8>>("a").is_some());
+        assert!(m.peek::<Vec<u8>>("c").is_some());
+    }
+
+    #[test]
+    fn oversized_entry_stays_resident() {
+        let m = MemStore::new(10);
+        let v = m.get_or_insert("big", || (vec![0u8; 64], 64));
+        assert_eq!(v.len(), 64);
+        // The fresh insert is never its own victim: warm hits still work.
+        assert!(m.peek::<Vec<u8>>("big").is_some());
+        assert_eq!(m.stats().evictions, 0);
+        // ...but it is first in line once anything newer arrives.
+        m.get_or_insert("next", || (vec![0u8; 4], 4));
+        assert!(m.peek::<Vec<u8>>("big").is_none());
+    }
+
+    #[test]
+    fn ttl_expiry_counts_and_rebuilds() {
+        let m = MemStore::new(0).with_ttl(Duration::from_millis(0));
+        m.get_or_insert("k", || (7u64, 8));
+        std::thread::sleep(Duration::from_millis(2));
+        let v = m.get_or_insert("k", || (9u64, 8));
+        assert_eq!(*v, 9, "expired entry must be rebuilt");
+        let s = m.stats();
+        assert_eq!(s.expirations, 1);
+        assert_eq!(s.misses, 2);
+    }
+
+    #[test]
+    fn invalidate_prefix_drops_matching_keys() {
+        let m = MemStore::new(0);
+        m.get_or_insert("fp1-csr", || (1u32, 4));
+        m.get_or_insert("fp1-perm", || (2u32, 4));
+        m.get_or_insert("fp2-csr", || (3u32, 4));
+        assert_eq!(m.invalidate_prefix("fp1-"), 2);
+        let s = m.stats();
+        assert_eq!((s.entries, s.resident_bytes), (1, 4));
+        assert!(m.peek::<u32>("fp2-csr").is_some());
+    }
+
+    #[test]
+    fn concurrent_same_key_builds_once() {
+        let m = Arc::new(MemStore::new(0));
+        let builds = Arc::new(AtomicU64::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let m = m.clone();
+            let builds = builds.clone();
+            handles.push(std::thread::spawn(move || {
+                m.get_or_insert("shared", || {
+                    builds.fetch_add(1, Ordering::SeqCst);
+                    std::thread::sleep(Duration::from_millis(5));
+                    (vec![42u32; 16], 64)
+                })
+            }));
+        }
+        let vals: Vec<Arc<Vec<u32>>> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        assert_eq!(builds.load(Ordering::SeqCst), 1, "losers must block, then hit");
+        for v in &vals[1..] {
+            assert!(Arc::ptr_eq(&vals[0], v));
+        }
+    }
+
+    #[test]
+    fn failed_build_caches_nothing() {
+        let m = MemStore::new(0);
+        let r: anyhow::Result<Arc<u32>> =
+            m.try_get_or_insert("k", || anyhow::bail!("load failed"));
+        assert!(r.is_err());
+        assert_eq!(m.stats().entries, 0);
+        let v = m.get_or_insert("k", || (5u32, 4));
+        assert_eq!(*v, 5);
+    }
+}

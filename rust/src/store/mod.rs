@@ -38,21 +38,28 @@
 pub mod artifact_store;
 pub mod codec;
 pub mod fingerprint;
+pub mod mem;
 
 pub use artifact_store::{ArtifactStore, ExemptionScope, ScopeId, StoreKey, StoreStats};
 pub use codec::{Artifact, CODEC_VERSION};
 pub use fingerprint::{fingerprint_csr, fingerprint_dataset};
+pub use mem::{MemStats, MemStore};
 
 /// A borrowed store plus the fingerprint of the job's dataset — what the
 /// preprocessing sites need to form keys — and the job's
 /// eviction-exemption scope (writes made through this context cannot be
 /// evicted until the job's [`ExemptionScope`] is dropped). `Copy` so it
 /// threads through constructors as a plain optional argument.
+///
+/// `mem` optionally stacks the in-memory layer ([`MemStore`]) above the
+/// disk store: [`StoreCtx::get_or_build_arc`] probes memory first, so a
+/// resident process (`cagra serve`) pays zero decode on a warm request.
 #[derive(Debug, Clone, Copy)]
 pub struct StoreCtx<'a> {
     pub store: &'a ArtifactStore,
     pub fingerprint: u64,
     pub scope: ScopeId,
+    pub mem: Option<&'a MemStore>,
 }
 
 impl<'a> StoreCtx<'a> {
@@ -70,7 +77,14 @@ impl<'a> StoreCtx<'a> {
             store,
             fingerprint,
             scope,
+            mem: None,
         }
+    }
+
+    /// Stack the in-memory layer above the disk store for this context.
+    pub fn with_mem(mut self, mem: &'a MemStore) -> StoreCtx<'a> {
+        self.mem = Some(mem);
+        self
     }
 
     /// [`ArtifactStore::get_or_build_scoped`] with a by-value key, so call
@@ -78,5 +92,24 @@ impl<'a> StoreCtx<'a> {
     /// one-liners.
     pub fn get_or_build<T: Artifact>(&self, key: StoreKey, build: impl FnOnce() -> T) -> T {
         self.store.get_or_build_scoped(&key, self.scope, build)
+    }
+
+    /// Like [`StoreCtx::get_or_build`], but the decoded value is pinned
+    /// behind an [`std::sync::Arc`]. With a [`MemStore`] attached, the
+    /// memory layer is probed first (keyed by the disk filename, which
+    /// already embeds fingerprint, label, and codec version); a hit skips
+    /// disk and decode entirely. Without one this is `Arc::new(disk)`.
+    pub fn get_or_build_arc<T>(&self, key: StoreKey, build: impl FnOnce() -> T) -> std::sync::Arc<T>
+    where
+        T: Artifact + Send + Sync + 'static,
+    {
+        match self.mem {
+            Some(m) => m.get_or_insert(&key.filename::<T>(), || {
+                let v = self.store.get_or_build_scoped(&key, self.scope, build);
+                let bytes = v.mem_bytes();
+                (v, bytes)
+            }),
+            None => std::sync::Arc::new(self.store.get_or_build_scoped(&key, self.scope, build)),
+        }
     }
 }

@@ -80,6 +80,46 @@ impl Value {
         write_value(self, 0, &mut out);
         out
     }
+
+    /// Single-line JSON with no interior newlines — the newline-delimited
+    /// wire format (`cagra serve`). Parses back to the same tree as
+    /// [`render`] output; only the whitespace differs.
+    pub fn render_compact(&self) -> String {
+        let mut out = String::new();
+        write_value_compact(self, &mut out);
+        out
+    }
+}
+
+fn write_value_compact(v: &Value, out: &mut String) {
+    match v {
+        Value::Null => out.push_str("null"),
+        Value::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+        Value::Num(n) => write_num(*n, out),
+        Value::Str(s) => write_string(s, out),
+        Value::Arr(items) => {
+            out.push('[');
+            for (i, item) in items.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                write_value_compact(item, out);
+            }
+            out.push(']');
+        }
+        Value::Obj(fields) => {
+            out.push('{');
+            for (i, (k, item)) in fields.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                write_string(k, out);
+                out.push(':');
+                write_value_compact(item, out);
+            }
+            out.push('}');
+        }
+    }
 }
 
 fn write_value(v: &Value, indent: usize, out: &mut String) {
@@ -438,6 +478,26 @@ mod tests {
         let reparsed = parse(&once).unwrap();
         assert_eq!(reparsed, v);
         assert_eq!(reparsed.render(), once, "encode→parse→encode must be stable");
+    }
+
+    #[test]
+    fn compact_is_single_line_and_roundtrips() {
+        let v = Value::Obj(vec![
+            ("op".into(), Value::Str("run".into())),
+            ("iters".into(), Value::Num(3.0)),
+            ("note".into(), Value::Str("line1\nline2".into())),
+            (
+                "args".into(),
+                Value::Arr(vec![Value::Null, Value::Bool(false), Value::Obj(vec![])]),
+            ),
+        ]);
+        let line = v.render_compact();
+        assert!(!line.contains('\n'), "compact output must be one line: {line:?}");
+        assert_eq!(parse(&line).unwrap(), v);
+        assert_eq!(
+            line,
+            r#"{"op":"run","iters":3,"note":"line1\nline2","args":[null,false,{}]}"#
+        );
     }
 
     #[test]

@@ -1,0 +1,226 @@
+//! End-to-end `cagra serve` coverage: the TCP daemon speaks the NDJSON
+//! protocol (round trip + malformed rejection + graceful shutdown), N
+//! concurrent clients get **bitwise** the answers a sequential `run_job`
+//! produces (shared immutable artifacts, per-job owned scratch), and the
+//! resident layer evicts to its byte budget without ever serving a wrong
+//! value.
+
+use cagra::coordinator::{run_job, AppKind, JobSpec, SystemConfig};
+use cagra::serve::{serve, Outcome, ServeOpts, WorkerPool};
+use cagra::store::Artifact;
+use cagra::util::json::{parse, Value};
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+fn temp_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("cagra-serve-{tag}-{}", std::process::id()))
+}
+
+const SCALE: f64 = 1.0 / 64.0;
+
+fn small_spec() -> JobSpec {
+    JobSpec {
+        dataset: "livejournal-sim".into(),
+        scale: SCALE,
+        iters: 2,
+        ..Default::default()
+    }
+}
+
+/// Send one line, read one reply line.
+fn roundtrip(writer: &mut TcpStream, reader: &mut BufReader<TcpStream>, line: &str) -> Value {
+    writer
+        .write_all(format!("{line}\n").as_bytes())
+        .and_then(|()| writer.flush())
+        .expect("send");
+    let mut reply = String::new();
+    reader.read_line(&mut reply).expect("recv");
+    parse(reply.trim()).unwrap_or_else(|e| panic!("unparseable reply {reply:?}: {e:#}"))
+}
+
+#[test]
+fn tcp_daemon_round_trips_rejects_malformed_and_drains() {
+    let port_file = temp_path("port");
+    std::fs::remove_file(&port_file).ok();
+    let opts = ServeOpts {
+        addr: "127.0.0.1:0".to_string(),
+        workers: 2,
+        queue_cap: 8,
+        mem_budget: 0,
+        port_file: Some(port_file.display().to_string()),
+        stdio: false,
+    };
+    let daemon = std::thread::spawn(move || serve(SystemConfig::default(), &opts));
+    // Port 0: discover the bound address through the port file.
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let addr = loop {
+        if let Ok(s) = std::fs::read_to_string(&port_file) {
+            let s = s.trim().to_string();
+            if !s.is_empty() {
+                break s;
+            }
+        }
+        assert!(Instant::now() < deadline, "daemon never wrote the port file");
+        std::thread::sleep(Duration::from_millis(10));
+    };
+    let stream = TcpStream::connect(&addr).expect("connect");
+    let mut writer = stream.try_clone().expect("clone");
+    let mut reader = BufReader::new(stream);
+
+    // Control plane round trip with id echo.
+    let pong = roundtrip(&mut writer, &mut reader, r#"{"op":"ping","id":"p1"}"#);
+    assert_eq!(pong.get("ok"), Some(&Value::Bool(true)));
+    assert_eq!(pong.get("id").and_then(Value::as_str), Some("p1"));
+
+    // Malformed lines are rejected per-request; the connection survives.
+    for bad in [
+        "not json at all",
+        r#"{"op":"fly"}"#,
+        r#"{"op":"run","app":"pagerank","color":"red"}"#,
+        r#"{"op":"run","app":"nope"}"#,
+    ] {
+        let v = roundtrip(&mut writer, &mut reader, bad);
+        assert_eq!(v.get("ok"), Some(&Value::Bool(false)), "accepted {bad:?}");
+        assert_eq!(
+            v.get("error").and_then(Value::as_str),
+            Some("bad_request"),
+            "wrong kind for {bad:?}"
+        );
+    }
+
+    // A real job: response matches the in-process pipeline bitwise.
+    let expected = run_job(&small_spec(), &SystemConfig::default())
+        .expect("reference job")
+        .summary;
+    let run = roundtrip(
+        &mut writer,
+        &mut reader,
+        &format!(
+            r#"{{"op":"run","id":7,"app":"pagerank","graph":"livejournal-sim","scale":{SCALE},"iters":2}}"#
+        ),
+    );
+    assert_eq!(run.get("ok"), Some(&Value::Bool(true)), "run failed: {run:?}");
+    assert_eq!(run.get("id").and_then(Value::as_u64), Some(7));
+    let got = run.get("summary").and_then(Value::as_f64).expect("summary");
+    assert_eq!(got.to_bits(), expected.to_bits(), "served summary differs");
+
+    // A job-level error (bad knob) is a `failed` response, not a hangup.
+    let v = roundtrip(
+        &mut writer,
+        &mut reader,
+        r#"{"op":"run","app":"cf","cf_k":65}"#,
+    );
+    assert_eq!(v.get("error").and_then(Value::as_str), Some("failed"));
+
+    let stats = roundtrip(&mut writer, &mut reader, r#"{"op":"stats"}"#);
+    assert!(stats.get("jobs_done").and_then(Value::as_u64).unwrap() >= 1);
+    assert!(stats.get("mem").is_some());
+
+    // Graceful shutdown: acknowledged, then the daemon drains and exits.
+    let ack = roundtrip(&mut writer, &mut reader, r#"{"op":"shutdown","id":9}"#);
+    assert_eq!(ack.get("ok"), Some(&Value::Bool(true)));
+    daemon
+        .join()
+        .expect("daemon thread panicked")
+        .expect("daemon errored");
+    std::fs::remove_file(&port_file).ok();
+}
+
+#[test]
+fn concurrent_clients_match_sequential_bitwise() {
+    let store_dir = temp_path("bitwise-store");
+    std::fs::remove_dir_all(&store_dir).ok();
+    let specs: Vec<JobSpec> = vec![
+        JobSpec {
+            iters: 3,
+            ..small_spec()
+        },
+        JobSpec {
+            app: AppKind::parse("cc", "segmenting").unwrap(),
+            iters: 4,
+            ..small_spec()
+        },
+        JobSpec {
+            app: AppKind::parse("bfs", "both").unwrap(),
+            num_sources: 2,
+            ..small_spec()
+        },
+    ];
+    // Reference: each job sequentially, cold, no shared state at all.
+    let cfg = SystemConfig::default();
+    let expected: Vec<u64> = specs
+        .iter()
+        .map(|s| run_job(s, &cfg).expect("sequential run").summary.to_bits())
+        .collect();
+    // Serve the same jobs from N concurrent clients over one pool that
+    // shares *everything* shareable (dataset, disk store, decoded
+    // artifacts). Scratch is per-job; any aliasing would corrupt results.
+    let serve_cfg = SystemConfig {
+        store_enabled: true,
+        store_dir: store_dir.display().to_string(),
+        ..SystemConfig::default()
+    };
+    let pool = WorkerPool::start(serve_cfg, 4, 64, 0).expect("pool");
+    let replicas = 3;
+    let receivers: Vec<(usize, _)> = (0..replicas)
+        .flat_map(|_| specs.iter().enumerate())
+        .map(|(i, s)| (i, pool.submit(s.clone(), None).expect("admitted")))
+        .collect();
+    for (i, rx) in receivers {
+        let Outcome::Done { result, .. } = rx.recv().expect("outcome") else {
+            panic!("job {i} did not complete");
+        };
+        let got = result.expect("served job").summary.to_bits();
+        assert_eq!(
+            got, expected[i],
+            "spec {i}: concurrent resident result differs from sequential"
+        );
+    }
+    let mem = pool.mem_stats();
+    assert!(mem.hits > 0, "replicas must hit the resident layer: {mem:?}");
+    pool.shutdown();
+    std::fs::remove_dir_all(&store_dir).ok();
+}
+
+#[test]
+fn resident_layer_evicts_to_budget_and_stays_correct() {
+    // Budget sized to hold either dataset but never both: alternating
+    // datasets forces evictions while answers must stay correct.
+    let cfg = SystemConfig::default();
+    let a = small_spec();
+    let b = JobSpec {
+        dataset: "twitter-sim".into(),
+        ..small_spec()
+    };
+    let bytes_of = |spec: &JobSpec| {
+        let ds = cagra::graph::datasets::load_scaled(&spec.dataset, spec.scale).unwrap();
+        ds.graph.mem_bytes() + ds.name.len() as u64
+    };
+    let budget = bytes_of(&a).max(bytes_of(&b)) + 512;
+    let expect_a = run_job(&a, &cfg).unwrap().summary.to_bits();
+    let expect_b = run_job(&b, &cfg).unwrap().summary.to_bits();
+
+    let pool = WorkerPool::start(cfg, 1, 8, budget).expect("pool");
+    let run = |spec: &JobSpec| {
+        let Outcome::Done { result, .. } = pool.run_sync(spec.clone(), None).unwrap() else {
+            panic!("job incomplete");
+        };
+        result.unwrap().summary.to_bits()
+    };
+    assert_eq!(run(&a), expect_a); // miss: A resident
+    assert_eq!(run(&a), expect_a); // hit
+    assert_eq!(run(&b), expect_b); // miss: B evicts A
+    assert_eq!(run(&a), expect_a); // miss again: A evicts B
+    let mem = pool.mem_stats();
+    assert!(mem.hits >= 1, "repeat request must hit: {mem:?}");
+    assert!(mem.misses >= 3, "alternation must rebuild: {mem:?}");
+    assert!(mem.evictions >= 2, "budget must force evictions: {mem:?}");
+    assert!(
+        mem.resident_bytes <= budget,
+        "resident {} exceeds budget {budget}",
+        mem.resident_bytes
+    );
+    pool.shutdown();
+}

@@ -1,0 +1,100 @@
+//! Concurrent same-process `ArtifactStore` access: the store is shared by
+//! `cagra serve` workers, so two threads racing on one key must build
+//! once (the per-key lock), and readers racing the evictor must never
+//! observe a torn or wrong value — only a hit with correct bytes or a
+//! clean rebuild. Plain threads, no loom: the store's critical sections
+//! are coarse (one mutex per key), so exhaustive interleaving isn't
+//! needed to exercise the races that matter.
+
+use cagra::store::{ArtifactStore, StoreKey};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Barrier};
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("cagra-stress-{tag}-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+fn perm(n: usize, rot: usize) -> Vec<u32> {
+    (0..n).map(|i| ((i + rot) % n) as u32).collect()
+}
+
+#[test]
+fn concurrent_same_key_builds_once() {
+    let dir = temp_dir("once");
+    let store = Arc::new(ArtifactStore::open(&dir, 0).unwrap());
+    let builds = Arc::new(AtomicU64::new(0));
+    let barrier = Arc::new(Barrier::new(4));
+    let key = StoreKey::ordering(0xfeed, "stress-once");
+    let expected = perm(512, 7);
+    let handles: Vec<_> = (0..4)
+        .map(|_| {
+            let (store, builds, barrier) = (store.clone(), builds.clone(), barrier.clone());
+            let (key, expected) = (key.clone(), expected.clone());
+            std::thread::spawn(move || {
+                barrier.wait();
+                let got: Vec<u32> = store.get_or_build(&key, || {
+                    builds.fetch_add(1, Ordering::SeqCst);
+                    // Widen the window: losers must be blocking on the key
+                    // lock, not merely losing a fast race.
+                    std::thread::sleep(std::time::Duration::from_millis(10));
+                    expected.clone()
+                });
+                assert_eq!(got, expected);
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert_eq!(
+        builds.load(Ordering::SeqCst),
+        1,
+        "same-key misses must serialize into one build"
+    );
+    let s = store.stats();
+    assert_eq!(s.misses, 1);
+    assert_eq!(s.hits, 3);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn reads_survive_concurrent_eviction() {
+    let dir = temp_dir("evict");
+    // Cap below two 512-entry permutations (~2 KiB each + frame): every
+    // write of one key evicts the other, so readers constantly race the
+    // evictor's unlink.
+    let store = Arc::new(ArtifactStore::open(&dir, 3000).unwrap());
+    let keys = [
+        StoreKey::ordering(0xbeef, "stress-a"),
+        StoreKey::ordering(0xbeef, "stress-b"),
+    ];
+    let handles: Vec<_> = (0..2)
+        .map(|t| {
+            let store = store.clone();
+            let keys = keys.clone();
+            std::thread::spawn(move || {
+                for i in 0..60 {
+                    let which = (i + t) % 2;
+                    let key = &keys[which];
+                    let expected = perm(512, which);
+                    // A dropped scope leaves the write evictable, unlike
+                    // the never-dropped instance scope.
+                    let scope = store.begin_scope();
+                    let got: Vec<u32> =
+                        store.get_or_build_scoped(key, scope.id(), || expected.clone());
+                    drop(scope);
+                    assert_eq!(got, expected, "thread {t} iter {i}: wrong or torn value");
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let s = store.stats();
+    assert!(s.evictions > 0, "cap was sized to force evictions: {s:?}");
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -108,6 +108,43 @@ fn steady_state_performs_zero_heap_allocation() {
             "{app}/{variant}: scratch_bytes should report the reusable footprint"
         );
     }
+    // The serve worker's warm path: prepare through a disk store + the
+    // in-memory artifact layer twice. The second prepare must be fully
+    // resident — memory-layer hits, ZERO bytes decoded from disk — and
+    // its steady-state step loop must still allocate nothing (the
+    // resident Arc'd artifacts feed the same pooled engine scratch).
+    {
+        use cagra::store::{fingerprint, ArtifactStore, MemStore, StoreCtx};
+        let dir = std::env::temp_dir().join(format!("cagra-zeroalloc-{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let store = ArtifactStore::open(&dir, 0).unwrap();
+        let mem = MemStore::new(0);
+        let fp = fingerprint::fingerprint_dataset("zero-alloc-rmat", 1.0, &g);
+        let kind = AppKind::parse("pagerank", "both").unwrap();
+        let prepare = || {
+            let ctx = StoreCtx::new(&store, fp).with_mem(&mem);
+            registry::app_for(kind).prepare(&g, &cfg, kind, Some(ctx)).unwrap()
+        };
+        drop(prepare()); // cold: builds + persists + pins
+        let read_before = store.stats().bytes_read;
+        let mut prep = prepare(); // warm: resident
+        let m = mem.stats();
+        assert!(m.hits > 0, "warm prepare must hit the resident layer: {m:?}");
+        assert_eq!(
+            store.stats().bytes_read - read_before,
+            0,
+            "warm resident prepare must decode zero bytes from disk"
+        );
+        prep.step();
+        prep.step();
+        let before = allocations();
+        for _ in 0..3 {
+            prep.step();
+        }
+        let leaked = allocations() - before;
+        assert_eq!(leaked, 0, "resident serve path: {leaked} steady-state step() allocations");
+        std::fs::remove_dir_all(&dir).ok();
+    }
     // The engine hot paths above are instrumented with recorder spans;
     // with the recorder disabled (this process never enables it) they
     // must cost one relaxed load each — in particular, record *nothing*.
