@@ -42,7 +42,12 @@ fn main() -> anyhow::Result<()> {
         llc_bytes: 64 * 1024, // scaled so this small graph still segments
         ..Default::default()
     };
-    let mut prep = pagerank::Prepared::new(&g, &cfg, pagerank::Variant::ReorderedSegmented);
+    let mut prep = pagerank::Prepared::prepare(
+        &g,
+        &cfg,
+        pagerank::Variant::ReorderedSegmented,
+        &cagra::store::StoreCtx::disabled(),
+    );
     let iters = 30;
     let (native, native_s) = time(|| prep.run(iters));
     println!(

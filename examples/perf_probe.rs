@@ -7,7 +7,7 @@ fn main() {
     let ds = cagra::graph::datasets::load("rmat27-sim").unwrap();
     let llc: usize = std::env::var("PROBE_LLC").ok().and_then(|v| v.parse().ok()).unwrap_or(2*1024*1024);
     let cfg = SystemConfig { llc_bytes: llc, ..Default::default() };
-    let mut p = Prepared::new(&ds.graph, &cfg, Variant::ReorderedSegmented);
+    let mut p = Prepared::prepare(&ds.graph, &cfg, Variant::ReorderedSegmented, &cagra::store::StoreCtx::disabled());
     p.reset();
     p.step(); // warm
     let mut best = f64::INFINITY;

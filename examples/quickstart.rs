@@ -32,7 +32,7 @@ fn main() -> anyhow::Result<()> {
     let cfg = SystemConfig::default();
     let mut rows: Vec<(String, f64)> = Vec::new();
     for &variant in Variant::all() {
-        let mut prep = pagerank::Prepared::new(g, &cfg, variant);
+        let mut prep = pagerank::Prepared::prepare(g, &cfg, variant, &cagra::store::StoreCtx::disabled());
         prep.reset();
         // Warm one iteration, then time the rest.
         prep.step();

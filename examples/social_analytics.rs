@@ -51,7 +51,12 @@ fn main() -> anyhow::Result<()> {
 
     // Reach: BFS from the top influencer.
     let source = by_rank[0] as u32;
-    let mut bfs_prep = bfs::Prepared::new(g, bfs::Variant::ReorderedBitvector);
+    let mut bfs_prep = bfs::Prepared::prepare(
+        g,
+        &cfg,
+        bfs::Variant::ReorderedBitvector,
+        &cagra::store::StoreCtx::disabled(),
+    );
     let (parents, bfs_s) = time(|| bfs_prep.run(source));
     let reached = parents.iter().filter(|&&p| p != u32::MAX).count();
     println!(
@@ -63,7 +68,12 @@ fn main() -> anyhow::Result<()> {
 
     // Brokerage: betweenness centrality from 4 hub sources.
     let sources = bc::default_sources(g, 4);
-    let mut bc_prep = bc::Prepared::new(g, bc::Variant::ReorderedBitvector);
+    let mut bc_prep = bc::Prepared::prepare(
+        g,
+        &cfg,
+        bc::Variant::ReorderedBitvector,
+        &cagra::store::StoreCtx::disabled(),
+    );
     let (scores, bc_s) = time(|| bc_prep.run(&sources));
     let mut by_bc: Vec<usize> = (0..g.num_vertices()).collect();
     by_bc.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());

@@ -13,9 +13,10 @@ mod common;
 use cagra::apps::pagerank::{Prepared, Variant};
 use cagra::bench::Table;
 use cagra::coordinator::SystemConfig;
+use cagra::store::StoreCtx;
 
 fn time_iter(s: &mut common::Suite, label: &str, g: &cagra::graph::Csr, cfg: &SystemConfig) -> f64 {
-    let mut p = Prepared::new(g, cfg, Variant::ReorderedSegmented);
+    let mut p = Prepared::prepare(g, cfg, Variant::ReorderedSegmented, &StoreCtx::disabled());
     p.reset();
     s.bench_work(label, Some(g.num_edges() as u64), &mut || p.step())
         .secs()

@@ -39,7 +39,7 @@ pub fn prepare_app(
     let kind = AppKind::parse(app, variant)
         .unwrap_or_else(|e| panic!("parsing {app}/{variant}: {e:#}"));
     registry::app_for(kind)
-        .prepare(g, cfg, kind, None)
+        .prepare(g, cfg, kind, &cagra::store::StoreCtx::disabled())
         .unwrap_or_else(|e| panic!("preparing {app}/{variant}: {e:#}"))
 }
 

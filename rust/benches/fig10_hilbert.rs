@@ -36,10 +36,11 @@ fn run_worker(mode: &str) {
             b.bench("x", || p.step()).secs()
         }
         "segmenting" => {
-            let mut p = cagra::apps::pagerank::Prepared::new(
+            let mut p = cagra::apps::pagerank::Prepared::prepare(
                 g,
                 &cfg,
                 cagra::apps::pagerank::Variant::ReorderedSegmented,
+                &cagra::store::StoreCtx::disabled(),
             );
             p.reset();
             b.bench("x", || p.step()).secs()

@@ -19,10 +19,11 @@ fn run_worker() {
     let g = &ds.graph;
     let mut b = Bencher::new();
     b.reps = b.reps.min(3);
-    let mut p = cagra::apps::pagerank::Prepared::new(
+    let mut p = cagra::apps::pagerank::Prepared::prepare(
         g,
         &cfg,
         cagra::apps::pagerank::Variant::ReorderedSegmented,
+        &cagra::store::StoreCtx::disabled(),
     );
     p.reset();
     let secs = b.bench("x", || p.step()).secs();

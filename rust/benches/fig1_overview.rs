@@ -8,6 +8,7 @@ mod common;
 use cagra::apps::{bc, cf};
 use cagra::baselines::{graphmat_style, gridgraph_style, ligra_style};
 use cagra::bench::Table;
+use cagra::store::StoreCtx;
 
 fn main() {
     common::run_suite("fig1_overview", |s| {
@@ -34,21 +35,21 @@ fn main() {
         // CF per-iteration (ours vs GraphMat-shaped baseline).
         let nf = common::load("netflix-sim");
         let cf_opt = {
-            let mut p = cf::Prepared::new(&nf.graph, &cfg, cf::Variant::Segmented);
+            let mut p = cf::Prepared::prepare(&nf.graph, &cfg, cf::Variant::Segmented, &StoreCtx::disabled());
             s.bench("cf-opt", || p.step()).secs()
         };
         let cf_gm = {
-            let mut p = cf::Prepared::new(&nf.graph, &cfg, cf::Variant::Baseline);
+            let mut p = cf::Prepared::prepare(&nf.graph, &cfg, cf::Variant::Baseline, &StoreCtx::disabled());
             s.bench("cf-graphmat", || p.step()).secs()
         };
 
         // BC (ours vs Ligra-shaped baseline), 2 sources for time.
         let sources = bc::default_sources(g, 2);
-        let mut bc_opt_p = bc::Prepared::new(g, bc::Variant::ReorderedBitvector);
+        let mut bc_opt_p = bc::Prepared::prepare(g, &cfg, bc::Variant::ReorderedBitvector, &StoreCtx::disabled());
         let bc_opt = s.bench("bc-opt", || {
             let _ = bc_opt_p.run(&sources);
         });
-        let mut bc_li_p = bc::Prepared::new(g, bc::Variant::Baseline);
+        let mut bc_li_p = bc::Prepared::prepare(g, &cfg, bc::Variant::Baseline, &StoreCtx::disabled());
         let bc_li = s.bench("bc-ligra", || {
             let _ = bc_li_p.run(&sources);
         });

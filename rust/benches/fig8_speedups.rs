@@ -9,6 +9,7 @@ mod common;
 use cagra::apps::{bc, bfs, cf};
 use cagra::bench::Table;
 use cagra::graph::datasets::GRAPH_DATASETS;
+use cagra::store::StoreCtx;
 
 fn main() {
     common::run_suite("fig8_speedups", |s| {
@@ -40,9 +41,9 @@ fn main() {
         for name in ["netflix-sim", "netflix2x-sim"] {
             let ds = common::load(name);
             s.set_scope(name);
-            let mut pb = cf::Prepared::new(&ds.graph, &cfg, cf::Variant::Baseline);
+            let mut pb = cf::Prepared::prepare(&ds.graph, &cfg, cf::Variant::Baseline, &StoreCtx::disabled());
             let base = s.bench("cf-base", || pb.step()).secs();
-            let mut ps = cf::Prepared::new(&ds.graph, &cfg, cf::Variant::Segmented);
+            let mut ps = cf::Prepared::prepare(&ds.graph, &cfg, cf::Variant::Segmented, &StoreCtx::disabled());
             let seg = s.bench("cf-seg", || ps.step()).secs();
             t.row(&[name.to_string(), format!("{:.2}x", base / seg)]);
         }
@@ -58,7 +59,7 @@ fn main() {
             // BC grid (BC's own variant enum since the AppKind redesign).
             let mut bc_times = Vec::new();
             for v in bc::Variant::all() {
-                let mut p = bc::Prepared::new(g, *v);
+                let mut p = bc::Prepared::prepare(g, &cfg, *v, &StoreCtx::disabled());
                 bc_times.push(
                     s.bench(&format!("bc-{}", v.name()), || {
                         let _ = p.run(&sources);
@@ -76,7 +77,7 @@ fn main() {
             // BFS grid.
             let mut bfs_times = Vec::new();
             for v in bfs::Variant::all() {
-                let mut p = bfs::Prepared::new(g, *v);
+                let mut p = bfs::Prepared::prepare(g, &cfg, *v, &StoreCtx::disabled());
                 bfs_times.push(
                     s.bench(&format!("bfs-{}", v.name()), || {
                         for &src in &sources {

@@ -9,6 +9,7 @@ use cagra::apps::{cf, pagerank};
 use cagra::bench::Table;
 use cagra::coordinator::job::simulate_pagerank;
 use cagra::graph::datasets::GRAPH_DATASETS;
+use cagra::store::StoreCtx;
 
 fn main() {
     common::run_suite("fig9_per_edge", |s| {
@@ -60,9 +61,9 @@ fn main() {
             let g = &ds.graph;
             let m = g.num_edges() as f64;
             s.set_scope(name);
-            let mut pb = cf::Prepared::new(g, &cfg, cf::Variant::Baseline);
+            let mut pb = cf::Prepared::prepare(g, &cfg, cf::Variant::Baseline, &StoreCtx::disabled());
             let base = s.bench("cf-base", || pb.step()).secs() / m * 1e9;
-            let mut ps = cf::Prepared::new(g, &cfg, cf::Variant::Segmented);
+            let mut ps = cf::Prepared::prepare(g, &cfg, cf::Variant::Segmented, &StoreCtx::disabled());
             let seg = s.bench("cf-seg", || ps.step()).secs() / m * 1e9;
             t.row(&[
                 name.to_string(),

@@ -190,14 +190,15 @@ pub trait GraphApp: Sync {
     }
 
     /// Run all preprocessing for `kind` and return the executable
-    /// instance. `store`, when present, persists/fetches preprocessing
-    /// artifacts (the Table 9 amortization).
+    /// instance. `store` persists/fetches preprocessing artifacts (the
+    /// Table 9 amortization); pass [`StoreCtx::disabled`] for the
+    /// no-store path — same code path, the builders just always run.
     fn prepare(
         &self,
         g: &Csr,
         cfg: &SystemConfig,
         kind: AppKind,
-        store: Option<StoreCtx<'_>>,
+        store: &StoreCtx<'_>,
     ) -> Result<Box<dyn PreparedApp>>;
 
     /// Simulated memory-system stall estimate for one representative

@@ -71,7 +71,7 @@ pub struct Prepared {
     g_in: Csr,
     /// Permutation old→new when reordered, `Arc`-pinned (shared
     /// read-only across concurrent resident jobs).
-    perm: Option<Arc<Vec<VertexId>>>,
+    perm: Option<Arc<crate::store::ArcSlice<VertexId>>>,
     /// σ = number of shortest paths (reset per source).
     sigma: Vec<AtomicU64>,
     /// BFS depth (reset per source).
@@ -85,23 +85,18 @@ pub struct Prepared {
 }
 
 impl Prepared {
-    /// Preprocess without the artifact store (coarsening threshold from
-    /// the default [`SystemConfig`]).
-    pub fn new(g: &Csr, variant: Variant) -> Prepared {
-        Self::new_cached(g, &SystemConfig::default(), variant, None)
-    }
-
-    /// Like [`Prepared::new`], but the reordering permutation goes
-    /// through the persistent store when `store` is present: warm runs
-    /// decode the degree sort instead of re-sorting (the relabel itself
-    /// is recomputed — it is a cheap scatter compared to the sort). The
-    /// key matches PageRank's, so the permutation is shared across apps
-    /// on the same dataset.
-    pub fn new_cached(
+    /// Run all preprocessing for `variant`. The reordering permutation
+    /// goes through the persistent store: warm runs load the degree sort
+    /// — mapped in place where possible — instead of re-sorting (the
+    /// relabel itself is recomputed; it is a cheap scatter compared to
+    /// the sort). The key matches PageRank's, so the permutation is
+    /// shared across apps on the same dataset. A [`StoreCtx::disabled`]
+    /// context is the no-store path.
+    pub fn prepare(
         g: &Csr,
         cfg: &SystemConfig,
         variant: Variant,
-        store: Option<StoreCtx<'_>>,
+        store: &StoreCtx<'_>,
     ) -> Prepared {
         let (work, perm) = if variant.reordered() {
             let perm = reorder::cached_degree_sort_perm(g, cfg.coarsen, store);
@@ -411,14 +406,14 @@ impl GraphApp for App {
         g: &Csr,
         cfg: &SystemConfig,
         kind: AppKind,
-        store: Option<StoreCtx<'_>>,
+        store: &StoreCtx<'_>,
     ) -> Result<Box<dyn PreparedApp>> {
         let AppKind::Bc(v) = kind else {
             bail!("bc app handed foreign kind {kind:?}")
         };
         let n = g.num_vertices();
         Ok(Box::new(PreparedBc {
-            prep: Prepared::new_cached(g, cfg, v, store),
+            prep: Prepared::prepare(g, cfg, v, store),
             scores: vec![0.0; n],
         }))
     }
@@ -463,7 +458,7 @@ mod tests {
         let sources = default_sources(&g, 1);
         let want = reference(&g, &sources);
         for &v in Variant::all() {
-            let mut p = Prepared::new(&g, v);
+            let mut p = Prepared::prepare(&g, &SystemConfig::default(), v, &StoreCtx::disabled());
             let got = p.run(&sources);
             assert_close(&got, &want);
         }
@@ -474,7 +469,12 @@ mod tests {
         let g = graph();
         let sources = default_sources(&g, 4);
         let want = reference(&g, &sources);
-        let mut p = Prepared::new(&g, Variant::ReorderedBitvector);
+        let mut p = Prepared::prepare(
+            &g,
+            &SystemConfig::default(),
+            Variant::ReorderedBitvector,
+            &StoreCtx::disabled(),
+        );
         let got = p.run(&sources);
         assert_close(&got, &want);
     }
@@ -487,7 +487,12 @@ mod tests {
         let g = graph();
         let sources = default_sources(&g, 4);
         let want = reference(&g, &sources);
-        let mut p = Prepared::new(&g, Variant::ReorderedBitvector);
+        let mut p = Prepared::prepare(
+            &g,
+            &SystemConfig::default(),
+            Variant::ReorderedBitvector,
+            &StoreCtx::disabled(),
+        );
         let n = g.num_vertices();
         let mut bc = vec![0.0f64; n];
         for (k, &s0) in sources.iter().enumerate() {
@@ -507,7 +512,8 @@ mod tests {
         // 0→1→2→3: BC(1)=2 (paths 0-2,0-3... from source 0 only: pairs
         // (0,2),(0,3) pass through 1 → δ=2; vertex 2 gets δ=1).
         let g = Csr::from_edges(4, &[(0, 1), (1, 2), (2, 3)]);
-        let mut p = Prepared::new(&g, Variant::Baseline);
+        let mut p =
+            Prepared::prepare(&g, &SystemConfig::default(), Variant::Baseline, &StoreCtx::disabled());
         let got = p.run(&[0]);
         assert_close(&got, &[0.0, 2.0, 1.0, 0.0]);
     }

@@ -68,10 +68,9 @@ pub struct Prepared {
     variant: Variant,
     g: Csr,
     g_in: Csr,
-    /// old→new when reordered.
     /// Permutation old→new when reordered, `Arc`-pinned (shared
     /// read-only across concurrent resident jobs).
-    perm: Option<Arc<Vec<VertexId>>>,
+    perm: Option<Arc<crate::store::ArcSlice<VertexId>>>,
     inv: Option<Vec<VertexId>>,
     /// Working-id-space parent array, reset (fill, no alloc) per source.
     parent: Vec<AtomicU32>,
@@ -79,21 +78,15 @@ pub struct Prepared {
 }
 
 impl Prepared {
-    /// Preprocess without the artifact store (coarsening threshold from
-    /// the default [`SystemConfig`]).
-    pub fn new(g: &Csr, variant: Variant) -> Prepared {
-        Self::new_cached(g, &SystemConfig::default(), variant, None)
-    }
-
-    /// Like [`Prepared::new`], but the reordering permutation goes
-    /// through the persistent store when `store` is present (same
-    /// ordering key as PageRank and BC, so the artifact is shared across
-    /// apps on the same dataset).
-    pub fn new_cached(
+    /// Run all preprocessing for `variant`. The reordering permutation
+    /// goes through the persistent store (same ordering key as PageRank
+    /// and BC, so the artifact is shared across apps on the same
+    /// dataset); a [`StoreCtx::disabled`] context is the no-store path.
+    pub fn prepare(
         g: &Csr,
         cfg: &SystemConfig,
         variant: Variant,
-        store: Option<StoreCtx<'_>>,
+        store: &StoreCtx<'_>,
     ) -> Prepared {
         let (work, perm) = if variant.reordered() {
             let perm = reorder::cached_degree_sort_perm(g, cfg.coarsen, store);
@@ -291,13 +284,13 @@ impl GraphApp for App {
         g: &Csr,
         cfg: &SystemConfig,
         kind: AppKind,
-        store: Option<StoreCtx<'_>>,
+        store: &StoreCtx<'_>,
     ) -> Result<Box<dyn PreparedApp>> {
         let AppKind::Bfs(v) = kind else {
             bail!("bfs app handed foreign kind {kind:?}")
         };
         Ok(Box::new(PreparedBfs {
-            prep: Prepared::new_cached(g, cfg, v, store),
+            prep: Prepared::prepare(g, cfg, v, store),
             reached: 0,
         }))
     }
@@ -372,7 +365,7 @@ mod tests {
             .unwrap() as VertexId;
         let want = reference_levels(&g, source);
         for &v in Variant::all() {
-            let mut p = Prepared::new(&g, v);
+            let mut p = Prepared::prepare(&g, &SystemConfig::default(), v, &StoreCtx::disabled());
             let parents = p.run(source);
             let got = levels_from_parents(&g, source, &parents);
             assert_eq!(got, want, "{}", v.name());
@@ -386,7 +379,12 @@ mod tests {
             .max_by_key(|&v| g.degree(v as u32))
             .unwrap() as VertexId;
         let want = reference_levels(&g, source);
-        let mut p = Prepared::new(&g, Variant::ReorderedBitvector);
+        let mut p = Prepared::prepare(
+            &g,
+            &SystemConfig::default(),
+            Variant::ReorderedBitvector,
+            &StoreCtx::disabled(),
+        );
         for round in 0..3 {
             p.poison_scratch(0xB5 + round);
             let parents = p.run(source);
@@ -402,7 +400,8 @@ mod tests {
     fn unreachable_marked() {
         // 0 -> 1; 2 isolated.
         let g = Csr::from_edges(3, &[(0, 1)]);
-        let mut p = Prepared::new(&g, Variant::Baseline);
+        let mut p =
+            Prepared::prepare(&g, &SystemConfig::default(), Variant::Baseline, &StoreCtx::disabled());
         let parents = p.run(0);
         assert_eq!(parents[0], 0);
         assert_eq!(parents[1], 0);
@@ -412,7 +411,12 @@ mod tests {
     #[test]
     fn parent_edges_exist() {
         let g = graph();
-        let mut p = Prepared::new(&g, Variant::ReorderedBitvector);
+        let mut p = Prepared::prepare(
+            &g,
+            &SystemConfig::default(),
+            Variant::ReorderedBitvector,
+            &StoreCtx::disabled(),
+        );
         let parents = p.run(3);
         for v in 0..g.num_vertices() {
             let pv = parents[v];

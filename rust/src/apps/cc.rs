@@ -83,40 +83,33 @@ pub struct Prepared {
 }
 
 impl Prepared {
-    pub fn new(g: &Csr, cfg: &SystemConfig, variant: Variant) -> Prepared {
-        Self::new_cached(g, cfg, variant, None)
-    }
-
-    /// Like [`Prepared::new`], but the symmetrized working structure goes
-    /// through the persistent store when `store` is present: a cold run
+    /// Run all preprocessing for `variant`. The symmetrized working
+    /// structure goes through the persistent store: a cold run
     /// symmetrizes and builds (then persists) the variant's iteration
     /// structure — the segmented partition of the symmetrized graph for
     /// [`Variant::Segmented`], its transposed pull CSR for
-    /// [`Variant::Baseline`] — and a warm run decodes it, performing zero
-    /// `symmetrize`/partition work (the last uncached O(|E|)
-    /// preprocessing named in ROADMAP.md). The intermediate symmetrized
-    /// out-CSR is never persisted: iterations only ever read the derived
-    /// structure, so caching the intermediate would decode as much as it
-    /// skips.
-    pub fn new_cached(
+    /// [`Variant::Baseline`] — and a warm run loads it (mapped in place
+    /// where possible), performing zero `symmetrize`/partition work (the
+    /// last uncached O(|E|) preprocessing named in ROADMAP.md). A
+    /// [`StoreCtx::disabled`] context is the no-store path. The
+    /// intermediate symmetrized out-CSR is never persisted: iterations
+    /// only ever read the derived structure, so caching the intermediate
+    /// would decode as much as it skips.
+    pub fn prepare(
         g: &Csr,
         cfg: &SystemConfig,
         variant: Variant,
-        store: Option<StoreCtx<'_>>,
+        store: &StoreCtx<'_>,
     ) -> Prepared {
         let n = g.num_vertices();
         let seg = match variant {
             Variant::Segmented => {
                 let seg_size = cfg.segment_size(4);
                 let block = cfg.merge_block(4);
-                let build = || SegmentedCsr::build_with_block(&symmetrize(g), seg_size, block);
-                let sg = match store {
-                    Some(c) => c.get_or_build_arc(
-                        StoreKey::segmented(c.fingerprint, SYM_LABEL, seg_size, block),
-                        build,
-                    ),
-                    None => Arc::new(build()),
-                };
+                let sg = store.get_or_build_arc(
+                    StoreKey::segmented(store.fingerprint, SYM_LABEL, seg_size, block),
+                    || SegmentedCsr::build_with_block(&symmetrize(g), seg_size, block),
+                );
                 // Decoded artifacts are structurally validated by the
                 // codec but not against the live graph.
                 assert_eq!(sg.num_vertices, n, "cc segmented artifact dimension mismatch");
@@ -126,14 +119,11 @@ impl Prepared {
         };
         let pull = match variant {
             Variant::Baseline => {
-                let build = || symmetrize(g).transpose();
                 let pull_label = format!("{SYM_LABEL}-pull");
-                let p = match store {
-                    Some(c) => {
-                        c.get_or_build_arc(StoreKey::ordering(c.fingerprint, &pull_label), build)
-                    }
-                    None => Arc::new(build()),
-                };
+                let p = store.get_or_build_arc(
+                    StoreKey::ordering(store.fingerprint, &pull_label),
+                    || symmetrize(g).transpose(),
+                );
                 assert_eq!(p.num_vertices(), n, "cc pull artifact dimension mismatch");
                 Some(p)
             }
@@ -299,18 +289,18 @@ impl GraphApp for App {
         g: &Csr,
         cfg: &SystemConfig,
         kind: AppKind,
-        store: Option<StoreCtx<'_>>,
+        store: &StoreCtx<'_>,
     ) -> Result<Box<dyn PreparedApp>> {
         let AppKind::Cc(v) = kind else {
             bail!("cc app handed foreign kind {kind:?}")
         };
-        Ok(Box::new(Prepared::new_cached(g, cfg, v, store)))
+        Ok(Box::new(Prepared::prepare(g, cfg, v, store)))
     }
 }
 
 /// Run CC until the labels stop changing.
 pub fn run(g: &Csr, cfg: &SystemConfig, variant: Variant, max_iters: usize) -> CcResult {
-    let mut p = Prepared::new(g, cfg, variant);
+    let mut p = Prepared::prepare(g, cfg, variant, &StoreCtx::disabled());
     while p.iterations < max_iters {
         if !p.sweep() {
             break;

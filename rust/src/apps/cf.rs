@@ -93,18 +93,14 @@ pub struct Prepared {
 }
 
 impl Prepared {
-    pub fn new(g: &Csr, cfg: &SystemConfig, variant: Variant) -> Prepared {
-        Self::new_cached(g, cfg, variant, None)
-    }
-
-    /// Like [`Prepared::new`], but the two segmented partitions (the CF
-    /// preprocessing cost) go through the persistent artifact store when
-    /// `store` is present.
-    pub fn new_cached(
+    /// Run all preprocessing for `variant`. The two segmented partitions
+    /// (the CF preprocessing cost) go through the persistent artifact
+    /// store; a [`StoreCtx::disabled`] context just builds them.
+    pub fn prepare(
         g: &Csr,
         cfg: &SystemConfig,
         variant: Variant,
-        store: Option<StoreCtx<'_>>,
+        store: &StoreCtx<'_>,
     ) -> Prepared {
         let n = g.num_vertices();
         let k = cfg.cf_k;
@@ -120,14 +116,10 @@ impl Prepared {
             let seg_size = cfg.segment_size(elem);
             let block = cfg.merge_block(elem);
             let seg_for = |pull: &Csr, label: &str| -> Arc<SegmentedCsr> {
-                let build = || SegmentedCsr::build_with_block(&pull.transpose(), seg_size, block);
-                match store {
-                    Some(c) => c.get_or_build_arc(
-                        StoreKey::segmented(c.fingerprint, label, seg_size, block),
-                        build,
-                    ),
-                    None => Arc::new(build()),
-                }
+                store.get_or_build_arc(
+                    StoreKey::segmented(store.fingerprint, label, seg_size, block),
+                    || SegmentedCsr::build_with_block(&pull.transpose(), seg_size, block),
+                )
             };
             (
                 Some(seg_for(&user_pull, "cf-user")),
@@ -354,18 +346,18 @@ impl GraphApp for App {
         g: &Csr,
         cfg: &SystemConfig,
         kind: AppKind,
-        store: Option<StoreCtx<'_>>,
+        store: &StoreCtx<'_>,
     ) -> Result<Box<dyn PreparedApp>> {
         let AppKind::Cf(v) = kind else {
             bail!("cf app handed foreign kind {kind:?}")
         };
-        Ok(Box::new(Prepared::new_cached(g, cfg, v, store)))
+        Ok(Box::new(Prepared::prepare(g, cfg, v, store)))
     }
 }
 
 /// Preprocess + train for `iters` iterations; returns final RMSE.
 pub fn run(g: &Csr, cfg: &SystemConfig, variant: Variant, iters: usize) -> (Prepared, f64) {
-    let mut p = Prepared::new(g, cfg, variant);
+    let mut p = Prepared::prepare(g, cfg, variant, &StoreCtx::disabled());
     for _ in 0..iters {
         p.step();
     }
@@ -390,7 +382,7 @@ mod tests {
         let g = bipartite();
         let mut cfg = SystemConfig::default();
         cfg.cf_lr = 5e-3;
-        let mut p = Prepared::new(&g, &cfg, Variant::Baseline);
+        let mut p = Prepared::prepare(&g, &cfg, Variant::Baseline, &StoreCtx::disabled());
         let before = p.rmse();
         for _ in 0..12 {
             p.step();
@@ -405,8 +397,8 @@ mod tests {
         let g = bipartite();
         let mut cfg = SystemConfig::default();
         cfg.llc_bytes = 16 * 1024; // force multiple segments (K=8 → 128 ids)
-        let mut a = Prepared::new(&g, &cfg, Variant::Baseline);
-        let mut b = Prepared::new(&g, &cfg, Variant::Segmented);
+        let mut a = Prepared::prepare(&g, &cfg, Variant::Baseline, &StoreCtx::disabled());
+        let mut b = Prepared::prepare(&g, &cfg, Variant::Segmented, &StoreCtx::disabled());
         for _ in 0..3 {
             a.step();
             b.step();
@@ -435,7 +427,7 @@ mod tests {
         let g = bipartite();
         let mut cfg = SystemConfig::default();
         cfg.cf_k = 16;
-        let mut p = Prepared::new(&g, &cfg, Variant::Segmented);
+        let mut p = Prepared::prepare(&g, &cfg, Variant::Segmented, &StoreCtx::disabled());
         p.step();
         assert!(p.rmse().is_finite());
     }

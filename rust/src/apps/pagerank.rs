@@ -115,7 +115,7 @@ pub struct Prepared {
     seg: Option<Arc<SegmentedCsr>>,
     seg_bufs: Option<SegmentBuffers>,
     /// Permutation old→new when reordered (to map results back).
-    perm: Option<Arc<Vec<VertexId>>>,
+    perm: Option<Arc<crate::store::ArcSlice<VertexId>>>,
     /// Scratch rank vectors.
     rank: Vec<f64>,
     next: Vec<f64>,
@@ -124,23 +124,20 @@ pub struct Prepared {
 
 impl Prepared {
     /// Run all preprocessing for `variant` (reorder and/or segment).
-    pub fn new(g: &Csr, cfg: &SystemConfig, variant: Variant) -> Prepared {
-        Self::new_cached(g, cfg, variant, None)
-    }
-
-    /// Like [`Prepared::new`], but preprocessing artifacts go through the
-    /// persistent store when `store` is present: a cold run builds and
+    /// Preprocessing artifacts go through `store`: a cold run builds and
     /// persists the permutation and the variant's working structure (the
     /// transposed pull CSR for the reordered pull variant, the segmented
-    /// partition for segmented ones); a warm run decodes them instead of
-    /// recomputing (paper Table 9's amortization). The relabeled out-CSR
+    /// partition for segmented ones); a warm run loads them — mapped in
+    /// place where possible — instead of recomputing (paper Table 9's
+    /// amortization). A [`StoreCtx::disabled`] context is the no-store
+    /// path: the same code, builders always run. The relabeled out-CSR
     /// is never persisted: it is only a cold-build intermediate — degrees
     /// come from `g` + the permutation.
-    pub fn new_cached(
+    pub fn prepare(
         g: &Csr,
         cfg: &SystemConfig,
         variant: Variant,
-        store: Option<StoreCtx<'_>>,
+        store: &StoreCtx<'_>,
     ) -> Prepared {
         let n = g.num_vertices();
         // Honor cfg.coarsen exactly (coarsen = 1 is the §3.2 exact sort,
@@ -163,17 +160,13 @@ impl Prepared {
                     Some(_) => ord_label.as_str(),
                     None => "original",
                 };
-                let build_seg = || match &perm {
-                    Some(p) => SegmentedCsr::build_with_block(&g.relabel(p), seg_size, block),
-                    None => SegmentedCsr::build_with_block(g, seg_size, block),
-                };
-                let sg = match store {
-                    Some(c) => c.get_or_build_arc(
-                        StoreKey::segmented(c.fingerprint, seg_label, seg_size, block),
-                        build_seg,
-                    ),
-                    None => Arc::new(build_seg()),
-                };
+                let sg = store.get_or_build_arc(
+                    StoreKey::segmented(store.fingerprint, seg_label, seg_size, block),
+                    || match &perm {
+                        Some(p) => SegmentedCsr::build_with_block(&g.relabel(p), seg_size, block),
+                        None => SegmentedCsr::build_with_block(g, seg_size, block),
+                    },
+                );
                 assert_eq!(sg.num_vertices, n, "segmented artifact dimension mismatch");
                 let bufs = SegmentBuffers::for_graph(&sg);
                 let inv_deg = match &perm {
@@ -188,19 +181,16 @@ impl Prepared {
             // relabel it skips while leaving the expensive transpose to
             // rerun every time.
             _ => {
-                let (inv_deg, pull) = match (&perm, store) {
-                    (Some(p), Some(c)) => {
+                let (inv_deg, pull) = match &perm {
+                    Some(p) => {
                         let pull_label = format!("{ord_label}-pull");
-                        let pull = c.get_or_build_arc(
-                            StoreKey::ordering(c.fingerprint, &pull_label),
+                        let pull = store.get_or_build_arc(
+                            StoreKey::ordering(store.fingerprint, &pull_label),
                             || g.relabel(p).transpose(),
                         );
                         (permuted_inv_degrees(g, p), pull)
                     }
-                    (Some(p), None) => {
-                        (permuted_inv_degrees(g, p), Arc::new(g.relabel(p).transpose()))
-                    }
-                    (None, _) => (inv_out_degrees(g), Arc::new(g.transpose())),
+                    None => (inv_out_degrees(g), Arc::new(g.transpose())),
                 };
                 let cost = degree_prefix(&pull);
                 (inv_deg, Some(pull), Some(cost), None, None)
@@ -438,12 +428,12 @@ impl GraphApp for App {
         g: &Csr,
         cfg: &SystemConfig,
         kind: AppKind,
-        store: Option<StoreCtx<'_>>,
+        store: &StoreCtx<'_>,
     ) -> Result<Box<dyn PreparedApp>> {
         let AppKind::PageRank(v) = kind else {
             bail!("pagerank app handed foreign kind {kind:?}")
         };
-        Ok(Box::new(Prepared::new_cached(g, cfg, v, store)))
+        Ok(Box::new(Prepared::prepare(g, cfg, v, store)))
     }
 
     fn simulate(&self, g: &Csr, cfg: &SystemConfig, kind: AppKind) -> Option<StallEstimate> {
@@ -454,7 +444,7 @@ impl GraphApp for App {
 
 /// Convenience: preprocess + run.
 pub fn run(g: &Csr, cfg: &SystemConfig, variant: Variant, iters: usize) -> PageRankResult {
-    Prepared::new(g, cfg, variant).run(iters)
+    Prepared::prepare(g, cfg, variant, &StoreCtx::disabled()).run(iters)
 }
 
 /// Serial reference implementation (no tricks) for correctness tests.
@@ -545,7 +535,7 @@ mod tests {
     fn step_reuses_prepared_state() {
         let g = graph();
         let cfg = SystemConfig::default();
-        let mut p = Prepared::new(&g, &cfg, Variant::Segmented);
+        let mut p = Prepared::prepare(&g, &cfg, Variant::Segmented, &StoreCtx::disabled());
         let a = p.run(3);
         let b = p.run(3); // reset + rerun must reproduce
         assert_eq!(a.values, b.values);

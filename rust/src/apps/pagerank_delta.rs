@@ -237,7 +237,7 @@ impl GraphApp for App {
         g: &Csr,
         cfg: &SystemConfig,
         kind: AppKind,
-        _store: Option<StoreCtx<'_>>,
+        _store: &StoreCtx<'_>,
     ) -> Result<Box<dyn PreparedApp>> {
         let AppKind::PageRankDelta(_) = kind else {
             bail!("pagerank-delta app handed foreign kind {kind:?}")

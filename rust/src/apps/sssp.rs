@@ -56,7 +56,7 @@ pub struct Prepared {
     g_in: Csr,
     /// Permutation old→new when reordered, `Arc`-pinned (shared
     /// read-only across concurrent resident jobs).
-    perm: Option<Arc<Vec<VertexId>>>,
+    perm: Option<Arc<crate::store::ArcSlice<VertexId>>>,
     inv: Option<Vec<VertexId>>,
     /// Working-id-space distances, reset per source.
     dist: Vec<AtomicF64>,
@@ -64,21 +64,15 @@ pub struct Prepared {
 }
 
 impl Prepared {
-    /// Preprocess without the artifact store (coarsening threshold from
-    /// the default [`SystemConfig`]).
-    pub fn new(g: &Csr, variant: Variant) -> Prepared {
-        Self::new_cached(g, &SystemConfig::default(), variant, None)
-    }
-
-    /// Like [`Prepared::new`], but the reordering permutation goes
-    /// through the persistent store when `store` is present — the same
-    /// degree-sort key PageRank/BC/BFS share, so any of them warms the
-    /// others on the same dataset.
-    pub fn new_cached(
+    /// Run all preprocessing for `variant`. The reordering permutation
+    /// goes through the persistent store — the same degree-sort key
+    /// PageRank/BC/BFS share, so any of them warms the others on the same
+    /// dataset. A [`StoreCtx::disabled`] context is the no-store path.
+    pub fn prepare(
         g: &Csr,
         cfg: &SystemConfig,
         variant: Variant,
-        store: Option<StoreCtx<'_>>,
+        store: &StoreCtx<'_>,
     ) -> Prepared {
         let (work, perm) = match variant {
             Variant::Reordered => {
@@ -261,13 +255,13 @@ impl GraphApp for App {
         g: &Csr,
         cfg: &SystemConfig,
         kind: AppKind,
-        store: Option<StoreCtx<'_>>,
+        store: &StoreCtx<'_>,
     ) -> Result<Box<dyn PreparedApp>> {
         let AppKind::Sssp(v) = kind else {
             bail!("sssp app handed foreign kind {kind:?}")
         };
         Ok(Box::new(PreparedSssp {
-            prep: Prepared::new_cached(g, cfg, v, store),
+            prep: Prepared::prepare(g, cfg, v, store),
             total: 0.0,
         }))
     }
@@ -323,7 +317,7 @@ mod tests {
         let src = super::super::bc::default_sources(&g, 1)[0];
         let want = reference(&g, src);
         for v in [Variant::Baseline, Variant::Reordered] {
-            let mut p = Prepared::new(&g, v);
+            let mut p = Prepared::prepare(&g, &SystemConfig::default(), v, &StoreCtx::disabled());
             let got = p.run(src);
             for i in 0..n {
                 assert_eq!(got[i], want[i], "variant {v:?} vertex {i}");
@@ -337,7 +331,12 @@ mod tests {
         let g = Csr::from_edges(n, &e);
         let src = super::super::bc::default_sources(&g, 1)[0];
         let want = reference(&g, src);
-        let mut p = Prepared::new(&g, Variant::Reordered);
+        let mut p = Prepared::prepare(
+            &g,
+            &SystemConfig::default(),
+            Variant::Reordered,
+            &StoreCtx::disabled(),
+        );
         for round in 0..3u64 {
             p.poison_scratch(round.wrapping_mul(0x9E3779B97F4A7C15));
             assert_eq!(p.run(src), want, "round {round}");
@@ -358,7 +357,8 @@ mod tests {
     #[test]
     fn disconnected_vertices_infinite() {
         let g = Csr::from_edges(4, &[(0, 1), (1, 2)]);
-        let mut p = Prepared::new(&g, Variant::Baseline);
+        let mut p =
+            Prepared::prepare(&g, &SystemConfig::default(), Variant::Baseline, &StoreCtx::disabled());
         let d = p.run(0);
         assert_eq!(d[0], 0.0);
         assert!(d[3].is_infinite());

@@ -154,7 +154,7 @@ impl GraphApp for App {
         g: &Csr,
         _cfg: &SystemConfig,
         kind: AppKind,
-        _store: Option<StoreCtx<'_>>,
+        _store: &StoreCtx<'_>,
     ) -> Result<Box<dyn PreparedApp>> {
         let AppKind::Triangle(_) = kind else {
             bail!("triangle app handed foreign kind {kind:?}")

@@ -45,6 +45,12 @@ pub struct SystemConfig {
     /// size) or the store evicts its own freshly-written files and warm
     /// runs keep rebuilding.
     pub store_cap_bytes: u64,
+    /// Serve warm artifact loads by mmap-ing codec-v2 files in place
+    /// (zero decode/copy) instead of reading + decoding them. Falls back
+    /// to decoding automatically when mapping is unsupported or fails;
+    /// `--no-mmap` / `store_mmap = false` forces the decode path (used by
+    /// CI to compare the two).
+    pub store_mmap: bool,
 }
 
 impl Default for SystemConfig {
@@ -62,6 +68,7 @@ impl Default for SystemConfig {
             store_enabled: false,
             store_dir: "target/artifact-store".to_string(),
             store_cap_bytes: 8 * 1024 * 1024 * 1024,
+            store_mmap: true,
         }
     }
 }
@@ -83,6 +90,7 @@ impl SystemConfig {
             store_enabled: cfg.get_bool("system.store_enabled", d.store_enabled)?,
             store_dir: cfg.get_str("system.store_dir", &d.store_dir).to_string(),
             store_cap_bytes: cfg.get_u64("system.store_cap_bytes", d.store_cap_bytes)?,
+            store_mmap: cfg.get_bool("system.store_mmap", d.store_mmap)?,
         })
     }
 
@@ -135,5 +143,8 @@ mod tests {
         assert_eq!(c.store_dir, "/tmp/arts");
         assert_eq!(c.store_cap_bytes, 1024);
         assert_eq!(c.random_seed, 99);
+        assert!(c.store_mmap, "mmap defaults on");
+        let cfg = Config::parse("[system]\nstore_mmap = false\n").unwrap();
+        assert!(!SystemConfig::from_config(&cfg).unwrap().store_mmap);
     }
 }

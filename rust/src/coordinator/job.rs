@@ -185,10 +185,11 @@ pub fn run_job_env(spec: &JobSpec, cfg: &SystemConfig, env: JobEnv<'_>) -> Resul
     // request performs zero disk reads and zero CSR decode here.
     let (ds, load_s): (Arc<Dataset>, f64) = {
         let (r, s) = time(|| match env.mem {
-            Some(m) => m.try_get_or_insert(&dataset_mem_key(&spec.dataset, spec.scale), || {
+            Some(m) => m.try_get_or_insert_full(&dataset_mem_key(&spec.dataset, spec.scale), || {
                 let d = datasets::load_scaled(&spec.dataset, spec.scale)?;
                 let bytes = d.graph.mem_bytes() + d.name.len() as u64;
-                Ok((d, bytes))
+                let mapped = d.graph.mapped_bytes();
+                Ok((d, bytes, mapped))
             }),
             None => datasets::load_scaled(&spec.dataset, spec.scale).map(Arc::new),
         });
@@ -239,6 +240,7 @@ pub fn run_job_env(spec: &JobSpec, cfg: &SystemConfig, env: JobEnv<'_>) -> Resul
     let scope = store.map(|s| s.begin_scope());
     let ctx = match store {
         Some(s) => {
+            s.set_mmap_enabled(cfg.store_mmap);
             let t_fp = crate::obs::recorder::timestamp();
             // The fingerprint is itself cached in the memory layer (it
             // samples the whole CSR, which is pure overhead on a warm
@@ -255,18 +257,18 @@ pub fn run_job_env(spec: &JobSpec, cfg: &SystemConfig, env: JobEnv<'_>) -> Resul
             metrics.phases.add("fingerprint", fp_s);
             let sid = scope.as_ref().expect("scope opened with store").id();
             let ctx = StoreCtx::scoped(s, fp, sid);
-            Some(match env.mem {
+            match env.mem {
                 Some(m) => ctx.with_mem(m),
                 None => ctx,
-            })
+            }
         }
-        None => None,
+        None => StoreCtx::disabled(),
     };
     let t_prep = crate::obs::recorder::timestamp();
     if let Some(pg) = &mut pmu_group {
         pg.start();
     }
-    let (prep, prep_s) = time(|| app.prepare(g, cfg, spec.app, ctx));
+    let (prep, prep_s) = time(|| app.prepare(g, cfg, spec.app, &ctx));
     let mut prep = prep?;
     if let Some(pg) = &mut pmu_group {
         pmu.phases.push(("preprocess".to_string(), pg.stop_and_read()));

@@ -97,23 +97,28 @@ impl Metrics {
         }
         if let Some(s) = &self.store {
             out.push_str(&format!(
-                "artifact store: {} hits, {} misses, {} evictions; {} entries ({})\n",
+                "artifact store: {} hits, {} misses, {} evictions; {} entries ({}); \
+                 {} decoded, {} mapped\n",
                 s.hits,
                 s.misses,
                 s.evictions,
                 s.entries,
-                crate::util::fmt_bytes(s.resident_bytes as usize)
+                crate::util::fmt_bytes(s.resident_bytes as usize),
+                crate::util::fmt_bytes(s.bytes_read as usize),
+                crate::util::fmt_bytes(s.bytes_mapped as usize)
             ));
         }
         if let Some(m) = &self.mem {
             out.push_str(&format!(
-                "resident mem: {} hits, {} misses, {} evictions; {} entries ({} of {} budget)\n",
+                "resident mem: {} hits, {} misses, {} evictions; {} entries \
+                 ({} of {} budget, {} mapped)\n",
                 m.hits,
                 m.misses,
                 m.evictions,
                 m.entries,
                 crate::util::fmt_bytes(m.resident_bytes as usize),
-                crate::util::fmt_bytes(m.budget_bytes as usize)
+                crate::util::fmt_bytes(m.budget_bytes as usize),
+                crate::util::fmt_bytes(m.mapped_bytes as usize)
             ));
         }
         if let Some(b) = self.scratch_bytes {
@@ -161,9 +166,11 @@ mod tests {
         m.store = Some(crate::store::StoreStats {
             hits: 3,
             misses: 1,
+            bytes_mapped: 4096,
             ..Default::default()
         });
         assert!(m.render().contains("3 hits, 1 misses"));
+        assert!(m.render().contains("4.0 KiB mapped"));
         m.mem = Some(crate::store::MemStats {
             hits: 2,
             misses: 1,

@@ -7,15 +7,21 @@
 
 use super::{Edge, VertexId};
 use crate::parallel::{parallel_for, parallel_ranges, UnsafeSlice};
+use crate::store::ArcSlice;
 use std::sync::atomic::{AtomicU32, Ordering};
 
 /// An immutable CSR graph (out-edge adjacency unless stated otherwise).
+///
+/// The arrays are [`ArcSlice`]s: heap-owned when built from edges,
+/// mmap-backed windows when warm-loaded from a v2 artifact (DESIGN.md
+/// §6). Both deref to `&[_]`, clones are O(1), and equality is by
+/// contents, so callers never observe the difference.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Csr {
     /// `offsets.len() == num_vertices + 1`.
-    pub offsets: Vec<u64>,
+    pub offsets: ArcSlice<u64>,
     /// Neighbor ids, grouped by source vertex.
-    pub targets: Vec<VertexId>,
+    pub targets: ArcSlice<VertexId>,
 }
 
 impl Csr {
@@ -47,7 +53,10 @@ impl Csr {
             let idx = offsets[s as usize] + k;
             unsafe { tslice.write(idx as usize, d) };
         });
-        Csr { offsets, targets }
+        Csr {
+            offsets: offsets.into(),
+            targets: targets.into(),
+        }
     }
 
     pub fn num_vertices(&self) -> usize {
@@ -114,17 +123,19 @@ impl Csr {
                 }
             }
         });
-        Csr { offsets, targets }
+        Csr {
+            offsets: offsets.into(),
+            targets: targets.into(),
+        }
     }
 
     /// Return a copy with every neighbor list sorted (canonical form; use
-    /// before equality comparisons).
+    /// before equality comparisons). The storage is immutable (possibly a
+    /// mapped file), so this copies the targets out before sorting.
     pub fn sorted(&self) -> Csr {
-        let mut out = self.clone();
-        let offsets = out.offsets.clone();
-        let n = out.num_vertices();
-        let targets = std::mem::take(&mut out.targets);
-        let mut targets = targets;
+        let offsets = self.offsets.clone();
+        let n = self.num_vertices();
+        let mut targets = self.targets.to_vec();
         {
             let ts = UnsafeSlice::new(&mut targets);
             parallel_for(n, |v| {
@@ -139,8 +150,10 @@ impl Csr {
                 slice.sort_unstable();
             });
         }
-        out.targets = targets;
-        out
+        Csr {
+            offsets,
+            targets: targets.into(),
+        }
     }
 
     /// Iterate all edges (u, v).
@@ -180,7 +193,10 @@ impl Csr {
                 unsafe { ts.write(idx, perm[w as usize]) };
             }
         });
-        Csr { offsets, targets }
+        Csr {
+            offsets: offsets.into(),
+            targets: targets.into(),
+        }
     }
 }
 

@@ -233,14 +233,25 @@ fn default_cache_dir() -> PathBuf {
         .unwrap_or_else(|_| PathBuf::from("target/dataset-cache"))
 }
 
-/// Warm path: decode the cached finished CSR. Unreadable (torn/corrupt)
-/// or spec-mismatched (stale) files are deleted and treated as a miss.
+/// Warm path: load the cached finished CSR — mapped in place (zero
+/// decode/copy; the `Csr`'s arrays borrow the page cache) when the
+/// platform supports it, decoded otherwise. Unreadable (torn/corrupt) or
+/// spec-mismatched (stale) files are deleted and treated as a miss.
 fn try_cached_csr(name: &str, spec: &Spec, scale: f64, path: &Path) -> Option<Dataset> {
     if !path.is_file() {
         return None;
     }
-    let graph = match codec::read_file::<Csr>(path) {
-        Ok((g, _)) => g,
+    let loaded = if crate::store::mmap_supported() {
+        // A v1 (or corrupt) file fails validation here AND in the decode
+        // fallback, so it is dropped and regenerated, never misread.
+        codec::map_file::<Csr>(path)
+            .map(|(g, _region)| g)
+            .or_else(|_| codec::read_file::<Csr>(path).map(|(g, _)| g))
+    } else {
+        codec::read_file::<Csr>(path).map(|(g, _)| g)
+    };
+    let graph = match loaded {
+        Ok(g) => g,
         Err(e) => {
             crate::log_warn!("dataset cache: dropping unreadable {}: {e:#}", path.display());
             std::fs::remove_file(path).ok();

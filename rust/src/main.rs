@@ -71,7 +71,7 @@ fn usage() {
          \x20 run        run an application       --app <app> [--variant <variant>]  (see `cagra apps`)\n\
          \x20            --graph <dataset> --iters N [--sources N] [--analyze] [--scale F] [--config FILE]\n\
          \x20            [--delta-epsilon F] [--cf-k N] [--damping F] [--bfs-source V]   app-knob overrides\n\
-         \x20            [--store] [--store-dir DIR] [--store-cap BYTES]   persist preprocessing artifacts\n\
+         \x20            [--store] [--store-dir DIR] [--store-cap BYTES] [--no-mmap]   persist preprocessing artifacts\n\
          \x20            [--report FILE] [--pmu]   versioned run report (or CAGRA_RUN_REPORT env)\n\
          \x20 batch      run a job list over ONE shared artifact store    <jobs.txt> [--store ...]\n\
          \x20            file: one `app=<name> [variant=..] [graph=..] [iters=N] [scale=F]\n\
@@ -152,6 +152,9 @@ fn system_config(args: &Args) -> anyhow::Result<SystemConfig> {
     }
     if let Some(cap) = args.get("store-cap") {
         cfg.store_cap_bytes = cap.parse()?;
+    }
+    if args.has_flag("no-mmap") {
+        cfg.store_mmap = false;
     }
     if let Some(seed) = args.get("random-seed") {
         cfg.random_seed = seed.parse()?;
@@ -583,6 +586,28 @@ fn cmd_cache(args: &Args) -> anyhow::Result<()> {
                 fmt_bytes(s.cap_bytes as usize)
             };
             println!("  resident: {} (cap {cap})", fmt_bytes(s.resident_bytes as usize));
+            println!(
+                "  mmap:     {} on this platform",
+                if cagra::store::mmap_supported() { "supported" } else { "unsupported" }
+            );
+            let arts = store.list_artifacts();
+            if !arts.is_empty() {
+                println!("  artifacts (codec v{}):", cagra::store::CODEC_VERSION);
+                for a in arts {
+                    let version = match a.version {
+                        Some(v) => format!("v{v}"),
+                        None => "v?".to_string(),
+                    };
+                    println!(
+                        "    {:<56} {:>10}  {:<4} {:<4} {}",
+                        a.file,
+                        fmt_bytes(a.size as usize),
+                        version,
+                        a.kind.as_deref().unwrap_or("?"),
+                        if a.mappable { "mapped warm load" } else { "decoded warm load" }
+                    );
+                }
+            }
         }
         Some(other) => anyhow::bail!("unknown cache action {other:?} (expected stats|clear)"),
     }

@@ -486,6 +486,7 @@ fn store_to_value(s: &StoreStats) -> Value {
         ("misses".to_string(), Value::Num(s.misses as f64)),
         ("evictions".to_string(), Value::Num(s.evictions as f64)),
         ("bytes_read".to_string(), Value::Num(s.bytes_read as f64)),
+        ("bytes_mapped".to_string(), Value::Num(s.bytes_mapped as f64)),
         ("bytes_written".to_string(), Value::Num(s.bytes_written as f64)),
         ("entries".to_string(), Value::Num(s.entries as f64)),
         (
@@ -502,6 +503,9 @@ fn store_from_value(v: &Value) -> Result<StoreStats> {
         misses: require_u64(v, "store", "misses")?,
         evictions: require_u64(v, "store", "evictions")?,
         bytes_read: require_u64(v, "store", "bytes_read")?,
+        // Absent from reports written before the zero-copy store: default,
+        // don't reject, so archived runs stay loadable.
+        bytes_mapped: v.get("bytes_mapped").and_then(Value::as_u64).unwrap_or(0),
         bytes_written: require_u64(v, "store", "bytes_written")?,
         entries: require_u64(v, "store", "entries")?,
         resident_bytes: require_u64(v, "store", "resident_bytes")?,
@@ -580,6 +584,7 @@ pub(crate) fn sample_report() -> RunReport {
             misses: 1,
             evictions: 0,
             bytes_read: 4096,
+            bytes_mapped: 8192,
             bytes_written: 2048,
             entries: 3,
             resident_bytes: 6144,

@@ -143,25 +143,22 @@ pub fn degree_sort_label(coarsen: u32) -> String {
     format!("degree-sorted-c{}", coarsen.max(1))
 }
 
-/// [`degree_sort_perm`] routed through the artifact store when present:
-/// one key per (dataset fingerprint, coarsen), shared by every reordering
-/// app (PageRank, BC, BFS), so one app's cold run warms the others. The
-/// decoded permutation is length-checked against the live graph before it
-/// can reach any unchecked scatter.
+/// [`degree_sort_perm`] routed through the storage context: one key per
+/// (dataset fingerprint, coarsen), shared by every reordering app
+/// (PageRank, BC, BFS), so one app's cold run warms the others. A
+/// disabled context just computes the permutation — the same single code
+/// path either way. The loaded permutation is length-checked against the
+/// live graph before it can reach any unchecked scatter.
 pub fn cached_degree_sort_perm(
     g: &Csr,
     coarsen: u32,
-    store: Option<crate::store::StoreCtx<'_>>,
-) -> std::sync::Arc<Vec<VertexId>> {
+    store: &crate::store::StoreCtx<'_>,
+) -> std::sync::Arc<crate::store::ArcSlice<VertexId>> {
     let coarsen = coarsen.max(1);
-    let build = || degree_sort_perm(g, coarsen);
-    let perm = match store {
-        Some(c) => c.get_or_build_arc(
-            crate::store::StoreKey::ordering(c.fingerprint, &degree_sort_label(coarsen)),
-            build,
-        ),
-        None => std::sync::Arc::new(build()),
-    };
+    let perm = store.get_or_build_arc(
+        crate::store::StoreKey::ordering(store.fingerprint, &degree_sort_label(coarsen)),
+        || degree_sort_perm(g, coarsen).into(),
+    );
     assert_eq!(perm.len(), g.num_vertices(), "permutation length != graph vertex count");
     perm
 }

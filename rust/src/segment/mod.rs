@@ -28,10 +28,13 @@ pub use merge::{merge, merge_serial, MergePlan};
 
 use crate::graph::{Csr, VertexId};
 use crate::parallel::{parallel_for, parallel_for_cost, UnsafeSlice};
+use crate::store::ArcSlice;
 use crate::util::ceil_div;
 
 /// One subgraph: the edges whose sources fall in `[src_lo, src_hi)`,
-/// indexed by destination (Figure 5's per-segment structure).
+/// indexed by destination (Figure 5's per-segment structure). Arrays are
+/// [`ArcSlice`]s — heap-owned when built, mmap-backed when warm-loaded
+/// from a v2 artifact (DESIGN.md §6).
 #[derive(Debug, Clone)]
 pub struct Segment {
     /// Source-vertex range covered by this segment.
@@ -39,12 +42,12 @@ pub struct Segment {
     pub src_hi: VertexId,
     /// Global ids of destinations adjacent to this segment, ascending —
     /// §4.1 step 3's "index vector" used by the merge phase.
-    pub dst_ids: Vec<VertexId>,
+    pub dst_ids: ArcSlice<VertexId>,
     /// Local CSR: `offsets[i]..offsets[i+1]` are the edges into
     /// `dst_ids[i]`.
-    pub offsets: Vec<u64>,
+    pub offsets: ArcSlice<u64>,
     /// Edge sources (global ids within `[src_lo, src_hi)`).
-    pub sources: Vec<VertexId>,
+    pub sources: ArcSlice<VertexId>,
 }
 
 impl Segment {
@@ -95,9 +98,9 @@ impl SegmentedCsr {
             segments.push(Segment {
                 src_lo: (s * seg_size) as VertexId,
                 src_hi: ((s + 1) * seg_size).min(n) as VertexId,
-                dst_ids: Vec::new(),
-                offsets: Vec::new(),
-                sources: Vec::new(),
+                dst_ids: ArcSlice::default(),
+                offsets: ArcSlice::default(),
+                sources: ArcSlice::default(),
             });
         }
         {
@@ -283,9 +286,9 @@ fn build_segment(g: &Csr, seg: &mut Segment, edge_count_hint: usize) {
         sources.push(u);
     }
     offsets.push(sources.len() as u64);
-    seg.dst_ids = dst_ids;
-    seg.offsets = offsets;
-    seg.sources = sources;
+    seg.dst_ids = dst_ids.into();
+    seg.offsets = offsets.into();
+    seg.sources = sources.into();
 }
 
 /// Reusable per-segment intermediate vectors ("Create an array to hold the

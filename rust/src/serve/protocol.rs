@@ -249,6 +249,10 @@ fn mem_value(m: &crate::store::MemStats) -> Value {
             "resident_bytes".to_string(),
             Value::Num(m.resident_bytes as f64),
         ),
+        (
+            "mapped_bytes".to_string(),
+            Value::Num(m.mapped_bytes as f64),
+        ),
         ("budget_bytes".to_string(), Value::Num(m.budget_bytes as f64)),
     ])
 }

@@ -114,7 +114,11 @@ impl WorkerPool {
     ) -> Result<WorkerPool> {
         let workers = workers.max(1);
         let store = if cfg.store_enabled {
-            Some(ArtifactStore::open(&cfg.store_dir, cfg.store_cap_bytes)?)
+            let s = ArtifactStore::open(&cfg.store_dir, cfg.store_cap_bytes)?;
+            // All workers share this one store, so mapped artifacts are
+            // one physical copy across every concurrent resident job.
+            s.set_mmap_enabled(cfg.store_mmap);
+            Some(s)
         } else {
             None
         };

@@ -30,13 +30,24 @@
 //!   run can never leave a torn artifact under a valid name (a torn temp
 //!   file is ignored by the `.art` suffix filter; stale ones are swept at
 //!   open, age-gated so a live writer's in-flight file is never unlinked).
+//! - **Map-first warm loads.** Where the platform supports it (and
+//!   `set_mmap_enabled` hasn't turned it off), a hit `mmap`s the v2
+//!   artifact and hands out its arrays in place ([`super::ArcSlice`]) —
+//!   zero decoded bytes, counted under `bytes_mapped` instead of
+//!   `bytes_read`. A per-path cache of already-validated regions (keyed
+//!   by inode + size — *not* mtime, which LRU touching bumps on every
+//!   hit) makes repeat warm loads O(1): the checksum and structural scans
+//!   run once per mapping, and N serve workers share one physical copy.
+//!   This is sound because the store only ever *replaces* files via
+//!   temp + rename (a new inode), never in place.
 
 use super::codec::{self, Artifact, CODEC_VERSION};
+use super::mmap::{self, MappedRegion};
 use anyhow::{Context, Result};
 use std::collections::{HashMap, HashSet};
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, Weak};
 use std::time::{Duration, SystemTime};
 
 /// Extension of committed artifact files.
@@ -110,8 +121,14 @@ pub struct StoreStats {
     pub misses: u64,
     /// Files removed by capacity eviction this process.
     pub evictions: u64,
+    /// Bytes *decoded* from disk into fresh heap allocations. Stays zero
+    /// when every warm load is served by mapping — the property the CI
+    /// warm-mapped gate asserts.
     pub bytes_read: u64,
     pub bytes_written: u64,
+    /// Artifact array bytes served in place from mapped files (the
+    /// zero-copy path; complement of `bytes_read`).
+    pub bytes_mapped: u64,
     /// Current committed artifacts on disk.
     pub entries: u64,
     /// Their total size.
@@ -126,6 +143,27 @@ struct Counters {
     evictions: AtomicU64,
     bytes_read: AtomicU64,
     bytes_written: AtomicU64,
+    bytes_mapped: AtomicU64,
+}
+
+/// One validated mapping in the map cache. Identity is (inode, size):
+/// atomic-rename replacement always allocates a new inode, and mtime is
+/// useless here because LRU touching bumps it on every hit. The region is
+/// held weakly — when the last [`super::ArcSlice`] over it drops, the
+/// mapping is unmapped and the next load re-maps and re-validates.
+#[derive(Debug)]
+struct MapEntry {
+    ino: u64,
+    size: u64,
+    region: Weak<MappedRegion>,
+}
+
+fn file_identity(md: &std::fs::Metadata) -> (u64, u64) {
+    #[cfg(unix)]
+    let ino = std::os::unix::fs::MetadataExt::ino(md);
+    #[cfg(not(unix))]
+    let ino = 0;
+    (ino, md.len())
 }
 
 /// How old a temp file must be before the open-time sweep may remove it
@@ -190,6 +228,11 @@ pub struct ArtifactStore {
     /// races were already safe (atomic temp+rename writes; the loser
     /// rewrites identical bytes) — this removes the duplicated build.
     key_locks: Mutex<HashMap<String, Arc<Mutex<()>>>>,
+    /// Whether warm loads may mmap (CLI `--no-mmap` turns it off; always
+    /// effectively off where [`mmap::SUPPORTED`] is false).
+    mmap_enabled: AtomicBool,
+    /// Already-validated mappings by path (see [`MapEntry`]).
+    map_cache: Mutex<HashMap<PathBuf, MapEntry>>,
 }
 
 impl ArtifactStore {
@@ -249,7 +292,22 @@ impl ArtifactStore {
             exempt: Mutex::new(HashMap::from([(ScopeId::INSTANCE.0, HashSet::new())])),
             next_scope: AtomicU64::new(1),
             key_locks: Mutex::new(HashMap::new()),
+            mmap_enabled: AtomicBool::new(mmap::SUPPORTED),
+            map_cache: Mutex::new(HashMap::new()),
         }
+    }
+
+    /// Turn mapped warm loads on or off (`SystemConfig::store_mmap` /
+    /// `--no-mmap`). Off means every hit decodes — the cold-path
+    /// comparison arm of the CI warm sequence.
+    pub fn set_mmap_enabled(&self, enabled: bool) {
+        self.mmap_enabled.store(enabled, Ordering::Relaxed);
+    }
+
+    /// Whether warm loads will try to map (platform support and the
+    /// toggle together).
+    pub fn mmap_enabled(&self) -> bool {
+        mmap::SUPPORTED && self.mmap_enabled.load(Ordering::Relaxed)
     }
 
     /// The in-process lock for one artifact filename. A poisoned lock is
@@ -301,10 +359,9 @@ impl ArtifactStore {
         let _building = key_lock.lock().unwrap_or_else(|p| p.into_inner());
         let t0 = crate::obs::recorder::timestamp();
         if path.is_file() {
-            match codec::read_file::<T>(&path) {
-                Ok((value, len)) => {
+            match self.load::<T>(&path) {
+                Ok(value) => {
                     self.counters.hits.fetch_add(1, Ordering::Relaxed);
-                    self.counters.bytes_read.fetch_add(len, Ordering::Relaxed);
                     touch(&path);
                     crate::log_debug!("artifact store hit: {}", path.display());
                     crate::obs::recorder::record_artifact(t0, &path, true);
@@ -315,6 +372,7 @@ impl ArtifactStore {
                         "artifact store: dropping unreadable {}: {e:#}",
                         path.display()
                     );
+                    self.map_cache.lock().unwrap().remove(&path);
                     std::fs::remove_file(&path).ok();
                 }
             }
@@ -340,15 +398,67 @@ impl ArtifactStore {
         value
     }
 
+    /// Load one committed artifact file: map-first (zero decoded bytes,
+    /// in-place arrays), falling back to read-and-decode when mapping is
+    /// off, unsupported, or fails for platform reasons. A corrupt file
+    /// fails *both* ways and errs — the caller treats that as a miss.
+    fn load<T: Artifact>(&self, path: &Path) -> Result<T> {
+        if self.mmap_enabled() {
+            if let Ok(value) = self.load_mapped::<T>(path) {
+                return Ok(value);
+            }
+        }
+        let (value, len) = codec::read_file::<T>(path)?;
+        self.counters.bytes_read.fetch_add(len, Ordering::Relaxed);
+        Ok(value)
+    }
+
+    /// The mapped warm path. First load of a file maps + fully validates
+    /// it and caches the region; while any [`super::ArcSlice`] keeps that
+    /// region alive, further loads rebuild from the already-validated
+    /// mapping without re-scanning the section area — O(1) in |E|.
+    fn load_mapped<T: Artifact>(&self, path: &Path) -> Result<T> {
+        let md = std::fs::metadata(path)
+            .with_context(|| format!("stat {}", path.display()))?;
+        let (ino, size) = file_identity(&md);
+        let cached = {
+            let cache = self.map_cache.lock().unwrap();
+            cache
+                .get(path)
+                .filter(|e| e.ino == ino && e.size == size)
+                .and_then(|e| e.region.upgrade())
+        };
+        let value = match cached {
+            Some(region) => codec::from_mapped::<T>(&region, true)?,
+            None => {
+                let (value, region) = codec::map_file::<T>(path)?;
+                let mut cache = self.map_cache.lock().unwrap();
+                cache.retain(|_, e| e.region.strong_count() > 0);
+                cache.insert(
+                    path.to_path_buf(),
+                    MapEntry {
+                        ino,
+                        size,
+                        region: Arc::downgrade(&region),
+                    },
+                );
+                value
+            }
+        };
+        self.counters
+            .bytes_mapped
+            .fetch_add(value.mapped_bytes(), Ordering::Relaxed);
+        Ok(value)
+    }
+
     /// Read an artifact without building on miss (tests, tooling).
     pub fn try_get<T: Artifact>(&self, key: &StoreKey) -> Result<T> {
         let file = key.filename::<T>();
         let path = self.dir.join(&file);
         let key_lock = self.key_lock(&file);
         let _reading = key_lock.lock().unwrap_or_else(|p| p.into_inner());
-        let (value, len) = codec::read_file::<T>(&path)?;
+        let value = self.load::<T>(&path)?;
         self.counters.hits.fetch_add(1, Ordering::Relaxed);
-        self.counters.bytes_read.fetch_add(len, Ordering::Relaxed);
         touch(&path);
         Ok(value)
     }
@@ -362,10 +472,40 @@ impl ArtifactStore {
             evictions: self.counters.evictions.load(Ordering::Relaxed),
             bytes_read: self.counters.bytes_read.load(Ordering::Relaxed),
             bytes_written: self.counters.bytes_written.load(Ordering::Relaxed),
+            bytes_mapped: self.counters.bytes_mapped.load(Ordering::Relaxed),
             entries: files.len() as u64,
             resident_bytes: files.iter().map(|f| f.size).sum(),
             cap_bytes: self.cap_bytes,
         }
+    }
+
+    /// Per-artifact inventory for `cagra cache stats`: filename, size,
+    /// codec version (`None` when the header is unreadable), and whether
+    /// this build would serve it zero-copy. Makes mixed-version stores
+    /// diagnosable after a codec bump — v1 leftovers show up as
+    /// `decode-on-load` / `rebuild` rather than silently rebuilding.
+    pub fn list_artifacts(&self) -> Vec<ArtifactInfo> {
+        let mut out: Vec<ArtifactInfo> = self
+            .scan()
+            .into_iter()
+            .map(|f| {
+                let version = codec::peek_version(&f.path).ok();
+                ArtifactInfo {
+                    file: f
+                        .path
+                        .file_name()
+                        .map(|n| n.to_string_lossy().into_owned())
+                        .unwrap_or_default(),
+                    size: f.size,
+                    version: version.map(|(v, _)| v),
+                    kind: version
+                        .map(|(_, k)| String::from_utf8_lossy(&k).trim_end_matches('_').to_string()),
+                    mappable: version.map(|(v, _)| v) == Some(CODEC_VERSION) && mmap::SUPPORTED,
+                }
+            })
+            .collect();
+        out.sort_by(|a, b| a.file.cmp(&b.file));
+        out
     }
 
     /// Remove every committed artifact. Returns (files removed, bytes
@@ -373,6 +513,7 @@ impl ArtifactStore {
     pub fn clear(&self) -> Result<(u64, u64)> {
         let mut removed = 0u64;
         let mut freed = 0u64;
+        self.map_cache.lock().unwrap().clear();
         for f in self.scan() {
             std::fs::remove_file(&f.path)
                 .with_context(|| format!("removing {}", f.path.display()))?;
@@ -453,6 +594,10 @@ impl ArtifactStore {
             if std::fs::remove_file(&f.path).is_ok() {
                 total -= f.size;
                 self.counters.evictions.fetch_add(1, Ordering::Relaxed);
+                // Unlinking doesn't invalidate live mappings (the inode
+                // survives until the last ArcSlice drops), but the path's
+                // cache entry is now stale.
+                self.map_cache.lock().unwrap().remove(&f.path);
                 crate::log_debug!("artifact store evict: {} ({} bytes)", f.path.display(), f.size);
             }
         }
@@ -471,6 +616,20 @@ struct FileInfo {
     path: PathBuf,
     size: u64,
     mtime: SystemTime,
+}
+
+/// One row of [`ArtifactStore::list_artifacts`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArtifactInfo {
+    pub file: String,
+    pub size: u64,
+    /// Codec version from the file header; `None` if unreadable.
+    pub version: Option<u32>,
+    /// Artifact kind tag ("CSR", "PERM", "SEG"); `None` if unreadable.
+    pub kind: Option<String>,
+    /// Whether this build serves the file zero-copy (current codec
+    /// version on an mmap-capable platform).
+    pub mappable: bool,
 }
 
 /// Does `ext` match the store's own temp-file shape, `tmp<pid>-<seq>`
@@ -501,6 +660,7 @@ fn touch(path: &Path) {
 mod tests {
     use super::*;
     use crate::graph::Csr;
+    use crate::store::ArcSlice;
 
     fn temp_store(tag: &str, cap: u64) -> (PathBuf, ArtifactStore) {
         let dir = std::env::temp_dir().join(format!(
@@ -512,13 +672,16 @@ mod tests {
         (dir, store)
     }
 
-    fn perm(n: u32, seed: u64) -> Vec<u32> {
-        crate::util::rng::Rng::new(seed).permutation(n as usize)
+    fn perm(n: u32, seed: u64) -> ArcSlice<u32> {
+        crate::util::rng::Rng::new(seed).permutation(n as usize).into()
     }
 
     #[test]
     fn miss_then_hit_with_stats() {
         let (dir, store) = temp_store("hit", 0);
+        // Force the decode path so `bytes_read` is the counter exercised
+        // here; the mapped path has its own test below.
+        store.set_mmap_enabled(false);
         let key = StoreKey::ordering(0xABCD, "degree-sorted");
         let mut builds = 0;
         let a = store.get_or_build(&key, || {
@@ -532,10 +695,10 @@ mod tests {
         assert_eq!(builds, 1, "second call must not rebuild");
         assert_eq!(a, b);
         // Direct read without a builder sees the same artifact...
-        let direct: Vec<u32> = store.try_get(&key).unwrap();
+        let direct: ArcSlice<u32> = store.try_get(&key).unwrap();
         assert_eq!(direct, a);
         // ...and a key that was never written is an error, not a build.
-        assert!(store.try_get::<Vec<u32>>(&StoreKey::ordering(0xDEAD, "absent")).is_err());
+        assert!(store.try_get::<ArcSlice<u32>>(&StoreKey::ordering(0xDEAD, "absent")).is_err());
         let s = store.stats();
         assert_eq!((s.hits, s.misses, s.entries), (2, 1, 1));
         assert!(s.bytes_written > 0 && s.bytes_read > 0);
@@ -564,7 +727,7 @@ mod tests {
         let (dir, store) = temp_store("corrupt", 0);
         let key = StoreKey::ordering(7, "x");
         let _ = store.get_or_build(&key, || perm(50, 3));
-        let path = dir.join(key.filename::<Vec<u32>>());
+        let path = dir.join(key.filename::<ArcSlice<u32>>());
         // Truncate the committed file.
         let bytes = std::fs::read(&path).unwrap();
         std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
@@ -582,7 +745,7 @@ mod tests {
         let one_size = codec::encode(&perm(64, 1)).len() as u64;
         let (dir, store) = temp_store("evict", one_size + one_size / 2);
         let k1 = StoreKey::ordering(1, "old");
-        let old = dir.join(k1.filename::<Vec<u32>>());
+        let old = dir.join(k1.filename::<ArcSlice<u32>>());
         codec::write_file(&old, &perm(64, 1)).unwrap();
         if let Ok(f) = std::fs::OpenOptions::new().write(true).open(&old) {
             f.set_modified(SystemTime::UNIX_EPOCH + Duration::from_secs(1)).ok();
@@ -593,7 +756,7 @@ mod tests {
         assert_eq!(s.entries, 1, "foreign stale artifact should be evicted");
         assert!(s.evictions >= 1);
         assert!(!old.exists());
-        assert!(dir.join(k2.filename::<Vec<u32>>()).exists());
+        assert!(dir.join(k2.filename::<ArcSlice<u32>>()).exists());
         std::fs::remove_dir_all(&dir).ok();
     }
 
@@ -641,7 +804,7 @@ mod tests {
             let _ = store.get_or_build_scoped(&k1, job1.id(), || perm(64, 1));
         } // job 1 completes; its exemption is released
         // Backdate job 1's artifact so LRU ordering is deterministic.
-        let old = dir.join(k1.filename::<Vec<u32>>());
+        let old = dir.join(k1.filename::<ArcSlice<u32>>());
         if let Ok(f) = std::fs::OpenOptions::new().write(true).open(&old) {
             f.set_modified(SystemTime::UNIX_EPOCH + Duration::from_secs(1)).ok();
         }
@@ -652,7 +815,7 @@ mod tests {
         assert_eq!(s.entries, 1, "completed job's artifact should be evictable");
         assert!(s.evictions >= 1);
         assert!(!old.exists(), "job 1's artifact must be the one evicted");
-        assert!(dir.join(k2.filename::<Vec<u32>>()).exists());
+        assert!(dir.join(k2.filename::<ArcSlice<u32>>()).exists());
         std::fs::remove_dir_all(&dir).ok();
     }
 
@@ -706,6 +869,62 @@ mod tests {
         let _ = store.get_or_build(&StoreKey::ordering(1, "a"), || perm(8, 1));
         let ro = ArtifactStore::open_existing(&dir, 0).unwrap();
         assert_eq!(ro.stats().entries, 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn mapped_warm_hit_decodes_zero_bytes() {
+        let (dir, store) = temp_store("mapped", 0);
+        let key = StoreKey::ordering(0x1234, "mapped");
+        let cold = store.get_or_build(&key, || perm(4096, 9));
+        assert_eq!(store.stats().bytes_read, 0, "cold build decodes nothing");
+        if store.mmap_enabled() {
+            let warm: ArcSlice<u32> = store.try_get(&key).unwrap();
+            assert!(warm.is_mapped(), "warm hit must be served in place");
+            assert_eq!(warm, cold);
+            let s = store.stats();
+            assert_eq!(s.bytes_read, 0, "mapped warm load must decode zero bytes");
+            assert!(s.bytes_mapped >= 4096 * 4, "{s:?}");
+            // Second load while the first mapping is alive: served from
+            // the validated map cache — still zero decoded bytes, one
+            // shared physical region.
+            let again: ArcSlice<u32> = store.try_get(&key).unwrap();
+            assert!(again.is_mapped());
+            assert_eq!(store.stats().bytes_read, 0);
+            // Forcing the decode path returns identical contents.
+            store.set_mmap_enabled(false);
+            let decoded: ArcSlice<u32> = store.try_get(&key).unwrap();
+            assert!(!decoded.is_mapped());
+            assert_eq!(decoded, warm);
+            assert!(store.stats().bytes_read > 0);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn list_artifacts_reports_version_and_mappability() {
+        let (dir, store) = temp_store("list", 0);
+        let _ = store.get_or_build(&StoreKey::ordering(1, "p"), || perm(16, 1));
+        let g = Csr::from_edges(4, &[(0, 1), (2, 3)]);
+        let _: Csr = store.get_or_build(&StoreKey::ordering(1, "g"), || g.clone());
+        // A foreign/unreadable .art file is listed but has no version and
+        // is never claimed mappable.
+        std::fs::write(dir.join("junk.art"), b"not an artifact").unwrap();
+        let infos = store.list_artifacts();
+        assert_eq!(infos.len(), 3);
+        let junk = infos.iter().find(|i| i.file == "junk.art").unwrap();
+        assert_eq!(junk.version, None);
+        assert!(!junk.mappable);
+        for i in infos.iter().filter(|i| i.file != "junk.art") {
+            assert_eq!(i.version, Some(CODEC_VERSION));
+            assert_eq!(i.mappable, mmap::SUPPORTED);
+            assert!(i.size > 0);
+        }
+        let kinds: Vec<String> = infos.iter().filter_map(|i| i.kind.clone()).collect();
+        assert!(
+            kinds.contains(&"PERM".to_string()) && kinds.contains(&"CSR".to_string()),
+            "{kinds:?}"
+        );
         std::fs::remove_dir_all(&dir).ok();
     }
 

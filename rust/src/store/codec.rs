@@ -1,43 +1,107 @@
-//! Versioned binary codec for preprocessing artifacts.
+//! Versioned binary codec for preprocessing artifacts — v2 **section
+//! layout**, designed so the on-disk bytes *are* the in-memory arrays.
 //!
 //! Matches the repo's zero-dependency idiom (`runtime/artifacts.rs`,
 //! `graph/edgelist.rs`): hand-rolled little-endian framing, no serde.
 //! Every artifact file is
 //!
 //! ```text
-//! magic    [u8; 8]   "CAGART01"
-//! version  u32 LE    CODEC_VERSION
-//! kind     [u8; 4]   artifact type tag (Artifact::KIND)
-//! length   u64 LE    payload bytes
-//! payload  [u8]      type-specific, little-endian
-//! checksum u64 LE    FNV-1a64 + avalanche over payload
+//! magic        [u8; 8]  "CAGART01"
+//! version      u32 LE   CODEC_VERSION (= 2)
+//! kind         [u8; 4]  artifact type tag (Artifact::KIND)
+//! n_sections   u32 LE
+//! meta_len     u32 LE
+//! payload_len  u64 LE   bytes of the aligned section area
+//! payload_crc  u64 LE   FNV-1a64+avalanche over the section area
+//! table        n_sections × { elems u64, elem_size u32 }
+//! meta         [u8]     type-specific metadata (counts, parameters)
+//! header_crc   u64 LE   checksum over every byte above
+//! zero pad     to the next 64-byte boundary
+//! sections     each section starts 64-byte-aligned, raw LE elements,
+//!              zero-padded to 64 between and after (canonical packing:
+//!              section offsets are *implicit*, so the table cannot
+//!              express overlap or misalignment)
+//! footer       "CAGAREND" [8] + header_crc echo u64 + footer_crc u64
 //! ```
 //!
-//! Decoding is paranoid by contract: bad magic, wrong version, wrong kind,
-//! inconsistent length, checksum mismatch, truncation, trailing bytes, or
-//! any violated structural invariant (non-monotone offsets, out-of-range
-//! ids, non-permutations, segment ranges that disagree with `seg_size`)
-//! returns `Err` — never a panic, never a silently wrong value. Declared
-//! lengths are validated against remaining bytes *before* allocation so a
-//! corrupt header cannot trigger a huge allocation.
+//! Because sections are 64-byte-aligned raw arrays, `ArtifactStore` can
+//! `mmap` a file and hand the arrays out in place as
+//! [`ArcSlice::Mapped`] windows — the zero-copy warm start (DESIGN.md
+//! §6). The same frame decodes on platforms without mapping by copying
+//! each section into owned storage.
+//!
+//! Decoding and mapping are paranoid by contract: bad magic, wrong
+//! version, wrong kind, inconsistent lengths, checksum mismatch,
+//! truncation, nonzero padding, trailing bytes, or any violated
+//! structural invariant (non-monotone offsets, out-of-range ids,
+//! non-permutations, section shapes that disagree with the metadata)
+//! returns `Err` — never a panic, never a silently wrong value. Every
+//! byte of the file is covered by one of the three checksums plus the
+//! explicit zero-pad check, so *any* bit flip fails at map time.
+//! Declared lengths are validated against the file size *before*
+//! allocation so a corrupt header cannot trigger a huge allocation.
 
 use super::fingerprint::hash_bytes;
+use super::mmap::MappedRegion;
+use super::slice::ArcSlice;
 use crate::graph::{Csr, VertexId};
 use crate::segment::{MergePlan, Segment, SegmentedCsr};
 use crate::util::ceil_div;
 use anyhow::{bail, Context, Result};
 use std::path::Path;
+use std::sync::Arc;
 
 /// File magic ("CAGra ARTifact", format generation 01).
 pub const MAGIC: [u8; 8] = *b"CAGART01";
 
+/// End-of-file commit marker.
+pub const FOOTER_MAGIC: [u8; 8] = *b"CAGAREND";
+
 /// Bumped whenever any payload layout changes; old files are rejected
-/// (and evicted by the store) rather than misread.
-pub const CODEC_VERSION: u32 = 1;
+/// (and rebuilt by the store) rather than misread. v2 = section layout.
+pub const CODEC_VERSION: u32 = 2;
+
+/// Every section starts on this boundary (cache line; superset of any
+/// element alignment we store).
+pub const SECTION_ALIGN: usize = 64;
+
+const HEADER_FIXED: usize = 40; // magic..payload_crc
+const TABLE_ENTRY: usize = 12; // elems u64 + elem_size u32
+const FOOTER_LEN: usize = 24; // footer magic + echo + crc
+
+/// Sanity caps applied before any size arithmetic.
+const MAX_SECTIONS: u32 = 1 << 24;
+const MAX_META: u32 = 1 << 24;
 
 /// Payload checksum: FNV-1a64 with a final avalanche.
 pub fn checksum64(payload: &[u8]) -> u64 {
     hash_bytes(0x5EED_C0DE, payload)
+}
+
+fn align_up(x: usize, a: usize) -> Option<usize> {
+    x.checked_add(a - 1).map(|v| v & !(a - 1))
+}
+
+/// One array of an artifact, borrowed for encoding.
+pub enum SectionData<'a> {
+    U32(&'a [u32]),
+    U64(&'a [u64]),
+}
+
+impl SectionData<'_> {
+    fn elems(&self) -> usize {
+        match self {
+            SectionData::U32(s) => s.len(),
+            SectionData::U64(s) => s.len(),
+        }
+    }
+
+    fn elem_size(&self) -> usize {
+        match self {
+            SectionData::U32(_) => 4,
+            SectionData::U64(_) => 8,
+        }
+    }
 }
 
 /// A type that can be persisted in the artifact store.
@@ -46,15 +110,24 @@ pub trait Artifact: Sized {
     const KIND: [u8; 4];
     /// Short name used in store filenames ("perm", "csr", "seg").
     const NAME: &'static str;
-    fn encode_payload(&self, out: &mut Vec<u8>);
-    fn decode_payload(r: &mut Reader) -> Result<Self>;
-    /// Approximate decoded in-memory footprint (heap payload, not the
-    /// encoded file size) — what the in-memory layer ([`super::MemStore`])
-    /// charges against its byte budget.
+    /// Small type-specific metadata (counts, parameters) — covered by the
+    /// header checksum.
+    fn encode_meta(&self, out: &mut Vec<u8>);
+    /// The array sections in canonical order.
+    fn sections(&self) -> Vec<SectionData<'_>>;
+    /// Rebuild from a validated frame view (mapped or heap-backed).
+    fn from_view(view: &ArtifactView<'_>) -> Result<Self>;
+    /// Approximate in-memory working-set footprint (array bytes,
+    /// regardless of owned/mapped backing) — what the in-memory layer
+    /// ([`super::MemStore`]) charges against its byte budget.
     fn mem_bytes(&self) -> u64;
+    /// Bytes of `mem_bytes` that are mmap-backed (0 for decoded values):
+    /// file pages shared across workers rather than private heap.
+    fn mapped_bytes(&self) -> u64;
 }
 
-/// Bounds-checked little-endian reader over a byte slice.
+/// Bounds-checked little-endian reader over a byte slice (metadata and
+/// other small variable-length regions).
 pub struct Reader<'a> {
     buf: &'a [u8],
     pos: usize,
@@ -86,37 +159,10 @@ impl<'a> Reader<'a> {
         Ok(u64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
     }
 
-    /// Length-prefixed `u32` array. The length is validated against the
-    /// remaining bytes before allocating.
-    pub fn vec_u32(&mut self) -> Result<Vec<u32>> {
-        let len = self.u64()?;
-        if len > (self.remaining() / 4) as u64 {
-            bail!("corrupt artifact: u32 array length {len} exceeds payload");
-        }
-        let raw = self.bytes(len as usize * 4)?;
-        Ok(raw
-            .chunks_exact(4)
-            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
-            .collect())
-    }
-
-    /// Length-prefixed `u64` array.
-    pub fn vec_u64(&mut self) -> Result<Vec<u64>> {
-        let len = self.u64()?;
-        if len > (self.remaining() / 8) as u64 {
-            bail!("corrupt artifact: u64 array length {len} exceeds payload");
-        }
-        let raw = self.bytes(len as usize * 8)?;
-        Ok(raw
-            .chunks_exact(8)
-            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
-            .collect())
-    }
-
-    /// Assert the payload was fully consumed.
+    /// Assert the buffer was fully consumed.
     pub fn done(&self) -> Result<()> {
         if self.remaining() != 0 {
-            bail!("corrupt artifact: {} trailing payload bytes", self.remaining());
+            bail!("corrupt artifact: {} trailing metadata bytes", self.remaining());
         }
         Ok(())
     }
@@ -130,38 +176,174 @@ fn put_u64(out: &mut Vec<u8>, v: u64) {
     out.extend_from_slice(&v.to_le_bytes());
 }
 
-fn put_vec_u32(out: &mut Vec<u8>, xs: &[u32]) {
-    put_u64(out, xs.len() as u64);
-    for &x in xs {
-        out.extend_from_slice(&x.to_le_bytes());
-    }
-}
+// ---------------------------------------------------------------------------
+// Frame: encode
+// ---------------------------------------------------------------------------
 
-fn put_vec_u64(out: &mut Vec<u8>, xs: &[u64]) {
-    put_u64(out, xs.len() as u64);
-    for &x in xs {
-        out.extend_from_slice(&x.to_le_bytes());
-    }
-}
-
-/// Encode `value` into a framed artifact byte buffer.
+/// Encode `value` into a framed v2 artifact byte buffer.
 pub fn encode<T: Artifact>(value: &T) -> Vec<u8> {
+    let mut meta = Vec::new();
+    value.encode_meta(&mut meta);
+    let sections = value.sections();
+    assert!(sections.len() < MAX_SECTIONS as usize && meta.len() < MAX_META as usize);
+
+    // Section area: each section 64-aligned (relative to its own start,
+    // which encode places on a 64-aligned file offset), zero-padded
+    // between and after.
     let mut payload = Vec::new();
-    value.encode_payload(&mut payload);
-    let mut out = Vec::with_capacity(payload.len() + 32);
+    for sec in &sections {
+        debug_assert_eq!(payload.len() % SECTION_ALIGN, 0);
+        match sec {
+            SectionData::U32(xs) => {
+                payload.reserve(xs.len() * 4);
+                for &x in *xs {
+                    payload.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            SectionData::U64(xs) => {
+                payload.reserve(xs.len() * 8);
+                for &x in *xs {
+                    payload.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+        }
+        payload.resize(align_up(payload.len(), SECTION_ALIGN).unwrap(), 0);
+    }
+    let payload_crc = checksum64(&payload);
+
+    let mut out = Vec::with_capacity(
+        HEADER_FIXED + sections.len() * TABLE_ENTRY + meta.len() + 8 + SECTION_ALIGN
+            + payload.len()
+            + FOOTER_LEN,
+    );
     out.extend_from_slice(&MAGIC);
-    out.extend_from_slice(&CODEC_VERSION.to_le_bytes());
+    put_u32(&mut out, CODEC_VERSION);
     out.extend_from_slice(&T::KIND);
-    out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
-    let checksum = checksum64(&payload);
+    put_u32(&mut out, sections.len() as u32);
+    put_u32(&mut out, meta.len() as u32);
+    put_u64(&mut out, payload.len() as u64);
+    put_u64(&mut out, payload_crc);
+    debug_assert_eq!(out.len(), HEADER_FIXED);
+    for sec in &sections {
+        put_u64(&mut out, sec.elems() as u64);
+        put_u32(&mut out, sec.elem_size() as u32);
+    }
+    out.extend_from_slice(&meta);
+    let header_crc = checksum64(&out);
+    put_u64(&mut out, header_crc);
+    out.resize(align_up(out.len(), SECTION_ALIGN).unwrap(), 0);
     out.extend_from_slice(&payload);
-    out.extend_from_slice(&checksum.to_le_bytes());
+    out.extend_from_slice(&FOOTER_MAGIC);
+    put_u64(&mut out, header_crc);
+    let footer_crc = checksum64(&out[out.len() - 16..]);
+    put_u64(&mut out, footer_crc);
     out
 }
 
-/// Decode a framed artifact, validating the full frame and every payload
-/// invariant.
-pub fn decode<T: Artifact>(bytes: &[u8]) -> Result<T> {
+// ---------------------------------------------------------------------------
+// Frame: validate + view
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy)]
+struct SectionInfo {
+    /// Absolute byte offset in the file.
+    offset: usize,
+    elems: usize,
+    elem_size: usize,
+}
+
+enum Backing<'a> {
+    /// Full file bytes in a heap buffer — sections are copied out.
+    Heap(&'a [u8]),
+    /// Live mapping — sections become `ArcSlice::Mapped` windows.
+    Mapped(&'a Arc<MappedRegion>),
+}
+
+/// A validated v2 frame: typed accessors over the section table.
+pub struct ArtifactView<'a> {
+    meta: &'a [u8],
+    table: Vec<SectionInfo>,
+    backing: Backing<'a>,
+    /// True when this exact immutable region already passed full
+    /// validation in this process (store map-cache hit): `from_view`
+    /// implementations may skip pure re-validation scans, keeping repeat
+    /// warm loads independent of |E|.
+    trusted: bool,
+}
+
+impl<'a> ArtifactView<'a> {
+    pub fn meta(&self) -> Reader<'a> {
+        Reader::new(self.meta)
+    }
+
+    pub fn num_sections(&self) -> usize {
+        self.table.len()
+    }
+
+    pub fn trusted(&self) -> bool {
+        self.trusted
+    }
+
+    fn section(&self, idx: usize, elem_size: usize) -> Result<SectionInfo> {
+        let info = *self
+            .table
+            .get(idx)
+            .ok_or_else(|| anyhow::anyhow!("corrupt artifact: missing section {idx}"))?;
+        if info.elem_size != elem_size {
+            bail!(
+                "corrupt artifact: section {idx} has {}-byte elements, expected {elem_size}",
+                info.elem_size
+            );
+        }
+        Ok(info)
+    }
+
+    /// Section `idx` as a `u32` array — zero-copy on mapped backings.
+    pub fn section_u32(&self, idx: usize) -> Result<ArcSlice<u32>> {
+        let info = self.section(idx, 4)?;
+        match &self.backing {
+            Backing::Mapped(region) => {
+                ArcSlice::from_region((*region).clone(), info.offset, info.elems)
+                    .ok_or_else(|| anyhow::anyhow!("corrupt artifact: section {idx} out of bounds"))
+            }
+            Backing::Heap(bytes) => {
+                let raw = &bytes[info.offset..info.offset + info.elems * 4];
+                Ok(raw
+                    .chunks_exact(4)
+                    .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+                    .collect::<Vec<u32>>()
+                    .into())
+            }
+        }
+    }
+
+    /// Section `idx` as a `u64` array — zero-copy on mapped backings.
+    pub fn section_u64(&self, idx: usize) -> Result<ArcSlice<u64>> {
+        let info = self.section(idx, 8)?;
+        match &self.backing {
+            Backing::Mapped(region) => {
+                ArcSlice::from_region((*region).clone(), info.offset, info.elems)
+                    .ok_or_else(|| anyhow::anyhow!("corrupt artifact: section {idx} out of bounds"))
+            }
+            Backing::Heap(bytes) => {
+                let raw = &bytes[info.offset..info.offset + info.elems * 8];
+                Ok(raw
+                    .chunks_exact(8)
+                    .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+                    .collect::<Vec<u64>>()
+                    .into())
+            }
+        }
+    }
+}
+
+/// Validate the whole frame of `bytes` for artifact kind `kind`.
+/// `verify_payload` controls the O(file) section-area checksum scan —
+/// always on except for map-cache hits on already-validated regions.
+fn validate_frame(bytes: &[u8], kind: [u8; 4], verify_payload: bool) -> Result<(Vec<SectionInfo>, std::ops::Range<usize>)> {
+    if bytes.len() < HEADER_FIXED + 8 + FOOTER_LEN {
+        bail!("truncated artifact: {} bytes", bytes.len());
+    }
     let mut r = Reader::new(bytes);
     if r.bytes(8)? != MAGIC {
         bail!("bad magic: not an artifact file");
@@ -170,31 +352,158 @@ pub fn decode<T: Artifact>(bytes: &[u8]) -> Result<T> {
     if version != CODEC_VERSION {
         bail!("unsupported artifact codec version {version} (this build reads v{CODEC_VERSION})");
     }
-    let kind = r.bytes(4)?;
-    if kind != T::KIND {
+    let file_kind = r.bytes(4)?;
+    if file_kind != kind {
         bail!(
             "artifact kind mismatch: file has {:?}, expected {:?}",
-            String::from_utf8_lossy(kind),
-            String::from_utf8_lossy(&T::KIND)
+            String::from_utf8_lossy(file_kind),
+            String::from_utf8_lossy(&kind)
         );
     }
-    let len = r.u64()?;
-    if r.remaining() < 8 || len != (r.remaining() - 8) as u64 {
+    let n_sections = r.u32()?;
+    let meta_len = r.u32()?;
+    if n_sections > MAX_SECTIONS || meta_len > MAX_META {
+        bail!("corrupt artifact: implausible table ({n_sections} sections, {meta_len} meta bytes)");
+    }
+    let payload_len = usize::try_from(r.u64()?)
+        .map_err(|_| anyhow::anyhow!("corrupt artifact: payload length overflows"))?;
+    let payload_crc = r.u64()?;
+    let hdr_end = HEADER_FIXED + n_sections as usize * TABLE_ENTRY + meta_len as usize;
+    let Some(sections_start) = align_up(hdr_end + 8, SECTION_ALIGN) else {
+        bail!("corrupt artifact: header size overflows");
+    };
+    let footer_off = sections_start
+        .checked_add(payload_len)
+        .ok_or_else(|| anyhow::anyhow!("corrupt artifact: payload size overflows"))?;
+    let expect_len = footer_off
+        .checked_add(FOOTER_LEN)
+        .ok_or_else(|| anyhow::anyhow!("corrupt artifact: file size overflows"))?;
+    if bytes.len() != expect_len {
         bail!(
-            "corrupt artifact: payload length {len} inconsistent with file size ({} bytes left)",
-            r.remaining()
+            "corrupt artifact: file is {} bytes, frame declares {expect_len}",
+            bytes.len()
         );
     }
-    let payload = r.bytes(len as usize)?;
-    let stored = r.u64()?;
-    let actual = checksum64(payload);
-    if stored != actual {
-        bail!("artifact checksum mismatch ({stored:#018x} != {actual:#018x}): corrupt file");
+    // Header checksum covers fixed header + table + meta.
+    let header_crc =
+        u64::from_le_bytes(bytes[hdr_end..hdr_end + 8].try_into().unwrap());
+    if checksum64(&bytes[..hdr_end]) != header_crc {
+        bail!("artifact header checksum mismatch: corrupt file");
     }
-    let mut pr = Reader::new(payload);
-    let value = T::decode_payload(&mut pr)?;
-    pr.done()?;
-    Ok(value)
+    // Footer: commit marker tied to this header.
+    let f = &bytes[footer_off..];
+    if f[..8] != FOOTER_MAGIC {
+        bail!("artifact footer missing: truncated or torn write");
+    }
+    if u64::from_le_bytes(f[8..16].try_into().unwrap()) != header_crc {
+        bail!("artifact footer does not match header: torn write");
+    }
+    let footer_crc = u64::from_le_bytes(f[16..24].try_into().unwrap());
+    if checksum64(&f[..16]) != footer_crc {
+        bail!("artifact footer checksum mismatch: corrupt file");
+    }
+    // The pad between header_crc and the section area must be zero (it is
+    // the only region no checksum covers).
+    if bytes[hdr_end + 8..sections_start].iter().any(|&b| b != 0) {
+        bail!("corrupt artifact: nonzero header padding");
+    }
+    if verify_payload && checksum64(&bytes[sections_start..footer_off]) != payload_crc {
+        bail!("artifact section checksum mismatch: corrupt file");
+    }
+    // Walk the table; section offsets are implicit canonical packing, so
+    // overlap/misalignment cannot be expressed — only total-size mismatch.
+    let mut table = Vec::with_capacity(n_sections as usize);
+    let mut cur = sections_start;
+    for i in 0..n_sections as usize {
+        let at = HEADER_FIXED + i * TABLE_ENTRY;
+        let elems = u64::from_le_bytes(bytes[at..at + 8].try_into().unwrap());
+        let elem_size = u32::from_le_bytes(bytes[at + 8..at + 12].try_into().unwrap());
+        if elem_size != 4 && elem_size != 8 {
+            bail!("corrupt artifact: section {i} has element size {elem_size}");
+        }
+        let elems = usize::try_from(elems)
+            .ok()
+            .filter(|&e| e <= payload_len / elem_size as usize)
+            .ok_or_else(|| anyhow::anyhow!("corrupt artifact: section {i} larger than payload"))?;
+        let byte_len = elems * elem_size as usize;
+        let end = cur
+            .checked_add(byte_len)
+            .and_then(|e| align_up(e, SECTION_ALIGN))
+            .ok_or_else(|| anyhow::anyhow!("corrupt artifact: section {i} overflows"))?;
+        if end > footer_off {
+            bail!("corrupt artifact: section {i} exceeds the section area");
+        }
+        table.push(SectionInfo {
+            offset: cur,
+            elems,
+            elem_size: elem_size as usize,
+        });
+        cur = end;
+    }
+    if cur != footer_off {
+        bail!(
+            "corrupt artifact: section area is {} bytes, table accounts for {}",
+            payload_len,
+            cur - sections_start
+        );
+    }
+    Ok((table, hdr_end - meta_len as usize..hdr_end))
+}
+
+/// Decode a framed artifact from heap bytes (the read-and-decode
+/// fallback): full validation, sections copied into owned storage.
+pub fn decode<T: Artifact>(bytes: &[u8]) -> Result<T> {
+    let (table, meta_range) = validate_frame(bytes, T::KIND, true)?;
+    let view = ArtifactView {
+        meta: &bytes[meta_range],
+        table,
+        backing: Backing::Heap(bytes),
+        trusted: false,
+    };
+    T::from_view(&view)
+}
+
+/// Build an artifact over a live mapping: the arrays are handed out in
+/// place as [`ArcSlice::Mapped`] windows keeping `region` alive.
+/// `trusted` skips the O(file) checksum and the structural re-validation
+/// scans — only valid when this exact region already passed
+/// `trusted = false` validation in this process.
+pub fn from_mapped<T: Artifact>(region: &Arc<MappedRegion>, trusted: bool) -> Result<T> {
+    let bytes = region.bytes();
+    let (table, meta_range) = validate_frame(bytes, T::KIND, !trusted)?;
+    let view = ArtifactView {
+        meta: &bytes[meta_range],
+        table,
+        backing: Backing::Mapped(region),
+        trusted,
+    };
+    T::from_view(&view)
+}
+
+/// Map + validate + construct in one step. Returns the value and the
+/// region (for the caller's map cache).
+pub fn map_file<T: Artifact>(path: &Path) -> Result<(T, Arc<MappedRegion>)> {
+    let region = Arc::new(MappedRegion::map(path)?);
+    let value = from_mapped::<T>(&region, false)
+        .with_context(|| format!("mapping artifact {}", path.display()))?;
+    Ok((value, region))
+}
+
+/// Read the frame prelude of an artifact file without decoding it:
+/// `(codec_version, kind)`. Used by `cagra cache stats` to diagnose
+/// mixed-version stores.
+pub fn peek_version(path: &Path) -> Result<(u32, [u8; 4])> {
+    use std::io::Read;
+    let mut f = std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?;
+    let mut head = [0u8; 16];
+    f.read_exact(&mut head)
+        .with_context(|| format!("reading {} header", path.display()))?;
+    if head[..8] != MAGIC {
+        bail!("{}: not an artifact file", path.display());
+    }
+    let version = u32::from_le_bytes(head[8..12].try_into().unwrap());
+    let kind = [head[12], head[13], head[14], head[15]];
+    Ok((version, kind))
 }
 
 /// Run `write` against a unique temp path next to `path`, then rename
@@ -204,7 +513,9 @@ pub fn decode<T: Artifact>(bytes: &[u8]) -> Result<T> {
 /// store's orphan sweep recognizes) is unique per process *and* per
 /// call, so two threads racing to produce the same file can never
 /// interleave into one temp (the loser's rename just replaces the
-/// winner's identical bytes). The temp file is removed on failure.
+/// winner's identical bytes). Replacement is always a *new inode*, which
+/// is what keeps live mappings of the old file valid (store/mmap.rs).
+/// The temp file is removed on failure.
 pub fn write_atomic(path: &Path, write: impl FnOnce(&Path) -> Result<()>) -> Result<()> {
     static SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
     let tmp = path.with_extension(format!(
@@ -247,30 +558,31 @@ impl Artifact for Csr {
     const KIND: [u8; 4] = *b"CSR_";
     const NAME: &'static str = "csr";
 
-    fn encode_payload(&self, out: &mut Vec<u8>) {
+    fn encode_meta(&self, out: &mut Vec<u8>) {
         put_u64(out, self.num_vertices() as u64);
-        put_vec_u64(out, &self.offsets);
-        put_vec_u32(out, &self.targets);
     }
 
-    fn decode_payload(r: &mut Reader) -> Result<Csr> {
-        let n = r.u64()? as usize;
+    fn sections(&self) -> Vec<SectionData<'_>> {
+        vec![SectionData::U64(&self.offsets), SectionData::U32(&self.targets)]
+    }
+
+    fn from_view(view: &ArtifactView<'_>) -> Result<Csr> {
+        let mut m = view.meta();
+        let n = m.u64()? as usize;
+        m.done()?;
         // Vertex ids are u32; a larger n is corrupt and would overflow
         // id arithmetic downstream.
         if n > u32::MAX as usize {
             bail!("csr: num_vertices {n} exceeds the u32 id space");
         }
-        let offsets = r.vec_u64()?;
+        if view.num_sections() != 2 {
+            bail!("csr: expected 2 sections, file has {}", view.num_sections());
+        }
+        let offsets = view.section_u64(0)?;
+        let targets = view.section_u32(1)?;
         if offsets.len() != n + 1 {
             bail!("csr: offsets length {} != num_vertices+1 ({})", offsets.len(), n + 1);
         }
-        if offsets[0] != 0 {
-            bail!("csr: offsets[0] = {} != 0", offsets[0]);
-        }
-        if offsets.windows(2).any(|w| w[0] > w[1]) {
-            bail!("csr: offsets not monotone");
-        }
-        let targets = r.vec_u32()?;
         if *offsets.last().unwrap() != targets.len() as u64 {
             bail!(
                 "csr: last offset {} != edge count {}",
@@ -278,8 +590,16 @@ impl Artifact for Csr {
                 targets.len()
             );
         }
-        if targets.iter().any(|&t| t as usize >= n) {
-            bail!("csr: target id out of range (n = {n})");
+        if !view.trusted() {
+            if offsets[0] != 0 {
+                bail!("csr: offsets[0] = {} != 0", offsets[0]);
+            }
+            if offsets.windows(2).any(|w| w[0] > w[1]) {
+                bail!("csr: offsets not monotone");
+            }
+            if targets.iter().any(|&t| t as usize >= n) {
+                bail!("csr: target id out of range (n = {n})");
+            }
         }
         Ok(Csr { offsets, targets })
     }
@@ -287,31 +607,43 @@ impl Artifact for Csr {
     fn mem_bytes(&self) -> u64 {
         (self.offsets.len() * 8 + self.targets.len() * 4) as u64
     }
+
+    fn mapped_bytes(&self) -> u64 {
+        self.offsets.mapped_bytes() + self.targets.mapped_bytes()
+    }
 }
 
-impl Artifact for Vec<VertexId> {
+impl Artifact for ArcSlice<VertexId> {
     const KIND: [u8; 4] = *b"PERM";
     const NAME: &'static str = "perm";
 
-    fn encode_payload(&self, out: &mut Vec<u8>) {
-        put_vec_u32(out, self);
+    fn encode_meta(&self, _out: &mut Vec<u8>) {}
+
+    fn sections(&self) -> Vec<SectionData<'_>> {
+        vec![SectionData::U32(self)]
     }
 
-    fn decode_payload(r: &mut Reader) -> Result<Vec<VertexId>> {
-        let perm = r.vec_u32()?;
-        // A relabeling must be a permutation of 0..n: anything else would
-        // silently scramble results downstream.
-        let n = perm.len();
-        let mut seen = vec![false; n];
-        for &p in &perm {
-            let i = p as usize;
-            if i >= n {
-                bail!("perm: value {p} out of range (n = {n})");
+    fn from_view(view: &ArtifactView<'_>) -> Result<ArcSlice<VertexId>> {
+        view.meta().done()?;
+        if view.num_sections() != 1 {
+            bail!("perm: expected 1 section, file has {}", view.num_sections());
+        }
+        let perm = view.section_u32(0)?;
+        if !view.trusted() {
+            // A relabeling must be a permutation of 0..n: anything else
+            // would silently scramble results downstream.
+            let n = perm.len();
+            let mut seen = vec![false; n];
+            for &p in perm.iter() {
+                let i = p as usize;
+                if i >= n {
+                    bail!("perm: value {p} out of range (n = {n})");
+                }
+                if seen[i] {
+                    bail!("perm: duplicate value {p}");
+                }
+                seen[i] = true;
             }
-            if seen[i] {
-                bail!("perm: duplicate value {p}");
-            }
-            seen[i] = true;
         }
         Ok(perm)
     }
@@ -319,13 +651,17 @@ impl Artifact for Vec<VertexId> {
     fn mem_bytes(&self) -> u64 {
         (self.len() * 4) as u64
     }
+
+    fn mapped_bytes(&self) -> u64 {
+        ArcSlice::mapped_bytes(self)
+    }
 }
 
 impl Artifact for SegmentedCsr {
     const KIND: [u8; 4] = *b"SEG_";
     const NAME: &'static str = "seg";
 
-    fn encode_payload(&self, out: &mut Vec<u8>) {
+    fn encode_meta(&self, out: &mut Vec<u8>) {
         put_u64(out, self.num_vertices as u64);
         put_u64(out, self.seg_size as u64);
         // The merge plan is derived (MergePlan::build) rather than stored:
@@ -333,63 +669,75 @@ impl Artifact for SegmentedCsr {
         // rebuilding guarantees plan/segment consistency by construction.
         put_u64(out, self.merge_plan.block_size as u64);
         put_u64(out, self.segments.len() as u64);
-        for seg in &self.segments {
-            put_u32(out, seg.src_lo);
-            put_u32(out, seg.src_hi);
-            put_vec_u32(out, &seg.dst_ids);
-            put_vec_u64(out, &seg.offsets);
-            put_vec_u32(out, &seg.sources);
-        }
     }
 
-    fn decode_payload(r: &mut Reader) -> Result<SegmentedCsr> {
-        let n = r.u64()? as usize;
+    fn sections(&self) -> Vec<SectionData<'_>> {
+        let mut out = Vec::with_capacity(self.segments.len() * 3);
+        for seg in &self.segments {
+            out.push(SectionData::U32(&seg.dst_ids));
+            out.push(SectionData::U64(&seg.offsets));
+            out.push(SectionData::U32(&seg.sources));
+        }
+        out
+    }
+
+    fn from_view(view: &ArtifactView<'_>) -> Result<SegmentedCsr> {
+        let mut m = view.meta();
+        let n = m.u64()? as usize;
         // Bounding n to the u32 id space also keeps the (s+1)*seg_size
         // range arithmetic below overflow-free for any decoded seg_size
         // (seg_size > n collapses to one segment).
         if n > u32::MAX as usize {
             bail!("seg: num_vertices {n} exceeds the u32 id space");
         }
-        let seg_size = r.u64()? as usize;
-        let block_size = r.u64()? as usize;
+        let seg_size = m.u64()? as usize;
+        let block_size = m.u64()? as usize;
         if seg_size == 0 || block_size == 0 {
             bail!("seg: zero seg_size/block_size");
         }
-        let k = r.u64()? as usize;
+        let k = m.u64()? as usize;
+        m.done()?;
         if k != ceil_div(n.max(1), seg_size) {
             bail!("seg: {k} segments inconsistent with n={n}, seg_size={seg_size}");
         }
-        let mut segments = Vec::with_capacity(k.min(1 << 20));
+        if view.num_sections() != k * 3 {
+            bail!(
+                "seg: expected {} sections for {k} segments, file has {}",
+                k * 3,
+                view.num_sections()
+            );
+        }
+        let mut segments = Vec::with_capacity(k);
         for s in 0..k {
-            let src_lo = r.u32()?;
-            let src_hi = r.u32()?;
-            // Ranges are fully determined by (n, seg_size); stored values
-            // must agree or the file is corrupt.
-            let want_lo = (s * seg_size) as u32;
-            let want_hi = ((s + 1) * seg_size).min(n) as u32;
-            if src_lo != want_lo || src_hi != want_hi {
-                bail!("seg {s}: range [{src_lo},{src_hi}) != expected [{want_lo},{want_hi})");
-            }
-            let dst_ids = r.vec_u32()?;
-            if dst_ids.windows(2).any(|w| w[0] >= w[1]) {
-                bail!("seg {s}: dst_ids not strictly ascending");
-            }
-            if dst_ids.last().is_some_and(|&d| d as usize >= n) {
-                bail!("seg {s}: dst id out of range");
-            }
-            let offsets = r.vec_u64()?;
+            // Ranges are fully determined by (n, seg_size).
+            let src_lo = (s * seg_size) as u32;
+            let src_hi = ((s + 1) * seg_size).min(n) as u32;
+            let dst_ids = view.section_u32(s * 3)?;
+            let offsets = view.section_u64(s * 3 + 1)?;
+            let sources = view.section_u32(s * 3 + 2)?;
             if offsets.len() != dst_ids.len() + 1 {
                 bail!("seg {s}: offsets length {} != dsts+1", offsets.len());
             }
-            if offsets.first() != Some(&0) || offsets.windows(2).any(|w| w[0] > w[1]) {
-                bail!("seg {s}: offsets not monotone from 0");
-            }
-            let sources = r.vec_u32()?;
             if *offsets.last().unwrap_or(&0) != sources.len() as u64 {
                 bail!("seg {s}: last offset != source count");
             }
-            if sources.iter().any(|&u| u < src_lo || u >= src_hi) {
-                bail!("seg {s}: source outside [{src_lo},{src_hi})");
+            if !view.trusted() {
+                // Full structural validation: the merge kernel writes
+                // through dst_ids and the per-segment SpMV reads sources
+                // unchecked, so both must be proven in range before any
+                // hot loop trusts them.
+                if dst_ids.windows(2).any(|w| w[0] >= w[1]) {
+                    bail!("seg {s}: dst_ids not strictly ascending");
+                }
+                if dst_ids.last().is_some_and(|&d| d as usize >= n) {
+                    bail!("seg {s}: dst id out of range");
+                }
+                if offsets.first() != Some(&0) || offsets.windows(2).any(|w| w[0] > w[1]) {
+                    bail!("seg {s}: offsets not monotone from 0");
+                }
+                if sources.iter().any(|&u| u < src_lo || u >= src_hi) {
+                    bail!("seg {s}: source outside [{src_lo},{src_hi})");
+                }
             }
             segments.push(Segment {
                 src_lo,
@@ -416,12 +764,22 @@ impl Artifact for SegmentedCsr {
             .sum();
         segs + (self.merge_plan.starts.len() * 8) as u64
     }
+
+    fn mapped_bytes(&self) -> u64 {
+        self.segments
+            .iter()
+            .map(|s| {
+                s.dst_ids.mapped_bytes() + s.offsets.mapped_bytes() + s.sources.mapped_bytes()
+            })
+            .sum()
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::graph::generators;
+    use crate::store::mmap;
     use crate::util::prop::check;
 
     fn sample_csr(seed: u64) -> Csr {
@@ -443,9 +801,19 @@ mod tests {
 
     #[test]
     fn perm_roundtrip() {
-        let p: Vec<u32> = crate::util::rng::Rng::new(9).permutation(257);
+        let p: ArcSlice<u32> = crate::util::rng::Rng::new(9).permutation(257).into();
         roundtrip(&p);
-        roundtrip(&Vec::<u32>::new());
+        roundtrip(&ArcSlice::<u32>::default());
+    }
+
+    #[test]
+    fn sections_are_aligned() {
+        let g = sample_csr(4);
+        let bytes = encode(&g);
+        let (table, _) = validate_frame(&bytes, Csr::KIND, true).unwrap();
+        for info in &table {
+            assert_eq!(info.offset % SECTION_ALIGN, 0, "section at {}", info.offset);
+        }
     }
 
     #[test]
@@ -479,9 +847,9 @@ mod tests {
             let bytes = encode(&g);
             assert_eq!(decode::<Csr>(&bytes).unwrap(), g);
 
-            let perm = gen.permutation(n);
+            let perm: ArcSlice<u32> = gen.permutation(n).into();
             let pbytes = encode(&perm);
-            assert_eq!(decode::<Vec<u32>>(&pbytes).unwrap(), perm);
+            assert_eq!(decode::<ArcSlice<u32>>(&pbytes).unwrap(), perm);
 
             let seg_size = gen.usize(1..n + 1);
             let sg = SegmentedCsr::build_with_block(&g, seg_size, 8);
@@ -509,7 +877,8 @@ mod tests {
     #[test]
     fn bit_flips_always_err() {
         // Small graph so the exhaustive scan stays fast; every byte of the
-        // frame is covered by magic/version/kind/length/checksum checks.
+        // frame is covered by header/payload/footer checksums plus the
+        // zero-pad check.
         let g = Csr::from_edges(5, &[(0, 1), (1, 2), (3, 4), (4, 0)]);
         let bytes = encode(&g);
         for i in 0..bytes.len() {
@@ -526,27 +895,132 @@ mod tests {
 
     #[test]
     fn kind_mismatch_rejected() {
-        let p: Vec<u32> = vec![0, 1, 2];
+        let p: ArcSlice<u32> = vec![0u32, 1, 2].into();
         let bytes = encode(&p);
         assert!(decode::<Csr>(&bytes).is_err());
     }
 
     #[test]
+    fn v1_frames_are_rejected_not_misread() {
+        // A syntactically plausible v1 frame (old length-prefixed layout)
+        // must fail on the version check — the store then rebuilds.
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&MAGIC);
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(b"CSR_");
+        bytes.extend_from_slice(&0u64.to_le_bytes()); // v1 payload length
+        bytes.extend_from_slice(&checksum64(&[]).to_le_bytes());
+        let err = decode::<Csr>(&bytes).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("version"),
+            "v1 rejection must name the version: {err:#}"
+        );
+    }
+
+    #[test]
     fn corrupt_perm_rejected() {
-        // Duplicate + out-of-range values with a *valid* frame: rebuild
-        // the frame around a hand-corrupted payload.
+        // Duplicate + out-of-range values behind a *valid* frame: encode a
+        // well-formed slice, then the values themselves are the corruption.
         for values in [vec![0u32, 0, 1], vec![0u32, 5, 1]] {
-            let mut payload = Vec::new();
-            put_vec_u32(&mut payload, &values);
-            let mut bytes = Vec::new();
-            bytes.extend_from_slice(&MAGIC);
-            bytes.extend_from_slice(&CODEC_VERSION.to_le_bytes());
-            bytes.extend_from_slice(&<Vec<VertexId> as Artifact>::KIND);
-            bytes.extend_from_slice(&(payload.len() as u64).to_le_bytes());
-            bytes.extend_from_slice(&payload);
-            bytes.extend_from_slice(&checksum64(&payload).to_le_bytes());
-            assert!(decode::<Vec<u32>>(&bytes).is_err(), "{values:?} accepted");
+            let bad: ArcSlice<u32> = values.clone().into();
+            let bytes = encode(&bad);
+            assert!(decode::<ArcSlice<u32>>(&bytes).is_err(), "{values:?} accepted");
         }
+    }
+
+    #[test]
+    fn malformed_section_table_rejected() {
+        // Corrupt the table in ways the implicit-offset design must catch:
+        // a bad element size and an inflated element count (both with the
+        // header checksum recomputed so only the table check can object).
+        let g = Csr::from_edges(3, &[(0, 1), (1, 2)]);
+        let base = encode(&g);
+        let hdr_end = HEADER_FIXED + 2 * TABLE_ENTRY + 8; // 2 sections + n meta
+        let refit = |mutate: &dyn Fn(&mut Vec<u8>)| {
+            let mut b = base.clone();
+            mutate(&mut b);
+            let crc = checksum64(&b[..hdr_end]);
+            b[hdr_end..hdr_end + 8].copy_from_slice(&crc.to_le_bytes());
+            let flen = b.len();
+            b[flen - 16..flen - 8].copy_from_slice(&crc.to_le_bytes());
+            let fcrc = checksum64(&b[flen - 24..flen - 8]);
+            b[flen - 8..].copy_from_slice(&fcrc.to_le_bytes());
+            b
+        };
+        // elem_size 3 on section 0.
+        let bad = refit(&|b: &mut Vec<u8>| {
+            b[HEADER_FIXED + 8..HEADER_FIXED + 12].copy_from_slice(&3u32.to_le_bytes());
+        });
+        assert!(decode::<Csr>(&bad).is_err(), "elem_size 3 accepted");
+        // Element count inflated past the section area.
+        let bad = refit(&|b: &mut Vec<u8>| {
+            b[HEADER_FIXED..HEADER_FIXED + 8].copy_from_slice(&u64::MAX.to_le_bytes());
+        });
+        assert!(decode::<Csr>(&bad).is_err(), "oversized section accepted");
+    }
+
+    #[test]
+    fn mapped_equals_decoded() {
+        let dir = std::env::temp_dir().join(format!("cagra-codec-map-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let g = sample_csr(21);
+        let sg = SegmentedCsr::build_with_block(&g, 41, 16);
+        let perm: ArcSlice<u32> = crate::util::rng::Rng::new(3).permutation(101).into();
+        let pg = dir.join("g.art");
+        let ps = dir.join("s.art");
+        let pp = dir.join("p.art");
+        write_file(&pg, &g).unwrap();
+        write_file(&ps, &sg).unwrap();
+        write_file(&pp, &perm).unwrap();
+        if mmap::mmap_supported() {
+            let (mg, _r) = map_file::<Csr>(&pg).unwrap();
+            assert!(mg.offsets.is_mapped() && mg.targets.is_mapped());
+            assert_eq!(mg, g, "mapped CSR == built CSR by contents");
+            assert_eq!(Artifact::mapped_bytes(&mg), mg.mem_bytes());
+            let (ms, _r) = map_file::<SegmentedCsr>(&ps).unwrap();
+            assert_eq!(ms.merge_plan.starts, sg.merge_plan.starts);
+            for (a, b) in ms.segments.iter().zip(&sg.segments) {
+                assert_eq!(a.dst_ids, b.dst_ids);
+                assert_eq!(a.offsets, b.offsets);
+                assert_eq!(a.sources, b.sources);
+                assert!(a.dst_ids.is_mapped());
+            }
+            let (mp, region) = map_file::<ArcSlice<u32>>(&pp).unwrap();
+            assert_eq!(mp, perm);
+            // Trusted re-view over the validated region matches too.
+            let again = from_mapped::<ArcSlice<u32>>(&region, true).unwrap();
+            assert_eq!(again, perm);
+        } else {
+            assert!(map_file::<Csr>(&pg).is_err(), "stub platform must fail cleanly");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn mapped_corruption_always_errs_at_map_time() {
+        if !mmap::mmap_supported() {
+            return;
+        }
+        let dir = std::env::temp_dir().join(format!("cagra-codec-mapbad-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let g = Csr::from_edges(5, &[(0, 1), (1, 2), (3, 4), (4, 0)]);
+        let bytes = encode(&g);
+        // Truncations (stride keeps the test fast; always include the
+        // tail, where the footer commit marker lives).
+        for cut in (0..bytes.len()).step_by(7).chain([bytes.len() - 1]) {
+            let p = dir.join("t.art");
+            std::fs::write(&p, &bytes[..cut]).unwrap();
+            assert!(map_file::<Csr>(&p).is_err(), "mapped truncation at {cut} accepted");
+        }
+        // Bit flips over every byte.
+        for i in 0..bytes.len() {
+            let mut bad = bytes.clone();
+            bad[i] ^= 0x10;
+            let p = dir.join("b.art");
+            std::fs::write(&p, &bad).unwrap();
+            assert!(map_file::<Csr>(&p).is_err(), "mapped flip at byte {i} accepted");
+        }
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]
@@ -560,6 +1034,8 @@ mod tests {
         assert_eq!(back, g);
         assert_eq!(written, read);
         assert!(read_file::<Csr>(&dir.join("absent.art")).is_err());
+        let (version, kind) = peek_version(&path).unwrap();
+        assert_eq!((version, kind), (CODEC_VERSION, Csr::KIND));
         std::fs::remove_dir_all(&dir).ok();
     }
 }

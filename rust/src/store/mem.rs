@@ -46,12 +46,20 @@ pub struct MemStats {
     pub expirations: u64,
     pub entries: u64,
     pub resident_bytes: u64,
+    /// Bytes of `resident_bytes` whose arrays are mmap-backed rather than
+    /// private heap: one physical copy of the file pages serves every
+    /// worker holding the entry, so a serve daemon's true private
+    /// footprint is `resident_bytes - mapped_bytes` (plus one shared copy
+    /// of the mapped pages across the whole pool).
+    pub mapped_bytes: u64,
     pub budget_bytes: u64,
 }
 
 struct Entry {
     value: Arc<dyn Any + Send + Sync>,
     bytes: u64,
+    /// Bytes of `bytes` that are mmap-backed (see [`MemStats::mapped_bytes`]).
+    mapped: u64,
     /// Monotonic access tick for LRU ordering.
     last_used: u64,
     inserted: Instant,
@@ -62,6 +70,7 @@ struct Inner {
     map: HashMap<String, Entry>,
     tick: u64,
     resident_bytes: u64,
+    mapped_bytes: u64,
 }
 
 /// Byte-budget LRU cache of decoded artifacts (see module docs).
@@ -129,7 +138,23 @@ impl MemStore {
         T: Send + Sync + 'static,
         F: FnOnce() -> (T, u64),
     {
-        match self.try_get_or_insert(key, || Ok(build())) {
+        self.get_or_insert_full(key, || {
+            let (v, bytes) = build();
+            (v, bytes, 0)
+        })
+    }
+
+    /// [`MemStore::get_or_insert`] for builders that also know how much of
+    /// the value is mmap-backed: `build` returns
+    /// `(value, total_bytes, mapped_bytes)`. The mapped figure feeds
+    /// [`MemStats::mapped_bytes`] — how much of the resident set is one
+    /// shared physical copy rather than per-process heap.
+    pub fn get_or_insert_full<T, F>(&self, key: &str, build: F) -> Arc<T>
+    where
+        T: Send + Sync + 'static,
+        F: FnOnce() -> (T, u64, u64),
+    {
+        match self.try_get_or_insert_full(key, || Ok(build())) {
             Ok(v) => v,
             Err(e) => unreachable!("infallible build failed: {e}"),
         }
@@ -141,6 +166,18 @@ impl MemStore {
     where
         T: Send + Sync + 'static,
         F: FnOnce() -> anyhow::Result<(T, u64)>,
+    {
+        self.try_get_or_insert_full(key, || {
+            let (v, bytes) = build()?;
+            Ok((v, bytes, 0))
+        })
+    }
+
+    /// Fallible variant of [`MemStore::get_or_insert_full`].
+    pub fn try_get_or_insert_full<T, F>(&self, key: &str, build: F) -> anyhow::Result<Arc<T>>
+    where
+        T: Send + Sync + 'static,
+        F: FnOnce() -> anyhow::Result<(T, u64, u64)>,
     {
         let t0 = recorder::timestamp();
         if let Some(v) = self.lookup::<T>(&mut relock(&self.inner), key) {
@@ -159,18 +196,26 @@ impl MemStore {
         }
         // Build OUTSIDE the cache lock (only the key lock is held):
         // distinct keys decode/build concurrently.
-        let (value, bytes) = build()?;
+        let (value, bytes, mapped) = build()?;
         let value: Arc<T> = Arc::new(value);
         let mut inner = relock(&self.inner);
         inner.tick += 1;
         let tick = inner.tick;
         if let Some(old) = inner.map.insert(
             key.to_string(),
-            Entry { value: value.clone(), bytes, last_used: tick, inserted: Instant::now() },
+            Entry {
+                value: value.clone(),
+                bytes,
+                mapped,
+                last_used: tick,
+                inserted: Instant::now(),
+            },
         ) {
             inner.resident_bytes -= old.bytes;
+            inner.mapped_bytes -= old.mapped;
         }
         inner.resident_bytes += bytes;
+        inner.mapped_bytes += mapped;
         self.evict_to_budget(&mut inner, key);
         drop(inner);
         self.misses.fetch_add(1, Ordering::Relaxed);
@@ -187,6 +232,7 @@ impl MemStore {
         for k in &doomed {
             if let Some(e) = inner.map.remove(k) {
                 inner.resident_bytes -= e.bytes;
+                inner.mapped_bytes -= e.mapped;
             }
         }
         doomed.len()
@@ -201,6 +247,7 @@ impl MemStore {
             expirations: self.expirations.load(Ordering::Relaxed),
             entries: inner.map.len() as u64,
             resident_bytes: inner.resident_bytes,
+            mapped_bytes: inner.mapped_bytes,
             budget_bytes: self.budget_bytes,
         }
     }
@@ -216,6 +263,7 @@ impl MemStore {
         if expired {
             let e = inner.map.remove(key).unwrap();
             inner.resident_bytes -= e.bytes;
+            inner.mapped_bytes -= e.mapped;
             self.expirations.fetch_add(1, Ordering::Relaxed);
             return None;
         }
@@ -230,6 +278,7 @@ impl MemStore {
             Err(_) => {
                 let e = inner.map.remove(key).unwrap();
                 inner.resident_bytes -= e.bytes;
+                inner.mapped_bytes -= e.mapped;
                 None
             }
         }
@@ -252,6 +301,7 @@ impl MemStore {
                 Some(k) => {
                     let e = inner.map.remove(&k).unwrap();
                     inner.resident_bytes -= e.bytes;
+                    inner.mapped_bytes -= e.mapped;
                     self.evictions.fetch_add(1, Ordering::Relaxed);
                 }
                 None => break, // only `keep` remains; let it stay resident
@@ -358,6 +408,24 @@ mod tests {
         for v in &vals[1..] {
             assert!(Arc::ptr_eq(&vals[0], v));
         }
+    }
+
+    #[test]
+    fn mapped_bytes_tracked_through_insert_and_removal() {
+        let m = MemStore::new(0);
+        m.get_or_insert_full("seg", || (vec![0u8; 64], 64, 48));
+        m.get_or_insert_full("perm", || (vec![0u8; 16], 16, 16));
+        m.get_or_insert("decoded", || (vec![0u8; 8], 8));
+        let s = m.stats();
+        assert_eq!((s.resident_bytes, s.mapped_bytes), (88, 64));
+        // Re-insert under the same key replaces the old accounting.
+        m.invalidate_prefix("seg");
+        m.get_or_insert_full("seg", || (vec![0u8; 64], 64, 0));
+        let s = m.stats();
+        assert_eq!((s.resident_bytes, s.mapped_bytes), (88, 16));
+        m.invalidate_prefix("");
+        let s = m.stats();
+        assert_eq!((s.resident_bytes, s.mapped_bytes), (0, 0));
     }
 
     #[test]

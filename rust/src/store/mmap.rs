@@ -1,0 +1,234 @@
+//! Read-only file mappings via raw `mmap`/`munmap` syscalls — the
+//! zero-copy substrate for warm artifact loads (DESIGN.md §6).
+//!
+//! Dependency-free in the style of `obs/pmu.rs`'s `perf_event_open`
+//! reader: the syscalls go through the C runtime's variadic `syscall`
+//! entry point with arch-gated syscall numbers, so no `libc` crate is
+//! needed. Platforms without the real implementation (non-Linux,
+//! big-endian, or the `mmap` feature off) get a stub whose `map` always
+//! fails cleanly — callers fall back to read-and-decode.
+//!
+//! Safety model: mappings are `PROT_READ` + `MAP_PRIVATE`, so the pages
+//! are immutable for the mapping's lifetime. The store only ever
+//! *replaces* artifact files via write-to-temp + atomic rename (a new
+//! inode) and never truncates or rewrites in place, so a live mapping's
+//! inode stays intact even after the path is evicted or replaced —
+//! no SIGBUS window. A [`MappedRegion`] is therefore a plain immutable
+//! byte slab that is `Send + Sync` and unmapped on the last drop.
+
+use anyhow::Result;
+
+#[cfg(all(feature = "mmap", target_os = "linux", target_endian = "little"))]
+mod imp {
+    use anyhow::{bail, Context, Result};
+    use std::ffi::c_void;
+    use std::os::raw::{c_int, c_long};
+    use std::os::unix::io::AsRawFd;
+    use std::path::Path;
+    use std::ptr::NonNull;
+
+    // Raw syscall numbers for the mmap pair, per-arch like pmu.rs.
+    #[cfg(target_arch = "x86_64")]
+    const SYS_MMAP: c_long = 9;
+    #[cfg(target_arch = "x86_64")]
+    const SYS_MUNMAP: c_long = 11;
+    #[cfg(target_arch = "aarch64")]
+    const SYS_MMAP: c_long = 222;
+    #[cfg(target_arch = "aarch64")]
+    const SYS_MUNMAP: c_long = 215;
+
+    const PROT_READ: c_long = 0x1;
+    const MAP_PRIVATE: c_long = 0x02;
+
+    extern "C" {
+        // Variadic syscall entry from the C runtime (no libc crate).
+        fn syscall(num: c_long, ...) -> c_long;
+    }
+
+    /// A whole-file read-only private mapping, unmapped on drop.
+    pub struct MappedRegion {
+        ptr: NonNull<u8>,
+        len: usize,
+    }
+
+    // Safety: PROT_READ + MAP_PRIVATE pages never change under us (see
+    // module docs for the no-truncate store contract), so shared
+    // immutable access from any thread is sound.
+    unsafe impl Send for MappedRegion {}
+    unsafe impl Sync for MappedRegion {}
+
+    impl MappedRegion {
+        /// Map `path` read-only in full. Fails (never panics) on empty
+        /// files, unmappable filesystems, or kernel refusal.
+        pub fn map(path: &Path) -> Result<MappedRegion> {
+            let file = std::fs::File::open(path)
+                .with_context(|| format!("opening {} for mapping", path.display()))?;
+            let len = file
+                .metadata()
+                .with_context(|| format!("stat {}", path.display()))?
+                .len();
+            if len == 0 {
+                bail!("{}: empty file cannot be mapped", path.display());
+            }
+            let len: usize = len
+                .try_into()
+                .map_err(|_| anyhow::anyhow!("{}: file too large to map", path.display()))?;
+            let fd: c_int = file.as_raw_fd();
+            // Safety: a fresh anonymous address (addr = null), a length we
+            // just measured, and an fd we own for the duration of the call.
+            let addr = unsafe {
+                syscall(
+                    SYS_MMAP,
+                    std::ptr::null_mut::<c_void>(),
+                    len as c_long,
+                    PROT_READ,
+                    MAP_PRIVATE,
+                    fd as c_long,
+                    0 as c_long,
+                )
+            };
+            // The C runtime's syscall wrapper reports failure as -1 (a
+            // raw-syscall path would return -errno; cover both).
+            if (-4095..=-1).contains(&addr) {
+                bail!("mmap({}) failed", path.display());
+            }
+            let ptr = NonNull::new(addr as *mut u8)
+                .ok_or_else(|| anyhow::anyhow!("mmap returned null"))?;
+            Ok(MappedRegion { ptr, len })
+        }
+
+        pub fn len(&self) -> usize {
+            self.len
+        }
+
+        pub fn is_empty(&self) -> bool {
+            self.len == 0
+        }
+
+        pub fn as_ptr(&self) -> *const u8 {
+            self.ptr.as_ptr()
+        }
+
+        /// The mapped file as an immutable byte slice.
+        pub fn bytes(&self) -> &[u8] {
+            // Safety: ptr/len describe a live PROT_READ mapping.
+            unsafe { std::slice::from_raw_parts(self.ptr.as_ptr(), self.len) }
+        }
+    }
+
+    impl Drop for MappedRegion {
+        fn drop(&mut self) {
+            // Safety: exactly the region mmap returned; errors on unmap
+            // are unrecoverable and ignored (address space leak at worst).
+            unsafe {
+                syscall(SYS_MUNMAP, self.ptr.as_ptr() as c_long, self.len as c_long);
+            }
+        }
+    }
+
+    /// Real implementation present on this platform.
+    pub const SUPPORTED: bool = true;
+}
+
+#[cfg(not(all(feature = "mmap", target_os = "linux", target_endian = "little")))]
+mod imp {
+    use anyhow::{bail, Result};
+    use std::path::Path;
+
+    /// Stub: mapping is unavailable; every `map` fails cleanly and the
+    /// store falls back to read-and-decode.
+    pub struct MappedRegion {
+        never: std::convert::Infallible,
+    }
+
+    impl MappedRegion {
+        pub fn map(path: &Path) -> Result<MappedRegion> {
+            bail!(
+                "mmap unavailable on this platform ({}): falling back to decode",
+                path.display()
+            );
+        }
+
+        pub fn len(&self) -> usize {
+            match self.never {}
+        }
+
+        pub fn is_empty(&self) -> bool {
+            match self.never {}
+        }
+
+        pub fn as_ptr(&self) -> *const u8 {
+            match self.never {}
+        }
+
+        pub fn bytes(&self) -> &[u8] {
+            match self.never {}
+        }
+    }
+
+    pub const SUPPORTED: bool = false;
+}
+
+pub use imp::{MappedRegion, SUPPORTED};
+
+/// Whether this build can ever serve mapped artifacts.
+pub fn mmap_supported() -> bool {
+    SUPPORTED
+}
+
+impl std::fmt::Debug for MappedRegion {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("MappedRegion").field("len", &self.len()).finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maps_whole_file_or_fails_cleanly() {
+        let dir = std::env::temp_dir().join(format!("cagra-mmap-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("blob.bin");
+        let data: Vec<u8> = (0..8192u32).map(|i| (i % 251) as u8).collect();
+        std::fs::write(&path, &data).unwrap();
+        match MappedRegion::map(&path) {
+            Ok(region) => {
+                assert!(mmap_supported());
+                assert_eq!(region.len(), data.len());
+                assert_eq!(region.bytes(), &data[..]);
+                // Shared across threads: the region is Send + Sync.
+                let shared = std::sync::Arc::new(region);
+                let r2 = shared.clone();
+                let sum: u64 = std::thread::spawn(move || {
+                    r2.bytes().iter().map(|&b| b as u64).sum()
+                })
+                .join()
+                .unwrap();
+                assert_eq!(sum, data.iter().map(|&b| b as u64).sum::<u64>());
+            }
+            Err(_) => assert!(!mmap_supported(), "supported platform must map a plain file"),
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn empty_file_errs() {
+        if !mmap_supported() {
+            return;
+        }
+        let dir = std::env::temp_dir().join(format!("cagra-mmap-empty-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("empty.bin");
+        std::fs::write(&path, b"").unwrap();
+        assert!(MappedRegion::map(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_file_errs() {
+        let path = std::path::Path::new("/nonexistent/cagra-definitely-missing.art");
+        assert!(MappedRegion::map(path).is_err());
+    }
+}

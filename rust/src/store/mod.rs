@@ -26,43 +26,68 @@
 //! `SystemConfig::store_enabled` is set and the app's variant declares
 //! cacheable preprocessing ([`crate::apps::GraphApp::uses_store`]), then
 //! threads a [`StoreCtx`] through [`crate::apps::GraphApp::prepare`]
-//! into the apps' `Prepared::new_cached` constructors (PageRank, CF, CC's
-//! symmetrized structures, and the PR/BC/BFS/SSSP reordering
-//! permutation); `cagra batch` shares ONE store instance across a whole
-//! job list, with per-job eviction-exemption scopes
-//! ([`ArtifactStore::begin_scope`]); dataset loading reuses the [`codec`]
-//! layer to persist finished CSRs (`graph/datasets.rs`), so warm loads
-//! decode instead of rebuilding; `cagra cache stats|clear` exposes the
-//! store on the CLI.
+//! into the apps' unified `Prepared::prepare(&StoreCtx)` constructors
+//! (PageRank, CF, CC's symmetrized structures, and the PR/BC/BFS/SSSP
+//! reordering permutation) — a disabled context *is* the no-store path;
+//! `cagra batch` shares ONE store instance across a whole job list, with
+//! per-job eviction-exemption scopes ([`ArtifactStore::begin_scope`]);
+//! dataset loading reuses the [`codec`] layer to persist finished CSRs
+//! (`graph/datasets.rs`), so warm loads map (or decode) instead of
+//! rebuilding; `cagra cache stats|clear` exposes the store on the CLI.
 
 pub mod artifact_store;
 pub mod codec;
 pub mod fingerprint;
 pub mod mem;
+pub mod mmap;
+pub mod slice;
 
-pub use artifact_store::{ArtifactStore, ExemptionScope, ScopeId, StoreKey, StoreStats};
+pub use artifact_store::{
+    ArtifactInfo, ArtifactStore, ExemptionScope, ScopeId, StoreKey, StoreStats,
+};
 pub use codec::{Artifact, CODEC_VERSION};
 pub use fingerprint::{fingerprint_csr, fingerprint_dataset};
 pub use mem::{MemStats, MemStore};
+pub use mmap::{mmap_supported, MappedRegion};
+pub use slice::{ArcSlice, Pod};
 
-/// A borrowed store plus the fingerprint of the job's dataset — what the
-/// preprocessing sites need to form keys — and the job's
-/// eviction-exemption scope (writes made through this context cannot be
-/// evicted until the job's [`ExemptionScope`] is dropped). `Copy` so it
-/// threads through constructors as a plain optional argument.
+/// The attached storage stack of an enabled [`StoreCtx`]: disk store,
+/// eviction-exemption scope, and optionally the in-memory layer.
+#[derive(Debug, Clone, Copy)]
+struct Backend<'a> {
+    store: &'a ArtifactStore,
+    scope: ScopeId,
+    mem: Option<&'a MemStore>,
+}
+
+/// The one storage surface every preparation site builds against —
+/// enabled (a borrowed store + the dataset fingerprint that keys
+/// artifacts + the job's exemption scope) or *disabled*, in which case
+/// `get_or_build*` simply runs the builder. Apps therefore have a single
+/// `prepare` code path; "no store" is not a second constructor but a
+/// [`StoreCtx::disabled`] value. `Copy` so it threads through
+/// constructors as a plain borrowed argument.
 ///
-/// `mem` optionally stacks the in-memory layer ([`MemStore`]) above the
-/// disk store: [`StoreCtx::get_or_build_arc`] probes memory first, so a
+/// `with_mem` stacks the in-memory layer ([`MemStore`]) above the disk
+/// store: [`StoreCtx::get_or_build_arc`] probes memory first, so a
 /// resident process (`cagra serve`) pays zero decode on a warm request.
 #[derive(Debug, Clone, Copy)]
 pub struct StoreCtx<'a> {
-    pub store: &'a ArtifactStore,
+    backend: Option<Backend<'a>>,
+    /// Fingerprint of the job's dataset (0 when disabled — never used to
+    /// form a key in that case, since the builders run unconditionally).
     pub fingerprint: u64,
-    pub scope: ScopeId,
-    pub mem: Option<&'a MemStore>,
 }
 
 impl<'a> StoreCtx<'a> {
+    /// The no-store path: every `get_or_build*` runs its builder.
+    pub fn disabled() -> StoreCtx<'static> {
+        StoreCtx {
+            backend: None,
+            fingerprint: 0,
+        }
+    }
+
     /// Context under the instance-lifetime scope (stores that live
     /// exactly one job: tests, benches, one-shot tools).
     pub fn new(store: &'a ArtifactStore, fingerprint: u64) -> StoreCtx<'a> {
@@ -74,42 +99,68 @@ impl<'a> StoreCtx<'a> {
     /// eviction scoping through shared, long-lived stores.
     pub fn scoped(store: &'a ArtifactStore, fingerprint: u64, scope: ScopeId) -> StoreCtx<'a> {
         StoreCtx {
-            store,
+            backend: Some(Backend {
+                store,
+                scope,
+                mem: None,
+            }),
             fingerprint,
-            scope,
-            mem: None,
         }
     }
 
-    /// Stack the in-memory layer above the disk store for this context.
+    /// Stack the in-memory layer above the disk store for this context
+    /// (no-op on a disabled context).
     pub fn with_mem(mut self, mem: &'a MemStore) -> StoreCtx<'a> {
-        self.mem = Some(mem);
+        if let Some(b) = &mut self.backend {
+            b.mem = Some(mem);
+        }
         self
+    }
+
+    /// Whether a store is attached.
+    pub fn is_enabled(&self) -> bool {
+        self.backend.is_some()
+    }
+
+    /// The attached disk store, if any.
+    pub fn store(&self) -> Option<&'a ArtifactStore> {
+        self.backend.map(|b| b.store)
+    }
+
+    /// The attached in-memory layer, if any.
+    pub fn mem(&self) -> Option<&'a MemStore> {
+        self.backend.and_then(|b| b.mem)
     }
 
     /// [`ArtifactStore::get_or_build_scoped`] with a by-value key, so call
     /// sites that just built the key from `self.fingerprint` stay
-    /// one-liners.
+    /// one-liners. Disabled contexts run `build` directly.
     pub fn get_or_build<T: Artifact>(&self, key: StoreKey, build: impl FnOnce() -> T) -> T {
-        self.store.get_or_build_scoped(&key, self.scope, build)
+        match &self.backend {
+            Some(b) => b.store.get_or_build_scoped(&key, b.scope, build),
+            None => build(),
+        }
     }
 
-    /// Like [`StoreCtx::get_or_build`], but the decoded value is pinned
+    /// Like [`StoreCtx::get_or_build`], but the loaded value is pinned
     /// behind an [`std::sync::Arc`]. With a [`MemStore`] attached, the
     /// memory layer is probed first (keyed by the disk filename, which
     /// already embeds fingerprint, label, and codec version); a hit skips
-    /// disk and decode entirely. Without one this is `Arc::new(disk)`.
+    /// disk entirely. Disabled contexts return `Arc::new(build())`.
     pub fn get_or_build_arc<T>(&self, key: StoreKey, build: impl FnOnce() -> T) -> std::sync::Arc<T>
     where
         T: Artifact + Send + Sync + 'static,
     {
-        match self.mem {
-            Some(m) => m.get_or_insert(&key.filename::<T>(), || {
-                let v = self.store.get_or_build_scoped(&key, self.scope, build);
-                let bytes = v.mem_bytes();
-                (v, bytes)
+        let Some(b) = &self.backend else {
+            return std::sync::Arc::new(build());
+        };
+        match b.mem {
+            Some(m) => m.get_or_insert_full(&key.filename::<T>(), || {
+                let v = b.store.get_or_build_scoped(&key, b.scope, build);
+                let (bytes, mapped) = (v.mem_bytes(), v.mapped_bytes());
+                (v, bytes, mapped)
             }),
-            None => std::sync::Arc::new(self.store.get_or_build_scoped(&key, self.scope, build)),
+            None => std::sync::Arc::new(b.store.get_or_build_scoped(&key, b.scope, build)),
         }
     }
 }

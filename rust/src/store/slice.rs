@@ -1,0 +1,267 @@
+//! [`ArcSlice`] — the unified storage slice behind every persistent
+//! graph array (DESIGN.md §6).
+//!
+//! `Csr`, `SegmentedCsr`, and cached permutations no longer own
+//! `Vec<u64>`/`Vec<u32>` directly; they hold `ArcSlice<T>`, which is
+//! either a heap array (`Owned`) or a typed window into an mmap'd v2
+//! artifact (`Mapped`). Both deref to `&[T]`, so every hot loop reads
+//! through the same slice code it always did. A `Mapped` slice keeps its
+//! [`MappedRegion`] alive by refcount: the mapping is unmapped when the
+//! last slice over it drops.
+//!
+//! Ownership rules:
+//! - Clones are O(1) refcount bumps for both variants — N serve workers
+//!   holding the same graph share one physical copy.
+//! - Equality is by *contents* (`PartialEq` via `&[T]`), exactly the
+//!   semantics the old `Vec` fields had; mapped-vs-owned provenance never
+//!   affects comparisons or results.
+//! - The backing bytes are immutable. Anything that needs to mutate
+//!   (e.g. `Csr::sorted`) copies out with [`ArcSlice::to_vec`] and
+//!   rebuilds an `Owned` slice.
+
+use super::mmap::MappedRegion;
+use std::ops::Deref;
+use std::sync::Arc;
+
+/// Marker for element types whose every bit pattern is valid and whose
+/// on-disk little-endian layout equals the in-memory layout on the
+/// platforms where mapping is enabled (mmap.rs gates on little-endian).
+///
+/// # Safety
+/// Implementors must be plain-old-data: `Copy`, no padding, no niches,
+/// any byte pattern valid.
+pub unsafe trait Pod: Copy + Send + Sync + 'static {}
+
+unsafe impl Pod for u8 {}
+unsafe impl Pod for u32 {}
+unsafe impl Pod for u64 {}
+
+enum Repr<T: Pod> {
+    /// Heap-backed. `Arc<Vec<T>>` (not a bare `Vec`) so clones stay O(1)
+    /// refcount bumps — construction-time code never mutates through an
+    /// `ArcSlice`, so the shared immutability is unobservable.
+    Owned(Arc<Vec<T>>),
+    /// A typed window into a mapped v2 artifact: `len` elements starting
+    /// `byte_offset` bytes into the region. The codec validates at map
+    /// time that the window is in-bounds and aligned for `T` (sections
+    /// start on 64-byte boundaries).
+    Mapped {
+        region: Arc<MappedRegion>,
+        byte_offset: usize,
+        len: usize,
+    },
+}
+
+/// A refcounted immutable array: owned heap storage or a window into a
+/// mapped artifact file. Derefs to `&[T]`.
+pub struct ArcSlice<T: Pod>(Repr<T>);
+
+impl<T: Pod> ArcSlice<T> {
+    /// Wrap an owned vector (the no-store / cold-build path).
+    pub fn from_vec(v: Vec<T>) -> ArcSlice<T> {
+        ArcSlice(Repr::Owned(Arc::new(v)))
+    }
+
+    /// A typed window into `region`.
+    ///
+    /// # Safety contract (checked, returns `None` on violation)
+    /// `byte_offset` must be aligned for `T` and `byte_offset + len*size`
+    /// must lie within the region. The codec upholds the stronger v2
+    /// contract (64-byte-aligned sections) before calling this.
+    pub fn from_region(
+        region: Arc<MappedRegion>,
+        byte_offset: usize,
+        len: usize,
+    ) -> Option<ArcSlice<T>> {
+        let size = std::mem::size_of::<T>();
+        let bytes = len.checked_mul(size)?;
+        let end = byte_offset.checked_add(bytes)?;
+        if end > region.len() || byte_offset % std::mem::align_of::<T>() != 0 {
+            return None;
+        }
+        Some(ArcSlice(Repr::Mapped {
+            region,
+            byte_offset,
+            len,
+        }))
+    }
+
+    pub fn as_slice(&self) -> &[T] {
+        match &self.0 {
+            Repr::Owned(v) => v.as_slice(),
+            Repr::Mapped {
+                region,
+                byte_offset,
+                len,
+            } => {
+                // Safety: from_region checked bounds + alignment against
+                // the immutable PROT_READ region, which `region` keeps
+                // alive; T is Pod so any bytes are a valid value.
+                unsafe {
+                    std::slice::from_raw_parts(
+                        region.as_ptr().add(*byte_offset) as *const T,
+                        *len,
+                    )
+                }
+            }
+        }
+    }
+
+    /// True when backed by a mapped artifact file (zero-copy warm load).
+    pub fn is_mapped(&self) -> bool {
+        matches!(self.0, Repr::Mapped { .. })
+    }
+
+    /// Bytes of *heap* this slice pins (0 for mapped storage — the pages
+    /// are file-backed and shared).
+    pub fn heap_bytes(&self) -> usize {
+        match &self.0 {
+            Repr::Owned(v) => v.capacity() * std::mem::size_of::<T>(),
+            Repr::Mapped { .. } => 0,
+        }
+    }
+
+    /// Bytes of *mapped* file pages this slice covers (0 for owned
+    /// storage) — the complement of [`ArcSlice::heap_bytes`], reported as
+    /// the serve-side shared-resident stat.
+    pub fn mapped_bytes(&self) -> u64 {
+        match &self.0 {
+            Repr::Owned(_) => 0,
+            Repr::Mapped { len, .. } => (len * std::mem::size_of::<T>()) as u64,
+        }
+    }
+
+    /// Copy the contents out into a fresh owned vector.
+    pub fn to_vec(&self) -> Vec<T> {
+        self.as_slice().to_vec()
+    }
+}
+
+impl<T: Pod> From<Vec<T>> for ArcSlice<T> {
+    fn from(v: Vec<T>) -> ArcSlice<T> {
+        ArcSlice::from_vec(v)
+    }
+}
+
+impl<T: Pod> Deref for ArcSlice<T> {
+    type Target = [T];
+
+    fn deref(&self) -> &[T] {
+        self.as_slice()
+    }
+}
+
+impl<T: Pod> Clone for ArcSlice<T> {
+    fn clone(&self) -> ArcSlice<T> {
+        ArcSlice(match &self.0 {
+            Repr::Owned(v) => Repr::Owned(v.clone()),
+            Repr::Mapped {
+                region,
+                byte_offset,
+                len,
+            } => Repr::Mapped {
+                region: region.clone(),
+                byte_offset: *byte_offset,
+                len: *len,
+            },
+        })
+    }
+}
+
+impl<T: Pod> Default for ArcSlice<T> {
+    fn default() -> ArcSlice<T> {
+        ArcSlice::from_vec(Vec::new())
+    }
+}
+
+impl<T: Pod + PartialEq> PartialEq for ArcSlice<T> {
+    fn eq(&self, other: &ArcSlice<T>) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl<T: Pod + Eq> Eq for ArcSlice<T> {}
+
+impl<T: Pod + PartialEq> PartialEq<Vec<T>> for ArcSlice<T> {
+    fn eq(&self, other: &Vec<T>) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl<T: Pod + PartialEq, const N: usize> PartialEq<[T; N]> for ArcSlice<T> {
+    fn eq(&self, other: &[T; N]) -> bool {
+        self.as_slice() == other
+    }
+}
+
+impl<T: Pod + std::fmt::Debug> std::fmt::Debug for ArcSlice<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_list().entries(self.as_slice()).finish()
+    }
+}
+
+impl<T: Pod + std::hash::Hash> std::hash::Hash for ArcSlice<T> {
+    fn hash<H: std::hash::Hasher>(&self, state: &mut H) {
+        self.as_slice().hash(state);
+    }
+}
+
+impl<'a, T: Pod> IntoIterator for &'a ArcSlice<T> {
+    type Item = &'a T;
+    type IntoIter = std::slice::Iter<'a, T>;
+
+    fn into_iter(self) -> Self::IntoIter {
+        self.as_slice().iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn owned_roundtrip_and_equality() {
+        let a: ArcSlice<u32> = vec![1, 2, 3].into();
+        let b: ArcSlice<u32> = ArcSlice::from_vec(vec![1, 2, 3]);
+        assert_eq!(a, b);
+        assert_eq!(&a[..], &[1, 2, 3]);
+        assert_eq!(a.len(), 3);
+        assert!(!a.is_mapped());
+        assert!(a.heap_bytes() >= 12);
+        let c = a.clone();
+        assert_eq!(c, a);
+        let d: ArcSlice<u32> = ArcSlice::default();
+        assert!(d.is_empty());
+        assert_ne!(d, a);
+    }
+
+    #[test]
+    fn mapped_window_bounds_and_alignment_checked() {
+        let dir = std::env::temp_dir().join(format!("cagra-slice-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("win.bin");
+        let mut bytes = Vec::new();
+        for v in [7u32, 11, 13, 17] {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        std::fs::write(&path, &bytes).unwrap();
+        if let Ok(region) = MappedRegion::map(&path) {
+            let region = Arc::new(region);
+            let s = ArcSlice::<u32>::from_region(region.clone(), 0, 4).unwrap();
+            assert!(s.is_mapped());
+            assert_eq!(s.heap_bytes(), 0);
+            assert_eq!(&s[..], &[7, 11, 13, 17]);
+            let owned: ArcSlice<u32> = vec![7, 11, 13, 17].into();
+            assert_eq!(s, owned, "mapped == owned by contents");
+            // Out of bounds and misaligned windows are rejected.
+            assert!(ArcSlice::<u32>::from_region(region.clone(), 0, 5).is_none());
+            assert!(ArcSlice::<u32>::from_region(region.clone(), 2, 1).is_none());
+            assert!(ArcSlice::<u64>::from_region(region.clone(), 12, 1).is_none());
+            // Clone shares the region; contents identical.
+            let t = s.clone();
+            drop(s);
+            assert_eq!(t.to_vec(), vec![7, 11, 13, 17]);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

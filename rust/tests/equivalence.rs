@@ -9,6 +9,7 @@ use cagra::baselines::{graphmat_style, gridgraph_style, hilbert, ligra_style, xs
 use cagra::coordinator::SystemConfig;
 use cagra::graph::{generators, Csr};
 use cagra::reorder;
+use cagra::store::StoreCtx;
 
 /// Prepare an app variant through the registry, exactly as `run_job`
 /// does (no artifact store).
@@ -19,7 +20,9 @@ fn registry_prepare(
     cfg: &SystemConfig,
 ) -> Box<dyn PreparedApp> {
     let kind = AppKind::parse(app, variant).unwrap();
-    registry::app_for(kind).prepare(g, cfg, kind, None).unwrap()
+    registry::app_for(kind)
+        .prepare(g, cfg, kind, &StoreCtx::disabled())
+        .unwrap()
 }
 
 fn graph(seed: u64) -> Csr {
@@ -119,7 +122,7 @@ fn bfs_and_bc_and_sssp_agree_with_references() {
     // BFS levels.
     let want_levels = bfs::reference_levels(&g, src);
     for &v in bfs::Variant::all() {
-        let mut p = bfs::Prepared::new(&g, v);
+        let mut p = bfs::Prepared::prepare(&g, &SystemConfig::default(), v, &StoreCtx::disabled());
         let parents = p.run(src);
         let got = bfs::levels_from_parents(&g, src, &parents);
         assert_eq!(got, want_levels, "bfs {}", v.name());
@@ -127,11 +130,19 @@ fn bfs_and_bc_and_sssp_agree_with_references() {
     // BC.
     let sources = bc::default_sources(&g, 3);
     let want_bc = bc::reference(&g, &sources);
-    let got_bc = bc::Prepared::new(&g, bc::Variant::ReorderedBitvector).run(&sources);
+    let got_bc = bc::Prepared::prepare(
+        &g,
+        &SystemConfig::default(),
+        bc::Variant::ReorderedBitvector,
+        &StoreCtx::disabled(),
+    )
+    .run(&sources);
     assert_close("bc", &got_bc, &want_bc, 1e-7);
     // SSSP.
     let want_d = sssp::reference(&g, src);
-    let got_d = sssp::Prepared::new(&g, sssp::Variant::Reordered).run(src);
+    let got_d =
+        sssp::Prepared::prepare(&g, &SystemConfig::default(), sssp::Variant::Reordered, &StoreCtx::disabled())
+            .run(src);
     for (i, (a, b)) in got_d.iter().zip(&want_d).enumerate() {
         assert!(
             (a == b) || (a.is_infinite() && b.is_infinite()),
@@ -183,7 +194,7 @@ fn registry_pipeline_matches_typed_paths() {
     let sources = bc::default_sources(&g, 3);
     for &v in bfs::Variant::all() {
         let mut dyn_prep = registry_prepare("bfs", v.name(), &g, &cfg);
-        let mut prep = bfs::Prepared::new(&g, v);
+        let mut prep = bfs::Prepared::prepare(&g, &cfg, v, &StoreCtx::disabled());
         let mut reached = 0usize;
         for &s in &sources {
             dyn_prep.run_source(s);
@@ -198,7 +209,7 @@ fn registry_pipeline_matches_typed_paths() {
         for &s in &sources {
             dyn_prep.run_source(s);
         }
-        let typed = bc::Prepared::new(&g, v)
+        let typed = bc::Prepared::prepare(&g, &cfg, v, &StoreCtx::disabled())
             .run(&sources)
             .iter()
             .cloned()
@@ -213,7 +224,7 @@ fn registry_pipeline_matches_typed_paths() {
     // SSSP: finite-distance mass (Bellman-Ford distances are unique).
     for &v in sssp::Variant::all() {
         let mut dyn_prep = registry_prepare("sssp", v.name(), &g, &cfg);
-        let mut prep = sssp::Prepared::new(&g, v);
+        let mut prep = sssp::Prepared::prepare(&g, &cfg, v, &StoreCtx::disabled());
         let mut total = 0.0;
         for &s in &sources {
             dyn_prep.run_source(s);

@@ -1,0 +1,140 @@
+//! Zero-copy warm-start acceptance (DESIGN.md §6): for every app, a
+//! mapped warm run and a forced-decode warm run land on the same answer
+//! as the cold run, the mapped warm run decodes **zero** bytes (its
+//! artifacts are served in place from the mapping), and stale-version
+//! files under current store names are regenerated, never misread.
+
+use cagra::coordinator::{run_job, AppKind, JobSpec, SystemConfig};
+use cagra::store::{ArcSlice, ArtifactStore, StoreKey};
+
+fn temp_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("cagra-mmaptest-{tag}-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+#[test]
+fn mapped_and_decoded_warm_runs_match_cold_across_all_apps() {
+    // All eight apps. Store-backed variants additionally prove the
+    // zero-copy property; store-less apps (pagerank-delta, triangle)
+    // still pin cross-run determinism under both mmap settings.
+    let cases: &[(&str, &str, &str, f64, usize)] = &[
+        ("pagerank", "both", "livejournal-sim", 1.0 / 64.0, 3),
+        ("pagerank-delta", "baseline", "livejournal-sim", 1.0 / 64.0, 5),
+        ("cf", "segmenting", "netflix-sim", 0.05, 2),
+        ("bc", "both", "livejournal-sim", 1.0 / 64.0, 1),
+        ("bfs", "both", "livejournal-sim", 1.0 / 64.0, 1),
+        ("sssp", "reordering", "livejournal-sim", 1.0 / 64.0, 1),
+        ("cc", "segmenting", "livejournal-sim", 1.0 / 64.0, 4),
+        ("triangle", "degree-ordered", "livejournal-sim", 1.0 / 64.0, 1),
+    ];
+    for &(app, variant, dataset, scale, iters) in cases {
+        let dir = temp_dir(&format!("warm-{app}-{variant}"));
+        let mut cfg = SystemConfig {
+            llc_bytes: 32 * 1024, // scaled graphs still segment
+            ..Default::default()
+        };
+        cfg.store_enabled = true;
+        cfg.store_dir = dir.to_string_lossy().into_owned();
+        let spec = JobSpec {
+            dataset: dataset.into(),
+            scale,
+            iters,
+            num_sources: 2,
+            app: AppKind::parse(app, variant).unwrap(),
+            ..Default::default()
+        };
+
+        cfg.store_mmap = true;
+        let cold = run_job(&spec, &cfg).unwrap();
+        let warm_mapped = run_job(&spec, &cfg).unwrap();
+        cfg.store_mmap = false;
+        let warm_decoded = run_job(&spec, &cfg).unwrap();
+
+        // BC accumulates through relaxed atomics (equal up to float
+        // reassociation); every other summary must be bitwise identical
+        // regardless of owned vs mapped backing.
+        if app == "bc" {
+            for (tag, got) in [("mapped", warm_mapped.summary), ("decoded", warm_decoded.summary)] {
+                let rel = (cold.summary - got).abs() / cold.summary.abs().max(1e-12);
+                assert!(rel < 1e-6, "{app} {tag} warm: {got} vs cold {}", cold.summary);
+            }
+        } else {
+            assert_eq!(
+                cold.summary.to_bits(),
+                warm_mapped.summary.to_bits(),
+                "{app}/{variant}: mapped warm summary differs from cold"
+            );
+            assert_eq!(
+                cold.summary.to_bits(),
+                warm_decoded.summary.to_bits(),
+                "{app}/{variant}: decoded warm summary differs from cold"
+            );
+        }
+
+        // run_job opens a private store per job, so each run's stats are
+        // its own traffic.
+        match (&warm_mapped.metrics.store, &warm_decoded.metrics.store) {
+            (Some(sm), Some(sd)) => {
+                assert_eq!(sm.misses, 0, "{app}: mapped warm run rebuilt an artifact");
+                assert_eq!(sd.misses, 0, "{app}: decoded warm run rebuilt an artifact");
+                assert!(sm.hits > 0 && sd.hits > 0);
+                assert!(sd.bytes_read > 0, "{app}: decoded warm run must read bytes");
+                if cagra::store::mmap_supported() {
+                    assert_eq!(
+                        sm.bytes_read, 0,
+                        "{app}: mapped warm run must decode zero bytes"
+                    );
+                    assert!(sm.bytes_mapped > 0, "{app}: mapped bytes unaccounted");
+                }
+            }
+            (None, None) => {
+                // Store-less app: --store attaches no stats and plants no
+                // directory (pagerank-delta, triangle).
+                assert!(!dir.exists(), "{app}: store-less app planted a store");
+            }
+            (m, d) => panic!("{app}: inconsistent store stats across warm runs: {m:?} / {d:?}"),
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+#[test]
+fn stale_version_artifact_under_current_name_is_regenerated() {
+    // Version skew normally changes the store filename (`.v<codec>.art`),
+    // but a file whose *content* is an old frame under the current name —
+    // a partially upgraded store, a copied directory — must be treated as
+    // a miss, removed, and rebuilt, never decoded by v1 rules.
+    let dir = temp_dir("v1-regen");
+    let store = ArtifactStore::open(&dir, 0).unwrap();
+    let key = StoreKey::ordering(0x51A1E, "stale");
+    let path = dir.join(key.filename::<ArcSlice<u32>>());
+    std::fs::create_dir_all(&dir).unwrap();
+    // A syntactically plausible v1 frame: magic, version 1, kind, the old
+    // length-prefixed payload shape.
+    let mut v1 = Vec::new();
+    v1.extend_from_slice(b"CAGART01");
+    v1.extend_from_slice(&1u32.to_le_bytes());
+    v1.extend_from_slice(b"PERM");
+    v1.extend_from_slice(&3u64.to_le_bytes());
+    v1.extend_from_slice(&[0u8; 12]);
+    std::fs::write(&path, &v1).unwrap();
+
+    let want: Vec<u32> = vec![1, 0, 2];
+    let got: ArcSlice<u32> = store.get_or_build(&key, || want.clone().into());
+    assert_eq!(got, want);
+    let s = store.stats();
+    assert_eq!(
+        (s.hits, s.misses),
+        (0, 1),
+        "v1 content must be a miss (drop + rebuild), not a hit"
+    );
+    // The rebuilt file is current-version and serves warm from here on.
+    let warm: ArcSlice<u32> = store.get_or_build(&key, || panic!("must not rebuild"));
+    assert_eq!(warm, want);
+    assert_eq!(store.stats().hits, 1);
+    let infos = store.list_artifacts();
+    assert_eq!(infos.len(), 1);
+    assert_eq!(infos[0].version, Some(cagra::store::CODEC_VERSION));
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -10,6 +10,7 @@
 use cagra::apps::{bc, bfs, cc, pagerank_delta, sssp};
 use cagra::coordinator::SystemConfig;
 use cagra::graph::{generators, Csr};
+use cagra::store::StoreCtx;
 
 fn graph() -> Csr {
     let (n, e) = generators::rmat(10, 8, generators::RmatParams::graph500(), 1717);
@@ -28,10 +29,10 @@ fn bfs_poisoned_reuse_is_bitwise_identical() {
         // Fresh instance per source = the no-reuse baseline.
         let fresh: Vec<Vec<u32>> = srcs
             .iter()
-            .map(|&s| bfs::Prepared::new(&g, v).run(s))
+            .map(|&s| bfs::Prepared::prepare(&g, &SystemConfig::default(), v, &StoreCtx::disabled()).run(s))
             .collect();
         // One instance reused across sources, poisoned between each.
-        let mut p = bfs::Prepared::new(&g, v);
+        let mut p = bfs::Prepared::prepare(&g, &SystemConfig::default(), v, &StoreCtx::disabled());
         for (k, &s) in srcs.iter().enumerate() {
             p.poison_scratch(0xA11C_E000 + k as u64);
             // Parent choice can race under parallelism, so compare the
@@ -50,9 +51,9 @@ fn sssp_poisoned_reuse_is_bitwise_identical() {
     for &v in sssp::Variant::all() {
         let fresh: Vec<Vec<f64>> = srcs
             .iter()
-            .map(|&s| sssp::Prepared::new(&g, v).run(s))
+            .map(|&s| sssp::Prepared::prepare(&g, &SystemConfig::default(), v, &StoreCtx::disabled()).run(s))
             .collect();
-        let mut p = sssp::Prepared::new(&g, v);
+        let mut p = sssp::Prepared::prepare(&g, &SystemConfig::default(), v, &StoreCtx::disabled());
         for (k, &s) in srcs.iter().enumerate() {
             p.poison_scratch(0x5E55_0000 + k as u64);
             let got = p.run(s);
@@ -78,9 +79,9 @@ fn bc_poisoned_reuse_is_bitwise_identical() {
         // Fresh instance per source; scores for one source at a time.
         let fresh: Vec<Vec<f64>> = srcs
             .iter()
-            .map(|&s| bc::Prepared::new(&g, v).run(&[s]))
+            .map(|&s| bc::Prepared::prepare(&g, &SystemConfig::default(), v, &StoreCtx::disabled()).run(&[s]))
             .collect();
-        let mut p = bc::Prepared::new(&g, v);
+        let mut p = bc::Prepared::prepare(&g, &SystemConfig::default(), v, &StoreCtx::disabled());
         for (k, &s) in srcs.iter().enumerate() {
             p.poison_scratch(0xBC00 + k as u64);
             let got = p.run(&[s]);
@@ -105,8 +106,8 @@ fn cc_poisoned_stepping_is_bitwise_identical() {
         ..Default::default()
     };
     for v in [cc::Variant::Baseline, cc::Variant::Segmented] {
-        let mut fresh = cc::Prepared::new(&g, &cfg, v);
-        let mut poisoned = cc::Prepared::new(&g, &cfg, v);
+        let mut fresh = cc::Prepared::prepare(&g, &cfg, v, &StoreCtx::disabled());
+        let mut poisoned = cc::Prepared::prepare(&g, &cfg, v, &StoreCtx::disabled());
         for sweep in 0..12u64 {
             let a = fresh.sweep();
             poisoned.poison_scratch(0xCC00 + sweep);

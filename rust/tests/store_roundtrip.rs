@@ -30,13 +30,13 @@ fn pagerank_warm_run_is_bitwise_identical_and_hits() {
     let dir = temp_dir("pr");
     let store = ArtifactStore::open(&dir, 0).unwrap();
     let fp = fingerprint::fingerprint_dataset(&ds.name, SCALE, &ds.graph);
-    let ctx = Some(StoreCtx::new(&store, fp));
+    let ctx = StoreCtx::new(&store, fp);
     let variant = pagerank::Variant::ReorderedSegmented;
 
     // Cold: builds + persists the permutation and the segmented
     // partition (the relabeled CSR is only a cold-build intermediate for
     // this variant and is deliberately not stored).
-    let mut cold = pagerank::Prepared::new_cached(&ds.graph, &cfg, variant, ctx);
+    let mut cold = pagerank::Prepared::prepare(&ds.graph, &cfg, variant, &ctx);
     let a = cold.run(4);
     let s = store.stats();
     assert_eq!(s.hits, 0, "cold run must not hit");
@@ -44,7 +44,7 @@ fn pagerank_warm_run_is_bitwise_identical_and_hits() {
     assert!(s.entries == 2 && s.bytes_written > 0);
 
     // Warm: identical results, all artifacts served from disk.
-    let mut warm = pagerank::Prepared::new_cached(&ds.graph, &cfg, variant, ctx);
+    let mut warm = pagerank::Prepared::prepare(&ds.graph, &cfg, variant, &ctx);
     let b = warm.run(4);
     let s = store.stats();
     assert_eq!(s.hits, 2, "warm run must hit every artifact");
@@ -65,16 +65,16 @@ fn cf_warm_run_is_bitwise_identical_and_hits() {
     let dir = temp_dir("cf");
     let store = ArtifactStore::open(&dir, 0).unwrap();
     let fp = fingerprint::fingerprint_dataset(&ds.name, 0.05, &ds.graph);
-    let ctx = Some(StoreCtx::new(&store, fp));
+    let ctx = StoreCtx::new(&store, fp);
 
-    let mut cold = cf::Prepared::new_cached(&ds.graph, &cfg, cf::Variant::Segmented, ctx);
+    let mut cold = cf::Prepared::prepare(&ds.graph, &cfg, cf::Variant::Segmented, &ctx);
     for _ in 0..2 {
         cold.step();
     }
     let s = store.stats();
     assert_eq!((s.hits, s.misses), (0, 2), "cold run builds cf-user + cf-item");
 
-    let mut warm = cf::Prepared::new_cached(&ds.graph, &cfg, cf::Variant::Segmented, ctx);
+    let mut warm = cf::Prepared::prepare(&ds.graph, &cfg, cf::Variant::Segmented, &ctx);
     for _ in 0..2 {
         warm.step();
     }
@@ -97,9 +97,9 @@ fn cc_warm_run_is_bitwise_identical_and_hits() {
         let dir = temp_dir(&format!("cc-{}", variant.name()));
         let store = ArtifactStore::open(&dir, 0).unwrap();
         let fp = fingerprint::fingerprint_dataset(&ds.name, SCALE, &ds.graph);
-        let ctx = Some(StoreCtx::new(&store, fp));
+        let ctx = StoreCtx::new(&store, fp);
 
-        let mut cold = cc::Prepared::new_cached(&ds.graph, &cfg, variant, ctx);
+        let mut cold = cc::Prepared::prepare(&ds.graph, &cfg, variant, &ctx);
         while cold.sweep() {}
         let s = store.stats();
         assert_eq!(
@@ -108,7 +108,7 @@ fn cc_warm_run_is_bitwise_identical_and_hits() {
             "{variant:?}: cold run builds exactly the symmetrized structure"
         );
 
-        let mut warm = cc::Prepared::new_cached(&ds.graph, &cfg, variant, ctx);
+        let mut warm = cc::Prepared::prepare(&ds.graph, &cfg, variant, &ctx);
         while warm.sweep() {}
         let s = store.stats();
         assert_eq!((s.hits, s.misses), (1, 1), "{variant:?}: warm run must hit");

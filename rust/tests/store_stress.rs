@@ -6,7 +6,7 @@
 //! are coarse (one mutex per key), so exhaustive interleaving isn't
 //! needed to exercise the races that matter.
 
-use cagra::store::{ArtifactStore, StoreKey};
+use cagra::store::{ArcSlice, ArtifactStore, StoreKey};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Barrier};
@@ -35,12 +35,12 @@ fn concurrent_same_key_builds_once() {
             let (key, expected) = (key.clone(), expected.clone());
             std::thread::spawn(move || {
                 barrier.wait();
-                let got: Vec<u32> = store.get_or_build(&key, || {
+                let got: ArcSlice<u32> = store.get_or_build(&key, || {
                     builds.fetch_add(1, Ordering::SeqCst);
                     // Widen the window: losers must be blocking on the key
                     // lock, not merely losing a fast race.
                     std::thread::sleep(std::time::Duration::from_millis(10));
-                    expected.clone()
+                    ArcSlice::from_vec(expected.clone())
                 });
                 assert_eq!(got, expected);
             })
@@ -83,8 +83,8 @@ fn reads_survive_concurrent_eviction() {
                     // A dropped scope leaves the write evictable, unlike
                     // the never-dropped instance scope.
                     let scope = store.begin_scope();
-                    let got: Vec<u32> =
-                        store.get_or_build_scoped(key, scope.id(), || expected.clone());
+                    let got: ArcSlice<u32> = store
+                        .get_or_build_scoped(key, scope.id(), || ArcSlice::from_vec(expected.clone()));
                     drop(scope);
                     assert_eq!(got, expected, "thread {t} iter {i}: wrong or torn value");
                 }

@@ -73,7 +73,9 @@ fn steady_state_performs_zero_heap_allocation() {
     ];
     for &(app, variant) in cases {
         let kind = AppKind::parse(app, variant).unwrap();
-        let mut prep = registry::app_for(kind).prepare(&g, &cfg, kind, None).unwrap();
+        let mut prep = registry::app_for(kind)
+            .prepare(&g, &cfg, kind, &cagra::store::StoreCtx::disabled())
+            .unwrap();
         match prep.shape() {
             ExecutionShape::Iterative => {
                 // Warm: the first iterations size every pool/capacity.
@@ -123,7 +125,7 @@ fn steady_state_performs_zero_heap_allocation() {
         let kind = AppKind::parse("pagerank", "both").unwrap();
         let prepare = || {
             let ctx = StoreCtx::new(&store, fp).with_mem(&mem);
-            registry::app_for(kind).prepare(&g, &cfg, kind, Some(ctx)).unwrap()
+            registry::app_for(kind).prepare(&g, &cfg, kind, &ctx).unwrap()
         };
         drop(prepare()); // cold: builds + persists + pins
         let read_before = store.stats().bytes_read;
