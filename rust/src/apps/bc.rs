@@ -159,12 +159,15 @@ impl Prepared {
         let scratch = &mut self.scratch;
         // Reset per-source state (fills, no allocation).
         crate::parallel::parallel_for(n, |v| {
+            // audit: relaxed-ok — each v writes only its own slot, and the
+            // traversal starts after the parallel_for joins (a barrier).
             sigma[v].store(0, Ordering::Relaxed);
-            level[v].store(u32::MAX, Ordering::Relaxed);
-            delta[v].store(0.0, Ordering::Relaxed);
+            level[v].store(u32::MAX, Ordering::Relaxed); // audit: relaxed-ok — as above
+            delta[v].store(0.0, Ordering::Relaxed); // audit: relaxed-ok — as above
         });
+        // audit: relaxed-ok — single-threaded setup before the traversal.
         sigma[s as usize].store(1, Ordering::Relaxed);
-        level[s as usize].store(0, Ordering::Relaxed);
+        level[s as usize].store(0, Ordering::Relaxed); // audit: relaxed-ok — as above
         debug_assert!(frontiers.is_empty());
         frontiers.push({
             let mut ids = scratch.take_ids();
@@ -261,12 +264,15 @@ impl Prepared {
     pub fn poison_scratch(&mut self, seed: u64) {
         self.scratch.poison(seed);
         for (i, x) in self.sigma.iter().enumerate() {
+            // audit: relaxed-ok — single-threaded test hook on dead buffers.
             x.store(seed.wrapping_add(i as u64), Ordering::Relaxed);
         }
         for x in &self.level {
+            // audit: relaxed-ok — single-threaded test hook on dead buffers.
             x.store(seed as u32 | 1, Ordering::Relaxed);
         }
         for x in &self.delta {
+            // audit: relaxed-ok — single-threaded test hook on dead buffers.
             x.store(-1.25 - seed as f64, Ordering::Relaxed);
         }
     }

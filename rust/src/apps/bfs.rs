@@ -122,7 +122,10 @@ impl Prepared {
     fn run_inner(&mut self, src: VertexId) {
         let n = self.g.num_vertices();
         let parent = &self.parent;
+        // audit: relaxed-ok — each v writes only its own slot, and the
+        // traversal starts after the parallel_for joins (a full barrier).
         crate::parallel::parallel_for(n, |v| parent[v].store(u32::MAX, Ordering::Relaxed));
+        // audit: relaxed-ok — single-threaded setup before the traversal.
         parent[src as usize].store(src, Ordering::Relaxed);
         let scratch = &mut self.scratch;
         let mut frontier = {
@@ -189,6 +192,7 @@ impl Prepared {
     pub fn poison_scratch(&mut self, seed: u64) {
         self.scratch.poison(seed);
         for (i, p) in self.parent.iter().enumerate() {
+            // audit: relaxed-ok — single-threaded test hook on a dead buffer.
             p.store((seed as u32).wrapping_add(i as u32), Ordering::Relaxed);
         }
     }

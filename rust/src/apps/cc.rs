@@ -170,6 +170,8 @@ impl Prepared {
                     for &u in p.neighbors(v as VertexId) {
                         m = m.min(l[u as usize]);
                     }
+                    // SAFETY: each v in lo..hi belongs to exactly one
+                    // task's range; v < n == slice.len().
                     unsafe { slice.write(v, m) };
                 });
             }

@@ -209,7 +209,9 @@ impl Prepared {
                                 };
                                 let e = pred - r;
                                 for (j, &fwj) in fw.iter().enumerate() {
-                                    // Safety: row v written by one task.
+                                    // SAFETY: row v is written by exactly
+                                    // one task (v in lo..hi), and
+                                    // v*k+j < n*k == grad.len().
                                     unsafe {
                                         *grad.get_mut(v * k + j) += e * fwj;
                                     }
@@ -256,11 +258,14 @@ impl Prepared {
                                         *a += e * fwj;
                                     }
                                 }
-                                // Merge: destination rows may repeat across
-                                // segments; each (segment, dst) pair is
-                                // unique, and segments run sequentially, so
-                                // accumulation is race-free within a pass.
                                 for (j, &aj) in acc.iter().enumerate() {
+                                    // SAFETY: destination rows may repeat
+                                    // across segments, but each (segment,
+                                    // dst) pair is unique, dst index idx
+                                    // belongs to one task, and segments
+                                    // run sequentially — so no two tasks
+                                    // alias row v within a pass; v*k+j <
+                                    // n*k == grad.len().
                                     unsafe {
                                         *grad.get_mut(v as usize * k + j) += aj;
                                     }
@@ -277,6 +282,8 @@ impl Prepared {
         let grad = &self.grad;
         parallel_for(n, |v| {
             for j in 0..k {
+                // SAFETY: each v updates only row v of the factor matrix;
+                // v*k+j < n*k == f.len().
                 unsafe {
                     *f.get_mut(v * k + j) -= lr * grad[v * k + j];
                 }

@@ -84,7 +84,7 @@ fn permuted_inv_degrees(g: &Csr, perm: &[VertexId]) -> Vec<f64> {
     parallel_for(n, |v| {
         let d = g.degree(v as VertexId);
         let inv = if d == 0 { 0.0 } else { 1.0 / d as f64 };
-        // Safety: perm is a bijection, so writes are disjoint.
+        // SAFETY: perm is a bijection, so writes are disjoint.
         unsafe { slice.write(perm[v] as usize, inv) };
     });
     out
@@ -227,6 +227,7 @@ impl Prepared {
             let contrib = UnsafeSlice::new(&mut self.contrib);
             let rank = &self.rank;
             let inv = &self.inv_deg;
+            // SAFETY: each u writes only slot u; u < n == contrib.len().
             parallel_for(n, |u| unsafe { contrib.write(u, rank[u] * inv[u]) });
         }
         match self.variant {
@@ -248,6 +249,8 @@ impl Prepared {
                             for &u in pull.neighbors(v as VertexId) {
                                 acc += contrib[u as usize];
                             }
+                            // SAFETY: each v in lo..hi belongs to exactly
+                            // one task's range; v < n == next.len().
                             unsafe { next.write(v, base + d * acc) };
                         }
                     },
@@ -274,6 +277,8 @@ impl Prepared {
                             for &_u in pull.neighbors(v as VertexId) {
                                 acc += c0; // read serviced from L1
                             }
+                            // SAFETY: each v in lo..hi belongs to exactly
+                            // one task's range; v < n == next.len().
                             unsafe { next.write(v, base + d * acc) };
                         }
                     },
@@ -291,6 +296,7 @@ impl Prepared {
                 agg.fill(0.0);
                 crate::segment::merge(sg, bufs, &mut agg);
                 let next = UnsafeSlice::new(&mut agg);
+                // SAFETY: each v touches only its own cell; v < n.
                 parallel_for(n, |v| unsafe {
                     let cell = next.get_mut(v);
                     *cell = base + d * *cell;

@@ -144,6 +144,8 @@ impl Prepared {
                         acc += delta[u as usize] * inv_deg[u as usize];
                     }
                 }
+                // audit: relaxed-ok — each v writes only its own slot;
+                // the sequential fold below runs after the join.
                 nd[v].store(d * acc, Ordering::Relaxed);
             });
         }
@@ -160,6 +162,7 @@ impl Prepared {
     pub fn poison_scratch(&mut self, seed: u64) {
         for (i, x) in self.new_delta.iter().enumerate() {
             let junk = f64::from_bits(seed ^ (i as u64).wrapping_mul(0x9E3779B97F4A7C15));
+            // audit: relaxed-ok — single-threaded test hook on a dead buffer.
             x.store(junk, Ordering::Relaxed);
         }
     }

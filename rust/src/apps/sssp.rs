@@ -108,7 +108,10 @@ impl Prepared {
     fn run_inner(&mut self, src: VertexId) {
         let n = self.g.num_vertices();
         let dist = &self.dist;
+        // audit: relaxed-ok — each v writes only its own slot, and the
+        // traversal starts after the parallel_for joins (a full barrier).
         crate::parallel::parallel_for(n, |v| dist[v].store(f64::INFINITY, Ordering::Relaxed));
+        // audit: relaxed-ok — single-threaded setup before the traversal.
         dist[src as usize].store(0.0, Ordering::Relaxed);
         // Weight of working-space edge (s,d) = weight of original edge.
         let inv = &self.inv;
@@ -166,6 +169,7 @@ impl Prepared {
     pub fn poison_scratch(&mut self, seed: u64) {
         self.scratch.poison(seed);
         for (i, d) in self.dist.iter().enumerate() {
+            // audit: relaxed-ok — single-threaded test hook on a dead buffer.
             d.store(-(seed as f64) - i as f64, Ordering::Relaxed);
         }
     }

@@ -1,0 +1,497 @@
+//! The six repo-specific lints (DESIGN.md §7).
+//!
+//! Each lint is a standalone function over one scanned file so it can be
+//! unit-tested against minimal good/bad snippets. All of them work on
+//! the [`Line`] views from [`super::scanner`]: token checks look only at
+//! `code` (comments and string contents blanked), marker checks look
+//! only at `comment` — so a string literal can never satisfy or trip a
+//! lint.
+//!
+//! Waivers: any finding can be silenced with a justification comment
+//! `// audit: allow(<lint-name>) — reason`, either on the offending line
+//! or in the comment block directly above it. Waivers are for the rare
+//! case where the invariant holds for a reason the scanner cannot see;
+//! the reason text is mandatory in spirit (review rejects bare waivers)
+//! even though the scanner only checks the marker.
+
+use super::scanner::{has_word, Line};
+use super::Diagnostic;
+
+/// Lint names, as accepted by `audit: allow(...)` and printed in
+/// diagnostics.
+pub const SAFETY_COMMENT: &str = "safety-comment";
+pub const POD_ALLOWLIST: &str = "pod-allowlist";
+pub const NAN_SORT: &str = "nan-sort";
+pub const HOT_PATH_ALLOC: &str = "hot-path-alloc";
+pub const BENCH_REGISTRY: &str = "bench-registry";
+pub const RELAXED_STORE: &str = "relaxed-store";
+
+/// All lint names (for `--help`-style listings and waiver validation).
+pub const ALL_LINTS: &[&str] = &[
+    SAFETY_COMMENT,
+    POD_ALLOWLIST,
+    NAN_SORT,
+    HOT_PATH_ALLOC,
+    BENCH_REGISTRY,
+    RELAXED_STORE,
+];
+
+/// `Pod` may only be implemented for these primitives: fixed-size,
+/// padding-free, every bit pattern valid, and — because mapped artifacts
+/// are read in place — an on-disk little-endian layout that matches the
+/// in-memory one on the platforms where mmap is enabled. `usize`/`isize`
+/// are deliberately absent (their width differs across targets, so a
+/// mapped artifact would not be portable), as are `bool`/`char` (invalid
+/// bit patterns) and all aggregates (padding).
+pub const POD_ALLOWED: &[&str] = &[
+    "u8", "u16", "u32", "u64", "i8", "i16", "i32", "i64", "f32", "f64",
+];
+
+/// Concatenate the comments "adjacent" to line `i`: the line's own
+/// comment plus the contiguous run of comment-only lines directly above
+/// it. Attribute lines (`#[...]` / `#![...]`) between the comment block
+/// and the code are skipped, matching how rustc/clippy accept a comment
+/// above attributes. A blank line breaks adjacency.
+fn adjacent_comments(lines: &[Line], i: usize) -> String {
+    let mut text = lines[i].comment.clone();
+    let mut j = i;
+    while j > 0 {
+        j -= 1;
+        let l = &lines[j];
+        let code = l.code.trim();
+        if code.is_empty() && !l.raw.trim().is_empty() {
+            // Comment-only line (line comment, doc comment, or the
+            // interior of a block comment).
+            text.push('\n');
+            text.push_str(&l.comment);
+        } else if code.starts_with("#[") || code.starts_with("#![") {
+            // Attribute between comment and item: keep walking (and keep
+            // any trailing comment it carries).
+            text.push('\n');
+            text.push_str(&l.comment);
+        } else {
+            break;
+        }
+    }
+    text
+}
+
+/// Is line `i` waived for `lint` by an `audit: allow(<lint>)` marker?
+fn waived(lines: &[Line], i: usize, lint: &str) -> bool {
+    let marker = format!("audit: allow({lint})");
+    adjacent_comments(lines, i).contains(&marker)
+}
+
+/// Lint 1 — `safety-comment`: every line introducing an `unsafe` block,
+/// fn, impl, or trait must carry an adjacent `// SAFETY:` comment (or a
+/// `/// # Safety` doc section directly above, the std convention for
+/// unsafe fns/traits whose contract is caller-facing).
+pub fn safety_comment(file: &str, lines: &[Line], out: &mut Vec<Diagnostic>) {
+    let kw = "unsafe";
+    for (i, l) in lines.iter().enumerate() {
+        if !has_word(&l.code, kw) {
+            continue;
+        }
+        if waived(lines, i, SAFETY_COMMENT) {
+            continue;
+        }
+        let ctx = adjacent_comments(lines, i);
+        if ctx.contains("SAFETY:") || ctx.contains("# Safety") {
+            continue;
+        }
+        out.push(Diagnostic {
+            file: file.to_string(),
+            line: i + 1,
+            lint: SAFETY_COMMENT,
+            message: format!(
+                "`{kw}` without an adjacent `// SAFETY:` comment \
+                 (or `/// # Safety` doc section)"
+            ),
+        });
+    }
+}
+
+/// Lint 2 — `pod-allowlist`: `unsafe impl Pod for T` only for the
+/// approved primitives in [`POD_ALLOWED`]. Anything else (aggregates,
+/// `usize`, `bool`, …) breaks the any-bit-pattern / stable-layout
+/// contract that zero-copy mapped artifacts rely on.
+pub fn pod_allowlist(file: &str, lines: &[Line], out: &mut Vec<Diagnostic>) {
+    let kw = "unsafe";
+    for (i, l) in lines.iter().enumerate() {
+        let code = &l.code;
+        if !(has_word(code, kw) && has_word(code, "impl") && has_word(code, "Pod")) {
+            continue;
+        }
+        // `impl Pod for T` — find the type name after the `for` token
+        // (joining with the next line for a wrapped impl header).
+        let joined = match lines.get(i + 1) {
+            Some(n) => format!("{code} {}", n.code),
+            None => code.clone(),
+        };
+        let ty = token_after_for(&joined);
+        let ty = match ty {
+            Some(t) => t,
+            None => continue, // not an `impl .. for ..` form
+        };
+        if POD_ALLOWED.contains(&ty.as_str()) {
+            continue;
+        }
+        if waived(lines, i, POD_ALLOWLIST) {
+            continue;
+        }
+        out.push(Diagnostic {
+            file: file.to_string(),
+            line: i + 1,
+            lint: POD_ALLOWLIST,
+            message: format!(
+                "`impl Pod for {ty}` — Pod is restricted to the primitive \
+                 allowlist {POD_ALLOWED:?} (fixed layout, any bit pattern valid)"
+            ),
+        });
+    }
+}
+
+/// The identifier token following the standalone `for` keyword.
+fn token_after_for(code: &str) -> Option<String> {
+    let mut from = 0;
+    while let Some(pos) = code[from..].find("for") {
+        let start = from + pos;
+        let end = start + 3;
+        let before_ok = start == 0
+            || !code[..start]
+                .chars()
+                .next_back()
+                .map(|c| c.is_alphanumeric() || c == '_')
+                .unwrap_or(false);
+        let after = &code[end..];
+        if before_ok && after.starts_with(char::is_whitespace) {
+            let tok: String = after
+                .trim_start()
+                .chars()
+                .take_while(|&c| c.is_alphanumeric() || c == '_')
+                .collect();
+            if !tok.is_empty() {
+                return Some(tok);
+            }
+        }
+        from = end;
+    }
+    None
+}
+
+/// Lint 3 — `nan-sort`: a comparator that unwraps `partial_cmp` panics
+/// on NaN. PR 6 converted four of these to `total_cmp` by hand; this
+/// lint makes recurrence impossible. (Both tokens on one code line is
+/// exactly the `sort_by(|a, b| a.partial_cmp(b).unwrap())` shape.)
+pub fn nan_sort(file: &str, lines: &[Line], out: &mut Vec<Diagnostic>) {
+    for (i, l) in lines.iter().enumerate() {
+        if !(l.code.contains("partial_cmp") && l.code.contains("unwrap")) {
+            continue;
+        }
+        if waived(lines, i, NAN_SORT) {
+            continue;
+        }
+        out.push(Diagnostic {
+            file: file.to_string(),
+            line: i + 1,
+            lint: NAN_SORT,
+            message: "NaN-unsafe comparator: `partial_cmp(..).unwrap()` \
+                      panics on NaN — use `total_cmp` (or an explicit \
+                      NaN policy)"
+                .to_string(),
+        });
+    }
+}
+
+/// Allocation / timing idioms banned inside `// audit: hot-path`
+/// regions. Note `reserve`/`resize`/`push` are *allowed*: the engine's
+/// high-water-mark growth discipline (scratch pools) amortizes those to
+/// zero, which the counting-allocator test verifies dynamically. What
+/// this lint bans are the idioms that allocate fresh storage every call.
+pub const HOT_PATH_BANNED: &[&str] = &[
+    "Vec::new(",
+    "vec!",
+    ".to_vec(",
+    ".collect(",
+    "format!",
+    "Box::new(",
+    "String::new(",
+    ".to_string(",
+    ".to_owned(",
+    "Instant::now(",
+];
+
+/// Lint 4 — `hot-path-alloc`: no per-call allocation (or `Instant::now`
+/// timing) inside regions bracketed by `// audit: hot-path` …
+/// `// audit: hot-path-end` comments. The zero-alloc invariant enforced
+/// at the source level, complementing the counting-allocator test which
+/// only sees the code paths a given input exercises.
+pub fn hot_path_alloc(file: &str, lines: &[Line], out: &mut Vec<Diagnostic>) {
+    let mut region_start: Option<usize> = None;
+    for (i, l) in lines.iter().enumerate() {
+        // Check the end marker first: "hot-path" is a prefix of
+        // "hot-path-end".
+        if l.comment.contains("audit: hot-path-end") {
+            region_start = None;
+            continue;
+        }
+        if l.comment.contains("audit: hot-path") {
+            region_start = Some(i);
+            continue;
+        }
+        if region_start.is_none() {
+            continue;
+        }
+        for needle in HOT_PATH_BANNED {
+            if !l.code.contains(needle) {
+                continue;
+            }
+            if waived(lines, i, HOT_PATH_ALLOC) {
+                continue;
+            }
+            out.push(Diagnostic {
+                file: file.to_string(),
+                line: i + 1,
+                lint: HOT_PATH_ALLOC,
+                message: format!(
+                    "`{}` inside an `// audit: hot-path` region — the hot \
+                     path must not allocate per call (pool/reuse instead)",
+                    needle.trim_end_matches('(')
+                ),
+            });
+        }
+    }
+    if let Some(start) = region_start {
+        out.push(Diagnostic {
+            file: file.to_string(),
+            line: start + 1,
+            lint: HOT_PATH_ALLOC,
+            message: "unclosed `// audit: hot-path` region (missing \
+                      `// audit: hot-path-end`)"
+                .to_string(),
+        });
+    }
+}
+
+/// Lint 6 — `relaxed-store`: a `.store(.., Relaxed)` on shared state is
+/// correct only when the flag carries no data dependency (idempotent
+/// one-way flags, counters read after a join, …). Each one must say why
+/// via an adjacent `// audit: relaxed-ok — reason` comment.
+pub fn relaxed_store(file: &str, lines: &[Line], out: &mut Vec<Diagnostic>) {
+    for (i, l) in lines.iter().enumerate() {
+        if !(l.code.contains(".store(") && has_word(&l.code, "Relaxed")) {
+            continue;
+        }
+        if waived(lines, i, RELAXED_STORE) {
+            continue;
+        }
+        if adjacent_comments(lines, i).contains("audit: relaxed-ok") {
+            continue;
+        }
+        out.push(Diagnostic {
+            file: file.to_string(),
+            line: i + 1,
+            lint: RELAXED_STORE,
+            message: "`Ordering::Relaxed` store without an \
+                      `// audit: relaxed-ok` justification"
+                .to_string(),
+        });
+    }
+}
+
+/// Lint 5 — `bench-registry`: every `benches/*.rs` stem must appear both
+/// in `bench/suite.rs` (`name: "<stem>"`) and in `Cargo.toml`
+/// (`name = "<stem>"`, with `harness = false`). Operates on raw text —
+/// the registry strings live in string literals, which the scanner
+/// blanks — so it runs at tree level, not through the per-file scanner.
+pub fn bench_registry(
+    bench_stems: &[String],
+    suite_src: &str,
+    cargo_toml: &str,
+    out: &mut Vec<Diagnostic>,
+) {
+    for stem in bench_stems {
+        let in_suite = suite_src.contains(&format!("name: \"{stem}\""));
+        let in_cargo = cargo_toml.contains(&format!("name = \"{stem}\""));
+        if in_suite && in_cargo {
+            continue;
+        }
+        let mut missing = Vec::new();
+        if !in_suite {
+            missing.push("bench/suite.rs SUITES");
+        }
+        if !in_cargo {
+            missing.push("Cargo.toml [[bench]]");
+        }
+        out.push(Diagnostic {
+            file: format!("benches/{stem}.rs"),
+            line: 1,
+            lint: BENCH_REGISTRY,
+            message: format!(
+                "bench suite `{stem}` not registered in {} — unregistered \
+                 benches silently drop out of CI's run-every-suite job",
+                missing.join(" and ")
+            ),
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::audit::scanner::scan;
+
+    fn run(
+        lint: fn(&str, &[Line], &mut Vec<Diagnostic>),
+        src: &str,
+    ) -> Vec<Diagnostic> {
+        let lines = scan(src);
+        let mut out = Vec::new();
+        lint("test.rs", &lines, &mut out);
+        out
+    }
+
+    // The keyword under test, built so this file's own code never
+    // contains it as a bare token.
+    fn kw_unsafe() -> String {
+        format!("un{}", "safe")
+    }
+
+    #[test]
+    fn safety_comment_fires_and_clears() {
+        let k = kw_unsafe();
+        let bad = format!("fn f() {{ {k} {{ g(); }} }}\n");
+        let d = run(safety_comment, &bad);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert_eq!(d[0].lint, SAFETY_COMMENT);
+        assert_eq!(d[0].line, 1);
+
+        let good = format!("// SAFETY: g is fine\nfn f() {{ {k} {{ g(); }} }}\n");
+        assert!(run(safety_comment, &good).is_empty());
+
+        let same_line = format!("fn f() {{ {k} {{ g(); }} }} // SAFETY: g is fine\n");
+        assert!(run(safety_comment, &same_line).is_empty());
+
+        // `/// # Safety` doc section above an unsafe fn counts, including
+        // through an intervening attribute and further doc text.
+        let doc = format!(
+            "/// Does things.\n///\n/// # Safety\n/// Caller checks i.\n\
+             #[inline]\npub {k} fn w(i: usize) {{}}\n"
+        );
+        assert!(run(safety_comment, &doc).is_empty());
+    }
+
+    #[test]
+    fn safety_comment_not_fooled_by_strings_or_idents() {
+        let k = kw_unsafe();
+        // Keyword inside a string literal or an identifier: no finding.
+        let src = format!("let s = \"{k} code\";\nfn {k}_slice_writes() {{}}\n");
+        assert!(run(safety_comment, &src).is_empty());
+        // A SAFETY: *string* must not satisfy the lint either.
+        let sneaky = format!("let s = \"SAFETY: nope\"; {k} {{ g(); }}\n");
+        assert_eq!(run(safety_comment, &sneaky).len(), 1);
+    }
+
+    #[test]
+    fn safety_comment_waiver() {
+        let k = kw_unsafe();
+        let src = format!(
+            "// audit: allow(safety-comment) — fixture exercising waivers\n\
+             fn f() {{ {k} {{ g(); }} }}\n"
+        );
+        assert!(run(safety_comment, &src).is_empty());
+    }
+
+    #[test]
+    fn pod_allowlist_fires_and_clears() {
+        let k = kw_unsafe();
+        let bad = format!("// SAFETY: wrong\n{k} impl Pod for MyStruct {{}}\n");
+        let d = run(pod_allowlist, &bad);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert_eq!(d[0].lint, POD_ALLOWLIST);
+        assert!(d[0].message.contains("MyStruct"));
+
+        // usize is NOT allowed: width varies across targets.
+        let usz = format!("{k} impl Pod for usize {{}}\n");
+        assert_eq!(run(pod_allowlist, &usz).len(), 1);
+
+        let good = format!("{k} impl Pod for u32 {{}}\n");
+        assert!(run(pod_allowlist, &good).is_empty());
+
+        // Wrapped impl header: type on the next line.
+        let wrapped = format!("{k} impl Pod\n    for u64 {{}}\n");
+        assert!(run(pod_allowlist, &wrapped).is_empty());
+    }
+
+    #[test]
+    fn nan_sort_fires_and_clears() {
+        let bad = "v.sort_by(|a, b| a.partial_cmp(b).unwrap());\n";
+        let d = run(nan_sort, bad);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].lint, NAN_SORT);
+
+        let good = "v.sort_by(|a, b| a.total_cmp(b));\n";
+        assert!(run(nan_sort, good).is_empty());
+
+        // Mentioning the idiom in a comment or string is fine.
+        let comment = "// partial_cmp(..).unwrap() is banned\nf();\n";
+        assert!(run(nan_sort, comment).is_empty());
+    }
+
+    #[test]
+    fn hot_path_alloc_fires_and_clears() {
+        let bad = "// audit: hot-path\nlet v: Vec<u32> = xs.iter().collect();\n\
+                   // audit: hot-path-end\n";
+        let d = run(hot_path_alloc, bad);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert_eq!(d[0].lint, HOT_PATH_ALLOC);
+        assert_eq!(d[0].line, 2);
+
+        // Outside the region the same code is fine.
+        let outside = "let v: Vec<u32> = xs.iter().collect();\n\
+                       // audit: hot-path\nf(x);\n// audit: hot-path-end\n";
+        assert!(run(hot_path_alloc, outside).is_empty());
+
+        // High-water growth is allowed inside.
+        let growth = "// audit: hot-path\nbuf.resize(n, 0); buf.push(x); \
+                      buf.reserve(n);\n// audit: hot-path-end\n";
+        assert!(run(hot_path_alloc, growth).is_empty());
+
+        // Unclosed region is itself a finding.
+        let unclosed = "// audit: hot-path\nf(x);\n";
+        let d = run(hot_path_alloc, unclosed);
+        assert_eq!(d.len(), 1);
+        assert!(d[0].message.contains("unclosed"));
+    }
+
+    #[test]
+    fn relaxed_store_fires_and_clears() {
+        let bad = "flag.store(true, Ordering::Relaxed);\n";
+        let d = run(relaxed_store, bad);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].lint, RELAXED_STORE);
+
+        let good = "// audit: relaxed-ok — idempotent one-way flag\n\
+                    flag.store(true, Ordering::Relaxed);\n";
+        assert!(run(relaxed_store, good).is_empty());
+
+        // Loads and non-Relaxed stores are out of scope.
+        let load = "let v = flag.load(Ordering::Relaxed);\n\
+                    flag.store(true, Ordering::Release);\n";
+        assert!(run(relaxed_store, load).is_empty());
+    }
+
+    #[test]
+    fn bench_registry_fires_and_clears() {
+        let stems = vec!["fig1_overview".to_string(), "orphan".to_string()];
+        let suite = "Suite { name: \"fig1_overview\", .. }";
+        let cargo = "[[bench]]\nname = \"fig1_overview\"\nharness = false\n";
+        let mut out = Vec::new();
+        bench_registry(&stems, suite, cargo, &mut out);
+        assert_eq!(out.len(), 1, "{out:?}");
+        assert_eq!(out[0].lint, BENCH_REGISTRY);
+        assert!(out[0].file.contains("orphan"));
+        assert!(out[0].message.contains("suite.rs"));
+        assert!(out[0].message.contains("Cargo.toml"));
+    }
+}

@@ -1,0 +1,277 @@
+//! `cagra audit` — the in-tree invariant checker for the unsafe /
+//! concurrent core (DESIGN.md §7).
+//!
+//! The repo's speed story rests on invariants that ordinary tests cannot
+//! see: every raw-pointer write justified, `Pod` confined to primitives,
+//! the hot path allocation-free, every bench registered, every relaxed
+//! store argued. This module machine-enforces them as six named lints
+//! over `src/`, `benches/`, and `tests/` — dependency-free (a hand-rolled
+//! scanner in [`scanner`], same ethos as `util/json.rs`), so the checker
+//! itself can run everywhere CI runs, including offline mirrors.
+//!
+//! Entry points: [`audit_tree`] (the whole crate, as CI runs it) and
+//! [`audit_paths`] (explicit files/dirs, as `cagra audit src/engine`
+//! runs it). Both return a [`Report`] whose diagnostics carry
+//! `file:line` positions ready for terminal output.
+
+pub mod lints;
+pub mod scanner;
+
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// One finding: a named lint firing at a source position.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diagnostic {
+    /// Display path, relative to the crate root (e.g.
+    /// `src/parallel/pool.rs`).
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// Lint name (one of [`lints::ALL_LINTS`]).
+    pub lint: &'static str,
+    /// Human-readable explanation.
+    pub message: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}: [{}] {}",
+            self.file, self.line, self.lint, self.message
+        )
+    }
+}
+
+/// The outcome of an audit run.
+#[derive(Debug, Default)]
+pub struct Report {
+    /// All findings, in file order then line order.
+    pub diagnostics: Vec<Diagnostic>,
+    /// Number of `.rs` files scanned.
+    pub files_scanned: usize,
+    /// Number of source lines carrying the `unsafe` keyword (the audited
+    /// surface — reported so the clean-run output still says what was
+    /// checked).
+    pub unsafe_sites: usize,
+}
+
+impl Report {
+    pub fn clean(&self) -> bool {
+        self.diagnostics.is_empty()
+    }
+}
+
+/// Run the per-file lints over one source text. `file` is the display
+/// path used in diagnostics.
+pub fn audit_source(file: &str, src: &str) -> Vec<Diagnostic> {
+    let lines = scanner::scan(src);
+    let mut out = Vec::new();
+    lints::safety_comment(file, &lines, &mut out);
+    lints::pod_allowlist(file, &lines, &mut out);
+    lints::nan_sort(file, &lines, &mut out);
+    lints::hot_path_alloc(file, &lines, &mut out);
+    lints::relaxed_store(file, &lines, &mut out);
+    out
+}
+
+/// Count the audited unsafe surface in one source text.
+fn count_unsafe_sites(src: &str) -> usize {
+    let kw = "unsafe";
+    scanner::scan(src)
+        .iter()
+        .filter(|l| scanner::has_word(&l.code, kw))
+        .count()
+}
+
+/// Recursively collect `.rs` files under `dir`, sorted for stable
+/// output. Non-`.rs` files (fixtures, data) are skipped by design —
+/// audit fixtures live under `tests/audit_fixtures/` as `.txt` precisely
+/// so the tree walk never trips over its own test inputs.
+fn walk_rs(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    let mut entries: Vec<PathBuf> = fs::read_dir(dir)?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .collect();
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            walk_rs(&path, out)?;
+        } else if path.extension().and_then(|e| e.to_str()) == Some("rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Resolve the crate directory from a user-supplied root: accepts either
+/// the crate dir itself (contains `src/`) or the repo root (contains
+/// `rust/src/`), so `cagra audit` works from both checkout layouts.
+pub fn resolve_crate_dir(root: &Path) -> Option<PathBuf> {
+    if root.join("src").is_dir() {
+        return Some(root.to_path_buf());
+    }
+    let nested = root.join("rust");
+    if nested.join("src").is_dir() {
+        return Some(nested);
+    }
+    None
+}
+
+/// Audit the whole crate at `root` (crate dir or repo root): every `.rs`
+/// file under `src/`, `benches/`, `tests/`, plus the tree-level
+/// bench-registry check.
+pub fn audit_tree(root: &Path) -> io::Result<Report> {
+    let crate_dir = resolve_crate_dir(root).ok_or_else(|| {
+        io::Error::new(
+            io::ErrorKind::NotFound,
+            format!("no `src/` under {} (or its `rust/` subdir)", root.display()),
+        )
+    })?;
+
+    let mut files = Vec::new();
+    for sub in ["src", "benches", "tests"] {
+        let dir = crate_dir.join(sub);
+        if dir.is_dir() {
+            walk_rs(&dir, &mut files)?;
+        }
+    }
+
+    let mut report = audit_files(&crate_dir, &files)?;
+
+    // Tree-level lint 5: bench registration. Raw text on purpose — the
+    // registry names are string literals, which the scanner blanks.
+    let bench_dir = crate_dir.join("benches");
+    if bench_dir.is_dir() {
+        let mut stems: Vec<String> = Vec::new();
+        for f in &files {
+            if f.starts_with(&bench_dir) {
+                // Only bench *targets* need registration: with
+                // `harness = false` every target defines `fn main`.
+                // Helper modules (`benches/common.rs`, included via
+                // `mod`) don't, and are exempt.
+                let src = fs::read_to_string(f).unwrap_or_default();
+                if !src.contains("fn main") {
+                    continue;
+                }
+                if let Some(stem) = f.file_stem().and_then(|s| s.to_str()) {
+                    stems.push(stem.to_string());
+                }
+            }
+        }
+        let suite_src = fs::read_to_string(crate_dir.join("src/bench/suite.rs"))
+            .unwrap_or_default();
+        let cargo_toml =
+            fs::read_to_string(crate_dir.join("Cargo.toml")).unwrap_or_default();
+        lints::bench_registry(&stems, &suite_src, &cargo_toml, &mut report.diagnostics);
+    }
+
+    sort_diagnostics(&mut report.diagnostics);
+    Ok(report)
+}
+
+/// Audit an explicit set of paths (files or directories). Display paths
+/// in diagnostics are relative to `base` when possible.
+pub fn audit_paths(base: &Path, paths: &[PathBuf]) -> io::Result<Report> {
+    let mut files = Vec::new();
+    for p in paths {
+        if p.is_dir() {
+            walk_rs(p, &mut files)?;
+        } else if p.is_file() {
+            files.push(p.clone());
+        } else {
+            return Err(io::Error::new(
+                io::ErrorKind::NotFound,
+                format!("no such file or directory: {}", p.display()),
+            ));
+        }
+    }
+    let mut report = audit_files(base, &files)?;
+    sort_diagnostics(&mut report.diagnostics);
+    Ok(report)
+}
+
+/// Scan each file and run the per-file lints.
+fn audit_files(base: &Path, files: &[PathBuf]) -> io::Result<Report> {
+    let mut report = Report::default();
+    for path in files {
+        let src = fs::read_to_string(path)?;
+        let display = path
+            .strip_prefix(base)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .into_owned();
+        report.unsafe_sites += count_unsafe_sites(&src);
+        report.diagnostics.extend(audit_source(&display, &src));
+        report.files_scanned += 1;
+    }
+    Ok(report)
+}
+
+fn sort_diagnostics(ds: &mut [Diagnostic]) {
+    ds.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.lint).cmp(&(b.file.as_str(), b.line, b.lint))
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn audit_source_runs_all_per_file_lints() {
+        let k = format!("un{}", "safe");
+        let src = format!(
+            "fn f() {{ {k} {{ g(); }} }}\n\
+             v.sort_by(|a, b| a.partial_cmp(b).unwrap());\n\
+             flag.store(true, Ordering::Relaxed);\n"
+        );
+        let ds = audit_source("multi.rs", &src);
+        let lints_hit: Vec<&str> = ds.iter().map(|d| d.lint).collect();
+        assert!(lints_hit.contains(&lints::SAFETY_COMMENT), "{ds:?}");
+        assert!(lints_hit.contains(&lints::NAN_SORT), "{ds:?}");
+        assert!(lints_hit.contains(&lints::RELAXED_STORE), "{ds:?}");
+    }
+
+    #[test]
+    fn diagnostics_display_as_file_line() {
+        let d = Diagnostic {
+            file: "src/x.rs".to_string(),
+            line: 7,
+            lint: lints::NAN_SORT,
+            message: "msg".to_string(),
+        };
+        assert_eq!(d.to_string(), "src/x.rs:7: [nan-sort] msg");
+    }
+
+    #[test]
+    fn unsafe_site_count_ignores_strings_and_idents() {
+        let k = format!("un{}", "safe");
+        let src = format!(
+            "// SAFETY: counted once\n{k} {{ g(); }}\n\
+             let s = \"{k}\";\nfn {k}_helper() {{}}\n"
+        );
+        assert_eq!(count_unsafe_sites(&src), 1);
+    }
+
+    #[test]
+    fn crate_dir_resolution() {
+        let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
+        assert_eq!(
+            resolve_crate_dir(manifest).as_deref(),
+            Some(manifest),
+            "crate dir resolves to itself"
+        );
+        if let Some(repo_root) = manifest.parent() {
+            if manifest.file_name().and_then(|n| n.to_str()) == Some("rust") {
+                assert_eq!(
+                    resolve_crate_dir(repo_root).as_deref(),
+                    Some(manifest),
+                    "repo root resolves to rust/"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,400 @@
+//! Line-oriented Rust source scanner for the audit pass.
+//!
+//! The lints in this module family need exactly one thing a plain
+//! line-by-line `grep` cannot give them: per line, *which characters are
+//! code and which are comment or string-literal contents*. A hand-rolled
+//! character state machine (same ethos as `util/json.rs` — no `syn`, no
+//! proc-macro machinery, no crates) is enough, because every invariant we
+//! enforce is lexical: "this token appears in code", "this marker appears
+//! in a comment".
+//!
+//! [`scan`] splits a source file into [`Line`]s. For each line it
+//! produces:
+//! - `code`: the raw text with comments and string/char-literal contents
+//!   blanked to spaces (so byte offsets still line up with the source),
+//! - `comment`: the concatenated text of any comments on that line.
+//!
+//! Handled: line comments (`//`, `///`, `//!`), nested block comments,
+//! normal and byte strings with escapes, raw strings `r#".."#` at any
+//! hash depth, and the char-literal vs lifetime ambiguity of `'`.
+
+/// One scanned source line.
+#[derive(Debug, Clone, Default)]
+pub struct Line {
+    /// The unmodified source line (no trailing newline).
+    pub raw: String,
+    /// Code text: comments and literal contents replaced by spaces.
+    pub code: String,
+    /// Comment text on this line (contents after `//` / inside `/* */`),
+    /// without the comment markers themselves.
+    pub comment: String,
+}
+
+/// Lexer state carried across lines.
+enum State {
+    Code,
+    /// Inside `/* ... */`; the depth supports Rust's nested block
+    /// comments.
+    Block(u32),
+    /// Inside a normal (or byte) string literal.
+    Str,
+    /// Inside a raw string literal closed by `"` followed by this many
+    /// `#` characters.
+    RawStr(u32),
+}
+
+/// Scan `src` into per-line code/comment views.
+pub fn scan(src: &str) -> Vec<Line> {
+    let chars: Vec<char> = src.chars().collect();
+    let mut lines = Vec::new();
+    let mut cur = Line::default();
+    let mut state = State::Code;
+    let mut i = 0usize;
+
+    // Push a char to the raw view and (blanked or not) to the code view.
+    macro_rules! put {
+        ($c:expr, code) => {{
+            cur.raw.push($c);
+            cur.code.push($c);
+        }};
+        ($c:expr, blank) => {{
+            cur.raw.push($c);
+            cur.code.push(' ');
+        }};
+    }
+
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            lines.push(std::mem::take(&mut cur));
+            i += 1;
+            continue;
+        }
+        match state {
+            State::Code => {
+                let next = chars.get(i + 1).copied();
+                if c == '/' && next == Some('/') {
+                    // Line comment: everything to end-of-line is comment
+                    // text. Skip the marker (and any further `/` or `!`
+                    // doc-comment sigils) before capturing.
+                    cur.raw.push_str("//");
+                    cur.code.push_str("  ");
+                    i += 2;
+                    while matches!(chars.get(i), Some('/') | Some('!')) {
+                        cur.raw.push(chars[i]);
+                        cur.code.push(' ');
+                        i += 1;
+                    }
+                    while i < chars.len() && chars[i] != '\n' {
+                        cur.raw.push(chars[i]);
+                        cur.code.push(' ');
+                        cur.comment.push(chars[i]);
+                        i += 1;
+                    }
+                } else if c == '/' && next == Some('*') {
+                    put!('/', blank);
+                    put!('*', blank);
+                    i += 2;
+                    state = State::Block(1);
+                } else if c == '"' {
+                    put!('"', code);
+                    i += 1;
+                    state = State::Str;
+                } else if c == 'r' || c == 'b' {
+                    // Possible raw/byte string prefix: r"..", r#"..."#,
+                    // b"..", br#"..."#. Only treat as a prefix when the
+                    // previous char is not part of an identifier (so
+                    // `attr`, `ptr` etc. never misfire).
+                    let prev_ident = i > 0 && is_ident_char(chars[i - 1]);
+                    let (hashes, quote_at) = raw_string_lookahead(&chars, i);
+                    if !prev_ident && quote_at > 0 {
+                        // Emit the prefix (r/b/#s) and opening quote as
+                        // code, then enter the appropriate string state.
+                        for &p in &chars[i..=quote_at] {
+                            put!(p, code);
+                        }
+                        i = quote_at + 1;
+                        state = if chars[quote_at - 1] == '#'
+                            || chars[quote_at - 1] == 'r'
+                        {
+                            State::RawStr(hashes)
+                        } else {
+                            State::Str // b"..": escapes apply
+                        };
+                    } else {
+                        put!(c, code);
+                        i += 1;
+                    }
+                } else if c == '\'' {
+                    // Char literal or lifetime. Heuristics that cover
+                    // real Rust: `'\...'` is a char; `'x'` (closing quote
+                    // two ahead) is a char; anything else (`'a`, `'static`)
+                    // is a lifetime and the `'` is plain code.
+                    if next == Some('\\') {
+                        put!('\'', code);
+                        i += 1;
+                        // Blank the escape until the closing quote.
+                        while i < chars.len() && chars[i] != '\'' && chars[i] != '\n' {
+                            if chars[i] == '\\' && i + 1 < chars.len() {
+                                put!(chars[i], blank);
+                                i += 1;
+                            }
+                            put!(chars[i], blank);
+                            i += 1;
+                        }
+                        if chars.get(i) == Some(&'\'') {
+                            put!('\'', code);
+                            i += 1;
+                        }
+                    } else if next.is_some() && chars.get(i + 2) == Some(&'\'') {
+                        put!('\'', code);
+                        put!(next.unwrap(), blank);
+                        put!('\'', code);
+                        i += 3;
+                    } else {
+                        put!('\'', code);
+                        i += 1;
+                    }
+                } else {
+                    put!(c, code);
+                    i += 1;
+                }
+            }
+            State::Block(depth) => {
+                let next = chars.get(i + 1).copied();
+                if c == '*' && next == Some('/') {
+                    put!('*', blank);
+                    put!('/', blank);
+                    i += 2;
+                    state = if depth == 1 {
+                        State::Code
+                    } else {
+                        State::Block(depth - 1)
+                    };
+                } else if c == '/' && next == Some('*') {
+                    put!('/', blank);
+                    put!('*', blank);
+                    i += 2;
+                    state = State::Block(depth + 1);
+                } else {
+                    cur.raw.push(c);
+                    cur.code.push(' ');
+                    cur.comment.push(c);
+                    i += 1;
+                }
+            }
+            State::Str => {
+                if c == '\\' {
+                    put!(c, blank);
+                    i += 1;
+                    if let Some(&esc) = chars.get(i) {
+                        if esc != '\n' {
+                            put!(esc, blank);
+                            i += 1;
+                        }
+                    }
+                } else if c == '"' {
+                    put!('"', code);
+                    i += 1;
+                    state = State::Code;
+                } else {
+                    put!(c, blank);
+                    i += 1;
+                }
+            }
+            State::RawStr(hashes) => {
+                if c == '"' && closes_raw(&chars, i, hashes) {
+                    put!('"', code);
+                    i += 1;
+                    for _ in 0..hashes {
+                        put!('#', code);
+                        i += 1;
+                    }
+                    state = State::Code;
+                } else {
+                    put!(c, blank);
+                    i += 1;
+                }
+            }
+        }
+    }
+    if !cur.raw.is_empty() {
+        lines.push(cur);
+    }
+    lines
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// If `chars[at..]` starts a raw/byte string prefix (`r`, `b`, `br`,
+/// `rb` plus optional `#`s then `"`), return `(hash_count,
+/// index_of_opening_quote)`; otherwise `(0, 0)`.
+fn raw_string_lookahead(chars: &[char], at: usize) -> (u32, usize) {
+    let mut j = at;
+    let mut saw_r = false;
+    // Up to two prefix letters: b, r (in either order, each at most once).
+    for _ in 0..2 {
+        match chars.get(j) {
+            Some('r') if !saw_r => {
+                saw_r = true;
+                j += 1;
+            }
+            Some('b') if j == at => {
+                j += 1;
+            }
+            _ => break,
+        }
+    }
+    if j == at {
+        return (0, 0);
+    }
+    let mut hashes = 0u32;
+    while chars.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    // `b".."` (no r, no hashes) is a plain byte string — handled by the
+    // caller as State::Str; raw forms require the `r`.
+    if chars.get(j) == Some(&'"') && (saw_r || hashes == 0) {
+        (hashes, j)
+    } else {
+        (0, 0)
+    }
+}
+
+/// Does the `"` at `chars[at]` terminate a raw string with `hashes` `#`s?
+fn closes_raw(chars: &[char], at: usize, hashes: u32) -> bool {
+    for k in 0..hashes as usize {
+        if chars.get(at + 1 + k) != Some(&'#') {
+            return false;
+        }
+    }
+    true
+}
+
+/// True when `word` occurs in `code` as a standalone token (not as a
+/// substring of a longer identifier). Used by the lints so that e.g. an
+/// identifier containing a keyword never misfires.
+pub fn has_word(code: &str, word: &str) -> bool {
+    let mut from = 0;
+    while let Some(pos) = code[from..].find(word) {
+        let start = from + pos;
+        let end = start + word.len();
+        let before_ok = start == 0
+            || !is_ident_char(code[..start].chars().next_back().unwrap());
+        let after_ok =
+            end >= code.len() || !is_ident_char(code[end..].chars().next().unwrap());
+        if before_ok && after_ok {
+            return true;
+        }
+        from = end;
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn line_comment_split() {
+        let l = scan("let x = 1; // set x\n");
+        assert_eq!(l.len(), 1);
+        assert_eq!(l[0].code.trim_end(), "let x = 1;");
+        assert_eq!(l[0].comment.trim(), "set x");
+    }
+
+    #[test]
+    fn doc_comment_is_comment() {
+        let l = scan("/// # Safety\n//! inner\nfn f() {}\n");
+        assert_eq!(l[0].comment.trim(), "# Safety");
+        assert_eq!(l[0].code.trim(), "");
+        assert_eq!(l[1].comment.trim(), "inner");
+        assert_eq!(l[2].code.trim(), "fn f() {}");
+    }
+
+    #[test]
+    fn string_contents_blanked() {
+        let l = scan("let s = \"// not a comment\"; f();\n");
+        assert!(l[0].comment.is_empty());
+        assert!(!l[0].code.contains("not a comment"));
+        assert!(l[0].code.contains("f();"));
+        // Offsets preserved: code and raw have equal length.
+        assert_eq!(l[0].code.len(), l[0].raw.len());
+    }
+
+    #[test]
+    fn escaped_quote_in_string() {
+        let l = scan("let s = \"a\\\"b\"; g();\n");
+        assert!(l[0].code.contains("g();"));
+    }
+
+    #[test]
+    fn raw_string_with_hashes() {
+        let l = scan("let s = r#\"has \"quotes\" and // slashes\"#; h();\n");
+        assert!(l[0].comment.is_empty());
+        assert!(!l[0].code.contains("slashes"));
+        assert!(l[0].code.contains("h();"));
+    }
+
+    #[test]
+    fn multiline_raw_string() {
+        let l = scan("let s = r#\"line one\nline two\"#;\nnext();\n");
+        assert_eq!(l.len(), 3);
+        assert!(!l[1].code.contains("line two"));
+        assert!(l[2].code.contains("next();"));
+    }
+
+    #[test]
+    fn nested_block_comment() {
+        let l = scan("a(); /* outer /* inner */ still */ b();\n");
+        assert!(l[0].code.contains("a();"));
+        assert!(l[0].code.contains("b();"));
+        assert!(!l[0].code.contains("inner"));
+        assert!(l[0].comment.contains("inner"));
+    }
+
+    #[test]
+    fn multiline_block_comment() {
+        let l = scan("x();/* one\ntwo\nthree */ y();\n");
+        assert_eq!(l.len(), 3);
+        assert!(l[1].comment.contains("two"));
+        assert_eq!(l[1].code.trim(), "");
+        assert!(l[2].code.contains("y();"));
+    }
+
+    #[test]
+    fn char_literal_vs_lifetime() {
+        let l = scan("let c = 'x'; fn f<'a>(v: &'a str) { g('\\n'); }\n");
+        let code = &l[0].code;
+        assert!(code.contains("fn f<'a>"), "lifetime kept: {code}");
+        assert!(!code.contains('x'), "char literal blanked: {code}");
+        assert!(code.contains("g("));
+    }
+
+    #[test]
+    fn identifier_not_raw_prefix() {
+        // `ptr`, `attr` end in r/b but must not start a raw string.
+        let l = scan("let attr = ptr; let b = \"s\";\n");
+        assert!(l[0].code.contains("let attr = ptr;"));
+    }
+
+    #[test]
+    fn byte_string_blanked() {
+        let l = scan("let b = b\"bytes // here\"; k();\n");
+        assert!(l[0].comment.is_empty());
+        assert!(l[0].code.contains("k();"));
+        assert!(!l[0].code.contains("here"));
+    }
+
+    #[test]
+    fn word_boundaries() {
+        assert!(has_word("unsafe fn f()", "unsafe"));
+        assert!(!has_word("fn unsafe_slice()", "unsafe"));
+        assert!(!has_word("fn an_unsafe()", "unsafe"));
+        assert!(has_word("(unsafe)", "unsafe"));
+        assert!(!has_word("", "unsafe"));
+    }
+}

@@ -37,6 +37,8 @@ pub fn superstep<P: VertexProgram>(
         for &u in pull.neighbors(v as VertexId) {
             acc = prog.reduce(acc, prog.send(&states[u as usize]));
         }
+        // SAFETY: each v in lo..hi belongs to exactly one task's range;
+        // v < n == out_slice.len().
         unsafe { out_slice.write(v, prog.apply(v as VertexId, acc, &states[v])) };
     });
 }
@@ -102,6 +104,7 @@ impl Prepared {
         let states = &mut self.states;
         parallel_for(states.len(), {
             let s = UnsafeSlice::new(states);
+            // SAFETY: each i touches only its own slot; i < len.
             move |i| unsafe {
                 s.get_mut(i).0 = 1.0 / n;
             }

@@ -171,6 +171,8 @@ impl Prepared {
                         for p in &merged {
                             acc += p[v];
                         }
+                        // SAFETY: each v in lo..hi belongs to exactly one
+                        // task's range; v < n == next.len().
                         unsafe { next.write(v, acc) };
                     }
                 });

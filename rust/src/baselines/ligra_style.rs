@@ -53,6 +53,8 @@ impl Prepared {
                     acc += rank[u as usize] / du; // per-edge division
                 }
             }
+            // SAFETY: each v in lo..hi belongs to exactly one task's
+            // range; v < n == next.len().
             unsafe { next.write(v, base + d * acc) };
         });
         std::mem::swap(&mut self.rank, &mut self.next);

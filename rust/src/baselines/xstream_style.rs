@@ -90,7 +90,9 @@ impl Prepared {
                 buffers.into_iter().map(|m| m.into_inner().unwrap()).collect();
             parallel_for_dynamic(bufs.len(), 1, |p| {
                 for &(v, upd) in &bufs[p] {
-                    // Safety: partition p owns its destination interval.
+                    // SAFETY: partition p owns its destination interval,
+                    // so no other task aliases v; v < n by shuffle
+                    // construction.
                     unsafe {
                         *next.get_mut(v as usize) += upd;
                     }

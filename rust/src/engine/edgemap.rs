@@ -68,6 +68,11 @@ impl Probe<'_> {
     }
 }
 
+// audit: hot-path — everything to the end marker runs once per traversal
+// level; the zero-alloc steady state (module docs) is machine-enforced
+// here by `cagra audit`'s hot-path-alloc lint. Pooled growth
+// (resize/reserve/push to high-water marks) is allowed; fresh-storage
+// idioms are not.
 /// Apply `update` over edges out of `frontier`; `g` is the out-edge CSR
 /// and `g_in` its transpose (used for pull mode). Returns the new
 /// frontier, whose storage is drawn from `scratch` — hand exhausted
@@ -192,7 +197,7 @@ where
                             && !out_flags[d as usize].swap(true, Ordering::Relaxed)
                         {
                             let k = cursor.fetch_add(1, Ordering::Relaxed);
-                            // Safety: each k handed to exactly one task;
+                            // SAFETY: each k handed to exactly one task;
                             // k < cap because winners are distinct and
                             // each consumes one of `out_work` edges.
                             unsafe { slots.write(k, d) };
@@ -210,6 +215,9 @@ where
     let mut out_ids = scratch.take_ids();
     out_ids.extend_from_slice(&scratch.push_slots[..new_len]);
     for &d in &out_ids {
+        // audit: relaxed-ok — reset happens after the parallel region
+        // joined (run_on_all returns only when every worker is done), so
+        // no thread can observe the flag concurrently.
         scratch.out_flags[d as usize].store(false, Ordering::Relaxed);
     }
     if let Some(ids) = owned {
@@ -281,7 +289,7 @@ where
             }
             for &s in g_in.neighbors(d) {
                 if probe.contains(s) && update(s, d) {
-                    // Safety: each d written by exactly one task.
+                    // SAFETY: each d written by exactly one task.
                     unsafe { out_slice.write(d as usize, true) };
                     // Ligra's early exit: once the destination is updated
                     // and cond would flip, stop scanning. We
@@ -361,6 +369,8 @@ where
     {
         let slots = crate::parallel::UnsafeSlice::new(&mut scratch.push_slots);
         let ids = &ids;
+        // SAFETY: each loop index i writes only slot i, and
+        // i < ids.len() ≤ push_slots.len() after the resize above.
         parallel_for(ids.len(), |i| unsafe {
             slots.write(i, f(ids[i]) as u32);
         });
@@ -374,6 +384,7 @@ where
     scratch.put_ids(ids);
     VertexSubset::from_ids(n, kept)
 }
+// audit: hot-path-end
 
 #[cfg(test)]
 mod tests {
@@ -392,6 +403,7 @@ mod tests {
     fn bfs_on_line_graph_push() {
         let (g, t) = line_graph(50);
         let parent: Vec<AtomicU32> = (0..50).map(|_| AtomicU32::new(u32::MAX)).collect();
+        // audit: relaxed-ok — single-threaded setup before the traversal.
         parent[0].store(0, Ordering::Relaxed);
         let mut scratch = EngineScratch::new(50);
         let mut frontier = VertexSubset::single(50, 0);
@@ -544,6 +556,7 @@ mod tests {
         let (g, t) = line_graph(64);
         let run_bfs = |scratch: &mut EngineScratch, poison: bool| {
             let parent: Vec<AtomicU32> = (0..64).map(|_| AtomicU32::new(u32::MAX)).collect();
+            // audit: relaxed-ok — single-threaded setup before the traversal.
             parent[0].store(0, Ordering::Relaxed);
             let mut frontier = VertexSubset::single(64, 0);
             while !frontier.is_empty() {

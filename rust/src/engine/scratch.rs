@@ -290,6 +290,7 @@ mod tests {
     #[should_panic(expected = "out_flags not cleared")]
     fn poison_catches_dirty_flags() {
         let mut s = EngineScratch::new(16);
+        // audit: relaxed-ok — single-threaded test setup.
         s.out_flags[4].store(true, Ordering::Relaxed);
         s.poison(1);
     }

@@ -29,6 +29,8 @@ use crate::segment::{SegmentBuffers, SegmentedCsr};
 ///
 /// `bufs` must be sized for `sg` (see [`SegmentBuffers::with_fill`]);
 /// its contents on entry never influence the result.
+// audit: hot-path — the generic segment-at-a-time sweep + merge; all
+// working storage comes in via SegmentBuffers (hot-path-alloc lint).
 pub fn segmented_edge_map<T, FC, FM>(
     sg: &SegmentedCsr,
     contrib: FC,
@@ -66,6 +68,8 @@ pub fn segmented_edge_map<T, FC, FM>(
                     for &u in &seg.sources[e0..e1] {
                         acc = merge_op(acc, contrib(u));
                     }
+                    // SAFETY: parallel_for_cost hands each dst index i to
+                    // exactly one task, and i < nd == buf.len().
                     unsafe { buf_slice.write(i, acc) };
                 }
             },
@@ -93,7 +97,11 @@ pub fn segmented_edge_map<T, FC, FM>(
                     #[allow(clippy::needless_range_loop)] // parallel dst_ids/vals
                     for i in starts[b] as usize..starts[b + 1] as usize {
                         let d = seg.dst_ids[i] as usize;
-                        // Safety: block b touched by exactly one task.
+                        // SAFETY: block b is handed to exactly one task,
+                        // and every dst id in block b lies in that
+                        // block's disjoint vertex range, so no other task
+                        // can alias `out[d]`; d < out.len() by partition
+                        // construction.
                         unsafe {
                             let cell = out_slice.get_mut(d);
                             *cell = merge_op(*cell, vals[i]);
@@ -105,6 +113,7 @@ pub fn segmented_edge_map<T, FC, FM>(
     );
     crate::obs::recorder::record_merge(t_merge);
 }
+// audit: hot-path-end
 
 /// Reusable f64 entry point mirroring the Ligra-extension signature, on
 /// top of the specialized float path.

@@ -51,6 +51,10 @@ impl Csr {
             let (s, d) = edges[i];
             let k = cursors[s as usize].fetch_add(1, Ordering::Relaxed) as u64;
             let idx = offsets[s as usize] + k;
+            // SAFETY: offsets[s] + unique-cursor-ticket < offsets[s+1] ≤
+            // targets.len(), and the atomic fetch_add hands each edge of
+            // `s` a distinct k — so every write hits a distinct in-bounds
+            // index.
             unsafe { tslice.write(idx as usize, d) };
         });
         Csr {
@@ -119,6 +123,9 @@ impl Csr {
                 for &v in self.neighbors(u as VertexId) {
                     let k = cursors[v as usize].fetch_add(1, Ordering::Relaxed) as u64;
                     let idx = offsets[v as usize] + k;
+                    // SAFETY: idx = offsets[v] + unique cursor ticket for
+                    // v, so writes are disjoint and < offsets[v+1] ≤
+                    // targets.len() (offsets built from in-degrees).
                     unsafe { tslice.write(idx as usize, u as VertexId) };
                 }
             }
@@ -144,9 +151,12 @@ impl Csr {
                 if lo == hi {
                     return;
                 }
-                // Safety: [lo,hi) ranges are disjoint per v.
-                let slice =
-                    unsafe { std::slice::from_raw_parts_mut(ts.get_mut(lo) as *mut VertexId, hi - lo) };
+                // SAFETY: neighbor ranges [lo,hi) are disjoint across v
+                // (offsets are monotone) and hi ≤ targets.len(). Uses
+                // slice_mut — which derives from the base pointer — not a
+                // widened get_mut(lo) reference, whose provenance would
+                // cover a single element.
+                let slice = unsafe { ts.slice_mut(lo, hi - lo) };
                 slice.sort_unstable();
             });
         }
@@ -190,6 +200,9 @@ impl Csr {
         parallel_for(n, |p| {
             let old = inv[p];
             for (idx, &w) in (offsets[p] as usize..).zip(self.neighbors(old)) {
+                // SAFETY: each new-id p owns the disjoint output range
+                // offsets[p]..offsets[p+1] (length = degree(old)), so
+                // writes are in-bounds and race-free across the loop.
                 unsafe { ts.write(idx, perm[w as usize]) };
             }
         });

@@ -33,6 +33,7 @@
 //! via the PJRT C API.
 
 pub mod util;
+pub mod audit;
 pub mod parallel;
 pub mod graph;
 pub mod reorder;

@@ -15,6 +15,7 @@
 //! cagra bench diff baseline.json new.json --tolerance 0.1
 //! cagra bench merge out/ --out baseline.json
 //! cagra artifacts
+//! cagra audit   # repo invariant checker: SAFETY comments, Pod allowlist, …
 //! ```
 
 use cagra::apps::registry;
@@ -32,7 +33,7 @@ use cagra::util::{config::Config, fmt_bytes, fmt_count};
 
 const SUBCOMMANDS: &[&str] = &[
     "run", "batch", "serve", "loadgen", "apps", "gen", "inspect", "simulate", "expansion",
-    "cache", "bench", "trace", "artifacts", "help",
+    "cache", "bench", "trace", "audit", "artifacts", "help",
 ];
 
 fn main() {
@@ -50,6 +51,7 @@ fn main() {
         Some("cache") => cmd_cache(&args),
         Some("bench") => cmd_bench(&args),
         Some("trace") => cmd_trace(&args),
+        Some("audit") => cmd_audit(&args),
         Some("artifacts") => cmd_artifacts(),
         _ => {
             usage();
@@ -92,6 +94,8 @@ fn usage() {
          \x20 bench      bench-result tools          ls [--names] | diff <baseline> <new> [--tolerance F]\n\
          \x20            [--sigma F] [--allow-missing] | merge <file-or-dir>... --out FILE\n\
          \x20 trace      inspect a run report        <report.json> [--chrome out.json]\n\
+         \x20 audit      invariant checker (DESIGN.md §7)   [paths…] [--fix-list]\n\
+         \x20            no paths: audit the whole crate (src/, benches/, tests/); exits 1 on findings\n\
          \x20 artifacts  list PJRT artifacts and check they compile\n\
          \n\
          apps:     {}\n\
@@ -703,6 +707,55 @@ fn cmd_bench_merge(args: &Args) -> anyhow::Result<()> {
         merged.suites.len(),
         merged.case_count()
     );
+    Ok(())
+}
+
+/// `cagra audit`: run the in-tree invariant checker (DESIGN.md §7).
+///
+/// With no positional paths, audits the whole crate the way CI does
+/// (resolving the crate dir from the current directory, so it works from
+/// both the repo root and `rust/`). With paths, audits just those files
+/// or directories — the incremental pre-commit workflow. `--fix-list`
+/// switches to a terse `file:line:lint` listing for tooling.
+fn cmd_audit(args: &Args) -> anyhow::Result<()> {
+    use cagra::audit;
+
+    let report = if args.positional.is_empty() {
+        let cwd = std::env::current_dir()?;
+        audit::audit_tree(&cwd)?
+    } else {
+        let paths: Vec<std::path::PathBuf> =
+            args.positional.iter().map(std::path::PathBuf::from).collect();
+        let base = std::env::current_dir()?;
+        audit::audit_paths(&base, &paths)?
+    };
+
+    if args.has_flag("fix-list") {
+        for d in &report.diagnostics {
+            println!("{}:{}:{}", d.file, d.line, d.lint);
+        }
+    } else {
+        for d in &report.diagnostics {
+            println!("{d}");
+        }
+        if report.clean() {
+            println!(
+                "audit OK: {} file(s) scanned, {} unsafe site(s) audited, 0 findings",
+                report.files_scanned, report.unsafe_sites
+            );
+        } else {
+            println!(
+                "audit FAILED: {} finding(s) across {} file(s) scanned \
+                 ({} unsafe site(s) audited)",
+                report.diagnostics.len(),
+                report.files_scanned,
+                report.unsafe_sites
+            );
+        }
+    }
+    if !report.clean() {
+        anyhow::bail!("audit found {} violation(s)", report.diagnostics.len());
+    }
     Ok(())
 }
 

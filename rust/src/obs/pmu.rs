@@ -168,6 +168,10 @@ mod imp {
     /// perf_event_open(attr, pid=0 (this thread), cpu=-1 (any), no group).
     fn open_counter(config: u64) -> Option<c_int> {
         let attr = counting_attr(config);
+        // SAFETY: `attr` is a fully-initialized, correctly-sized struct
+        // that outlives the call (the kernel copies it before returning);
+        // the remaining arguments are plain integers. A refusing kernel
+        // returns a negative fd, handled below — no UB on failure.
         let fd = unsafe {
             syscall(
                 SYS_PERF_EVENT_OPEN,
@@ -207,6 +211,10 @@ mod imp {
         /// Reset and start all available counters.
         pub fn start(&mut self) {
             for fd in self.fds.iter().flatten() {
+                // SAFETY: fd is a live perf-event fd we opened (closed
+                // only in Drop); these ioctls take no pointer arguments,
+                // so the worst a bad request could do is return an error
+                // we deliberately ignore (counter stays disabled).
                 unsafe {
                     ioctl(*fd, PERF_EVENT_IOC_RESET, 0_i32);
                     ioctl(*fd, PERF_EVENT_IOC_ENABLE, 0_i32);
@@ -219,10 +227,13 @@ mod imp {
             let mut vals = [0u64; 4];
             for (slot, fd) in self.fds.iter().enumerate() {
                 let Some(fd) = fd else { continue };
+                // SAFETY: live owned fd, no pointer argument (see start).
                 unsafe {
                     ioctl(*fd, PERF_EVENT_IOC_DISABLE, 0_i32);
                 }
                 let mut v: u64 = 0;
+                // SAFETY: reads at most 8 bytes into a valid, exclusive
+                // 8-byte buffer (`&mut v`) that lives across the call.
                 let n = unsafe { read(*fd, &mut v as *mut u64 as *mut c_void, 8) };
                 if n == 8 {
                     vals[slot] = v;
@@ -240,6 +251,8 @@ mod imp {
     impl Drop for PmuGroup {
         fn drop(&mut self) {
             for fd in self.fds.iter().flatten() {
+                // SAFETY: each fd was opened by open_counter and is
+                // closed exactly once, here.
                 unsafe {
                     close(*fd);
                 }

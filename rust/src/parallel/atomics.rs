@@ -102,12 +102,24 @@ impl AtomicF32 {
 
 /// View a `&mut [f64]` as `&[AtomicF64]` (same layout; `repr(transparent)`).
 pub fn as_atomic_f64(xs: &mut [f64]) -> &[AtomicF64] {
-    unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const AtomicF64, xs.len()) }
+    let len = xs.len();
+    // SAFETY: AtomicF64 is repr(transparent) over AtomicU64, which has
+    // the same size/alignment as f64, so the cast is layout-valid. The
+    // pointer comes from `as_mut_ptr` on the exclusive borrow (NOT
+    // `as_ptr`, whose shared reborrow would strip write provenance under
+    // Stacked Borrows — the atomics write through this pointer). The
+    // `&mut` is reborrowed for the returned lifetime, so no other access
+    // aliases the atomics while the view lives.
+    unsafe { std::slice::from_raw_parts(xs.as_mut_ptr() as *const AtomicF64, len) }
 }
 
 /// View a `&mut [f32]` as `&[AtomicF32]`.
 pub fn as_atomic_f32(xs: &mut [f32]) -> &[AtomicF32] {
-    unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const AtomicF32, xs.len()) }
+    let len = xs.len();
+    // SAFETY: as for `as_atomic_f64` — transparent layout over
+    // AtomicU32, write provenance retained via `as_mut_ptr`, exclusivity
+    // for the view's lifetime from the `&mut` reborrow.
+    unsafe { std::slice::from_raw_parts(xs.as_mut_ptr() as *const AtomicF32, len) }
 }
 
 #[cfg(test)]

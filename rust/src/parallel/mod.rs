@@ -229,7 +229,16 @@ pub struct UnsafeSlice<'a, T> {
     _marker: std::marker::PhantomData<&'a mut [T]>,
 }
 
+// SAFETY: UnsafeSlice is a lifetime-tagged `*mut T` + len over an
+// exclusively-borrowed slice. Sending it to another thread is morally
+// sending disjoint `&mut T`s, which needs exactly `T: Send` (no `Sync`
+// bound: the disjointness contract on `write`/`get_mut`/`slice_mut`
+// means no element is ever *shared* between threads, only partitioned).
 unsafe impl<T: Send> Send for UnsafeSlice<'_, T> {}
+// SAFETY: `&UnsafeSlice` only exposes writes/reborrows of disjoint
+// elements (the caller contract on every unsafe method); with that
+// contract upheld, concurrent use from many threads is a partition of
+// the slice into per-thread `&mut T`s — again requiring only `T: Send`.
 unsafe impl<T: Send> Sync for UnsafeSlice<'_, T> {}
 
 impl<'a, T> UnsafeSlice<'a, T> {
@@ -256,6 +265,9 @@ impl<'a, T> UnsafeSlice<'a, T> {
     #[inline]
     pub unsafe fn write(&self, i: usize, v: T) {
         debug_assert!(i < self.len);
+        // SAFETY: `i < len` (caller contract) keeps the offset in
+        // bounds of the borrowed slice; exclusivity at index `i` is the
+        // caller's disjointness guarantee.
         unsafe { *self.ptr.add(i) = v };
     }
 
@@ -267,7 +279,30 @@ impl<'a, T> UnsafeSlice<'a, T> {
     #[allow(clippy::mut_from_ref)]
     pub unsafe fn get_mut(&self, i: usize) -> &mut T {
         debug_assert!(i < self.len);
+        // SAFETY: in bounds by `i < len` (caller contract); producing
+        // `&mut` is exclusive because no other thread touches index `i`
+        // (caller contract). NOTE the provenance of the result covers
+        // only element `i` — widening it to a longer slice is UB; use
+        // `slice_mut` for ranges.
         unsafe { &mut *self.ptr.add(i) }
+    }
+
+    /// Reborrow the subrange `lo..lo + len` as a mutable slice.
+    ///
+    /// # Safety
+    /// `lo + len <= self.len()`, and no other thread concurrently
+    /// accesses any index in `lo..lo + len`. Unlike taking `get_mut(lo)`
+    /// and widening it (which is UB — that reference's provenance spans
+    /// one element), the returned slice derives straight from the base
+    /// pointer, whose provenance covers the whole underlying slice.
+    #[inline]
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn slice_mut(&self, lo: usize, len: usize) -> &mut [T] {
+        debug_assert!(lo.checked_add(len).is_some_and(|hi| hi <= self.len));
+        // SAFETY: the range is in bounds (caller contract, debug-checked
+        // above) and exclusively owned by this thread for the duration
+        // of the borrow (caller's disjointness contract).
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.add(lo), len) }
     }
 }
 
@@ -350,6 +385,7 @@ mod tests {
     fn unsafe_slice_disjoint_writes() {
         let mut data = vec![0u64; 1000];
         let s = UnsafeSlice::new(&mut data);
+        // SAFETY: each loop index writes only its own slot; i < 1000.
         parallel_for(1000, |i| unsafe { s.write(i, i as u64 * 3) });
         assert!(data.iter().enumerate().all(|(i, &v)| v == i as u64 * 3));
     }

@@ -14,13 +14,19 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Condvar, Mutex, OnceLock};
 
 struct JobSlot {
-    /// Type-erased `&dyn Fn(usize)` valid for the duration of the epoch.
-    ptr: Option<(*const (), *const ())>,
+    /// Lifetime-erased `&dyn Fn(usize)` valid for the duration of the
+    /// epoch. A first-class raw wide pointer (NOT a `(data, vtable)`
+    /// tuple: the layout of fat pointers is unspecified, so the old
+    /// transmute-to-tuple trick was UB by layout assumption).
+    ptr: Option<*const (dyn Fn(usize) + Sync)>,
     epoch: u64,
 }
 
-// The raw pointers are only dereferenced while `run` is blocked waiting,
-// which keeps the referent alive; see `run`.
+// SAFETY: JobSlot crosses threads only inside `Shared.slot`'s Mutex, and
+// the pointer is only dereferenced between the epoch publish and the
+// done-count handshake in `run`, during which `run` keeps the referent
+// borrowed (it does not return until every worker reports done). The
+// pointee is `Sync`, so shared calls from many workers are sound.
 unsafe impl Send for JobSlot {}
 
 struct Shared {
@@ -39,15 +45,6 @@ pub struct ThreadPool {
     n_threads: usize,
     running: AtomicBool,
     epoch: AtomicU64,
-}
-
-fn decompose(f: &(dyn Fn(usize) + Sync)) -> (*const (), *const ()) {
-    // A &dyn fat pointer is (data, vtable); transmute via raw parts.
-    unsafe { std::mem::transmute::<&(dyn Fn(usize) + Sync), (*const (), *const ())>(f) }
-}
-
-unsafe fn recompose<'a>(parts: (*const (), *const ())) -> &'a (dyn Fn(usize) + Sync) {
-    unsafe { std::mem::transmute::<(*const (), *const ()), &(dyn Fn(usize) + Sync)>(parts) }
 }
 
 impl ThreadPool {
@@ -101,7 +98,10 @@ impl ThreadPool {
         let epoch = self.epoch.fetch_add(1, Ordering::Relaxed) + 1;
         {
             let mut slot = self.shared.slot.lock().unwrap();
-            slot.ptr = Some(decompose(f));
+            // Plain unsizing coercion to a raw wide pointer — no unsafe
+            // here; the lifetime erasure is accounted for where the
+            // pointer is dereferenced (worker_loop).
+            slot.ptr = Some(f as *const (dyn Fn(usize) + Sync));
             slot.epoch = epoch;
             self.shared.work_cv.notify_all();
         }
@@ -135,7 +135,12 @@ fn worker_loop(shared: &'static Shared, worker_id: usize) {
             last_epoch = slot.epoch;
             slot.ptr.expect("job pointer set with epoch")
         };
-        let f = unsafe { recompose(parts) };
+        // SAFETY: `parts` was published under the slot mutex together
+        // with a fresh epoch, and `run` blocks until this worker bumps
+        // the done count below — so the `&dyn Fn` behind the pointer is
+        // live for the whole call. The closure is `Sync`, so calling it
+        // concurrently from every worker is sound.
+        let f = unsafe { &*parts };
         f(worker_id);
         let mut done = shared.done.lock().unwrap();
         *done += 1;

@@ -109,6 +109,8 @@ pub fn unpermute<T: Copy + Default + Send + Sync>(values: &[T], perm: &[VertexId
     assert_eq!(values.len(), perm.len());
     let mut out = vec![T::default(); values.len()];
     let slice = crate::parallel::UnsafeSlice::new(&mut out);
+    // SAFETY: perm is a bijection on 0..len, so each old id writes a
+    // distinct in-bounds slot.
     parallel_for(perm.len(), |old| unsafe {
         slice.write(old, values[perm[old] as usize]);
     });

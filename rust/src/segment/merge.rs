@@ -72,6 +72,8 @@ impl MergePlan {
 
 /// Parallel cache-aware merge: accumulate every segment's sparse updates
 /// into `out` (dense). `out` must be pre-initialized; values are added.
+// audit: hot-path — the §4.3 merge runs once per iteration; everything
+// it touches is caller-owned (hot-path-alloc lint).
 pub fn merge(sg: &SegmentedCsr, buffers: &SegmentBuffers, out: &mut [f64]) {
     let plan = &sg.merge_plan;
     let nb = plan.num_blocks;
@@ -93,9 +95,10 @@ pub fn merge(sg: &SegmentedCsr, buffers: &SegmentBuffers, out: &mut [f64]) {
                     // Sequential read of (id, value) pairs; dense write
                     // into the L1-resident output block. Branch-free body;
                     // bounds checks lifted (§Perf change 2).
-                    // Safety: cursors are within dst_ids/vals by
+                    // SAFETY: cursors are within dst_ids/vals by
                     // construction; blocks partition the id range so block
-                    // b is owned by exactly one task.
+                    // b is owned by exactly one task (no aliased out[d]),
+                    // and every d < out.len() by partition construction.
                     unsafe {
                         for i in i0..i1 {
                             let d = *seg.dst_ids.get_unchecked(i) as usize;
@@ -107,6 +110,7 @@ pub fn merge(sg: &SegmentedCsr, buffers: &SegmentBuffers, out: &mut [f64]) {
         },
     );
 }
+// audit: hot-path-end
 
 /// Serial reference merge (for tests and the merge-cost ablation).
 pub fn merge_serial(sg: &SegmentedCsr, buffers: &SegmentBuffers, out: &mut [f64]) {

@@ -106,7 +106,8 @@ impl SegmentedCsr {
         {
             let seg_slice = UnsafeSlice::new(&mut segments);
             parallel_for(k, |s| {
-                // Safety: each s writes only its own element.
+                // SAFETY: each loop index s writes only its own element,
+                // and s < k == segments.len().
                 let seg = unsafe { seg_slice.get_mut(s) };
                 build_segment(g, seg, seg_edge_counts[s] as usize);
             });
@@ -143,6 +144,9 @@ impl SegmentedCsr {
     /// degree-sorted head does not imbalance threads (§3.2). All threads
     /// read the same `[src_lo, src_hi)` slice of source data — the shared
     /// cache-resident working set that makes segmenting scale (§4.2).
+    // audit: hot-path — per-segment sweeps + aggregate driver, once per
+    // iteration per segment; buffers are caller-provided (hot-path-alloc
+    // lint enforces no fresh allocation through the end marker).
     pub fn process_segment<F>(&self, seg_idx: usize, contrib: F, out: &mut [f64])
     where
         F: Fn(VertexId) -> f64 + Sync,
@@ -167,7 +171,8 @@ impl SegmentedCsr {
                     for &u in &seg.sources[e0..e1] {
                         acc += contrib(u);
                     }
-                    // Safety: destination ranges are disjoint across tasks.
+                    // SAFETY: each local destination i is handed to
+                    // exactly one task and i < nd == out.len().
                     unsafe { out_slice.write(i, acc) };
                 }
             },
@@ -193,8 +198,11 @@ impl SegmentedCsr {
                 for i in lo..hi {
                     let e0 = seg.offsets[i] as usize;
                     let e1 = seg.offsets[i + 1] as usize;
-                    // Safety: sources are < num_vertices by construction;
-                    // destination ranges are disjoint across tasks.
+                    // SAFETY: sources are < num_vertices ≤ contrib.len()
+                    // by construction (asserted above), edge ranges
+                    // e0..e1 are within seg.sources, and each local
+                    // destination i is handed to exactly one task with
+                    // i < nd == out.len().
                     // 4 accumulators break the serial FP-add dependency
                     // chain (~4 cyc/edge -> ~1 cyc/edge on high-degree
                     // destinations; §Perf change 3).
@@ -250,6 +258,7 @@ impl SegmentedCsr {
         merge(self, buffers, out);
         crate::obs::recorder::record_merge(t_merge);
     }
+    // audit: hot-path-end
 
     /// Bytes of auxiliary structure (for preprocessing-cost reports).
     pub fn bytes(&self) -> usize {

@@ -301,6 +301,8 @@ impl ArtifactStore {
     /// `--no-mmap`). Off means every hit decodes — the cold-path
     /// comparison arm of the CI warm sequence.
     pub fn set_mmap_enabled(&self, enabled: bool) {
+        // audit: relaxed-ok — advisory toggle; readers only choose a code
+        // path, no data is published through it.
         self.mmap_enabled.store(enabled, Ordering::Relaxed);
     }
 

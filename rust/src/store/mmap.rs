@@ -51,10 +51,14 @@ mod imp {
         len: usize,
     }
 
-    // Safety: PROT_READ + MAP_PRIVATE pages never change under us (see
-    // module docs for the no-truncate store contract), so shared
-    // immutable access from any thread is sound.
+    // SAFETY: the region owns its mapping outright (no thread-affine
+    // state; munmap is valid from any thread), so moving it across
+    // threads is sound. PROT_READ + MAP_PRIVATE pages never change under
+    // us (see module docs for the no-truncate store contract).
     unsafe impl Send for MappedRegion {}
+    // SAFETY: all shared access is read-only over immutable PROT_READ
+    // pages — `&MappedRegion` exposes no mutation, so concurrent readers
+    // cannot race.
     unsafe impl Sync for MappedRegion {}
 
     impl MappedRegion {
@@ -74,7 +78,7 @@ mod imp {
                 .try_into()
                 .map_err(|_| anyhow::anyhow!("{}: file too large to map", path.display()))?;
             let fd: c_int = file.as_raw_fd();
-            // Safety: a fresh anonymous address (addr = null), a length we
+            // SAFETY: a fresh anonymous address (addr = null), a length we
             // just measured, and an fd we own for the duration of the call.
             let addr = unsafe {
                 syscall(
@@ -111,14 +115,16 @@ mod imp {
 
         /// The mapped file as an immutable byte slice.
         pub fn bytes(&self) -> &[u8] {
-            // Safety: ptr/len describe a live PROT_READ mapping.
+            // SAFETY: ptr/len describe a live PROT_READ mapping (held
+            // alive by &self), and the pages are immutable for the
+            // borrow's lifetime.
             unsafe { std::slice::from_raw_parts(self.ptr.as_ptr(), self.len) }
         }
     }
 
     impl Drop for MappedRegion {
         fn drop(&mut self) {
-            // Safety: exactly the region mmap returned; errors on unmap
+            // SAFETY: exactly the region mmap returned; errors on unmap
             // are unrecoverable and ignored (address space leak at worst).
             unsafe {
                 syscall(SYS_MUNMAP, self.ptr.as_ptr() as c_long, self.len as c_long);

@@ -32,8 +32,14 @@ use std::sync::Arc;
 /// any byte pattern valid.
 pub unsafe trait Pod: Copy + Send + Sync + 'static {}
 
+// SAFETY: u8 is Copy, size 1, no padding or niches; every bit pattern is
+// a valid value and the on-disk byte is the in-memory byte.
 unsafe impl Pod for u8 {}
+// SAFETY: u32 is Copy, fixed 4-byte little-endian layout on the
+// platforms where mapping is enabled (mmap.rs gates on little-endian),
+// no padding/niches, any bit pattern valid.
 unsafe impl Pod for u32 {}
+// SAFETY: as for u32, with a fixed 8-byte little-endian layout.
 unsafe impl Pod for u64 {}
 
 enum Repr<T: Pod> {
@@ -94,7 +100,7 @@ impl<T: Pod> ArcSlice<T> {
                 byte_offset,
                 len,
             } => {
-                // Safety: from_region checked bounds + alignment against
+                // SAFETY: from_region checked bounds + alignment against
                 // the immutable PROT_READ region, which `region` keeps
                 // alive; T is Pod so any bytes are a valid value.
                 unsafe {

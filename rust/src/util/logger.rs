@@ -50,12 +50,15 @@ fn level() -> u8 {
         .ok()
         .and_then(|s| Level::parse(&s))
         .unwrap_or(Level::Info) as u8;
+    // audit: relaxed-ok — idempotent one-way cache of the env parse;
+    // racing initializers store the same value.
     LEVEL.store(parsed, Ordering::Relaxed);
     parsed
 }
 
 /// Override the log level programmatically.
 pub fn set_level(l: Level) {
+    // audit: relaxed-ok — advisory verbosity knob; no data depends on it.
     LEVEL.store(l as u8, Ordering::Relaxed);
 }
 

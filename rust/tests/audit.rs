@@ -1,0 +1,160 @@
+//! Integration tests for `cagra audit` (DESIGN.md §7): the fixture
+//! suite (each lint fires on its `.bad.txt` and stays quiet on its
+//! `.good.txt`), the self-check (the real tree must be clean — this is
+//! the same gate CI runs), and the CLI exit-code contract.
+//!
+//! Fixtures are `.txt` on purpose: the tree walker only collects `.rs`,
+//! so the bad fixtures can carry real violations without tripping the
+//! self-check below.
+
+use cagra::audit::{self, lints};
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+fn crate_dir() -> &'static Path {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+}
+
+fn fixture(name: &str) -> (PathBuf, String) {
+    let path = crate_dir().join("tests/audit_fixtures").join(name);
+    let src = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("fixture {}: {e}", path.display()));
+    (path, src)
+}
+
+/// Lints fired by a fixture, deduplicated in order.
+fn lints_hit(name: &str) -> Vec<&'static str> {
+    let (_, src) = fixture(name);
+    let mut hit = Vec::new();
+    for d in audit::audit_source(name, &src) {
+        if !hit.contains(&d.lint) {
+            hit.push(d.lint);
+        }
+    }
+    hit
+}
+
+#[test]
+fn each_bad_fixture_trips_exactly_its_lint() {
+    let cases = [
+        ("safety_comment.bad.txt", lints::SAFETY_COMMENT),
+        ("pod_allowlist.bad.txt", lints::POD_ALLOWLIST),
+        ("nan_sort.bad.txt", lints::NAN_SORT),
+        ("hot_path_alloc.bad.txt", lints::HOT_PATH_ALLOC),
+        ("hot_path_unclosed.bad.txt", lints::HOT_PATH_ALLOC),
+        ("relaxed_store.bad.txt", lints::RELAXED_STORE),
+    ];
+    for (name, lint) in cases {
+        assert_eq!(lints_hit(name), vec![lint], "{name}");
+    }
+}
+
+#[test]
+fn each_good_fixture_is_clean() {
+    for name in [
+        "safety_comment.good.txt",
+        "pod_allowlist.good.txt",
+        "nan_sort.good.txt",
+        "hot_path_alloc.good.txt",
+        "relaxed_store.good.txt",
+        "waiver.good.txt",
+    ] {
+        assert_eq!(lints_hit(name), Vec::<&str>::new(), "{name}");
+    }
+}
+
+#[test]
+fn bad_fixture_diagnostics_carry_position_and_prose() {
+    let (_, src) = fixture("nan_sort.bad.txt");
+    let ds = audit::audit_source("nan_sort.bad.txt", &src);
+    assert_eq!(ds.len(), 1);
+    assert_eq!(ds[0].line, 2, "the sort is on line 2");
+    let rendered = ds[0].to_string();
+    assert!(
+        rendered.starts_with("nan_sort.bad.txt:2: [nan-sort]"),
+        "diagnostic renders as file:line: [lint]: {rendered}"
+    );
+    assert!(!ds[0].message.is_empty());
+}
+
+/// The gate itself: the real tree must audit clean. Any regression —
+/// a raw-pointer write without a SAFETY comment, an allocation sneaking
+/// into a hot-path region, an unjustified relaxed store — fails this
+/// test before it ever reaches CI.
+#[test]
+fn self_check_tree_is_clean() {
+    let report = audit::audit_tree(crate_dir()).expect("tree walk");
+    let findings: Vec<String> = report.diagnostics.iter().map(|d| d.to_string()).collect();
+    assert!(
+        report.clean(),
+        "the tree must be audit-clean; findings:\n{}",
+        findings.join("\n")
+    );
+    // Sanity: the walk actually covered the crate and its audited
+    // surface (the exact numbers grow with the repo; these are floors).
+    assert!(report.files_scanned >= 40, "scanned {}", report.files_scanned);
+    assert!(report.unsafe_sites >= 30, "audited {}", report.unsafe_sites);
+}
+
+#[test]
+fn audit_paths_accepts_explicit_files_and_dirs() {
+    let base = crate_dir();
+    // Explicit non-.rs file: audited even though the walker skips it.
+    let bad = base.join("tests/audit_fixtures/relaxed_store.bad.txt");
+    let report = audit::audit_paths(base, &[bad]).expect("audit file");
+    assert_eq!(report.files_scanned, 1);
+    assert!(!report.clean());
+    assert_eq!(report.diagnostics[0].lint, lints::RELAXED_STORE);
+    // Display path is base-relative.
+    assert_eq!(
+        report.diagnostics[0].file,
+        "tests/audit_fixtures/relaxed_store.bad.txt"
+    );
+    // A directory audits its .rs files (fixtures are .txt — skipped).
+    let report = audit::audit_paths(base, &[base.join("src/audit")]).expect("audit dir");
+    assert!(report.files_scanned >= 3);
+    assert!(report.clean(), "{:?}", report.diagnostics);
+    // A missing path is an error, not silence.
+    assert!(audit::audit_paths(base, &[base.join("src/nonexistent")]).is_err());
+}
+
+#[test]
+fn cli_exit_codes_and_fix_list() {
+    let bin = env!("CARGO_BIN_EXE_cagra");
+    // Clean tree: exit 0, summary line.
+    let out = Command::new(bin)
+        .arg("audit")
+        .current_dir(crate_dir())
+        .output()
+        .expect("run cagra audit");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        out.status.success(),
+        "clean tree must exit 0; stdout:\n{stdout}"
+    );
+    assert!(stdout.contains("audit OK"), "{stdout}");
+
+    // A bad fixture: nonzero exit, file:line diagnostic on stdout.
+    let out = Command::new(bin)
+        .args(["audit", "tests/audit_fixtures/nan_sort.bad.txt"])
+        .current_dir(crate_dir())
+        .output()
+        .expect("run cagra audit <file>");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(!out.status.success(), "violations must exit nonzero");
+    assert!(stdout.contains("nan_sort.bad.txt:2"), "{stdout}");
+    assert!(stdout.contains("audit FAILED"), "{stdout}");
+
+    // --fix-list: terse file:line:lint lines only.
+    let out = Command::new(bin)
+        .args(["audit", "--fix-list", "tests/audit_fixtures/nan_sort.bad.txt"])
+        .current_dir(crate_dir())
+        .output()
+        .expect("run cagra audit --fix-list");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(!out.status.success());
+    assert_eq!(
+        stdout.trim(),
+        "tests/audit_fixtures/nan_sort.bad.txt:2:nan-sort"
+    );
+}

@@ -21,21 +21,31 @@ static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
 
 struct CountingAlloc;
 
+// SAFETY: pure pass-through to System plus a relaxed counter bump — the
+// System allocator's own contract is what callers observe.
 unsafe impl GlobalAlloc for CountingAlloc {
+    // SAFETY: same contract as GlobalAlloc::alloc — forwarded verbatim.
     unsafe fn alloc(&self, l: Layout) -> *mut u8 {
         ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
-        System.alloc(l)
+        // SAFETY: forwarded verbatim; caller upholds GlobalAlloc's contract.
+        unsafe { System.alloc(l) }
     }
+    // SAFETY: same contract as GlobalAlloc::alloc_zeroed — forwarded verbatim.
     unsafe fn alloc_zeroed(&self, l: Layout) -> *mut u8 {
         ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
-        System.alloc_zeroed(l)
+        // SAFETY: forwarded verbatim; caller upholds GlobalAlloc's contract.
+        unsafe { System.alloc_zeroed(l) }
     }
+    // SAFETY: same contract as GlobalAlloc::realloc — forwarded verbatim.
     unsafe fn realloc(&self, p: *mut u8, l: Layout, new_size: usize) -> *mut u8 {
         ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
-        System.realloc(p, l, new_size)
+        // SAFETY: forwarded verbatim; caller upholds GlobalAlloc's contract.
+        unsafe { System.realloc(p, l, new_size) }
     }
+    // SAFETY: same contract as GlobalAlloc::dealloc — forwarded verbatim.
     unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
-        System.dealloc(p, l)
+        // SAFETY: forwarded verbatim; caller upholds GlobalAlloc's contract.
+        unsafe { System.dealloc(p, l) }
     }
 }
 
