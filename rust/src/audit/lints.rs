@@ -1,4 +1,4 @@
-//! The six repo-specific lints (DESIGN.md §7).
+//! The seven repo-specific lints (DESIGN.md §7).
 //!
 //! Each lint is a standalone function over one scanned file so it can be
 //! unit-tested against minimal good/bad snippets. All of them work on
@@ -25,6 +25,7 @@ pub const NAN_SORT: &str = "nan-sort";
 pub const HOT_PATH_ALLOC: &str = "hot-path-alloc";
 pub const BENCH_REGISTRY: &str = "bench-registry";
 pub const RELAXED_STORE: &str = "relaxed-store";
+pub const LOCK_UNWRAP: &str = "lock-unwrap";
 
 /// All lint names (for `--help`-style listings and waiver validation).
 pub const ALL_LINTS: &[&str] = &[
@@ -34,6 +35,7 @@ pub const ALL_LINTS: &[&str] = &[
     HOT_PATH_ALLOC,
     BENCH_REGISTRY,
     RELAXED_STORE,
+    LOCK_UNWRAP,
 ];
 
 /// `Pod` may only be implemented for these primitives: fixed-size,
@@ -299,6 +301,48 @@ pub fn relaxed_store(file: &str, lines: &[Line], out: &mut Vec<Diagnostic>) {
     }
 }
 
+/// Lint 7 — `lock-unwrap`: `.lock().unwrap()` panics exactly when a
+/// panic *already* happened somewhere else (the mutex is poisoned),
+/// turning one contained fault into a cascade across every thread that
+/// touches the lock. Production code must use the poison-tolerant idiom
+/// the worker pool hand-rolls — `.unwrap_or_else(|p| p.into_inner())` —
+/// or justify itself with an adjacent `// audit: lock-ok — reason`
+/// comment. Everything from a `#[cfg(test)]` attribute down is exempt
+/// (test modules sit at file bottoms by convention, and a test *wants*
+/// poison to propagate as a failure).
+///
+/// Both tokens must sit on one code line — the repo writes the chain
+/// unwrapped, same single-line assumption as `nan-sort`.
+pub fn lock_unwrap(file: &str, lines: &[Line], out: &mut Vec<Diagnostic>) {
+    let mut in_tests = false;
+    for (i, l) in lines.iter().enumerate() {
+        if l.code.contains("#[cfg(test)]") {
+            in_tests = true;
+        }
+        if in_tests {
+            continue;
+        }
+        if !(l.code.contains(".lock()") && l.code.contains(".unwrap()")) {
+            continue;
+        }
+        if waived(lines, i, LOCK_UNWRAP) {
+            continue;
+        }
+        if adjacent_comments(lines, i).contains("audit: lock-ok") {
+            continue;
+        }
+        out.push(Diagnostic {
+            file: file.to_string(),
+            line: i + 1,
+            lint: LOCK_UNWRAP,
+            message: "`.lock().unwrap()` cascades on a poisoned mutex — \
+                      use `.unwrap_or_else(|p| p.into_inner())` (poison-\
+                      tolerant) or justify with `// audit: lock-ok`"
+                .to_string(),
+        });
+    }
+}
+
 /// Lint 5 — `bench-registry`: every `benches/*.rs` stem must appear both
 /// in `bench/suite.rs` (`name: "<stem>"`) and in `Cargo.toml`
 /// (`name = "<stem>"`, with `harness = false`). Operates on raw text —
@@ -479,6 +523,41 @@ mod tests {
         let load = "let v = flag.load(Ordering::Relaxed);\n\
                     flag.store(true, Ordering::Release);\n";
         assert!(run(relaxed_store, load).is_empty());
+    }
+
+    #[test]
+    fn lock_unwrap_fires_and_clears() {
+        let bad = "let st = self.state.lock().unwrap();\n";
+        let d = run(lock_unwrap, bad);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert_eq!(d[0].lint, LOCK_UNWRAP);
+        assert_eq!(d[0].line, 1);
+
+        let good = "let st = self.state.lock().unwrap_or_else(|p| p.into_inner());\n";
+        assert!(run(lock_unwrap, good).is_empty());
+
+        // Justified single-site exception.
+        let justified = "// audit: lock-ok — held only by this thread\n\
+                         let st = self.state.lock().unwrap();\n";
+        assert!(run(lock_unwrap, justified).is_empty());
+
+        // The standard waiver marker works too.
+        let waived = "// audit: allow(lock-unwrap) — fixture\n\
+                      let st = self.state.lock().unwrap();\n";
+        assert!(run(lock_unwrap, waived).is_empty());
+
+        // Everything below #[cfg(test)] is exempt.
+        let test_mod = "fn prod() {}\n#[cfg(test)]\nmod tests {\n\
+                        fn t() { q.lock().unwrap(); }\n}\n";
+        assert!(run(lock_unwrap, test_mod).is_empty());
+
+        // ...but production code above the test module still fires.
+        let above = "fn prod() { q.lock().unwrap(); }\n#[cfg(test)]\nmod tests {}\n";
+        assert_eq!(run(lock_unwrap, above).len(), 1);
+
+        // Unrelated unwraps (no lock on the line) are out of scope.
+        let unrelated = "let v = opt.unwrap();\nlet g = m.lock();\n";
+        assert!(run(lock_unwrap, unrelated).is_empty());
     }
 
     #[test]

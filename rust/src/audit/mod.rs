@@ -4,7 +4,8 @@
 //! The repo's speed story rests on invariants that ordinary tests cannot
 //! see: every raw-pointer write justified, `Pod` confined to primitives,
 //! the hot path allocation-free, every bench registered, every relaxed
-//! store argued. This module machine-enforces them as six named lints
+//! store argued, every lock poison-tolerant. This module machine-enforces
+//! them as seven named lints
 //! over `src/`, `benches/`, and `tests/` — dependency-free (a hand-rolled
 //! scanner in [`scanner`], same ethos as `util/json.rs`), so the checker
 //! itself can run everywhere CI runs, including offline mirrors.
@@ -75,6 +76,7 @@ pub fn audit_source(file: &str, src: &str) -> Vec<Diagnostic> {
     lints::nan_sort(file, &lines, &mut out);
     lints::hot_path_alloc(file, &lines, &mut out);
     lints::relaxed_store(file, &lines, &mut out);
+    lints::lock_unwrap(file, &lines, &mut out);
     out
 }
 

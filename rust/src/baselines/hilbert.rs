@@ -156,7 +156,7 @@ impl Prepared {
                     if lo >= hi {
                         return;
                     }
-                    let mut mine = privates[t].lock().unwrap();
+                    let mut mine = privates[t].lock().unwrap_or_else(|p| p.into_inner());
                     for &(u, v) in &edges[lo..hi] {
                         mine[v as usize] += rank[u as usize] * inv[u as usize];
                     }

@@ -79,7 +79,7 @@ impl Prepared {
                 let (u, v) = edges[i];
                 let upd = rank[u as usize] * inv[u as usize];
                 let part = v as usize / interval;
-                buffers[part].lock().unwrap().push((v, upd));
+                buffers[part].lock().unwrap_or_else(|p| p.into_inner()).push((v, upd));
             });
         }
         // Gather: apply each partition's updates to its vertex slice.

@@ -51,6 +51,10 @@ pub struct SystemConfig {
     /// `--no-mmap` / `store_mmap = false` forces the decode path (used by
     /// CI to compare the two).
     pub store_mmap: bool,
+    /// Failpoint spec (see [`crate::fault`] for the grammar); empty
+    /// disarms. The `CAGRA_FAILPOINTS` environment variable overrides
+    /// this at arming time.
+    pub failpoints: String,
 }
 
 impl Default for SystemConfig {
@@ -69,6 +73,7 @@ impl Default for SystemConfig {
             store_dir: "target/artifact-store".to_string(),
             store_cap_bytes: 8 * 1024 * 1024 * 1024,
             store_mmap: true,
+            failpoints: String::new(),
         }
     }
 }
@@ -91,6 +96,7 @@ impl SystemConfig {
             store_dir: cfg.get_str("system.store_dir", &d.store_dir).to_string(),
             store_cap_bytes: cfg.get_u64("system.store_cap_bytes", d.store_cap_bytes)?,
             store_mmap: cfg.get_bool("system.store_mmap", d.store_mmap)?,
+            failpoints: cfg.get_str("system.failpoints", &d.failpoints).to_string(),
         })
     }
 

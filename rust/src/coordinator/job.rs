@@ -330,6 +330,10 @@ pub fn run_job_env(spec: &JobSpec, cfg: &SystemConfig, env: JobEnv<'_>) -> Resul
     let summary = prep.summary();
     metrics.store = store.map(|s| s.stats());
     metrics.mem = env.mem.map(|m| m.stats());
+    metrics.faults = crate::fault::snapshot()
+        .into_iter()
+        .map(|(site, n)| (site.to_string(), n))
+        .collect();
     // Job complete: release this job's eviction exemptions (for a shared
     // store, its artifacts become ordinary LRU candidates from here on).
     drop(scope);

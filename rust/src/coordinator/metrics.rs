@@ -39,6 +39,11 @@ pub struct Metrics {
     /// buffers) — the memory cost of the zero-allocation steady state.
     /// `None` when the app has no reusable scratch.
     pub scratch_bytes: Option<u64>,
+    /// Failpoint trigger counts (`site name`, fires) for sites that fired
+    /// at least once during the process so far ([`crate::fault`]). Empty
+    /// in normal operation; nonzero entries mean the run executed under
+    /// injected faults and its numbers should be read accordingly.
+    pub faults: Vec<(String, u64)>,
 }
 
 impl Metrics {
@@ -127,6 +132,14 @@ impl Metrics {
                 crate::util::fmt_bytes(b as usize)
             ));
         }
+        if !self.faults.is_empty() {
+            let list: Vec<String> = self
+                .faults
+                .iter()
+                .map(|(site, n)| format!("{site}:{n}"))
+                .collect();
+            out.push_str(&format!("injected faults: {}\n", list.join(" ")));
+        }
         for (name, secs, share) in self.phases.report() {
             out.push_str(&format!("  {name:<24} {secs:>9.4}s  {:>5.1}%\n", share * 100.0));
         }
@@ -182,6 +195,9 @@ mod tests {
         assert!(m.render().contains("resident mem: 2 hits, 1 misses"));
         m.scratch_bytes = Some(2 * 1024 * 1024);
         assert!(m.render().contains("engine scratch: 2.0 MiB"));
+        assert!(!m.render().contains("injected faults"));
+        m.faults = vec![("worker.job".to_string(), 3)];
+        assert!(m.render().contains("injected faults: worker.job:3"));
         m.pmu = Some(crate::obs::PmuMetrics {
             phases: vec![(
                 "load".to_string(),

@@ -1,0 +1,390 @@
+//! Deterministic failpoints — the fault-injection substrate for the
+//! containment story (DESIGN.md §8).
+//!
+//! The serve path's blast-radius-critical layers (store write/read/
+//! decode/map, the in-memory artifact layer, worker job execution,
+//! daemon connection I/O) each carry a named **site**. A disarmed site
+//! costs exactly one relaxed atomic load — the same discipline as
+//! [`crate::obs::recorder`] — so the `hot-path-alloc` audit regions and
+//! the `zero_alloc` steady-state proof stay intact. An armed site fires
+//! deterministically: `every:N` counts evaluations under the registry
+//! lock, and `p:P,seed:S` draws from one seeded [`crate::util::rng::Rng`]
+//! whose draw *sequence* (and therefore trigger count) is reproducible
+//! even when the victims race.
+//!
+//! Grammar (via `CAGRA_FAILPOINTS` or `SystemConfig::failpoints`;
+//! the environment variable wins):
+//!
+//! ```text
+//! spec    := entry (';' entry)*
+//! entry   := site '=' action '@' trigger
+//! action  := 'err' | 'panic'
+//! trigger := 'every:' N | 'p:' P [',seed:' S]
+//! ```
+//!
+//! e.g. `store.write=err@every:3;worker.job=panic@p:0.1,seed:42`.
+//!
+//! Per-site trigger counters are surfaced through
+//! [`crate::coordinator::Metrics`], run reports, and serve stats, so a
+//! chaos run can assert exactly how much fault pressure was applied.
+
+use crate::util::rng::Rng;
+use anyhow::{bail, Context, Result};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// The named injection sites, in registry order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(usize)]
+pub enum Site {
+    /// Persisting an artifact (`codec::write_file` via the store).
+    StoreWrite,
+    /// Reading an artifact file back (`codec::read_file`).
+    StoreRead,
+    /// Decoding artifact bytes (`codec::decode`).
+    StoreDecode,
+    /// Mapping an artifact file (`mmap::MappedRegion::map`).
+    StoreMap,
+    /// Inserting a built value into the resident layer ([`crate::store::MemStore`]).
+    MemInsert,
+    /// Evicting from the resident layer to its byte budget.
+    MemEvict,
+    /// Job execution inside `worker_loop` (contained by `catch_unwind`).
+    WorkerJob,
+    /// The worker loop itself, *outside* the job containment — fires as
+    /// thread death, exercising supervisor respawn.
+    WorkerThread,
+    /// Daemon connection I/O (per request line).
+    ConnIo,
+}
+
+/// All sites, index-aligned with the registry slots.
+pub const SITES: [Site; 9] = [
+    Site::StoreWrite,
+    Site::StoreRead,
+    Site::StoreDecode,
+    Site::StoreMap,
+    Site::MemInsert,
+    Site::MemEvict,
+    Site::WorkerJob,
+    Site::WorkerThread,
+    Site::ConnIo,
+];
+
+const SITE_COUNT: usize = SITES.len();
+
+impl Site {
+    /// The spec-grammar name of this site.
+    pub fn name(self) -> &'static str {
+        match self {
+            Site::StoreWrite => "store.write",
+            Site::StoreRead => "store.read",
+            Site::StoreDecode => "store.decode",
+            Site::StoreMap => "store.map",
+            Site::MemInsert => "mem.insert",
+            Site::MemEvict => "mem.evict",
+            Site::WorkerJob => "worker.job",
+            Site::WorkerThread => "worker.thread",
+            Site::ConnIo => "conn.io",
+        }
+    }
+
+    fn parse(name: &str) -> Option<Site> {
+        SITES.iter().copied().find(|s| s.name() == name)
+    }
+}
+
+/// What an armed site does when its trigger fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Action {
+    /// Surface an injected `Err` at the site.
+    Err,
+    /// Panic at the site (containment's job to survive it).
+    Panic,
+}
+
+#[derive(Debug)]
+enum Trigger {
+    /// Fire on every Nth evaluation (N ≥ 1).
+    Every(u64),
+    /// Fire with probability `p` per evaluation, drawn from a seeded RNG.
+    Prob(f64, Rng),
+}
+
+#[derive(Debug)]
+struct Armed {
+    action: Action,
+    trigger: Trigger,
+    /// Evaluations seen (drives `every:N`).
+    evals: u64,
+}
+
+/// One relaxed load on the disarmed fast path; everything else is cold.
+static ANY_ARMED: AtomicBool = AtomicBool::new(false);
+
+/// Trigger counters, one per site, readable without the registry lock.
+static TRIGGERED: [AtomicU64; SITE_COUNT] = [
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+];
+
+/// The armed-site registry. Only touched when arming/disarming or when a
+/// site is armed, never on the disarmed fast path.
+static REGISTRY: Mutex<[Option<Armed>; SITE_COUNT]> =
+    Mutex::new([None, None, None, None, None, None, None, None, None]);
+
+/// Whether any failpoint is armed. This load is the *entire* cost of a
+/// disarmed site on the hot path.
+#[inline]
+pub fn enabled() -> bool {
+    ANY_ARMED.load(Ordering::Relaxed)
+}
+
+/// Evaluate a site: `None` when disarmed or the trigger does not fire.
+#[inline]
+pub fn check(site: Site) -> Option<Action> {
+    if !enabled() {
+        return None;
+    }
+    evaluate(site)
+}
+
+/// Fallible-site helper: injected `err` becomes an `Err`, injected
+/// `panic` panics (for the containment layer to catch).
+#[inline]
+pub fn failpoint(site: Site) -> Result<()> {
+    match check(site) {
+        None => Ok(()),
+        Some(Action::Err) => bail!("injected fault at failpoint {}", site.name()),
+        Some(Action::Panic) => panic!("injected panic at failpoint {}", site.name()),
+    }
+}
+
+#[cold]
+fn evaluate(site: Site) -> Option<Action> {
+    let mut reg = REGISTRY.lock().unwrap_or_else(|p| p.into_inner());
+    let armed = reg[site as usize].as_mut()?;
+    armed.evals += 1;
+    let fires = match &mut armed.trigger {
+        Trigger::Every(n) => armed.evals % *n == 0,
+        Trigger::Prob(p, rng) => rng.coin(*p),
+    };
+    if !fires {
+        return None;
+    }
+    TRIGGERED[site as usize].fetch_add(1, Ordering::Relaxed);
+    Some(armed.action)
+}
+
+/// Arm sites from a spec string (see the module grammar). Replaces the
+/// whole registry and resets trigger counters; an empty spec disarms.
+pub fn configure(spec: &str) -> Result<()> {
+    let mut slots: [Option<Armed>; SITE_COUNT] =
+        [None, None, None, None, None, None, None, None, None];
+    let mut any = false;
+    for entry in spec.split(';').map(str::trim).filter(|e| !e.is_empty()) {
+        let (site_name, rest) = entry
+            .split_once('=')
+            .with_context(|| format!("failpoint entry {entry:?}: expected site=action@trigger"))?;
+        let site = Site::parse(site_name.trim())
+            .with_context(|| format!("unknown failpoint site {site_name:?}"))?;
+        let (action_name, trigger_spec) = rest
+            .split_once('@')
+            .with_context(|| format!("failpoint entry {entry:?}: expected action@trigger"))?;
+        let action = match action_name.trim() {
+            "err" => Action::Err,
+            "panic" => Action::Panic,
+            other => bail!("unknown failpoint action {other:?} (expected err|panic)"),
+        };
+        let trigger = parse_trigger(trigger_spec.trim())
+            .with_context(|| format!("failpoint entry {entry:?}"))?;
+        slots[site as usize] = Some(Armed {
+            action,
+            trigger,
+            evals: 0,
+        });
+        any = true;
+    }
+    let mut reg = REGISTRY.lock().unwrap_or_else(|p| p.into_inner());
+    *reg = slots;
+    for c in &TRIGGERED {
+        // audit: relaxed-ok — counter reset under the registry lock; readers
+        // only consume these after their own (locked) evaluations.
+        c.store(0, Ordering::Relaxed);
+    }
+    ANY_ARMED.store(any, Ordering::SeqCst);
+    Ok(())
+}
+
+fn parse_trigger(spec: &str) -> Result<Trigger> {
+    if let Some(n) = spec.strip_prefix("every:") {
+        let n: u64 = n.trim().parse().context("every:N needs an integer N")?;
+        if n == 0 {
+            bail!("every:N needs N >= 1");
+        }
+        return Ok(Trigger::Every(n));
+    }
+    if let Some(rest) = spec.strip_prefix("p:") {
+        let (p_str, seed) = match rest.split_once(",seed:") {
+            Some((p, s)) => (p, s.trim().parse::<u64>().context("seed:S needs an integer S")?),
+            None => (rest, 0x5EED),
+        };
+        let p: f64 = p_str.trim().parse().context("p:P needs a float P")?;
+        if !(0.0..=1.0).contains(&p) {
+            bail!("p:P needs P in [0, 1], got {p}");
+        }
+        return Ok(Trigger::Prob(p, Rng::new(seed)));
+    }
+    bail!("unknown trigger {spec:?} (expected every:N or p:P[,seed:S])")
+}
+
+/// Disarm every site and clear trigger counters.
+pub fn disarm() {
+    configure("").expect("empty spec always parses");
+}
+
+/// Arm from `CAGRA_FAILPOINTS` if set (even to empty, which disarms),
+/// otherwise from the config spec. The process-wide entry point `main`
+/// and the serve/worker constructors call.
+pub fn arm_from(cfg_spec: &str) -> Result<()> {
+    match std::env::var("CAGRA_FAILPOINTS") {
+        Ok(env_spec) => configure(&env_spec).context("CAGRA_FAILPOINTS"),
+        Err(_) => configure(cfg_spec).context("system.failpoints"),
+    }
+}
+
+/// Times `site` has fired since the last [`configure`].
+pub fn triggered(site: Site) -> u64 {
+    TRIGGERED[site as usize].load(Ordering::Relaxed)
+}
+
+/// `(site name, trigger count)` for every site that has fired — empty
+/// when nothing fired (the shape Metrics and run reports embed).
+pub fn snapshot() -> Vec<(&'static str, u64)> {
+    SITES
+        .iter()
+        .filter_map(|&s| {
+            let n = triggered(s);
+            (n > 0).then_some((s.name(), n))
+        })
+        .collect()
+}
+
+/// Serializes every unit test — in any module — that arms the
+/// process-global registry or runs code whose sites a concurrent arming
+/// test could trip. Integration tests get a fresh process and manage
+/// their own serialization.
+#[cfg(test)]
+pub(crate) static TEST_GUARD: Mutex<()> = Mutex::new(());
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn locked() -> std::sync::MutexGuard<'static, ()> {
+        TEST_GUARD.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    #[test]
+    fn disarmed_sites_never_fire() {
+        let _g = locked();
+        disarm();
+        assert!(!enabled());
+        for &s in &SITES {
+            assert_eq!(check(s), None);
+            assert!(failpoint(s).is_ok());
+        }
+        assert!(snapshot().is_empty());
+    }
+
+    #[test]
+    fn every_n_fires_deterministically() {
+        let _g = locked();
+        configure("store.write=err@every:3").unwrap();
+        let fired: Vec<bool> = (0..9).map(|_| check(Site::StoreWrite).is_some()).collect();
+        assert_eq!(
+            fired,
+            [false, false, true, false, false, true, false, false, true]
+        );
+        assert_eq!(triggered(Site::StoreWrite), 3);
+        // Unarmed sites stay silent even while another site is armed.
+        assert_eq!(check(Site::WorkerJob), None);
+        assert_eq!(snapshot(), vec![("store.write", 3)]);
+        disarm();
+    }
+
+    #[test]
+    fn probabilistic_trigger_is_seed_reproducible() {
+        let _g = locked();
+        let run = || {
+            configure("worker.job=panic@p:0.25,seed:42").unwrap();
+            let fired: Vec<bool> = (0..64).map(|_| check(Site::WorkerJob).is_some()).collect();
+            (fired, triggered(Site::WorkerJob))
+        };
+        let (a, na) = run();
+        let (b, nb) = run();
+        assert_eq!(a, b, "same seed must reproduce the firing sequence");
+        assert_eq!(na, nb);
+        assert!(na > 0 && na < 64, "p=0.25 over 64 draws fired {na} times");
+        disarm();
+    }
+
+    #[test]
+    fn grammar_parses_the_issue_example_and_rejects_junk() {
+        let _g = locked();
+        configure("store.write=err@every:3;worker.job=panic@p:0.1,seed:42").unwrap();
+        assert!(enabled());
+        assert_eq!(check(Site::StoreWrite), None);
+        assert_eq!(check(Site::StoreWrite), None);
+        assert_eq!(check(Site::StoreWrite), Some(Action::Err));
+        for bad in [
+            "nope.site=err@every:1",
+            "store.write=explode@every:1",
+            "store.write=err@often",
+            "store.write=err@every:0",
+            "store.write=err@p:1.5",
+            "store.write",
+        ] {
+            assert!(configure(bad).is_err(), "accepted {bad:?}");
+        }
+        // A failed configure still leaves the previous registry armed —
+        // but tests must not leak state:
+        disarm();
+        assert!(!enabled());
+    }
+
+    #[test]
+    fn failpoint_helper_maps_actions() {
+        let _g = locked();
+        configure("store.read=err@every:1").unwrap();
+        let e = failpoint(Site::StoreRead).unwrap_err();
+        assert!(e.to_string().contains("store.read"), "{e:#}");
+        configure("store.read=panic@every:1").unwrap();
+        let p = std::panic::catch_unwind(|| failpoint(Site::StoreRead));
+        assert!(p.is_err(), "panic action must panic");
+        disarm();
+    }
+
+    #[test]
+    fn arm_from_prefers_env_and_falls_back_to_config() {
+        let _g = locked();
+        // No env var in the test process: config spec applies.
+        std::env::remove_var("CAGRA_FAILPOINTS");
+        arm_from("mem.insert=err@every:1").unwrap();
+        assert!(enabled());
+        assert_eq!(check(Site::MemInsert), Some(Action::Err));
+        std::env::set_var("CAGRA_FAILPOINTS", "mem.evict=err@every:1");
+        arm_from("mem.insert=err@every:1").unwrap();
+        assert_eq!(check(Site::MemInsert), None, "env spec replaces config");
+        assert_eq!(check(Site::MemEvict), Some(Action::Err));
+        std::env::remove_var("CAGRA_FAILPOINTS");
+        disarm();
+    }
+}

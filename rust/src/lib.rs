@@ -34,6 +34,7 @@
 
 pub mod util;
 pub mod audit;
+pub mod fault;
 pub mod parallel;
 pub mod graph;
 pub mod reorder;

@@ -75,6 +75,8 @@ fn usage() {
          \x20            [--delta-epsilon F] [--cf-k N] [--damping F] [--bfs-source V]   app-knob overrides\n\
          \x20            [--store] [--store-dir DIR] [--store-cap BYTES] [--no-mmap]   persist preprocessing artifacts\n\
          \x20            [--report FILE] [--pmu]   versioned run report (or CAGRA_RUN_REPORT env)\n\
+         \x20            [--failpoints 'site=action@trigger;..']   deterministic fault injection\n\
+         \x20            (or CAGRA_FAILPOINTS env; e.g. store.write=err@every:3;worker.job=panic@p:0.1,seed:42)\n\
          \x20 batch      run a job list over ONE shared artifact store    <jobs.txt> [--store ...]\n\
          \x20            file: one `app=<name> [variant=..] [graph=..] [iters=N] [scale=F]\n\
          \x20            [sources=N] [analyze=true] [delta-epsilon=F] [cf-k=N] [damping=F]\n\
@@ -82,9 +84,10 @@ fn usage() {
          \x20            [--report-dir DIR] [--pmu]   one run report per job + a rollup\n\
          \x20 serve      resident daemon: NDJSON requests over TCP or stdio (see rust/README.md)\n\
          \x20            [--addr HOST:PORT] [--workers N] [--queue-cap N] [--mem-cap BYTES]\n\
-         \x20            [--port-file FILE] [--stdio] [--store ...]\n\
+         \x20            [--port-file FILE] [--stdio] [--store ...] [--max-conns N] [--idle-timeout-ms N]\n\
          \x20 loadgen    closed-loop serve client   --addr HOST:PORT [--clients N] [--requests N]\n\
          \x20            [--app <app>] [--variant V] [--graph D] [--iters N] [--scale F] [--shutdown]\n\
+         \x20            [--retry-max N] [--retry-base-ms N] [--seed N] [--allow-failures]\n\
          \x20 apps       list registered applications and their variants\n\
          \x20 gen        generate + cache a dataset  --graph <dataset> [--out file.bin] [--scale F]\n\
          \x20 inspect    dataset statistics          --graph <dataset>\n\
@@ -163,6 +166,12 @@ fn system_config(args: &Args) -> anyhow::Result<SystemConfig> {
     if let Some(seed) = args.get("random-seed") {
         cfg.random_seed = seed.parse()?;
     }
+    if let Some(spec) = args.get("failpoints") {
+        cfg.failpoints = spec.to_string();
+    }
+    // Arm immediately so every command runs under the requested fault
+    // pressure (`CAGRA_FAILPOINTS` overrides; an empty spec disarms).
+    cagra::fault::arm_from(&cfg.failpoints)?;
     Ok(cfg)
 }
 
@@ -369,6 +378,8 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         mem_budget: args.get_u64("mem-cap", 0),
         port_file: args.get("port-file").map(str::to_string),
         stdio: args.has_flag("stdio"),
+        max_conns: args.get_usize("max-conns", 1024),
+        idle_timeout_ms: args.get_u64("idle-timeout-ms", 60_000),
     };
     cagra::serve::serve(cfg, &opts)
 }
@@ -382,7 +393,8 @@ fn cmd_loadgen(args: &Args) -> anyhow::Result<()> {
         anyhow::bail!(
             "usage: cagra loadgen --addr HOST:PORT [--clients N] [--requests N] \
              [--app <app>] [--variant V] [--graph D] [--iters N] [--scale F] \
-             [--deadline-ms N] [--shutdown]"
+             [--deadline-ms N] [--retry-max N] [--retry-base-ms N] [--seed N] \
+             [--allow-failures] [--shutdown]"
         );
     };
     let mut fields = vec![
@@ -410,6 +422,10 @@ fn cmd_loadgen(args: &Args) -> anyhow::Result<()> {
         requests: args.get_usize("requests", 8),
         request: Value::Obj(fields),
         shutdown_after: args.has_flag("shutdown"),
+        retry_max: args.get_usize("retry-max", 3),
+        retry_base_ms: args.get_u64("retry-base-ms", 10),
+        seed: args.get_u64("seed", 0x10AD),
+        allow_failures: args.has_flag("allow-failures"),
     };
     let report = cagra::serve::loadgen::run(&opts)?;
     print!("{}", report.render());
@@ -594,6 +610,15 @@ fn cmd_cache(args: &Args) -> anyhow::Result<()> {
                 "  mmap:     {} on this platform",
                 if cagra::store::mmap_supported() { "supported" } else { "unsupported" }
             );
+            // On-disk count: per-process counters are useless from a
+            // fresh inspection process, but the evidence files persist.
+            let q = store.quarantine_count();
+            if q > 0 {
+                println!(
+                    "  quarantine: {q} corrupt artifact(s) set aside in {}/.quarantine",
+                    store.dir().display()
+                );
+            }
             let arts = store.list_artifacts();
             if !arts.is_empty() {
                 println!("  artifacts (codec v{}):", cagra::store::CODEC_VERSION);

@@ -33,14 +33,15 @@
 //!                 "llc_misses": 210, "llc_miss_rate": 0.21},
 //!   "pmu": {"phases": [...], "iters": [...]},
 //!   "store": {"hits": 2, "misses": 1, ...},
+//!   "faults": [{"site": "store.write", "fires": 3}],
 //!   "events": [{"kind": "edge_map", "name": "edge_map", "t_us": 1200,
 //!               "dur_us": 340, "a": 10, "b": 80, "c": 7, "d": 1}],
 //!   "events_dropped": 0
 //! }
 //! ```
 //!
-//! Optional sections (`scratch_bytes`, `simulated`, `pmu`, `store`) are
-//! omitted entirely when absent, never encoded as `null`.
+//! Optional sections (`scratch_bytes`, `simulated`, `pmu`, `store`,
+//! `faults`) are omitted entirely when absent, never encoded as `null`.
 
 use crate::cache::StallEstimate;
 use crate::coordinator::{JobResult, JobSpec};
@@ -155,6 +156,10 @@ pub struct RunReport {
     /// Hardware counters (when `--pmu` was requested and available).
     pub pmu: Option<PmuMetrics>,
     pub store: Option<StoreStats>,
+    /// Failpoint trigger counts (site, fires) when the job ran under
+    /// injected faults ([`crate::fault`]). Empty — and omitted from the
+    /// encoding — in normal operation.
+    pub faults: Vec<(String, u64)>,
     pub events: Vec<TimelineEvent>,
     /// Events the recorder ring overwrote (0 = complete timeline).
     pub events_dropped: u64,
@@ -188,6 +193,7 @@ impl RunReport {
             simulated: m.stalls,
             pmu: m.pmu.clone(),
             store: m.store,
+            faults: m.faults.clone(),
             events: events.into_iter().map(TimelineEvent::from_recorded).collect(),
             events_dropped: dropped,
         }
@@ -273,6 +279,22 @@ impl RunReport {
         if let Some(s) = &self.store {
             fields.push(("store".to_string(), store_to_value(s)));
         }
+        if !self.faults.is_empty() {
+            fields.push((
+                "faults".to_string(),
+                Value::Arr(
+                    self.faults
+                        .iter()
+                        .map(|(site, n)| {
+                            Value::Obj(vec![
+                                ("site".to_string(), Value::Str(site.clone())),
+                                ("fires".to_string(), Value::Num(*n as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ));
+        }
         fields.push((
             "events".to_string(),
             Value::Arr(self.events.iter().map(TimelineEvent::to_value).collect()),
@@ -357,6 +379,20 @@ impl RunReport {
             store: match v.get("store") {
                 None => None,
                 Some(s) => Some(store_from_value(s)?),
+            },
+            // Absent unless the run injected faults (and from reports
+            // written before failpoints existed): default to empty.
+            faults: match v.get("faults").and_then(Value::as_arr) {
+                None => Vec::new(),
+                Some(arr) => arr
+                    .iter()
+                    .map(|f| {
+                        Ok((
+                            require_str(f, "site")?,
+                            require_u64(f, "faults", "fires")?,
+                        ))
+                    })
+                    .collect::<Result<Vec<_>>>()?,
             },
             events,
             events_dropped: require_u64(&v, &app, "events_dropped")?,
@@ -494,6 +530,8 @@ fn store_to_value(s: &StoreStats) -> Value {
             Value::Num(s.resident_bytes as f64),
         ),
         ("cap_bytes".to_string(), Value::Num(s.cap_bytes as f64)),
+        ("quarantined".to_string(), Value::Num(s.quarantined as f64)),
+        ("rebuilds".to_string(), Value::Num(s.rebuilds as f64)),
     ])
 }
 
@@ -510,6 +548,10 @@ fn store_from_value(v: &Value) -> Result<StoreStats> {
         entries: require_u64(v, "store", "entries")?,
         resident_bytes: require_u64(v, "store", "resident_bytes")?,
         cap_bytes: require_u64(v, "store", "cap_bytes")?,
+        // Absent from reports written before store self-healing: default,
+        // don't reject, so archived runs stay loadable.
+        quarantined: v.get("quarantined").and_then(Value::as_u64).unwrap_or(0),
+        rebuilds: v.get("rebuilds").and_then(Value::as_u64).unwrap_or(0),
     })
 }
 
@@ -589,7 +631,10 @@ pub(crate) fn sample_report() -> RunReport {
             entries: 3,
             resident_bytes: 6144,
             cap_bytes: 1 << 30,
+            quarantined: 1,
+            rebuilds: 1,
         }),
+        faults: vec![("store.write".into(), 3)],
         events: vec![
             TimelineEvent {
                 kind: "phase".into(),

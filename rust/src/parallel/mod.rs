@@ -152,7 +152,7 @@ pub fn parallel_for_cost(
     let queue: Mutex<Vec<(usize, usize)>> = Mutex::new(vec![(0, n)]);
     let in_flight = AtomicUsize::new(1);
     run_on_all(&|_| loop {
-        let item = queue.lock().unwrap().pop();
+        let item = queue.lock().unwrap_or_else(|p| p.into_inner()).pop();
         match item {
             Some((lo, hi)) => {
                 if hi - lo <= 1 || cost(lo, hi) <= threshold {
@@ -160,11 +160,11 @@ pub fn parallel_for_cost(
                 } else {
                     let mid = lo + (hi - lo) / 2;
                     in_flight.fetch_add(1, Ordering::Relaxed);
-                    queue.lock().unwrap().push((mid, hi));
+                    queue.lock().unwrap_or_else(|p| p.into_inner()).push((mid, hi));
                     // Process the left half ourselves by re-queueing it;
                     // keeps the queue the single source of truth.
                     in_flight.fetch_add(1, Ordering::Relaxed);
-                    queue.lock().unwrap().push((lo, mid));
+                    queue.lock().unwrap_or_else(|p| p.into_inner()).push((lo, mid));
                 }
                 in_flight.fetch_sub(1, Ordering::Release);
             }
@@ -209,7 +209,7 @@ pub fn parallel_reduce<T: Send>(
         for i in lo..hi {
             acc = fold(acc, i);
         }
-        partials.lock().unwrap().push(acc);
+        partials.lock().unwrap_or_else(|p| p.into_inner()).push(acc);
     });
     partials
         .into_inner()

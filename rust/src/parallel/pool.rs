@@ -97,7 +97,7 @@ impl ThreadPool {
         }
         let epoch = self.epoch.fetch_add(1, Ordering::Relaxed) + 1;
         {
-            let mut slot = self.shared.slot.lock().unwrap();
+            let mut slot = self.shared.slot.lock().unwrap_or_else(|p| p.into_inner());
             // Plain unsizing coercion to a raw wide pointer — no unsafe
             // here; the lifetime erasure is accounted for where the
             // pointer is dereferenced (worker_loop).
@@ -108,14 +108,14 @@ impl ThreadPool {
         // Caller participates as thread 0.
         f(0);
         // Wait for all spawned workers to finish this epoch.
-        let mut done = self.shared.done.lock().unwrap();
+        let mut done = self.shared.done.lock().unwrap_or_else(|p| p.into_inner());
         while *done < self.shared.n_spawned {
             done = self.shared.done_cv.wait(done).unwrap();
         }
         *done = 0;
         drop(done);
         // Invalidate the pointer before `f` can go out of scope.
-        self.shared.slot.lock().unwrap().ptr = None;
+        self.shared.slot.lock().unwrap_or_else(|p| p.into_inner()).ptr = None;
         self.running.store(false, Ordering::Release);
     }
 }
@@ -125,7 +125,7 @@ fn worker_loop(shared: &'static Shared, worker_id: usize) {
     let mut last_epoch = 0u64;
     loop {
         let parts = {
-            let mut slot = shared.slot.lock().unwrap();
+            let mut slot = shared.slot.lock().unwrap_or_else(|p| p.into_inner());
             while slot.epoch == last_epoch && !shared.shutdown.load(Ordering::Relaxed) {
                 slot = shared.work_cv.wait(slot).unwrap();
             }
@@ -142,7 +142,7 @@ fn worker_loop(shared: &'static Shared, worker_id: usize) {
         // concurrently from every worker is sound.
         let f = unsafe { &*parts };
         f(worker_id);
-        let mut done = shared.done.lock().unwrap();
+        let mut done = shared.done.lock().unwrap_or_else(|p| p.into_inner());
         *done += 1;
         shared.done_cv.notify_one();
     }

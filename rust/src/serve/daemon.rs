@@ -9,13 +9,13 @@
 //! accepting, open connections finish their in-flight request streams,
 //! and the pool drains every admitted job before the process returns.
 
-use super::protocol::{self, ErrorKind, Request};
+use super::protocol::{self, ErrorKind, Request, StatsSnapshot};
 use super::worker::{Outcome, SubmitError, WorkerPool};
 use crate::coordinator::SystemConfig;
 use anyhow::{Context, Result};
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, ErrorKind as IoErrorKind, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
@@ -34,6 +34,13 @@ pub struct ServeOpts {
     pub port_file: Option<String>,
     /// Serve stdin→stdout instead of TCP.
     pub stdio: bool,
+    /// Admission bound on concurrent connections; excess connections get
+    /// one `overloaded` error line and are closed without a handler
+    /// thread (so a connection flood cannot exhaust threads).
+    pub max_conns: usize,
+    /// Close a connection that sends no request for this long
+    /// (milliseconds; 0 disables). Idle closes are clean, not errors.
+    pub idle_timeout_ms: u64,
 }
 
 impl Default for ServeOpts {
@@ -45,6 +52,8 @@ impl Default for ServeOpts {
             mem_budget: 0,
             port_file: None,
             stdio: false,
+            max_conns: 1024,
+            idle_timeout_ms: 60_000,
         }
     }
 }
@@ -105,36 +114,49 @@ fn serve_tcp(pool: &Arc<WorkerPool>, opts: &ServeOpts) -> Result<()> {
         }
     );
     let shutting_down = Arc::new(AtomicBool::new(false));
+    let active_conns = Arc::new(AtomicUsize::new(0));
     let conn_handles: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>> =
         Arc::new(Mutex::new(Vec::new()));
     for stream in listener.incoming() {
         if shutting_down.load(Ordering::SeqCst) {
             break;
         }
-        let stream = match stream {
+        let mut stream = match stream {
             Ok(s) => s,
             Err(e) => {
                 crate::log_warn!("accept failed: {e}");
                 continue;
             }
         };
+        // Admission bound: refuse with one parseable error line instead
+        // of spawning a handler the flood would never release.
+        if active_conns.load(Ordering::SeqCst) >= opts.max_conns.max(1) {
+            let line = protocol::render_error(
+                None,
+                ErrorKind::Overloaded,
+                "connection limit reached; retry later",
+            );
+            let _ = stream.write_all(format!("{line}\n").as_bytes());
+            continue;
+        }
         let pool = pool.clone();
         let flag = shutting_down.clone();
+        let active = active_conns.clone();
+        let idle = opts.idle_timeout_ms;
+        active.fetch_add(1, Ordering::SeqCst);
         let handle = std::thread::spawn(move || {
-            if let Err(e) = handle_conn(stream, &pool, &flag, local) {
+            if let Err(e) = handle_conn(stream, &pool, &flag, local, idle) {
                 crate::log_warn!("connection error: {e:#}");
             }
+            active.fetch_sub(1, Ordering::SeqCst);
         });
-        conn_handles
-            .lock()
-            .unwrap_or_else(|p| p.into_inner())
-            .push(handle);
-        // Reap finished handlers so a long-lived daemon doesn't
-        // accumulate join handles.
-        conn_handles
-            .lock()
-            .unwrap_or_else(|p| p.into_inner())
-            .retain(|h| !h.is_finished());
+        // One lock for both bookkeeping steps: push this handler, reap
+        // finished ones so a long-lived daemon doesn't accumulate them.
+        {
+            let mut h = conn_handles.lock().unwrap_or_else(|p| p.into_inner());
+            h.retain(|h| !h.is_finished());
+            h.push(handle);
+        }
     }
     let handles: Vec<_> = {
         let mut h = conn_handles.lock().unwrap_or_else(|p| p.into_inner());
@@ -144,12 +166,37 @@ fn serve_tcp(pool: &Arc<WorkerPool>, opts: &ServeOpts) -> Result<()> {
         let _ = h.join();
     }
     pool.shutdown();
+    // One grep-able drain line: CI's chaos smoke asserts on these fields.
+    let store = pool.store_stats().unwrap_or_default();
     println!(
-        "cagra serve: drained ({} jobs served, {} resident hits)",
+        "cagra serve: drained; jobs={} workers_alive={} panics_contained={} \
+         quarantined={} rebuilds={} resident_hits={}",
         pool.jobs_done(),
+        pool.workers_alive(),
+        pool.panics_contained(),
+        store.quarantined,
+        store.rebuilds,
         pool.mem_stats().hits
     );
     Ok(())
+}
+
+/// A peer that vanished (EOF is handled separately) — a normal fact of
+/// network life, closed without noise.
+fn is_disconnect(kind: IoErrorKind) -> bool {
+    matches!(
+        kind,
+        IoErrorKind::ConnectionReset
+            | IoErrorKind::ConnectionAborted
+            | IoErrorKind::BrokenPipe
+            | IoErrorKind::UnexpectedEof
+    )
+}
+
+/// A read that hit the socket timeout — the connection idled out.
+/// (Linux reports `WouldBlock`, other platforms `TimedOut`.)
+fn is_idle_timeout(kind: IoErrorKind) -> bool {
+    matches!(kind, IoErrorKind::WouldBlock | IoErrorKind::TimedOut)
 }
 
 fn handle_conn(
@@ -157,19 +204,50 @@ fn handle_conn(
     pool: &Arc<WorkerPool>,
     shutting_down: &AtomicBool,
     local: std::net::SocketAddr,
+    idle_timeout_ms: u64,
 ) -> Result<()> {
+    if idle_timeout_ms > 0 {
+        // The timeout clock only runs while waiting for the *next*
+        // request — replies are written by this same thread, so a slow
+        // job can never idle out its own connection.
+        stream
+            .set_read_timeout(Some(Duration::from_millis(idle_timeout_ms)))
+            .context("setting read timeout")?;
+    }
     let mut writer = stream.try_clone().context("cloning stream")?;
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = line.context("reading request line")?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) => break, // EOF: the client is done — clean close.
+            Ok(_) => {}
+            Err(e) if is_idle_timeout(e.kind()) => {
+                crate::log_debug!("closing idle connection ({idle_timeout_ms}ms without a request)");
+                break;
+            }
+            Err(e) if is_disconnect(e.kind()) => break,
+            Err(e) => return Err(e).context("reading request line"),
+        }
         if line.trim().is_empty() {
             continue;
         }
+        // Injected connection fault: drop the connection mid-stream, as
+        // if the peer's network vanished (err) or the handler had a bug
+        // (panic — only this thread dies; the daemon keeps accepting).
+        if let Err(e) = crate::fault::failpoint(crate::fault::Site::ConnIo) {
+            crate::log_debug!("dropping connection: {e:#}");
+            break;
+        }
         let (reply, is_shutdown) = handle_line(&line, pool);
-        writer
+        match writer
             .write_all(format!("{reply}\n").as_bytes())
             .and_then(|()| writer.flush())
-            .context("writing response")?;
+        {
+            Ok(()) => {}
+            Err(e) if is_disconnect(e.kind()) => break, // reply raced a hangup
+            Err(e) => return Err(e).context("writing response"),
+        }
         if is_shutdown {
             shutting_down.store(true, Ordering::SeqCst);
             // The accept loop is blocked in `incoming()`; poke it with a
@@ -198,10 +276,15 @@ pub fn handle_line(line: &str, pool: &WorkerPool) -> (String, bool) {
         Request::Stats { id } => (
             protocol::render_stats(
                 id.as_ref(),
-                pool.mem_stats(),
-                pool.worker_count(),
-                pool.queue_depth(),
-                pool.jobs_done(),
+                &StatsSnapshot {
+                    mem: pool.mem_stats(),
+                    workers: pool.worker_count(),
+                    workers_alive: pool.workers_alive(),
+                    panics_contained: pool.panics_contained(),
+                    queue_depth: pool.queue_depth(),
+                    jobs_done: pool.jobs_done(),
+                    store: pool.store_stats(),
+                },
             ),
             false,
         ),
@@ -260,6 +343,9 @@ mod tests {
 
     #[test]
     fn handle_line_covers_control_plane() {
+        // Pool construction (re)arms failpoints from the config, so hold
+        // the crate-wide guard to avoid disarming a concurrent test.
+        let _g = crate::fault::TEST_GUARD.lock().unwrap_or_else(|p| p.into_inner());
         let pool = WorkerPool::start(SystemConfig::default(), 1, 4, 0).unwrap();
         let (pong, stop) = handle_line(r#"{"op":"ping","id":1}"#, &pool);
         assert!(!stop);

@@ -7,12 +7,19 @@
 //! matches, finite summary); the report aggregates throughput and
 //! latency percentiles — the jobs/sec and p50/p99 numbers the
 //! `serve_throughput` bench records for cold vs resident stores.
+//!
+//! Transient refusals (`overloaded`, `deadline`) are resubmitted with
+//! seeded, jittered exponential backoff up to `retry_max` times — the
+//! well-behaved-client model for an admission-controlled server — and
+//! counted in the report. With `allow_failures` (chaos runs), `failed`
+//! replies are counted instead of aborting the whole measurement.
 
 use crate::util::json::{parse, Value};
+use crate::util::rng::Rng;
 use anyhow::{bail, Context, Result};
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Load-generation parameters (the `cagra loadgen` flag surface).
 #[derive(Debug, Clone)]
@@ -29,6 +36,35 @@ pub struct LoadgenOpts {
     /// Send `{"op":"shutdown"}` after the measurement (one extra
     /// connection), so a scripted run tears the daemon down.
     pub shutdown_after: bool,
+    /// Resubmissions allowed per request after an `overloaded` or
+    /// `deadline` refusal (0 = fail on the first refusal).
+    pub retry_max: usize,
+    /// Base backoff before the first resubmission; doubles per attempt
+    /// with jitter, capped at 1s.
+    pub retry_base_ms: u64,
+    /// Seed for the backoff jitter (per-client streams are derived from
+    /// it, so a rerun backs off identically).
+    pub seed: u64,
+    /// Tolerate `failed` error replies: count them instead of aborting.
+    /// For chaos runs, where injected faults *should* fail some jobs —
+    /// a clean-path measurement keeps the strict default.
+    pub allow_failures: bool,
+}
+
+impl Default for LoadgenOpts {
+    fn default() -> Self {
+        LoadgenOpts {
+            addr: "127.0.0.1:7421".to_string(),
+            clients: 4,
+            requests: 16,
+            request: Value::Null,
+            shutdown_after: false,
+            retry_max: 3,
+            retry_base_ms: 10,
+            seed: 0x10AD,
+            allow_failures: false,
+        }
+    }
 }
 
 /// Aggregated closed-loop results.
@@ -36,6 +72,10 @@ pub struct LoadgenOpts {
 pub struct LoadgenReport {
     pub clients: usize,
     pub completed: usize,
+    /// `overloaded`/`deadline` refusals that were resubmitted.
+    pub retries: u64,
+    /// `failed` replies tolerated under `allow_failures`.
+    pub failed: u64,
     pub elapsed_s: f64,
     pub jobs_per_sec: f64,
     pub p50_ms: f64,
@@ -47,39 +87,56 @@ impl LoadgenReport {
         format!(
             "loadgen: {} request(s) over {} client(s) in {:.3}s\n\
              \x20 throughput: {:.2} jobs/s\n\
-             \x20 latency:    p50 {:.2}ms  p99 {:.2}ms\n",
-            self.completed, self.clients, self.elapsed_s, self.jobs_per_sec, self.p50_ms, self.p99_ms
+             \x20 latency:    p50 {:.2}ms  p99 {:.2}ms\n\
+             \x20 resilience: {} retried refusal(s), {} tolerated failure(s)\n",
+            self.completed,
+            self.clients,
+            self.elapsed_s,
+            self.jobs_per_sec,
+            self.p50_ms,
+            self.p99_ms,
+            self.retries,
+            self.failed
         )
     }
 }
 
-/// Run the closed loop. Any protocol violation or error response fails
-/// the whole run — a load test that silently drops errors measures a
+struct ClientResult {
+    latencies: Vec<f64>,
+    retries: u64,
+    failed: u64,
+}
+
+/// Run the closed loop. Any protocol violation — and, unless
+/// `allow_failures` is set, any non-retryable error response — fails
+/// the whole run: a load test that silently drops errors measures a
 /// different server than the one you have.
 pub fn run(opts: &LoadgenOpts) -> Result<LoadgenReport> {
     if opts.clients == 0 || opts.requests == 0 {
         bail!("loadgen needs at least one client and one request");
     }
     let started = Instant::now();
-    let latencies = std::thread::scope(|scope| -> Result<Vec<f64>> {
+    let results = std::thread::scope(|scope| -> Result<Vec<ClientResult>> {
         let handles: Vec<_> = (0..opts.clients)
             .map(|c| scope.spawn(move || client_loop(c, opts)))
             .collect();
-        let mut all = Vec::with_capacity(opts.clients * opts.requests);
-        for h in handles {
-            all.extend(h.join().expect("client thread panicked")?);
-        }
-        Ok(all)
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("client thread panicked"))
+            .collect()
     })?;
     let elapsed_s = started.elapsed().as_secs_f64();
     if opts.shutdown_after {
         shutdown(&opts.addr)?;
     }
+    let latencies: Vec<f64> = results.iter().flat_map(|r| r.latencies.iter().copied()).collect();
     let mut sorted = latencies.clone();
     sorted.sort_by(f64::total_cmp);
     Ok(LoadgenReport {
         clients: opts.clients,
         completed: latencies.len(),
+        retries: results.iter().map(|r| r.retries).sum(),
+        failed: results.iter().map(|r| r.failed).sum(),
         elapsed_s,
         jobs_per_sec: latencies.len() as f64 / elapsed_s.max(1e-9),
         p50_ms: percentile(&sorted, 50.0) * 1e3,
@@ -97,31 +154,76 @@ pub fn percentile(sorted: &[f64], p: f64) -> f64 {
     sorted[rank.clamp(1, sorted.len()) - 1]
 }
 
-fn client_loop(client: usize, opts: &LoadgenOpts) -> Result<Vec<f64>> {
+fn client_loop(client: usize, opts: &LoadgenOpts) -> Result<ClientResult> {
     let stream = TcpStream::connect(&opts.addr)
         .with_context(|| format!("client {client}: connecting {}", opts.addr))?;
     let mut writer = stream.try_clone().context("cloning stream")?;
     let mut reader = BufReader::new(stream);
-    let mut latencies = Vec::with_capacity(opts.requests);
+    // Per-client jitter stream: distinct per client, reproducible per
+    // (seed, client) so a rerun of a chaos test backs off identically.
+    let mut rng = Rng::new(opts.seed ^ (client as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    let mut res = ClientResult {
+        latencies: Vec::with_capacity(opts.requests),
+        retries: 0,
+        failed: 0,
+    };
     for i in 0..opts.requests {
         let id = format!("c{client}-r{i}");
         let line = with_id(&opts.request, &id).render_compact();
         let t0 = Instant::now();
-        writer
-            .write_all(format!("{line}\n").as_bytes())
-            .and_then(|()| writer.flush())
-            .with_context(|| format!("client {client}: sending request {i}"))?;
-        let mut reply = String::new();
-        let n = reader
-            .read_line(&mut reply)
-            .with_context(|| format!("client {client}: reading response {i}"))?;
-        if n == 0 {
-            bail!("client {client}: server closed the connection at request {i}");
+        let mut attempt = 0usize;
+        loop {
+            writer
+                .write_all(format!("{line}\n").as_bytes())
+                .and_then(|()| writer.flush())
+                .with_context(|| format!("client {client}: sending request {i}"))?;
+            let mut reply = String::new();
+            let n = reader
+                .read_line(&mut reply)
+                .with_context(|| format!("client {client}: reading response {i}"))?;
+            if n == 0 {
+                bail!("client {client}: server closed the connection at request {i}");
+            }
+            match classify(&reply, &id).with_context(|| format!("client {client} request {i}"))? {
+                Reply::Ok => {
+                    // Client-perceived latency: includes any backoff.
+                    res.latencies.push(t0.elapsed().as_secs_f64());
+                    break;
+                }
+                Reply::Retryable(kind) => {
+                    if attempt >= opts.retry_max {
+                        bail!(
+                            "client {client} request {i}: still {kind} after {attempt} resubmission(s)"
+                        );
+                    }
+                    attempt += 1;
+                    res.retries += 1;
+                    std::thread::sleep(Duration::from_millis(backoff_ms(
+                        opts.retry_base_ms,
+                        attempt,
+                        &mut rng,
+                    )));
+                }
+                Reply::Failed(msg) => {
+                    if !opts.allow_failures {
+                        bail!("client {client} request {i}: {msg}");
+                    }
+                    res.failed += 1;
+                    break;
+                }
+            }
         }
-        latencies.push(t0.elapsed().as_secs_f64());
-        validate(&reply, &id).with_context(|| format!("client {client} request {i}"))?;
     }
-    Ok(latencies)
+    Ok(res)
+}
+
+/// Jittered exponential backoff: `base * 2^(attempt-1)`, scaled by a
+/// uniform factor in [0.5, 1.0] and capped at 1s (equal-jitter keeps a
+/// floor so colliding clients still spread out).
+fn backoff_ms(base_ms: u64, attempt: usize, rng: &mut Rng) -> u64 {
+    let exp = base_ms.max(1).saturating_mul(1u64 << (attempt - 1).min(10)) as f64;
+    let jittered = exp * (0.5 + 0.5 * rng.next_f64());
+    jittered.clamp(1.0, 1000.0) as u64
 }
 
 /// Copy the request template with `id` set (replacing any existing id).
@@ -135,23 +237,37 @@ fn with_id(template: &Value, id: &str) -> Value {
     Value::Obj(fields)
 }
 
-/// Strict response validation: parses, `ok:true`, id echoed, summary
-/// finite.
-fn validate(reply: &str, id: &str) -> Result<()> {
+/// What one response line means for the closed loop.
+#[derive(Debug, PartialEq)]
+enum Reply {
+    /// `ok:true`, id echoed, finite summary.
+    Ok,
+    /// A refusal worth resubmitting (`overloaded` / `deadline`).
+    Retryable(&'static str),
+    /// Any other error reply (fatal unless `allow_failures`).
+    Failed(String),
+}
+
+/// Strict response triage: a protocol violation (unparseable line, bad
+/// id echo, missing summary) is always an `Err` — never retried, never
+/// tolerated — while well-formed error replies become [`Reply`] data.
+fn classify(reply: &str, id: &str) -> Result<Reply> {
     let v = parse(reply.trim()).context("response is not valid JSON")?;
     if v.get("ok") != Some(&Value::Bool(true)) {
-        bail!(
-            "error response: {} — {}",
-            v.get("error").and_then(Value::as_str).unwrap_or("?"),
-            v.get("message").and_then(Value::as_str).unwrap_or("?")
-        );
+        let kind = v.get("error").and_then(Value::as_str).unwrap_or("?");
+        let msg = v.get("message").and_then(Value::as_str).unwrap_or("?");
+        return Ok(match kind {
+            "overloaded" => Reply::Retryable("overloaded"),
+            "deadline" => Reply::Retryable("deadline"),
+            _ => Reply::Failed(format!("error response: {kind} — {msg}")),
+        });
     }
     match v.get("id").and_then(Value::as_str) {
         Some(got) if got == id => {}
         other => bail!("response id {other:?} does not echo request id {id:?}"),
     }
     match v.get("summary").and_then(Value::as_f64) {
-        Some(s) if s.is_finite() => Ok(()),
+        Some(s) if s.is_finite() => Ok(Reply::Ok),
         other => bail!("response summary {other:?} is missing or non-finite"),
     }
 }
@@ -201,16 +317,49 @@ mod tests {
     }
 
     #[test]
-    fn validation_is_strict() {
-        assert!(validate(r#"{"ok":true,"id":"a","summary":1.5}"#, "a").is_ok());
+    fn classification_is_strict() {
+        assert_eq!(
+            classify(r#"{"ok":true,"id":"a","summary":1.5}"#, "a").unwrap(),
+            Reply::Ok
+        );
+        // Protocol violations are errors, never data.
         for (reply, id) in [
             ("not json", "a"),
-            (r#"{"ok":false,"id":"a","error":"failed","message":"x"}"#, "a"),
             (r#"{"ok":true,"id":"b","summary":1.5}"#, "a"),
             (r#"{"ok":true,"id":"a"}"#, "a"),
             (r#"{"ok":true,"id":"a","summary":null}"#, "a"),
         ] {
-            assert!(validate(reply, id).is_err(), "accepted {reply:?}");
+            assert!(classify(reply, id).is_err(), "accepted {reply:?}");
         }
+        // Refusals retry; real failures don't.
+        assert_eq!(
+            classify(r#"{"ok":false,"id":"a","error":"overloaded","message":"q"}"#, "a").unwrap(),
+            Reply::Retryable("overloaded")
+        );
+        assert_eq!(
+            classify(r#"{"ok":false,"id":"a","error":"deadline","message":"d"}"#, "a").unwrap(),
+            Reply::Retryable("deadline")
+        );
+        assert!(matches!(
+            classify(r#"{"ok":false,"id":"a","error":"failed","message":"x"}"#, "a").unwrap(),
+            Reply::Failed(_)
+        ));
+    }
+
+    #[test]
+    fn backoff_is_seeded_bounded_and_grows() {
+        let seq = |seed: u64| -> Vec<u64> {
+            let mut rng = Rng::new(seed);
+            (1..=8).map(|a| backoff_ms(10, a, &mut rng)).collect()
+        };
+        assert_eq!(seq(7), seq(7), "same seed, same backoffs");
+        let s = seq(7);
+        for (i, &ms) in s.iter().enumerate() {
+            assert!((1..=1000).contains(&ms), "attempt {}: {ms}ms", i + 1);
+            // Equal-jitter floor: attempt k waits at least base*2^(k-1)/2.
+            let floor = (10u64 << i.min(10)) / 2;
+            assert!(ms >= floor.min(1000), "attempt {}: {ms}ms < floor {floor}", i + 1);
+        }
+        assert!(s[7] > s[0], "backoff must grow across attempts");
     }
 }

@@ -14,6 +14,12 @@
 //! - [`daemon`]: the TCP/stdio transport (`cagra serve`).
 //! - [`loadgen`]: the closed-loop measurement client (`cagra loadgen`),
 //!   also driven by the `serve_throughput` bench suite.
+//!
+//! Fault containment (DESIGN.md §8): job panics are caught and become
+//! `failed` replies, dead worker threads are respawned by a supervisor,
+//! connections are bounded (`max_conns`) and idle-timed-out, and the
+//! disk store quarantines + rebuilds corrupt artifacts. All of it is
+//! exercised deterministically through [`crate::fault`] failpoints.
 
 pub mod daemon;
 pub mod loadgen;
@@ -22,5 +28,5 @@ pub mod worker;
 
 pub use daemon::{serve, ServeOpts};
 pub use loadgen::{LoadgenOpts, LoadgenReport};
-pub use protocol::{parse_request, ErrorKind, Request};
+pub use protocol::{parse_request, ErrorKind, Request, StatsSnapshot};
 pub use worker::{Outcome, SubmitError, WorkerPool};

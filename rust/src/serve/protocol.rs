@@ -218,25 +218,56 @@ pub fn render_pong(id: Option<&Value>) -> String {
     Value::Obj(base_response(id, "ping", true)).render_compact()
 }
 
+/// Everything a `stats` response reports: pool counters (including the
+/// containment story: live workers, contained panics), the resident
+/// layer, and — when the disk store is enabled — its self-healing
+/// counters.
+#[derive(Debug, Clone, Default)]
+pub struct StatsSnapshot {
+    pub mem: crate::store::MemStats,
+    pub workers: usize,
+    pub workers_alive: usize,
+    pub panics_contained: u64,
+    pub queue_depth: usize,
+    pub jobs_done: u64,
+    pub store: Option<crate::store::StoreStats>,
+}
+
 /// `stats` response: the resident-layer and pool counters a load
 /// balancer or test harness polls.
-pub fn render_stats(
-    id: Option<&Value>,
-    mem: crate::store::MemStats,
-    workers: usize,
-    queue_depth: usize,
-    jobs_done: u64,
-) -> String {
+pub fn render_stats(id: Option<&Value>, s: &StatsSnapshot) -> String {
     let mut fields = base_response(id, "stats", true);
-    fields.push(("workers".to_string(), Value::Num(workers as f64)));
-    fields.push(("queue_depth".to_string(), Value::Num(queue_depth as f64)));
-    fields.push(("jobs_done".to_string(), Value::Num(jobs_done as f64)));
-    fields.push(("mem".to_string(), mem_value(&mem)));
+    fields.push(("workers".to_string(), Value::Num(s.workers as f64)));
+    fields.push((
+        "workers_alive".to_string(),
+        Value::Num(s.workers_alive as f64),
+    ));
+    fields.push((
+        "panics_contained".to_string(),
+        Value::Num(s.panics_contained as f64),
+    ));
+    fields.push(("queue_depth".to_string(), Value::Num(s.queue_depth as f64)));
+    fields.push(("jobs_done".to_string(), Value::Num(s.jobs_done as f64)));
+    fields.push(("mem".to_string(), mem_value(&s.mem)));
+    if let Some(st) = &s.store {
+        fields.push(("store".to_string(), store_value(st)));
+    }
     Value::Obj(fields).render_compact()
 }
 
 pub fn render_shutdown_ack(id: Option<&Value>) -> String {
     Value::Obj(base_response(id, "shutdown", true)).render_compact()
+}
+
+fn store_value(s: &crate::store::StoreStats) -> Value {
+    Value::Obj(vec![
+        ("hits".to_string(), Value::Num(s.hits as f64)),
+        ("misses".to_string(), Value::Num(s.misses as f64)),
+        ("evictions".to_string(), Value::Num(s.evictions as f64)),
+        ("entries".to_string(), Value::Num(s.entries as f64)),
+        ("quarantined".to_string(), Value::Num(s.quarantined as f64)),
+        ("rebuilds".to_string(), Value::Num(s.rebuilds as f64)),
+    ])
 }
 
 fn mem_value(m: &crate::store::MemStats) -> Value {
@@ -394,11 +425,30 @@ mod tests {
         assert_eq!(v.get("ok"), Some(&Value::Bool(true)));
         assert_eq!(v.get("id"), Some(&Value::Null));
 
-        let stats = render_stats(None, crate::store::MemStats::default(), 4, 0, 9);
+        let stats = render_stats(
+            None,
+            &StatsSnapshot {
+                workers: 4,
+                workers_alive: 4,
+                panics_contained: 2,
+                jobs_done: 9,
+                store: Some(crate::store::StoreStats {
+                    quarantined: 1,
+                    rebuilds: 1,
+                    ..Default::default()
+                }),
+                ..Default::default()
+            },
+        );
         let v = parse(&stats).unwrap();
         assert_eq!(v.get("workers").and_then(Value::as_u64), Some(4));
+        assert_eq!(v.get("workers_alive").and_then(Value::as_u64), Some(4));
+        assert_eq!(v.get("panics_contained").and_then(Value::as_u64), Some(2));
         assert_eq!(v.get("jobs_done").and_then(Value::as_u64), Some(9));
         assert!(v.get("mem").is_some());
+        let store = v.get("store").expect("store block when enabled");
+        assert_eq!(store.get("quarantined").and_then(Value::as_u64), Some(1));
+        assert_eq!(store.get("rebuilds").and_then(Value::as_u64), Some(1));
     }
 
     #[test]

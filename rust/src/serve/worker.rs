@@ -20,7 +20,8 @@ use crate::coordinator::{run_job_env, JobEnv, JobResult, JobSpec, SystemConfig};
 use crate::store::{ArtifactStore, MemStats, MemStore};
 use anyhow::Result;
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
@@ -76,6 +77,13 @@ struct Shared {
     mem: MemStore,
     queue_cap: usize,
     jobs_done: AtomicU64,
+    /// Job panics swallowed by the per-job `catch_unwind` (each one
+    /// became an error reply instead of a dead worker).
+    panics_contained: AtomicU64,
+    /// Worker threads currently in (or respawning into) `worker_loop`.
+    /// Incremented before spawn, decremented as each thread exits, so
+    /// `shutdown` can bounded-wait for respawned (detached) workers too.
+    workers_alive: AtomicUsize,
 }
 
 impl Shared {
@@ -105,13 +113,16 @@ impl WorkerPool {
     /// `mem_budget` bytes (0 = unbounded) and, when the config enables
     /// it, one shared disk store. `queue_cap` bounds waiting jobs, with
     /// an effective floor of one slot per worker so a just-started pool
-    /// can always be filled.
+    /// can always be filled. Arms failpoints from the config (or
+    /// `CAGRA_FAILPOINTS`) so a daemon's whole lifetime runs under the
+    /// requested fault pressure.
     pub fn start(
         cfg: SystemConfig,
         workers: usize,
         queue_cap: usize,
         mem_budget: u64,
     ) -> Result<WorkerPool> {
+        crate::fault::arm_from(&cfg.failpoints)?;
         let workers = workers.max(1);
         let store = if cfg.store_enabled {
             let s = ArtifactStore::open(&cfg.store_dir, cfg.store_cap_bytes)?;
@@ -133,16 +144,10 @@ impl WorkerPool {
             mem: MemStore::new(mem_budget),
             queue_cap,
             jobs_done: AtomicU64::new(0),
+            panics_contained: AtomicU64::new(0),
+            workers_alive: AtomicUsize::new(0),
         });
-        let handles = (0..workers)
-            .map(|i| {
-                let shared = shared.clone();
-                std::thread::Builder::new()
-                    .name(format!("cagra-worker-{i}"))
-                    .spawn(move || worker_loop(&shared))
-                    .expect("spawning worker thread")
-            })
-            .collect();
+        let handles = (0..workers).map(|i| spawn_worker(&shared, i)).collect();
         Ok(WorkerPool {
             shared,
             workers,
@@ -199,6 +204,11 @@ impl WorkerPool {
         self.shared.mem.stats()
     }
 
+    /// Disk-store counters (None when the store is disabled).
+    pub fn store_stats(&self) -> Option<crate::store::StoreStats> {
+        self.shared.store.as_ref().map(|s| s.stats())
+    }
+
     pub fn worker_count(&self) -> usize {
         self.workers
     }
@@ -211,8 +221,21 @@ impl WorkerPool {
         self.shared.jobs_done.load(Ordering::Relaxed)
     }
 
+    /// Worker threads currently serving (original or respawned). Equals
+    /// [`WorkerPool::worker_count`] whenever no thread is mid-respawn.
+    pub fn workers_alive(&self) -> usize {
+        self.shared.workers_alive.load(Ordering::SeqCst)
+    }
+
+    /// Job panics converted to error replies by the per-job containment.
+    pub fn panics_contained(&self) -> u64 {
+        self.shared.panics_contained.load(Ordering::Relaxed)
+    }
+
     /// Graceful drain: stop admitting, let workers finish every
-    /// already-queued job, then join them. Idempotent.
+    /// already-queued job, then join them. Respawned workers are
+    /// detached (no `JoinHandle`), so after joining the originals this
+    /// bounded-waits for `workers_alive` to reach zero. Idempotent.
     pub fn shutdown(&self) {
         {
             let mut st = self.shared.lock();
@@ -226,6 +249,18 @@ impl WorkerPool {
         for h in handles {
             let _ = h.join();
         }
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while self.shared.workers_alive.load(Ordering::SeqCst) > 0 {
+            if Instant::now() > deadline {
+                crate::log_warn!(
+                    "shutdown: {} worker(s) still alive after drain timeout",
+                    self.shared.workers_alive.load(Ordering::SeqCst)
+                );
+                break;
+            }
+            self.shared.available.notify_all();
+            std::thread::sleep(Duration::from_millis(1));
+        }
     }
 }
 
@@ -233,6 +268,29 @@ impl Drop for WorkerPool {
     fn drop(&mut self) {
         self.shutdown();
     }
+}
+
+/// Spawn worker `id`, wrapped in the supervisor: if the thread dies (a
+/// panic that escaped the per-job containment — in practice the
+/// `worker.thread` failpoint or a bug in the loop itself), a detached
+/// replacement is spawned so the pool's capacity self-heals. The
+/// in-flight job, if any, surfaces to its client as an "abandoned"
+/// error through the dropped reply sender.
+fn spawn_worker(shared: &Arc<Shared>, id: usize) -> std::thread::JoinHandle<()> {
+    shared.workers_alive.fetch_add(1, Ordering::SeqCst);
+    let sh = shared.clone();
+    std::thread::Builder::new()
+        .name(format!("cagra-worker-{id}"))
+        .spawn(move || {
+            let died = std::panic::catch_unwind(AssertUnwindSafe(|| worker_loop(&sh))).is_err();
+            sh.workers_alive.fetch_sub(1, Ordering::SeqCst);
+            if died && !sh.lock().shutting_down {
+                crate::log_warn!("worker {id} died; respawning");
+                // Detached: `shutdown` accounts for it via workers_alive.
+                drop(spawn_worker(&sh, id));
+            }
+        })
+        .expect("spawning worker thread")
 }
 
 fn worker_loop(shared: &Shared) {
@@ -252,6 +310,13 @@ fn worker_loop(shared: &Shared) {
                     .unwrap_or_else(|p| p.into_inner());
             }
         };
+        // Thread-death injection: *outside* the per-job containment
+        // below, so a trigger unwinds the whole thread and exercises the
+        // supervisor respawn. Evaluated once per popped job (an idle
+        // pool cannot respawn-storm); either action means thread death.
+        if crate::fault::check(crate::fault::Site::WorkerThread).is_some() {
+            panic!("injected thread death at failpoint worker.thread");
+        }
         let started = Instant::now();
         let queue_s = started.duration_since(job.enqueued).as_secs_f64();
         if job.deadline.is_some_and(|d| started > d) {
@@ -260,7 +325,18 @@ fn worker_loop(shared: &Shared) {
             let _ = job.reply.send(Outcome::DeadlineExpired { queue_s });
             continue;
         }
-        let result = run_job_env(&job.spec, &shared.cfg, shared.env());
+        // Containment: a panicking job (or an injected `worker.job`
+        // fault) becomes an error outcome; the worker keeps serving.
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            crate::fault::failpoint(crate::fault::Site::WorkerJob)?;
+            run_job_env(&job.spec, &shared.cfg, shared.env())
+        }))
+        .unwrap_or_else(|payload| {
+            shared.panics_contained.fetch_add(1, Ordering::Relaxed);
+            let msg = panic_message(payload.as_ref());
+            crate::log_warn!("worker contained a job panic: {msg}");
+            Err(anyhow::anyhow!("job panicked: {msg}"))
+        });
         let run_s = started.elapsed().as_secs_f64();
         shared.jobs_done.fetch_add(1, Ordering::Relaxed);
         // A receiver that hung up (connection dropped) is not an error.
@@ -272,9 +348,28 @@ fn worker_loop(shared: &Shared) {
     }
 }
 
+/// Best-effort text of a panic payload (`&str` and `String` cover
+/// `panic!` and `assert!`; anything else gets a placeholder).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
+    if let Some(s) = payload.downcast_ref::<&'static str>() {
+        s
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.as_str()
+    } else {
+        "non-string panic payload"
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// Every pool test holds the crate-wide failpoint guard: the
+    /// registry is process-global, so a concurrent arming test would
+    /// otherwise inject faults into these pools too.
+    fn guard() -> std::sync::MutexGuard<'static, ()> {
+        crate::fault::TEST_GUARD.lock().unwrap_or_else(|p| p.into_inner())
+    }
 
     fn small_spec() -> JobSpec {
         JobSpec {
@@ -287,6 +382,7 @@ mod tests {
 
     #[test]
     fn pool_runs_jobs_and_counts_them() {
+        let _g = guard();
         let pool = WorkerPool::start(SystemConfig::default(), 2, 8, 0).unwrap();
         let outcome = pool.run_sync(small_spec(), None).unwrap();
         let Outcome::Done { result, run_s, .. } = outcome else {
@@ -302,6 +398,7 @@ mod tests {
 
     #[test]
     fn bad_spec_is_an_error_outcome_not_a_dead_worker() {
+        let _g = guard();
         let pool = WorkerPool::start(SystemConfig::default(), 1, 8, 0).unwrap();
         let bad = JobSpec {
             cf_k: Some(65),
@@ -320,6 +417,7 @@ mod tests {
 
     #[test]
     fn expired_deadline_skips_execution() {
+        let _g = guard();
         let pool = WorkerPool::start(SystemConfig::default(), 1, 8, 0).unwrap();
         // Occupy the single worker so the deadline job waits in queue.
         let blocker = pool.submit(small_spec(), None).unwrap();
@@ -336,6 +434,7 @@ mod tests {
 
     #[test]
     fn overload_rejects_at_the_door() {
+        let _g = guard();
         let pool = WorkerPool::start(SystemConfig::default(), 1, 1, 0).unwrap();
         let mut admitted = Vec::new();
         let mut rejected = 0;
@@ -356,6 +455,7 @@ mod tests {
 
     #[test]
     fn shutdown_drains_admitted_jobs() {
+        let _g = guard();
         let pool = WorkerPool::start(SystemConfig::default(), 1, 8, 0).unwrap();
         let receivers: Vec<_> = (0..4)
             .map(|_| pool.submit(small_spec(), None).unwrap())
@@ -373,6 +473,65 @@ mod tests {
         assert_eq!(
             pool.submit(small_spec(), None).unwrap_err(),
             SubmitError::ShuttingDown
+        );
+    }
+
+    #[test]
+    fn injected_job_panic_is_contained_and_counted() {
+        let _g = guard();
+        // Arm *after* start: the constructor (re)arms from the config,
+        // which for a default config disarms everything.
+        let pool = WorkerPool::start(SystemConfig::default(), 2, 8, 0).unwrap();
+        crate::fault::configure("worker.job=panic@every:2").unwrap();
+        let mut errs = 0;
+        for _ in 0..4 {
+            // run_sync serializes the jobs, so the every:2 trigger fires
+            // on exactly the 2nd and 4th evaluations.
+            let Outcome::Done { result, .. } = pool.run_sync(small_spec(), None).unwrap() else {
+                panic!("expected completion");
+            };
+            if result.is_err() {
+                errs += 1;
+            }
+        }
+        assert_eq!(errs, 2, "every:2 over 4 jobs");
+        assert_eq!(pool.panics_contained(), 2);
+        assert_eq!(pool.workers_alive(), 2, "containment must not kill workers");
+        crate::fault::disarm();
+        let Outcome::Done { result, .. } = pool.run_sync(small_spec(), None).unwrap() else {
+            panic!("expected completion");
+        };
+        assert!(result.is_ok(), "pool serves normally once disarmed");
+    }
+
+    #[test]
+    fn dead_worker_thread_is_respawned() {
+        let _g = guard();
+        let pool = WorkerPool::start(SystemConfig::default(), 1, 8, 0).unwrap();
+        crate::fault::configure("worker.thread=panic@every:1").unwrap();
+        // The single worker dies while holding the popped job: the
+        // client sees an "abandoned" error, never a hang.
+        let Outcome::Done { result, .. } = pool.run_sync(small_spec(), None).unwrap() else {
+            panic!("expected completion");
+        };
+        let msg = result.unwrap_err().to_string();
+        assert!(msg.contains("abandoned"), "got {msg:?}");
+        crate::fault::disarm();
+        // The supervisor respawns a replacement...
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while pool.workers_alive() < 1 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(pool.workers_alive(), 1, "replacement worker never arrived");
+        // ...which serves jobs like nothing happened.
+        let Outcome::Done { result, .. } = pool.run_sync(small_spec(), None).unwrap() else {
+            panic!("expected completion");
+        };
+        assert!(result.is_ok(), "respawned worker serves");
+        assert_eq!(
+            pool.panics_contained(),
+            0,
+            "thread death is respawn territory, not a contained job panic"
         );
     }
 }

@@ -53,6 +53,11 @@ use std::time::{Duration, SystemTime};
 /// Extension of committed artifact files.
 pub const ARTIFACT_EXT: &str = "art";
 
+/// Sibling directory (inside the store dir) where corrupt/torn artifacts
+/// are moved instead of deleted — evidence for post-mortems, invisible to
+/// the `.art` top-level scan.
+pub const QUARANTINE_DIR: &str = ".quarantine";
+
 /// Full cache key for one preprocessing artifact. The artifact *type*
 /// (permutation / CSR / segmented) is contributed by
 /// [`Artifact::NAME`] at filename time, so one key can address the
@@ -134,6 +139,12 @@ pub struct StoreStats {
     /// Their total size.
     pub resident_bytes: u64,
     pub cap_bytes: u64,
+    /// Corrupt/torn artifacts moved to the `.quarantine/` sibling this
+    /// process (self-healing evidence — each one was rebuilt, not served).
+    pub quarantined: u64,
+    /// Rebuilds forced by an unreadable artifact (a subset of `misses`;
+    /// plain absent-file misses are not rebuilds).
+    pub rebuilds: u64,
 }
 
 #[derive(Debug, Default)]
@@ -144,6 +155,8 @@ struct Counters {
     bytes_read: AtomicU64,
     bytes_written: AtomicU64,
     bytes_mapped: AtomicU64,
+    quarantined: AtomicU64,
+    rebuilds: AtomicU64,
 }
 
 /// One validated mapping in the map cache. Identity is (inode, size):
@@ -202,7 +215,11 @@ impl ExemptionScope<'_> {
 
 impl Drop for ExemptionScope<'_> {
     fn drop(&mut self) {
-        self.store.exempt.lock().unwrap().remove(&self.id.0);
+        self.store
+            .exempt
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .remove(&self.id.0);
     }
 }
 
@@ -331,7 +348,10 @@ impl ArtifactStore {
     /// they rejoin normal mtime-LRU.
     pub fn begin_scope(&self) -> ExemptionScope<'_> {
         let id = ScopeId(self.next_scope.fetch_add(1, Ordering::Relaxed));
-        self.exempt.lock().unwrap().insert(id.0, HashSet::new());
+        self.exempt
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .insert(id.0, HashSet::new());
         ExemptionScope { store: self, id }
     }
 
@@ -371,11 +391,11 @@ impl ArtifactStore {
                 }
                 Err(e) => {
                     crate::log_warn!(
-                        "artifact store: dropping unreadable {}: {e:#}",
+                        "artifact store: quarantining unreadable {}: {e:#}",
                         path.display()
                     );
-                    self.map_cache.lock().unwrap().remove(&path);
-                    std::fs::remove_file(&path).ok();
+                    self.quarantine(&path);
+                    self.counters.rebuilds.fetch_add(1, Ordering::Relaxed);
                 }
             }
         }
@@ -388,8 +408,11 @@ impl ArtifactStore {
                 crate::log_debug!("artifact store write: {} ({len} bytes)", path.display());
                 // A scope that was already dropped (or a foreign id)
                 // degrades to no exemption, never to a lost write.
-                if let Some(set) = self.exempt.lock().unwrap().get_mut(&scope.0) {
-                    set.insert(path);
+                {
+                    let mut exempt = self.exempt.lock().unwrap_or_else(|p| p.into_inner());
+                    if let Some(set) = exempt.get_mut(&scope.0) {
+                        set.insert(path);
+                    }
                 }
                 self.evict_to_cap();
             }
@@ -424,7 +447,7 @@ impl ArtifactStore {
             .with_context(|| format!("stat {}", path.display()))?;
         let (ino, size) = file_identity(&md);
         let cached = {
-            let cache = self.map_cache.lock().unwrap();
+            let cache = self.map_cache.lock().unwrap_or_else(|p| p.into_inner());
             cache
                 .get(path)
                 .filter(|e| e.ino == ino && e.size == size)
@@ -434,7 +457,7 @@ impl ArtifactStore {
             Some(region) => codec::from_mapped::<T>(&region, true)?,
             None => {
                 let (value, region) = codec::map_file::<T>(path)?;
-                let mut cache = self.map_cache.lock().unwrap();
+                let mut cache = self.map_cache.lock().unwrap_or_else(|p| p.into_inner());
                 cache.retain(|_, e| e.region.strong_count() > 0);
                 cache.insert(
                     path.to_path_buf(),
@@ -451,6 +474,45 @@ impl ArtifactStore {
             .bytes_mapped
             .fetch_add(value.mapped_bytes(), Ordering::Relaxed);
         Ok(value)
+    }
+
+    /// Self-healing: move an unreadable artifact into `.quarantine/`
+    /// (falling back to deletion if the rename fails) so the rebuild that
+    /// follows can commit a fresh file under the original name while the
+    /// corrupt bytes stay available for post-mortem. The path's map-cache
+    /// entry is dropped either way.
+    fn quarantine(&self, path: &Path) {
+        self.map_cache
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .remove(path);
+        let qdir = self.dir.join(QUARANTINE_DIR);
+        let moved = path.file_name().is_some_and(|name| {
+            if std::fs::create_dir_all(&qdir).is_err() {
+                return false;
+            }
+            let target = qdir.join(name);
+            // Re-quarantining the same name: keep the newest evidence.
+            std::fs::remove_file(&target).ok();
+            std::fs::rename(path, &target).is_ok()
+        });
+        if !moved {
+            std::fs::remove_file(path).ok();
+        }
+        self.counters.quarantined.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Files currently sitting in `.quarantine/` (on-disk evidence count,
+    /// independent of this process's counters — `cagra cache stats` uses
+    /// it to report quarantines from earlier runs too).
+    pub fn quarantine_count(&self) -> u64 {
+        match std::fs::read_dir(self.dir.join(QUARANTINE_DIR)) {
+            Ok(rd) => rd
+                .flatten()
+                .filter(|e| e.metadata().map(|m| m.is_file()).unwrap_or(false))
+                .count() as u64,
+            Err(_) => 0,
+        }
     }
 
     /// Read an artifact without building on miss (tests, tooling).
@@ -478,6 +540,8 @@ impl ArtifactStore {
             entries: files.len() as u64,
             resident_bytes: files.iter().map(|f| f.size).sum(),
             cap_bytes: self.cap_bytes,
+            quarantined: self.counters.quarantined.load(Ordering::Relaxed),
+            rebuilds: self.counters.rebuilds.load(Ordering::Relaxed),
         }
     }
 
@@ -515,7 +579,7 @@ impl ArtifactStore {
     pub fn clear(&self) -> Result<(u64, u64)> {
         let mut removed = 0u64;
         let mut freed = 0u64;
-        self.map_cache.lock().unwrap().clear();
+        self.map_cache.lock().unwrap_or_else(|p| p.into_inner()).clear();
         for f in self.scan() {
             std::fs::remove_file(&f.path)
                 .with_context(|| format!("removing {}", f.path.display()))?;
@@ -566,7 +630,7 @@ impl ArtifactStore {
             return;
         }
         files.sort_by_key(|f| f.mtime);
-        let exempt = self.exempt.lock().unwrap();
+        let exempt = self.exempt.lock().unwrap_or_else(|p| p.into_inner());
         // Snapshot the in-flight key locks so eviction can skip files a
         // concurrent thread is mid-build/read on (including the caller's
         // own key — `evict_to_cap` runs with that lock held, and a fresh
@@ -599,7 +663,10 @@ impl ArtifactStore {
                 // Unlinking doesn't invalidate live mappings (the inode
                 // survives until the last ArcSlice drops), but the path's
                 // cache entry is now stale.
-                self.map_cache.lock().unwrap().remove(&f.path);
+                self.map_cache
+                    .lock()
+                    .unwrap_or_else(|p| p.into_inner())
+                    .remove(&f.path);
                 crate::log_debug!("artifact store evict: {} ({} bytes)", f.path.display(), f.size);
             }
         }
@@ -735,7 +802,20 @@ mod tests {
         std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
         let back = store.get_or_build(&key, || perm(50, 3));
         assert_eq!(back, perm(50, 3));
-        assert_eq!(store.stats().misses, 2); // initial build + rebuild
+        let s = store.stats();
+        assert_eq!(s.misses, 2); // initial build + rebuild
+        assert_eq!(s.quarantined, 1);
+        assert_eq!(s.rebuilds, 1);
+        // The torn bytes moved aside, the rebuilt artifact is readable,
+        // and the quarantine dir is invisible to the scan.
+        assert_eq!(store.quarantine_count(), 1);
+        assert!(dir
+            .join(QUARANTINE_DIR)
+            .join(key.filename::<ArcSlice<u32>>())
+            .exists());
+        let reread: ArcSlice<u32> = store.try_get(&key).unwrap();
+        assert_eq!(reread, perm(50, 3));
+        assert_eq!(store.stats().entries, 1);
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -453,6 +453,7 @@ fn validate_frame(bytes: &[u8], kind: [u8; 4], verify_payload: bool) -> Result<(
 /// Decode a framed artifact from heap bytes (the read-and-decode
 /// fallback): full validation, sections copied into owned storage.
 pub fn decode<T: Artifact>(bytes: &[u8]) -> Result<T> {
+    crate::fault::failpoint(crate::fault::Site::StoreDecode)?;
     let (table, meta_range) = validate_frame(bytes, T::KIND, true)?;
     let view = ArtifactView {
         meta: &bytes[meta_range],
@@ -535,6 +536,7 @@ pub fn write_atomic(path: &Path, write: impl FnOnce(&Path) -> Result<()>) -> Res
 
 /// Encode + write atomically (temp file, then rename). Returns file size.
 pub fn write_file<T: Artifact>(path: &Path, value: &T) -> Result<u64> {
+    crate::fault::failpoint(crate::fault::Site::StoreWrite)?;
     let bytes = encode(value);
     write_atomic(path, |tmp| {
         std::fs::write(tmp, &bytes).with_context(|| format!("writing {}", tmp.display()))
@@ -544,6 +546,7 @@ pub fn write_file<T: Artifact>(path: &Path, value: &T) -> Result<u64> {
 
 /// Read + decode a file. Returns the value and the file size.
 pub fn read_file<T: Artifact>(path: &Path) -> Result<(T, u64)> {
+    crate::fault::failpoint(crate::fault::Site::StoreRead)?;
     let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
     let value =
         decode::<T>(&bytes).with_context(|| format!("decoding artifact {}", path.display()))?;

@@ -198,6 +198,18 @@ impl MemStore {
         // distinct keys decode/build concurrently.
         let (value, bytes, mapped) = build()?;
         let value: Arc<T> = Arc::new(value);
+        // A triggered `mem.insert` failpoint degrades to "don't cache" —
+        // the caller still gets its freshly built value, so the infallible
+        // `get_or_insert_full` wrapper stays infallible. A panic action
+        // propagates (contained by the serve worker's catch_unwind).
+        if let Some(a) = crate::fault::check(crate::fault::Site::MemInsert) {
+            if matches!(a, crate::fault::Action::Panic) {
+                panic!("injected panic at failpoint mem.insert");
+            }
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            self.record(t0, key, false);
+            return Ok(value);
+        }
         let mut inner = relock(&self.inner);
         inner.tick += 1;
         let tick = inner.tick;
@@ -288,6 +300,14 @@ impl MemStore {
     /// `keep` (the entry just inserted).
     fn evict_to_budget(&self, inner: &mut Inner, keep: &str) {
         if self.budget_bytes == 0 {
+            return;
+        }
+        // A triggered `mem.evict` failpoint skips this eviction pass —
+        // a transient budget overshoot, repaired by the next insert.
+        if let Some(a) = crate::fault::check(crate::fault::Site::MemEvict) {
+            if matches!(a, crate::fault::Action::Panic) {
+                panic!("injected panic at failpoint mem.evict");
+            }
             return;
         }
         while inner.resident_bytes > self.budget_bytes {

@@ -65,6 +65,7 @@ mod imp {
         /// Map `path` read-only in full. Fails (never panics) on empty
         /// files, unmappable filesystems, or kernel refusal.
         pub fn map(path: &Path) -> Result<MappedRegion> {
+            crate::fault::failpoint(crate::fault::Site::StoreMap)?;
             let file = std::fs::File::open(path)
                 .with_context(|| format!("opening {} for mapping", path.display()))?;
             let len = file

@@ -43,6 +43,7 @@ fn each_bad_fixture_trips_exactly_its_lint() {
         ("hot_path_alloc.bad.txt", lints::HOT_PATH_ALLOC),
         ("hot_path_unclosed.bad.txt", lints::HOT_PATH_ALLOC),
         ("relaxed_store.bad.txt", lints::RELAXED_STORE),
+        ("lock_unwrap.bad.txt", lints::LOCK_UNWRAP),
     ];
     for (name, lint) in cases {
         assert_eq!(lints_hit(name), vec![lint], "{name}");
@@ -57,6 +58,7 @@ fn each_good_fixture_is_clean() {
         "nan_sort.good.txt",
         "hot_path_alloc.good.txt",
         "relaxed_store.good.txt",
+        "lock_unwrap.good.txt",
         "waiver.good.txt",
     ] {
         assert_eq!(lints_hit(name), Vec::<&str>::new(), "{name}");

@@ -1,0 +1,402 @@
+//! Chaos coverage for the serve path (DESIGN.md §8): the daemon keeps
+//! serving — and every *successful* reply stays bitwise identical to a
+//! fault-free run — while deterministic failpoints inject worker panics,
+//! storage failures, and clients abort mid-stream. Every scenario ends
+//! with a graceful drain joined under a hard timeout, so a hang is a
+//! test failure, never a stuck CI job.
+//!
+//! The failpoint registry is process-global, so every test serializes on
+//! [`LOCK`] (arming in one test must not leak into another).
+
+use cagra::coordinator::{run_job, JobSpec, SystemConfig};
+use cagra::serve::{serve, ServeOpts};
+use cagra::util::json::{parse, Value};
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Serializes the tests in this binary: each arms (or disarms) the
+/// process-global failpoint registry when its daemon's pool starts.
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+const SCALE: f64 = 1.0 / 64.0;
+
+fn small_spec() -> JobSpec {
+    JobSpec {
+        dataset: "livejournal-sim".into(),
+        scale: SCALE,
+        iters: 2,
+        ..Default::default()
+    }
+}
+
+fn temp_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("cagra-chaos-{tag}-{}", std::process::id()))
+}
+
+/// A daemon under test: the bound address plus a completion channel so
+/// tests can join it with a timeout (a hang fails fast instead of
+/// wedging the whole test binary).
+struct Daemon {
+    addr: String,
+    done: mpsc::Receiver<anyhow::Result<()>>,
+    port_file: PathBuf,
+}
+
+fn start_daemon(tag: &str, cfg: SystemConfig, mut opts: ServeOpts) -> Daemon {
+    let port_file = temp_path(&format!("{tag}-port"));
+    std::fs::remove_file(&port_file).ok();
+    opts.addr = "127.0.0.1:0".to_string();
+    opts.stdio = false;
+    opts.port_file = Some(port_file.display().to_string());
+    let (tx, done) = mpsc::channel();
+    std::thread::spawn(move || {
+        let _ = tx.send(serve(cfg, &opts));
+    });
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let addr = loop {
+        if let Ok(s) = std::fs::read_to_string(&port_file) {
+            let s = s.trim().to_string();
+            if !s.is_empty() {
+                break s;
+            }
+        }
+        assert!(Instant::now() < deadline, "daemon never wrote the port file");
+        std::thread::sleep(Duration::from_millis(10));
+    };
+    Daemon { addr, done, port_file }
+}
+
+impl Daemon {
+    fn connect(&self) -> (TcpStream, BufReader<TcpStream>) {
+        let stream = TcpStream::connect(&self.addr).expect("connect");
+        let writer = stream.try_clone().expect("clone");
+        (writer, BufReader::new(stream))
+    }
+
+    /// Graceful drain with a hard no-hang bound. Tolerates a transient
+    /// `overloaded` refusal: connection slots free asynchronously after
+    /// a client drops, so a fresh connection can race the accounting.
+    fn shutdown_and_join(self) {
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            let (mut w, mut r) = self.connect();
+            match try_roundtrip(&mut w, &mut r, r#"{"op":"shutdown"}"#) {
+                Some(ack) if ack.get("ok") == Some(&Value::Bool(true)) => break,
+                Some(ack) => assert_eq!(
+                    ack.get("error").and_then(Value::as_str),
+                    Some("overloaded"),
+                    "shutdown nacked: {ack:?}"
+                ),
+                None => {} // refusal raced the send; try again
+            }
+            assert!(Instant::now() < deadline, "connection slots never freed");
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        self.done
+            .recv_timeout(Duration::from_secs(120))
+            .expect("daemon hung past drain deadline")
+            .expect("daemon errored");
+        std::fs::remove_file(&self.port_file).ok();
+    }
+}
+
+fn roundtrip(writer: &mut TcpStream, reader: &mut BufReader<TcpStream>, line: &str) -> Value {
+    try_roundtrip(writer, reader, line).expect("request round trip")
+}
+
+/// Best-effort round trip: `None` when the daemon closed on us (e.g. an
+/// `overloaded` refusal raced our send) — callers in retry loops treat
+/// that as "try a fresh connection".
+fn try_roundtrip(
+    writer: &mut TcpStream,
+    reader: &mut BufReader<TcpStream>,
+    line: &str,
+) -> Option<Value> {
+    writer
+        .write_all(format!("{line}\n").as_bytes())
+        .and_then(|()| writer.flush())
+        .ok()?;
+    let mut reply = String::new();
+    match reader.read_line(&mut reply) {
+        Ok(n) if n > 0 => {}
+        _ => return None,
+    }
+    Some(parse(reply.trim()).unwrap_or_else(|e| panic!("unparseable reply {reply:?}: {e:#}")))
+}
+
+fn run_line(id: u64) -> String {
+    format!(
+        r#"{{"op":"run","id":{id},"app":"pagerank","graph":"livejournal-sim","scale":{SCALE},"iters":2}}"#
+    )
+}
+
+/// Like [`run_line`] but a variant with cacheable preprocessing, so the
+/// job actually exercises the disk artifact store.
+fn run_line_stored(id: u64) -> String {
+    format!(
+        r#"{{"op":"run","id":{id},"app":"pagerank","variant":"reordering","graph":"livejournal-sim","scale":{SCALE},"iters":2}}"#
+    )
+}
+
+/// Injected job panics become `failed` replies; the pool keeps serving
+/// with all workers alive and successful replies stay bitwise identical
+/// to a fault-free in-process run.
+#[test]
+fn worker_panics_are_contained_and_serving_continues() {
+    let _g = lock();
+    // Reference before any failpoint arms (the registry is clean here).
+    let expected = run_job(&small_spec(), &SystemConfig::default())
+        .expect("reference job")
+        .summary;
+    let cfg = SystemConfig {
+        failpoints: "worker.job=panic@every:3".to_string(),
+        ..SystemConfig::default()
+    };
+    let daemon = start_daemon(
+        "panic",
+        cfg,
+        ServeOpts {
+            workers: 2,
+            queue_cap: 8,
+            ..ServeOpts::default()
+        },
+    );
+    let (mut w, mut r) = daemon.connect();
+    // One serial client → job executions are sequential → exactly the
+    // 3rd and 6th fire. Panics must surface as replies, never hangups.
+    let mut failed = 0;
+    for id in 1..=6u64 {
+        let v = roundtrip(&mut w, &mut r, &run_line(id));
+        assert_eq!(v.get("id").and_then(Value::as_u64), Some(id));
+        if v.get("ok") == Some(&Value::Bool(true)) {
+            let got = v.get("summary").and_then(Value::as_f64).expect("summary");
+            assert_eq!(
+                got.to_bits(),
+                expected.to_bits(),
+                "request {id}: summary under faults differs from fault-free"
+            );
+        } else {
+            assert_eq!(
+                v.get("error").and_then(Value::as_str),
+                Some("failed"),
+                "request {id}: wrong error kind: {v:?}"
+            );
+            failed += 1;
+        }
+    }
+    assert_eq!(failed, 2, "every:3 over 6 jobs must fail exactly twice");
+    let stats = roundtrip(&mut w, &mut r, r#"{"op":"stats"}"#);
+    assert_eq!(
+        stats.get("panics_contained").and_then(Value::as_u64),
+        Some(2),
+        "stats: {stats:?}"
+    );
+    assert_eq!(
+        stats.get("workers_alive").and_then(Value::as_u64),
+        Some(2),
+        "panicking jobs must not kill workers: {stats:?}"
+    );
+    assert_eq!(stats.get("jobs_done").and_then(Value::as_u64), Some(6));
+    drop((w, r));
+    daemon.shutdown_and_join();
+}
+
+/// Worker *thread* deaths are repaired by the supervisor: the abandoned
+/// job errs, a replacement spawns, and the pool serves on at full
+/// strength.
+#[test]
+fn dead_worker_threads_respawn_and_serving_continues() {
+    let _g = lock();
+    let cfg = SystemConfig {
+        failpoints: "worker.thread=panic@every:4".to_string(),
+        ..SystemConfig::default()
+    };
+    let daemon = start_daemon(
+        "respawn",
+        cfg,
+        ServeOpts {
+            workers: 2,
+            queue_cap: 8,
+            ..ServeOpts::default()
+        },
+    );
+    let (mut w, mut r) = daemon.connect();
+    let mut ok = 0;
+    let mut failed = 0;
+    for id in 1..=8u64 {
+        let v = roundtrip(&mut w, &mut r, &run_line(id));
+        if v.get("ok") == Some(&Value::Bool(true)) {
+            ok += 1;
+        } else {
+            assert_eq!(v.get("error").and_then(Value::as_str), Some("failed"));
+            failed += 1;
+        }
+    }
+    assert_eq!(ok, 6, "every:4 over 8 jobs must abandon exactly 2");
+    assert_eq!(failed, 2);
+    // The supervisor replaces dead threads; give it a bounded moment.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let stats = roundtrip(&mut w, &mut r, r#"{"op":"stats"}"#);
+        if stats.get("workers_alive").and_then(Value::as_u64) == Some(2) {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "workers never respawned: {stats:?}"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    drop((w, r));
+    daemon.shutdown_and_join();
+}
+
+/// Storage faults self-heal: injected write failures only cost the cache
+/// entry, injected load failures quarantine the artifact and force a
+/// rebuild — and every reply stays correct and bitwise stable.
+#[test]
+fn store_faults_quarantine_rebuild_and_stay_bitwise_correct() {
+    let _g = lock();
+    let spec = JobSpec {
+        app: cagra::coordinator::AppKind::parse("pagerank", "reordering").unwrap(),
+        ..small_spec()
+    };
+    let expected = run_job(&spec, &SystemConfig::default())
+        .expect("reference job")
+        .summary;
+    let store_dir = temp_path("store");
+    std::fs::remove_dir_all(&store_dir).ok();
+    // Round 1 writes artifacts (every 3rd write fails, harmlessly);
+    // later rounds would normally be served by the resident memory
+    // layer, so `mem.insert` degrades it to pass-through and every warm
+    // load goes to disk — where map and read both err, turning each hit
+    // into quarantine → rebuild → correct fresh answer.
+    let cfg = SystemConfig {
+        store_enabled: true,
+        store_dir: store_dir.display().to_string(),
+        failpoints: "store.write=err@every:3;store.map=err@every:1;\
+                     store.read=err@every:1;mem.insert=err@every:1"
+            .to_string(),
+        ..SystemConfig::default()
+    };
+    let daemon = start_daemon(
+        "store",
+        cfg,
+        ServeOpts {
+            workers: 1,
+            queue_cap: 8,
+            ..ServeOpts::default()
+        },
+    );
+    let (mut w, mut r) = daemon.connect();
+    for id in 1..=3u64 {
+        let v = roundtrip(&mut w, &mut r, &run_line_stored(id));
+        assert_eq!(v.get("ok"), Some(&Value::Bool(true)), "request {id}: {v:?}");
+        let got = v.get("summary").and_then(Value::as_f64).expect("summary");
+        assert_eq!(
+            got.to_bits(),
+            expected.to_bits(),
+            "request {id}: storage faults changed the answer"
+        );
+    }
+    let stats = roundtrip(&mut w, &mut r, r#"{"op":"stats"}"#);
+    let store = stats.get("store").expect("store stats when enabled");
+    let quarantined = store.get("quarantined").and_then(Value::as_u64).unwrap_or(0);
+    let rebuilds = store.get("rebuilds").and_then(Value::as_u64).unwrap_or(0);
+    assert!(quarantined >= 1, "no artifact was quarantined: {stats:?}");
+    assert!(rebuilds >= 1, "no rebuild was recorded: {stats:?}");
+    // Self-healing evidence on disk, out of the store's way.
+    assert!(
+        store_dir.join(".quarantine").is_dir(),
+        "quarantine dir missing"
+    );
+    drop((w, r));
+    daemon.shutdown_and_join();
+    std::fs::remove_dir_all(&store_dir).ok();
+}
+
+/// Abrupt client departures (mid-line abort, idle stall, connection
+/// flood) never take the daemon down and never wedge the drain.
+#[test]
+fn client_aborts_idle_and_overload_are_contained() {
+    let _g = lock();
+    let daemon = start_daemon(
+        "abort",
+        SystemConfig::default(),
+        ServeOpts {
+            workers: 1,
+            queue_cap: 4,
+            max_conns: 2,
+            idle_timeout_ms: 200,
+            ..ServeOpts::default()
+        },
+    );
+    // Abort mid-line: write half a request and slam the connection.
+    {
+        let (mut w, _r) = daemon.connect();
+        w.write_all(br#"{"op":"run","app":"pa"#).expect("partial write");
+        w.flush().ok();
+    } // dropped here — RST/EOF while the daemon is mid-read
+    // Idle stall: send nothing; the idle timeout must close us cleanly.
+    {
+        let (_w, mut r) = daemon.connect();
+        let mut line = String::new();
+        let n = r.read_line(&mut line).expect("idle close should be EOF");
+        assert_eq!(n, 0, "expected clean close, got {line:?}");
+    }
+    // Flood past max_conns: the third concurrent connection gets one
+    // `overloaded` line instead of a handler thread. Earlier aborted
+    // connections may still hold slots for a moment (they free when the
+    // handler notices the close), so retry until the state settles.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let (_w1, _r1) = daemon.connect();
+        let (_w2, _r2) = daemon.connect();
+        let (_w3, mut r3) = daemon.connect();
+        let mut line = String::new();
+        r3.read_line(&mut line).expect("overload reply");
+        if line.trim().is_empty() {
+            // r3 was admitted (stale slots had freed mid-flood) and then
+            // idle-closed — the bound held, just not against us. Retry.
+            assert!(Instant::now() < deadline, "flood never hit the bound");
+            std::thread::sleep(Duration::from_millis(20));
+            continue;
+        }
+        let v = parse(line.trim()).expect("overload line parses");
+        assert_eq!(
+            v.get("error").and_then(Value::as_str),
+            Some("overloaded"),
+            "admission bound reply: {line:?}"
+        );
+        break;
+    }
+    // After all that abuse: still serving, bitwise sane, drains clean.
+    // (Retry the connect: flood slots free asynchronously.)
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let (mut w, mut r) = loop {
+        let (mut w, mut r) = daemon.connect();
+        match try_roundtrip(&mut w, &mut r, r#"{"op":"ping","id":"alive"}"#) {
+            Some(pong) if pong.get("ok") == Some(&Value::Bool(true)) => break (w, r),
+            Some(pong) => assert_eq!(
+                pong.get("error").and_then(Value::as_str),
+                Some("overloaded"),
+                "unexpected ping reply: {pong:?}"
+            ),
+            None => {} // refusal raced the send; try again
+        }
+        assert!(Instant::now() < deadline, "connection slots never freed");
+        std::thread::sleep(Duration::from_millis(20));
+    };
+    let v = roundtrip(&mut w, &mut r, &run_line(99));
+    assert_eq!(v.get("ok"), Some(&Value::Bool(true)), "run after chaos: {v:?}");
+    drop((w, r));
+    daemon.shutdown_and_join();
+}

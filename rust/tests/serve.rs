@@ -51,6 +51,7 @@ fn tcp_daemon_round_trips_rejects_malformed_and_drains() {
         mem_budget: 0,
         port_file: Some(port_file.display().to_string()),
         stdio: false,
+        ..ServeOpts::default()
     };
     let daemon = std::thread::spawn(move || serve(SystemConfig::default(), &opts));
     // Port 0: discover the bound address through the port file.

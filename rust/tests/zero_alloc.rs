@@ -169,4 +169,14 @@ fn steady_state_performs_zero_heap_allocation() {
         "disabled recorder captured {} events ({dropped} dropped)",
         events.len()
     );
+    // Same deal for failpoints: this process never arms any, so every
+    // site the hot paths above crossed (store write/read/map, mem
+    // insert/evict) must have cost one relaxed load — never a trigger,
+    // never an allocation (the loops above already proved the latter).
+    assert!(!cagra::fault::enabled(), "failpoints armed in a fault-free process");
+    assert!(
+        cagra::fault::snapshot().is_empty(),
+        "disarmed failpoints recorded triggers: {:?}",
+        cagra::fault::snapshot()
+    );
 }
